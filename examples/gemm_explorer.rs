@@ -1,0 +1,91 @@
+//! GEMM cost-model explorer: per-scheme time breakdowns (Tensor-Core /
+//! in-loop CUDA / epilogue / HBM) for any shape, the Table-6 sweep, and
+//! the L1 structural optimizer — a (bm, bn, bk) block-shape sweep under
+//! the VMEM-footprint model that mirrors `kernels/mx_gemm.py`.
+//!
+//! Run:  cargo run --release --example gemm_explorer -- --m 4096 --n 4096 --k 8192
+
+use anyhow::Result;
+use moss::cli::Args;
+use moss::gemm_sim::machine::MachineModel;
+use moss::gemm_sim::schedule::{kernel_cost, table6_shapes, GemmShape, Scheme};
+use moss::util::table::{f, Table};
+
+/// VMEM bytes for one MX-GEMM grid step (mirrors mx_gemm.vmem_bytes).
+fn vmem_bytes(bm: usize, bn: usize, bk: usize, micro: usize) -> usize {
+    bm * bk + bm * (bk / micro) + bk * bn + 4 * bm * bn
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let machine = MachineModel::h800();
+    let m = args.get_usize("m", 4096)?;
+    let n = args.get_usize("n", 4096)?;
+    let k = args.get_usize("k", 8192)?;
+    let shape = GemmShape::new(m, n, k);
+
+    let mut t = Table::new(
+        &format!("cost breakdown — {m}x{n}x{k} on modeled H800 (ms)"),
+        &["scheme", "tensor-core", "in-loop CUDA", "epilogue", "HBM", "total", "eff TFLOPS"],
+    );
+    for scheme in [Scheme::Bf16, Scheme::TE, Scheme::Coat, Scheme::DeepGemm, Scheme::Moss] {
+        let c = kernel_cost(&machine, scheme, shape);
+        t.row(vec![
+            scheme.name().into(),
+            f(c.tc_secs * 1e3, 3),
+            f(c.inloop_cuda_secs * 1e3, 3),
+            f(c.epilogue_secs * 1e3, 3),
+            f(c.hbm_secs * 1e3, 3),
+            f(c.total_secs * 1e3, 3),
+            f(shape.flops() / c.total_secs / 1e12, 0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Table-6 sweep
+    let mut t6 = Table::new("Table-6 shapes sweep (ms)", &["shape", "TE", "COAT", "DeepSeek", "MOSS"]);
+    for s in table6_shapes() {
+        let mut row = vec![format!("{}x{}x{}", s.m, s.n, s.k)];
+        for scheme in Scheme::FP8_ALL {
+            row.push(f(kernel_cost(&machine, scheme, s).total_secs * 1e3, 2));
+        }
+        t6.row(row);
+    }
+    print!("{}", t6.render());
+
+    // L1 block-shape sweep: the structural optimization loop for the
+    // Pallas kernel — pick the largest-reuse block that fits VMEM.
+    let mut tb = Table::new(
+        "Pallas MX-GEMM block sweep (TPU structural model, 16 MiB VMEM)",
+        &["bm", "bn", "bk", "VMEM KiB", "fits", "HBM traffic (rel)", "note"],
+    );
+    let vmem_cap = 16 * 1024 * 1024;
+    let mut best: Option<(f64, (usize, usize, usize))> = None;
+    for &bm in &[64usize, 128, 256] {
+        for &bn in &[64usize, 128, 256] {
+            for &bk in &[128usize, 256, 512] {
+                let v = vmem_bytes(bm, bn, bk, 32);
+                // relative HBM traffic per output element ~ K/bn + K/bm
+                let traffic = (m / bm) as f64 * (k * n) as f64 + (n / bn) as f64 * (m * k) as f64;
+                let fits = v <= vmem_cap;
+                if fits && best.map_or(true, |(b, _)| traffic < b) {
+                    best = Some((traffic, (bm, bn, bk)));
+                }
+                tb.row(vec![
+                    bm.to_string(),
+                    bn.to_string(),
+                    bk.to_string(),
+                    (v / 1024).to_string(),
+                    fits.to_string(),
+                    format!("{:.2}", traffic / (2.0 * (m * n * k) as f64 / 128.0)),
+                    String::new(),
+                ]);
+            }
+        }
+    }
+    print!("{}", tb.render());
+    if let Some((_, (bm, bn, bk))) = best {
+        println!("best VMEM-feasible block: bm={bm} bn={bn} bk={bk} (matches kernels/mx_gemm.py defaults at 128^3 scale)");
+    }
+    Ok(())
+}

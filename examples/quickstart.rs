@@ -1,0 +1,78 @@
+//! Quickstart: the MOSS stack end to end in one minute.
+//!
+//! 1. quantize an activation tensor with two-level microscaling in Rust,
+//! 2. run the same input through the AOT Pallas `quant_moss` artifact
+//!    and check bit-identical payloads (L1 <-> L3 cross-check),
+//! 3. run the Pallas MXFP8 GEMM artifact,
+//! 4. take 5 FP8 training steps on the tiny model and watch loss move.
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use moss::config::TrainConfig;
+use moss::coordinator::Trainer;
+use moss::formats::fp8::E4M3;
+use moss::quant::snr::{snr_relative_db, table7_snrs, Metric};
+use moss::quant::TwoLevelQuant;
+use moss::runtime::literal::{lit_f32, to_f32, to_i8};
+use moss::runtime::Runtime;
+use moss::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let dir = std::path::Path::new("artifacts/tiny");
+    let rt = Arc::new(Runtime::load(dir)?);
+    println!("loaded artifacts/{} ({} programs, {} params)",
+             rt.manifest.config_name,
+             rt.manifest.programs.len(),
+             rt.manifest.model.param_count);
+
+    // --- 1. two-level microscaling in Rust --------------------------------
+    let (rows, cols) = (64, 256);
+    let mut rng = Rng::new(7);
+    let x = rng.activation_like(rows, cols, 2.0);
+    let tl = TwoLevelQuant::quantize(&x, rows, cols, 32, &E4M3);
+    let dq = tl.dequantize();
+    println!("\ntwo-level quantization: global scale {:.4}, {} E8M0 subscales,",
+             tl.scale, tl.ss_exp.len());
+    println!("  relative SNR {:.1} dB, payload {} B (fp32 would be {} B)",
+             snr_relative_db(&x, &dq), tl.payload_bytes(), x.len() * 4);
+    let s = table7_snrs(&x, rows, cols, Metric::Model);
+    println!("  scheme comparison (model SNR): per-tensor {:.1} < per-group {:.1} < MOSS {:.1} dB",
+             s.per_tensor, s.per_group, s.moss);
+
+    // --- 2. cross-check against the Pallas kernel artifact ----------------
+    // Scales and E8M0 exponents must match exactly; payloads may differ
+    // on a <1% sliver of elements whose f32 quotient lands within 1 ulp
+    // of a rounding tie (XLA's vectorized divide uses reciprocal+Newton,
+    // ours exact division) — each such element is off by one grid step.
+    let quant_prog = rt.program("quant_moss")?;
+    let outs = quant_prog.call(&[lit_f32(&[rows, cols], &x)?])?;
+    let q_jax = to_f32(&outs[0])?;
+    let ss_jax = to_i8(&outs[2])?;
+    let ss_match = ss_jax == tl.ss_exp;
+    let diffs = q_jax.iter().zip(&tl.q).filter(|(a, b)| a != b).count();
+    println!("\nPallas artifact cross-check: E8M0 exponents identical: {ss_match}, \
+              payload mismatches {diffs}/{} (division-ulp ties)", q_jax.len());
+    assert!(ss_match, "E8M0 exponents diverged");
+    assert!(diffs * 100 < q_jax.len(), "more than 1% payload mismatches");
+
+    // --- 3. the Pallas MXFP8 GEMM ------------------------------------------
+    let gemm = rt.program("mx_gemm")?;
+    let (m, k, n) = (64, 256, 64);
+    let a = rng.activation_like(m, k, 1.5);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+    let y = gemm.call(&[lit_f32(&[m, k], &a)?, lit_f32(&[k, n], &w)?])?;
+    let y = to_f32(&y[0])?;
+    println!("\nmx_gemm artifact: [{m}x{k}] @ [{k}x{n}] -> {} outputs, |y|max {:.3}",
+             y.len(), y.iter().fold(0f32, |acc, v| acc.max(v.abs())));
+
+    // --- 4. five FP8 training steps ----------------------------------------
+    let cfg = TrainConfig { steps: 5, log_every: 1, ..TrainConfig::default() };
+    let mut trainer = Trainer::new(rt, cfg)?;
+    println!("\n5 MOSS train steps on the tiny model:");
+    trainer.run(5)?;
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Automatic-scaling demo (paper §3.2): Fig-4 trajectories on a real
+//! AdamW run, Table-1 timing asymmetry, and a live interval sweep
+//! showing the precision/overhead trade-off (Table 9's mechanism).
+//!
+//! Run:  cargo run --release --example scaling_demo -- --steps 3000
+
+use anyhow::Result;
+use moss::cli::Args;
+use moss::report::scaling::{fig4_trajectories, table1};
+use moss::util::plot::multi_line_plot;
+use moss::util::table::{f, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.get_u64("steps", 3000)?;
+
+    // Fig 4 at the paper's default interval.
+    let (pred, jit, viol) = fig4_trajectories(steps, 500, 1e-3, 42);
+    println!(
+        "{}",
+        multi_line_plot(
+            &format!("Figure 4 — automatic vs JIT scale (interval=500, violations {:.2}%)",
+                     viol * 100.0),
+            &[("automatic", &pred), ("jit", &jit)],
+            76,
+            16,
+        )
+    );
+
+    // Interval sweep: headroom (over-scaling) vs reduction count.
+    let mut t = Table::new(
+        "interval sweep — prediction headroom vs max-reduction count",
+        &["interval", "absmax calls", "mean headroom %", "max headroom %", "violations"],
+    );
+    for interval in [1u64, 100, 500, 2000] {
+        let (pred, jit, viol) = fig4_trajectories(steps, interval, 1e-3, 42);
+        let ratios: Vec<f64> =
+            pred.iter().zip(&jit).map(|(p, j)| p / j.max(1e-12) - 1.0).collect();
+        let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+        let max = ratios.iter().fold(0f64, |a, &b| a.max(b));
+        t.row(vec![
+            interval.to_string(),
+            (steps / interval.max(1) + 1).to_string(),
+            f(mean * 100.0, 2),
+            f(max * 100.0, 2),
+            f(viol * 100.0, 2),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Table 1 on this host.
+    print!("{}", table1().render());
+    Ok(())
+}

@@ -1,0 +1,248 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + a manifest.
+
+Python runs only here, at build time (`make artifacts`); the Rust
+coordinator loads ``artifacts/<config>/*.hlo.txt`` through the PJRT C API
+and never calls back into Python.
+
+Interchange is HLO TEXT, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` describes each program's inputs/outputs (name, dtype,
+shape) in exact flattened order plus the model/optimizer hyperparameters,
+so the Rust runtime marshals literals without guessing.
+
+Programs lowered per config:
+  train_step_{bf16,pertensor,coat,moss}  full fwd/bwd/AdamW step
+  eval_step           summed NLL + token count (perplexity)
+  logits_last         last-position logits (greedy decoding / accuracy)
+  init_params         seeded parameter initialization
+  weight_absmax       per-layer-per-linear max-reduction (JIT scaling)
+  probe_acts          Table-7 activation probes (unquantized)
+  quant_dq_{pertensor,pergroup,moss}  standalone quantize->dequantize
+                      (cross-checks the Rust quantizers bit-for-bit)
+  mx_gemm             standalone Pallas two-level GEMM (quickstart)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optim as O
+from .kernels import mx_gemm as mx
+from .kernels import ref
+
+DTYPE_NAMES = {
+    jnp.float32.dtype: "f32",
+    jnp.int32.dtype: "i32",
+    jnp.int8.dtype: "i8",
+    jnp.uint32.dtype: "u32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _iospec(names, specs):
+    assert len(names) == len(specs), (names, [s.shape for s in specs])
+    return [
+        {"name": n, "dtype": DTYPE_NAMES[s.dtype], "shape": list(s.shape)}
+        for n, s in zip(names, specs)
+    ]
+
+
+class Lowerer:
+    """Lowers jitted functions and records their IO spec in the manifest."""
+
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.programs = {}
+
+    def lower(self, name, fn, in_names, in_specs, out_names):
+        print(f"  lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        flat, _ = jax.tree_util.tree_flatten(out_avals)
+        self.programs[name] = {
+            "file": fname,
+            "inputs": _iospec(in_names, in_specs),
+            "outputs": _iospec(out_names, flat),
+        }
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build(cfg_name: str, outdir: str, adamw: O.AdamWConfig,
+          modes=("bf16", "pertensor", "coat", "moss"), probe_layer=None):
+    cfg = M.PRESETS[cfg_name]
+    os.makedirs(outdir, exist_ok=True)
+    lw = Lowerer(outdir)
+
+    shapes = M.param_shapes(cfg)
+    pnames = list(M.PARAM_NAMES)
+    pspecs = [f32(*shapes[n]) for n in pnames]
+    b, s, l = cfg.batch, cfg.seq, cfg.layers
+
+    # --- train_step_<mode> ------------------------------------------------
+    def make_train_step(mode):
+        def train_step(*args):
+            params = dict(zip(pnames, args[:9]))
+            m = dict(zip(pnames, args[9:18]))
+            v = dict(zip(pnames, args[18:27]))
+            tokens, step, lr, w_scales = args[27:]
+            loss, grads = jax.value_and_grad(M.loss_fn)(
+                params, tokens, w_scales, cfg, mode)
+            p2, m2, v2, gnorm = O.adamw_step(params, m, v, grads, step, lr, adamw)
+            outs = [p2[n] for n in pnames] + [m2[n] for n in pnames] + \
+                   [v2[n] for n in pnames] + [loss, gnorm]
+            return tuple(outs)
+        return train_step
+
+    tr_in_names = ([f"p.{n}" for n in pnames] + [f"m.{n}" for n in pnames]
+                   + [f"v.{n}" for n in pnames]
+                   + ["tokens", "step", "lr", "w_scales"])
+    tr_in_specs = (pspecs + pspecs + pspecs
+                   + [i32(b, s + 1), i32(), f32(), f32(l, 4)])
+    tr_out_names = ([f"p.{n}" for n in pnames] + [f"m.{n}" for n in pnames]
+                    + [f"v.{n}" for n in pnames] + ["loss", "gnorm"])
+    for mode in modes:
+        lw.lower(f"train_step_{mode}", make_train_step(mode),
+                 tr_in_names, tr_in_specs, tr_out_names)
+
+    # --- eval / decode ----------------------------------------------------
+    def eval_step(*args):
+        params = dict(zip(pnames, args[:9]))
+        tokens = args[9]
+        return M.eval_nll(params, tokens, cfg)
+
+    lw.lower("eval_step", eval_step,
+             [f"p.{n}" for n in pnames] + ["tokens"],
+             pspecs + [i32(b, s + 1)], ["sum_nll", "count"])
+
+    def logits_last(*args):
+        params = dict(zip(pnames, args[:9]))
+        tokens = args[9]
+        return (M.greedy_logits(params, tokens, cfg),)
+
+    lw.lower("logits_last", logits_last,
+             [f"p.{n}" for n in pnames] + ["tokens"],
+             pspecs + [i32(b, s)], ["logits"])
+
+    # --- init -------------------------------------------------------------
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        params = M.init_params(key, cfg)
+        return tuple(params[n] for n in pnames)
+
+    lw.lower("init_params", init_fn, ["seed"], [i32()],
+             [f"p.{n}" for n in pnames])
+
+    # --- scaling support ----------------------------------------------------
+    def weight_absmax(wqkv, wo, w_up, w_down):
+        cols = [jnp.max(jnp.abs(w.reshape(w.shape[0], -1)), axis=1)
+                for w in (wqkv, wo, w_up, w_down)]
+        return (jnp.stack(cols, axis=1),)  # [L, 4]
+
+    lw.lower("weight_absmax", weight_absmax,
+             ["wqkv", "wo", "w_up", "w_down"],
+             [f32(*shapes[n]) for n in ("wqkv", "wo", "w_up", "w_down")],
+             ["absmax"])
+
+    # --- Table-7 activation probes -----------------------------------------
+    probe_layer = cfg.layers // 2 if probe_layer is None else probe_layer
+
+    def probe(*args):
+        params = dict(zip(pnames, args[:9]))
+        tokens = args[9]
+        w_scales = jnp.ones((cfg.layers, 4), jnp.float32)
+        return M.probe_activations(params, tokens, w_scales, cfg, layer=probe_layer)
+
+    lw.lower("probe_acts", probe,
+             [f"p.{n}" for n in pnames] + ["tokens"],
+             pspecs + [i32(b, s)], ["ln_in", "attn_out", "ffn_mid"])
+
+    # --- standalone quant ops (Rust cross-checks) ---------------------------
+    qm, qk_ = 64, 256  # fixed probe shape, divisible by group & micro
+
+    lw.lower("quant_dq_pertensor",
+             lambda x: (ref.dequant_per_tensor(*ref.quant_per_tensor(x)),),
+             ["x"], [f32(qm, qk_)], ["dq"])
+    lw.lower("quant_dq_pergroup",
+             lambda x: (ref.dequant_per_group(*ref.quant_per_group(x, 128), 128),),
+             ["x"], [f32(qm, qk_)], ["dq"])
+
+    def quant_moss(x):
+        q, s, ss = ref.quant_two_level(x, micro=cfg.micro)
+        return q, s.reshape(1), ss, ref.dequant_two_level(q, s, ss, micro=cfg.micro)
+
+    lw.lower("quant_moss", quant_moss, ["x"], [f32(qm, qk_)],
+             ["q", "s", "ss_exp", "dq"])
+
+    # --- standalone Pallas MX GEMM (quickstart / kernel check) --------------
+    gm, gk, gn = 64, 256, 64
+
+    def mx_gemm_fn(x, w):
+        return (mx.moss_linear(x, w, micro=cfg.micro, bm=64, bn=64, bk=64),)
+
+    lw.lower("mx_gemm", mx_gemm_fn, ["x", "w"], [f32(gm, gk), f32(gk, gn)],
+             ["y"])
+
+    manifest = {
+        "config_name": cfg_name,
+        "model": {
+            "vocab": cfg.vocab, "dim": cfg.dim, "layers": cfg.layers,
+            "heads": cfg.heads, "ffn": cfg.ffn, "seq": cfg.seq,
+            "batch": cfg.batch, "micro": cfg.micro, "group": cfg.group,
+            "param_count": cfg.param_count(), "probe_layer": probe_layer,
+        },
+        "adamw": {
+            "beta1": adamw.beta1, "beta2": adamw.beta2, "eps": adamw.eps,
+            "weight_decay": adamw.weight_decay, "grad_clip": adamw.grad_clip,
+        },
+        "param_names": pnames,
+        "linear_names": list(M.LINEAR_NAMES),
+        "programs": lw.programs,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {outdir}/manifest.json with {len(lw.programs)} programs")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--out", default=None,
+                    help="output dir (default ../artifacts/<config>)")
+    ap.add_argument("--modes", default="bf16,pertensor,coat,moss")
+    args = ap.parse_args()
+    outdir = args.out or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", args.config)
+    build(args.config, os.path.abspath(outdir), O.AdamWConfig(),
+          modes=tuple(args.modes.split(",")))
+
+
+if __name__ == "__main__":
+    main()

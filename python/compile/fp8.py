@@ -1,0 +1,83 @@
+"""FP8 / E8M0 format emulation for the MOSS quantization stack.
+
+Quantized values cross kernel boundaries as *f32 values on the FP8 grid*
+(cast to ``float8_e4m3fn``/``float8_e5m2`` and back). This is bit-exact
+with a native FP8 pipeline that accumulates in FP32 (what Hopper/Blackwell
+Tensor Cores do), and is the same software-emulation strategy the paper
+itself uses for MXFP8 on Hopper (which has no native MX support).
+
+E8M0 microscale exponents travel as ``int8`` (the unbiased exponent), and
+are materialized with ``exp2``. The OCP MX spec's E8M0 is an 8-bit biased
+exponent with no sign/mantissa; since MOSS's level-2 scales are in (0, 1]
+(paper §3.1), the unbiased exponent is always in [-127, 0] and fits int8.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Maximum representable magnitudes (OCP OFP8 spec / paper §3.1).
+E4M3_MAX = 448.0
+E5M2_MAX = 57344.0
+
+# Smallest normal, used to keep scales away from zero / denormal trouble.
+SCALE_EPS = 1e-12
+
+FORMATS = {
+    "e4m3": (jnp.float8_e4m3fn, E4M3_MAX),
+    "e5m2": (jnp.float8_e5m2, E5M2_MAX),
+}
+
+
+def fp8_max(fmt: str) -> float:
+    """Maximum representable value of the FP8 format ``fmt``."""
+    return FORMATS[fmt][1]
+
+
+def cast_to_fp8_grid(x, fmt: str = "e4m3"):
+    """Round ``x`` to the representable grid of the FP8 format.
+
+    Saturates to +/- max (matching Tensor Core saturating conversion; the
+    raw jnp cast would produce NaN for out-of-range E4M3FN values).
+    Returns f32 values lying exactly on the FP8 grid.
+    """
+    dtype, maxv = FORMATS[fmt]
+    clipped = jnp.clip(x, -maxv, maxv)
+    return clipped.astype(dtype).astype(jnp.float32)
+
+
+def e8m0_exponent(v):
+    """Unbiased E8M0 exponent of ``v``: ``ceil(log2(v))`` (round up).
+
+    Paper Eq. (3) writes round-to-nearest ("closest power-of-two"), but
+    rounding *down* makes the effective scale up to sqrt(2) smaller than
+    the group absmax, so the largest element of every such micro-group
+    saturates at +/-448 — a clipping error that empirically destroys the
+    SNR ordering of Theorem 1. The OCP MX spec and NVIDIA's MXFP8 recipe
+    round the shared exponent up for exactly this reason, and the paper's
+    own constraint ``ss_i in (0, 1]`` stays satisfied (v = s_i/s <= 1 =>
+    ceil(log2 v) <= 0). We follow the overflow-free convention; the
+    round-to-nearest variant is kept for the ablation in test_snr.py.
+    ``v`` must be positive. Returns int8 exponents.
+    """
+    e = jnp.ceil(jnp.log2(jnp.maximum(v, SCALE_EPS)))
+    return jnp.clip(e, -127.0, 127.0).astype(jnp.int8)
+
+
+def e8m0_exponent_nearest(v):
+    """Round-to-nearest E8M0 exponent (paper Eq. 3 literal reading).
+
+    Kept only for the SNR ablation — see ``e8m0_exponent`` docstring.
+    """
+    e = jnp.round(jnp.log2(jnp.maximum(v, SCALE_EPS)))
+    return jnp.clip(e, -127.0, 127.0).astype(jnp.int8)
+
+
+def e8m0_decode(exp):
+    """Materialize an int8 E8M0 exponent as an f32 power-of-two scale."""
+    return jnp.exp2(exp.astype(jnp.float32))
+
+
+def e8m0_round(v):
+    """Round positive values to the closest power of two (f32 in/out)."""
+    return e8m0_decode(e8m0_exponent(v))

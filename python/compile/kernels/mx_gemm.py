@@ -1,0 +1,137 @@
+"""L1 Pallas MXFP8 two-level GEMM kernel (paper Fig. 3b).
+
+Schedule (the paper's core kernel contribution, re-thought for TPU — see
+DESIGN.md §Hardware-Adaptation):
+
+  grid = (M/bm, N/bn, K/bk), K innermost.
+  main loop (per K step, everything VMEM-resident):
+      x tile   [bm, bk]     FP8-grid payload
+      ss tile  [bm, bk/32]  E8M0 exponents (int8) — applied as a cheap
+                            power-of-two multiply (exponent add; on the
+                            MMA path on Blackwell, VPU exp2 here)
+      w tile   [bk, bn]     FP8-grid payload (per-tensor weight; its
+                            level-2 scale is the constant 1 = 2^0,
+                            paper §3.1 "artificial level-2 scaling factor")
+      acc     += (x * 2^ss) @ w     — the MXU/Tensor-Core op
+  epilogue (once per [bm, bn] tile):
+      out = acc * (s_x * s_w)       — the ONLY FP32 dequant (CUDA-core /
+                                      VPU work), deferred out of the loop.
+
+Contrast with COAT's per-group GEMM, where a per-128-group FP32 partial-sum
+rescale sits *inside* the K loop — that is what `gemm_sim` costs out as
+CUDA-core overhead and what Table 6 / Fig 1 measure.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fp8 import fp8_max
+from . import quant
+from .quant import INTERPRET
+
+
+def _mx_gemm_kernel(x_ref, ss_ref, w_ref, sxw_ref, o_ref, *, micro: int, nk: int):
+    """One (i, j, k) grid step of the two-level MX GEMM."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                       # [bm, bk] FP8-grid values
+    ss = ss_ref[...]                     # [bm, bk//micro] E8M0 exponents
+    bm, bk = x.shape
+    # Level-2 scaling INSIDE the main loop: pure power-of-two (exponent
+    # add), no FP32 multiply-accumulate on the partial sums.
+    xs = (x.reshape(bm, bk // micro, micro)
+          * jnp.exp2(ss.astype(jnp.float32))[:, :, None]).reshape(bm, bk)
+    o_ref[...] += jnp.dot(xs, w_ref[...], preferred_element_type=jnp.float32)
+
+    # Epilogue: single FP32 rescale by s_x * s_w after the last K step.
+    @pl.when(k_step == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * sxw_ref[0, 0]
+
+
+def _pick(b: int, n: int) -> int:
+    """Largest divisor of n that is <= b."""
+    d = min(b, n)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+import os
+
+# L1 structural knobs (§Perf): grid block shape. Defaults follow the
+# VMEM calculator (`vmem_bytes(128,128,128)` ~ 98 KiB/step, far under a
+# TPU core's 16 MiB, leaving room for double-buffering); env overrides
+# let the block sweep in EXPERIMENTS.md §Perf re-lower without edits.
+# Defaults 256 after the §Perf sweep (EXPERIMENTS.md §Perf): vs 128^3,
+# +72% e2e step throughput on CPU-interpret; TPU VMEM footprint of a
+# 256^3 step is ~395 KiB (vmem_bytes), still 40x under the 16 MiB core
+# budget, so the structural model approves the same choice.
+_BM = int(os.environ.get("MOSS_GEMM_BM", "256"))
+_BN = int(os.environ.get("MOSS_GEMM_BN", "256"))
+_BK = int(os.environ.get("MOSS_GEMM_BK", "256"))
+
+
+def mx_gemm(q_x, ss_x, q_w, s_x, s_w, micro: int = 32,
+            bm: int | None = None, bn: int | None = None, bk: int | None = None):
+    """Two-level MXFP8 GEMM: ``(q_x ⊙ 2^ss_x) @ q_w * (s_x * s_w)``.
+
+    q_x: [M, K] FP8-grid payload; ss_x: [M, K//micro] int8 exponents;
+    q_w: [K, N] FP8-grid payload; s_x, s_w: scalar FP32 level-1 scales.
+    Block sizes are clamped to divisors of the problem shape (TPU: chosen
+    so x, ss, w, acc tiles fit VMEM; see gemm_sim VMEM calculator).
+    """
+    m, k = q_x.shape
+    k2, n = q_w.shape
+    assert k == k2
+    assert k % micro == 0
+    bm, bn, bk = _pick(bm or _BM, m), _pick(bn or _BN, n), _pick(bk or _BK, k)
+    assert bk % micro == 0, f"bk={bk} must hold whole micro-groups of {micro}"
+    nk = k // bk
+    sxw = (jnp.asarray(s_x, jnp.float32) * jnp.asarray(s_w, jnp.float32)).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_mx_gemm_kernel, micro=micro, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk // micro), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(q_x, ss_x, q_w, sxw)
+
+
+def moss_linear(x, w, s_w=None, micro: int = 32,
+                bm: int | None = None, bn: int | None = None,
+                bk: int | None = None):
+    """Full MOSS linear: two-level-quantize x (Pallas), per-tensor w,
+    MX GEMM (Pallas), epilogue dequant. Matches ``ref.moss_linear``.
+
+    ``s_w`` injects a precomputed per-tensor weight scale (automatic
+    scaling); None falls back to JIT max-reduction.
+    """
+    q_x, s_x, ss_x = quant.two_level_quantize(x, micro=micro)
+    q_w, s_w = quant.per_tensor_quantize(w, scale=s_w)
+    return mx_gemm(q_x, ss_x, q_w, s_x, s_w, micro=micro, bm=bm, bn=bn, bk=bk)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, micro: int = 32) -> int:
+    """VMEM footprint of one grid step on a real TPU (FP8 payloads, int8
+    exponents, f32 accumulator) — used by the L1 structural optimizer and
+    documented in DESIGN.md §Perf."""
+    return (bm * bk            # x tile, 1 B/elem (fp8)
+            + bm * (bk // micro)  # ss tile, 1 B/elem (e8m0)
+            + bk * bn          # w tile, 1 B/elem (fp8)
+            + 4 * bm * bn)     # f32 accumulator

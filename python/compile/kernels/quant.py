@@ -1,0 +1,192 @@
+"""L1 Pallas quantization kernels (interpret=True on CPU-PJRT).
+
+Two-pass two-level microscaling quantizer (paper §3.1, Eqs. 2–3):
+
+  pass 1  ``group_absmax``     — per-micro-group max-reduction (TPU: one
+                                 VMEM tile per grid step, VPU reduce).
+  (host)  global ``s = max_i s_i``  — a tiny [M, K/32] reduce, done in jnp
+                                 between the two passes (on TPU this is a
+                                 scalar-unit pass over the s_i buffer).
+  pass 2  ``two_level_quantize`` — rounds ``s_i/s`` to E8M0 and writes the
+                                 FP8-grid payload + int8 exponents.
+
+Per-tensor / per-group quantizers are also provided as Pallas kernels so
+the COAT and TE baselines exercise the same code path.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): each grid step owns a
+[block_rows, K] VMEM tile; reductions are lane-wise on the VPU; the FP8
+grid rounding is a convert on the VPU. Block shapes are chosen so a tile
+(payload + exponents) stays well under VMEM (~16 MiB/core).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..fp8 import SCALE_EPS, cast_to_fp8_grid, fp8_max
+
+# All Pallas kernels in this repo run in interpret mode: real-TPU lowering
+# emits Mosaic custom-calls that the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+import os
+
+# L1 structural knob (§Perf): rows per quantizer grid step. Larger blocks
+# mean fewer grid iterations (less interpret-mode loop overhead on CPU;
+# on TPU, block_rows x K must fit VMEM — 256 x 4096 fp32 = 4 MiB, fine).
+# Default 256 after the §Perf sweep (EXPERIMENTS.md): 64 -> 256 rows cut
+# interpret-mode grid iterations 4x and raised e2e step throughput +72%
+# on the tiny config; 1024 regressed (cache-resident tile exceeded L2).
+BLOCK_ROWS_TARGET = int(os.environ.get("MOSS_QUANT_BLOCK_ROWS", "256"))
+
+
+def _pick_block_rows(m: int, target: int | None = None) -> int:
+    """Largest divisor of ``m`` that is <= target (grid must tile M)."""
+    b = min(m, target or BLOCK_ROWS_TARGET)
+    while m % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: per-micro-group absmax
+# ---------------------------------------------------------------------------
+
+def _group_absmax_kernel(x_ref, out_ref, *, micro: int):
+    x = x_ref[...]
+    rows, k = x.shape
+    xg = x.reshape(rows, k // micro, micro)
+    out_ref[...] = jnp.max(jnp.abs(xg), axis=-1)
+
+
+def group_absmax(x, micro: int = 32, block_rows: int | None = None):
+    """Per-micro-group absmax over the last dim of a 2-D ``x`` ([M, K])."""
+    m, k = x.shape
+    assert k % micro == 0
+    br = block_rows or _pick_block_rows(m)
+    return pl.pallas_call(
+        functools.partial(_group_absmax_kernel, micro=micro),
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, k // micro), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k // micro), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: E8M0 microscale + FP8 payload
+# ---------------------------------------------------------------------------
+
+def _two_level_quantize_kernel(x_ref, si_ref, s_ref, q_ref, ss_ref, *, micro: int, fmt: str):
+    x = x_ref[...]
+    s_i = si_ref[...]                      # [rows, K//micro] fine scales
+    s = s_ref[0, 0]                        # global scale (scalar tile)
+    rows, k = x.shape
+    # Paper Eq. 3 with overflow-free (ceil) E8M0 rounding — see
+    # fp8.e8m0_exponent for why; ss_i = pow2-round-up(s_i / s), in (0, 1].
+    e = jnp.clip(jnp.ceil(jnp.log2(jnp.maximum(s_i / s, SCALE_EPS))), -127.0, 127.0)
+    ss_ref[...] = e.astype(jnp.int8)
+    scale = s * jnp.exp2(e)                # effective per-group scale
+    xg = x.reshape(rows, k // micro, micro)
+    q = cast_to_fp8_grid(xg / scale[:, :, None], fmt)
+    q_ref[...] = q.reshape(rows, k)
+
+
+def two_level_quantize(x, micro: int = 32, fmt: str = "e4m3", block_rows: int | None = None):
+    """MOSS two-level microscaling quantization of a 2-D ``x`` ([M, K]).
+
+    Returns ``(q, s, ss_exp)`` exactly matching ``ref.quant_two_level``.
+    """
+    m, k = x.shape
+    s_i = group_absmax(x, micro=micro) / fp8_max(fmt)
+    s_i = jnp.maximum(s_i, SCALE_EPS)
+    s = jnp.max(s_i)                       # level-1 global scale (FP32)
+    br = block_rows or _pick_block_rows(m)
+    g = k // micro
+    q, ss = pl.pallas_call(
+        functools.partial(_two_level_quantize_kernel, micro=micro, fmt=fmt),
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, g), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, g), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, g), jnp.int8),
+        ],
+        interpret=INTERPRET,
+    )(x, s_i, s.reshape(1, 1))
+    return q, s, ss
+
+
+# ---------------------------------------------------------------------------
+# Baseline quantizers as Pallas kernels
+# ---------------------------------------------------------------------------
+
+def _per_tensor_quantize_kernel(x_ref, s_ref, q_ref, *, fmt: str):
+    q_ref[...] = cast_to_fp8_grid(x_ref[...] / s_ref[0, 0], fmt)
+
+
+def per_tensor_quantize(x, fmt: str = "e4m3", scale=None, block_rows: int | None = None):
+    """Per-tensor FP8 quantization (TE-style). Returns ``(q, s)``."""
+    m, k = x.shape
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / fp8_max(fmt), SCALE_EPS)
+    scale = jnp.asarray(scale, jnp.float32)
+    br = block_rows or _pick_block_rows(m)
+    q = pl.pallas_call(
+        functools.partial(_per_tensor_quantize_kernel, fmt=fmt),
+        grid=(m // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=INTERPRET,
+    )(x, scale.reshape(1, 1))
+    return q, scale
+
+
+def _per_group_quantize_kernel(x_ref, q_ref, s_ref, *, group: int, fmt: str):
+    x = x_ref[...]
+    rows, k = x.shape
+    xg = x.reshape(rows, k // group, group)
+    s = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1) / fp8_max(fmt), SCALE_EPS)
+    s_ref[...] = s
+    q = cast_to_fp8_grid(xg / s[:, :, None], fmt)
+    q_ref[...] = q.reshape(rows, k)
+
+
+def per_group_quantize(x, group: int = 128, fmt: str = "e4m3", block_rows: int | None = None):
+    """Per-group (along K) FP8 quantization (COAT-style). Returns (q, s)."""
+    m, k = x.shape
+    assert k % group == 0
+    br = block_rows or _pick_block_rows(m)
+    g = k // group
+    q, s = pl.pallas_call(
+        functools.partial(_per_group_quantize_kernel, group=group, fmt=fmt),
+        grid=(m // br,),
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, g), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, g), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x)
+    return q, s

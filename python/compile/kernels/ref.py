@@ -1,0 +1,217 @@
+"""Pure-jnp oracles for every L1 kernel.
+
+These are the correctness ground truth: the Pallas kernels in quant.py /
+mx_gemm.py must match these bit-for-bit (same FP8 grid rounding, same
+scale arithmetic). pytest sweeps shapes and dtypes against them, and the
+Rust quantizers in ``rust/src/quant/`` are cross-checked against the AOT
+artifacts lowered from these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..fp8 import SCALE_EPS, cast_to_fp8_grid, e8m0_exponent, e8m0_decode, fp8_max
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor quantization (Transformer-Engine style; paper §2.1)
+# ---------------------------------------------------------------------------
+
+def quant_per_tensor(x, fmt: str = "e4m3", scale=None):
+    """Per-tensor FP8 quantization.
+
+    Returns ``(q, s)`` with ``q`` on the FP8 grid and ``s`` the FP32 scale.
+    If ``scale`` is given it is used as-is (this is how automatic scaling
+    injects predicted weight scales); otherwise the JIT scale
+    ``max|x| / fp8_max`` is computed (a full max-reduction).
+    """
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)) / fp8_max(fmt), SCALE_EPS)
+    q = cast_to_fp8_grid(x / scale, fmt)
+    return q, scale
+
+
+def dequant_per_tensor(q, s):
+    return q * s
+
+
+# ---------------------------------------------------------------------------
+# Per-group quantization (COAT / DeepSeek-V3 style; group along K)
+# ---------------------------------------------------------------------------
+
+def quant_per_group(x, group: int = 128, fmt: str = "e4m3"):
+    """Per-group FP8 quantization along the last (inner/K) dimension.
+
+    Returns ``(q, s)`` where ``s`` has shape ``x.shape[:-1] + (K//group,)``.
+    """
+    k = x.shape[-1]
+    group = min(group, k)  # small-dim layers: clamp (group <= K always)
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    xg = x.reshape(*x.shape[:-1], k // group, group)
+    s = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1) / fp8_max(fmt), SCALE_EPS)
+    q = cast_to_fp8_grid(xg / s[..., None], fmt).reshape(x.shape)
+    return q, s
+
+
+def dequant_per_group(q, s, group: int = 128):
+    k = q.shape[-1]
+    group = min(group, k)
+    qg = q.reshape(*q.shape[:-1], k // group, group)
+    return (qg * s[..., None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# Two-level microscaling (MOSS §3.1): global FP32 scale + per-32 E8M0
+# ---------------------------------------------------------------------------
+
+def quant_two_level(x, micro: int = 32, fmt: str = "e4m3"):
+    """MOSS two-level microscaling quantization along the last dimension.
+
+    Stage 1 (paper Eq. 2): fine-grained FP32 scales
+        ``s_i = max|x_i| / fp8_max``  per micro-group of ``micro`` values.
+    Stage 2 (paper Eq. 3): split into a global FP32 scale and E8M0
+        power-of-two microscales
+        ``s = max_i s_i``,  ``ss_i = round_pow2(s_i / s)``  in (0, 1].
+
+    Returns ``(q, s, ss_exp)``:
+      q       f32-on-E4M3-grid, same shape as x
+      s       scalar f32 global scale
+      ss_exp  int8 E8M0 exponents, shape ``x.shape[:-1] + (K//micro,)``
+    """
+    k = x.shape[-1]
+    assert k % micro == 0, f"K={k} not divisible by micro={micro}"
+    xg = x.reshape(*x.shape[:-1], k // micro, micro)
+    s_i = jnp.maximum(jnp.max(jnp.abs(xg), axis=-1) / fp8_max(fmt), SCALE_EPS)
+    s = jnp.max(s_i)
+    ss_exp = e8m0_exponent(s_i / s)
+    ss = e8m0_decode(ss_exp)
+    q = cast_to_fp8_grid(xg / (s * ss)[..., None], fmt).reshape(x.shape)
+    return q, s, ss_exp
+
+
+def dequant_two_level(q, s, ss_exp, micro: int = 32):
+    k = q.shape[-1]
+    qg = q.reshape(*q.shape[:-1], k // micro, micro)
+    ss = e8m0_decode(ss_exp)
+    return (qg * (s * ss)[..., None]).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# Quantized GEMM oracles
+# ---------------------------------------------------------------------------
+
+def mx_gemm(q_x, ss_exp_x, q_w):
+    """Oracle for the MOSS MXFP8 GEMM main loop (paper Fig. 3b).
+
+    Computes ``(q_x * 2^ss_x) @ q_w`` — subscales applied at micro-group
+    granularity inside the "Tensor Core" loop, NO global scales (those
+    belong to the epilogue). ``q_x``: [M, K]; ``ss_exp_x``: [M, K//micro];
+    ``q_w``: [K, N].
+    """
+    m, k = q_x.shape
+    micro = k // ss_exp_x.shape[-1]
+    ss = e8m0_decode(ss_exp_x)
+    xs = (q_x.reshape(m, k // micro, micro) * ss[:, :, None]).reshape(m, k)
+    return xs @ q_w
+
+
+def mx_gemm_epilogue(acc, s_x, s_w):
+    """Oracle for the epilogue: one FP32 rescale of the accumulator."""
+    return acc * (s_x * s_w)
+
+
+def moss_linear(x, w, fmt_x: str = "e4m3", s_w=None, micro: int = 32):
+    """Full MOSS quantized linear: two-level x, per-tensor w, epilogue DQ."""
+    q_x, s_x, ss_x = quant_two_level(x, micro=micro, fmt=fmt_x)
+    q_w, s_w = quant_per_tensor(w, fmt="e4m3", scale=s_w)
+    return mx_gemm_epilogue(mx_gemm(q_x, ss_x, q_w), s_x, s_w)
+
+
+def coat_linear(x, w, group: int = 128):
+    """Per-group(K)-activation x per-tensor-weight linear (COAT-style).
+
+    The per-group dequantization happens inside the K loop (the source of
+    the CUDA-core overhead the paper measures); numerically it is the
+    grouped sum below.
+    """
+    group = min(group, x.shape[-1])
+    q_x, s_x = quant_per_group(x, group=group)
+    q_w, s_w = quant_per_tensor(w)
+    m, k = q_x.shape
+    n = q_w.shape[1]
+    g = k // group
+    # sum_g s_g * (q_x[:, g] @ q_w[g, :]) — dequant of each partial sum.
+    qxg = q_x.reshape(m, g, group)
+    qwg = q_w.reshape(g, group, n)
+    partial = jnp.einsum("mgk,gkn->mgn", qxg, qwg)
+    return jnp.sum(partial * s_x[:, :, None], axis=1) * s_w
+
+
+def per_tensor_linear(x, w, s_w=None):
+    """Per-tensor x & w linear (Transformer-Engine style)."""
+    q_x, s_x = quant_per_tensor(x)
+    q_w, s_w = quant_per_tensor(w, scale=s_w)
+    return (q_x @ q_w) * (s_x * s_w)
+
+
+# ---------------------------------------------------------------------------
+# SNR (paper Eq. 4) — used by test_snr.py to check Theorem 1
+# ---------------------------------------------------------------------------
+
+def snr_db(x, dq):
+    """Empirical quantization SNR in dB (paper Eq. 4, power-weighted).
+
+    NOTE (reproduction finding, see DESIGN.md §SNR-metrics): with FLOAT8
+    payloads this metric is nearly scale-invariant — power-of-two
+    microscales change results only at overflow/underflow boundaries, and
+    underflowed small elements carry negligible *power*. The paper's
+    Theorem-1 proof uses the uniform-noise model below (``snr_model_db``),
+    under which the ordering per-tensor < per-group < MOSS is robust; the
+    per-element relative metric (``snr_relative_db``) shows it
+    empirically as well.
+    """
+    sig = jnp.mean(x.astype(jnp.float64) ** 2)
+    noise = jnp.mean((dq.astype(jnp.float64) - x.astype(jnp.float64)) ** 2)
+    return 10.0 * jnp.log10(sig / jnp.maximum(noise, 1e-30))
+
+
+def snr_model_db(x, eff_scale_per_elem):
+    """Uniform-noise-model SNR (paper Eqs. 5-7): noise = E[s_eff^2]/12.
+
+    ``eff_scale_per_elem`` broadcasts against ``x`` (per-tensor: scalar;
+    per-group: repeat of group scales; MOSS: s * 2^ss per micro-group).
+    """
+    sig = jnp.mean(x.astype(jnp.float64) ** 2)
+    noise = jnp.mean((eff_scale_per_elem * jnp.ones_like(x)).astype(jnp.float64) ** 2) / 12.0
+    return 10.0 * jnp.log10(sig / jnp.maximum(noise, 1e-30))
+
+
+def snr_relative_db(x, dq, floor: float = 1e-20):
+    """Per-element relative-error SNR: -10 log10 E[((dq-x)/|x|)^2].
+
+    Weights every element equally, so underflow of small-magnitude
+    channels (what microscaling rescues) is visible.
+    """
+    ax = jnp.abs(x)
+    r = jnp.where(ax > floor, (dq - x) / jnp.maximum(ax, floor), 0.0)
+    n = jnp.maximum(jnp.sum(ax > floor), 1)
+    return -10.0 * jnp.log10(jnp.sum(r.astype(jnp.float64) ** 2) / n + 1e-30)
+
+
+def effective_scales_per_tensor(x, fmt: str = "e4m3"):
+    """Per-element effective scale map for per-tensor quantization."""
+    s = jnp.maximum(jnp.max(jnp.abs(x)) / fp8_max(fmt), SCALE_EPS)
+    return jnp.broadcast_to(s, x.shape)
+
+
+def effective_scales_per_group(x, group: int = 128, fmt: str = "e4m3"):
+    """Per-element effective scale map for per-group quantization."""
+    _, s = quant_per_group(x, group=group, fmt=fmt)
+    return jnp.repeat(s, group, axis=-1)
+
+
+def effective_scales_two_level(x, micro: int = 32, fmt: str = "e4m3"):
+    """Per-element effective scale map (s * 2^ss) for MOSS two-level."""
+    _, s, ss = quant_two_level(x, micro=micro, fmt=fmt)
+    return jnp.repeat(s * e8m0_decode(ss), micro, axis=-1)

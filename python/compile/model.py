@@ -1,0 +1,357 @@
+"""L2: decoder-only transformer fwd/bwd with mode-switchable FP8 linears.
+
+The model is a standard pre-norm decoder (RMSNorm, RoPE, causal MHA, GELU
+MLP) whose four per-layer linear projections (wqkv, wo, w_up, w_down) run
+through a quantized matmul selected by ``mode``:
+
+  bf16      — BF16 x/w matmul (the paper's baseline)
+  pertensor — per-tensor FP8 x & w (Transformer-Engine style)
+  coat      — per-group(128) FP8 activations, JIT per-tensor weights
+  moss      — two-level microscaled activations (Pallas L1 kernels) +
+              per-tensor weights with *injected* scales (automatic scaling)
+
+Each quantized matmul is a ``jax.custom_vjp``: the backward pass consumes
+the *saved quantized* activations (the source of the paper's activation-
+memory savings, Table 5) and quantizes incoming gradients per-tensor E5M2
+(the wider-range format, §2.1).
+
+Non-GEMM ops (norms, softmax, residuals) stay in f32, matching the
+paper's scope ("FP8 for linear layers").
+
+Layers are stacked along a leading L axis and iterated with
+``jax.lax.scan`` so the lowered HLO stays small and compile time flat in
+depth (DESIGN.md §Perf, L2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8
+from .kernels import mx_gemm as mx
+from .kernels import quant as qk
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer dimensions (paper Table 8, scaled)."""
+    vocab: int = 256
+    dim: int = 64
+    layers: int = 2
+    heads: int = 2
+    ffn: int = 256          # MLP hidden size
+    seq: int = 64           # training sequence length
+    batch: int = 4          # per-step micro-batch
+    micro: int = 32         # MOSS level-2 micro-group size (MX spec)
+    group: int = 128        # COAT per-group size
+    use_pallas: bool = True  # False = pure-jnp oracle path (CI speed)
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    def param_count(self) -> int:
+        d, f, l, v = self.dim, self.ffn, self.layers, self.vocab
+        per_layer = d * 3 * d + d * d + d * f + f * d + 2 * d
+        return v * d + l * per_layer + d + d * v
+
+
+# Named presets; `aot.py --config <name>` lowers one of these.
+PRESETS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(vocab=4096, dim=256, layers=4, heads=4, ffn=1024,
+                         seq=128, batch=8),
+    "medium": ModelConfig(vocab=8192, dim=384, layers=8, heads=6, ffn=1536,
+                          seq=256, batch=4),
+    "e2e100m": ModelConfig(vocab=16384, dim=640, layers=16, heads=10,
+                           ffn=2560, seq=256, batch=4),
+}
+
+MODES = ("bf16", "pertensor", "coat", "moss")
+# The four quantized linears per layer, in w_scales column order.
+LINEAR_NAMES = ("wqkv", "wo", "w_up", "w_down")
+
+# Stable parameter ordering — the artifact manifest and the Rust runtime
+# both index parameters by this list. Shapes are per ``param_shapes``.
+PARAM_NAMES = ("embed", "ln1", "wqkv", "wo", "ln2", "w_up", "w_down",
+               "lnf", "head")
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f, l, v = cfg.dim, cfg.ffn, cfg.layers, cfg.vocab
+    return {
+        "embed": (v, d),
+        "ln1": (l, d),
+        "wqkv": (l, d, 3 * d),
+        "wo": (l, d, d),
+        "ln2": (l, d),
+        "w_up": (l, d, f),
+        "w_down": (l, f, d),
+        "lnf": (d,),
+        "head": (d, v),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Scaled-normal init (GPT-2 style: residual projections down-scaled)."""
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    params = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.layers)
+    for k, name in zip(keys, PARAM_NAMES):
+        shape = shapes[name]
+        if name in ("ln1", "ln2", "lnf"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[-2]
+            w = jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+            if name in ("wo", "w_down"):
+                w = w * resid_scale
+            params[name] = w
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul with custom VJP (one per mode)
+# ---------------------------------------------------------------------------
+
+def _bwd_matmuls(res, gy):
+    """Shared backward: per-tensor E5M2 gradient quantization (§2.1)."""
+    dq_x, q_w, s_w = res
+    q_gy, s_gy = ref.quant_per_tensor(gy, fmt="e5m2")
+    # dx = gy @ w^T   (FP8 GEMM: both operands on FP8 grids, f32 accum)
+    dx = (q_gy @ q_w.T) * (s_gy * s_w)
+    # dw = x^T @ gy   (x dequantized from the saved FP8 payload; its scales
+    # vary along the *output* dim of dw, so dequant precedes the GEMM —
+    # exactly the inner-dim scaling constraint the paper discusses)
+    dw = (dq_x.T @ q_gy) * s_gy
+    return dx, dw, None
+
+
+def _make_qmatmul(mode: str, cfg: ModelConfig):
+    """Build the mode's quantized ``(x2d [M,K], w [K,N], s_w) -> y`` op."""
+
+    if mode == "bf16":
+        @jax.custom_vjp
+        def matmul(x, w, s_w):
+            return (x.astype(jnp.bfloat16) @ w.astype(jnp.bfloat16)).astype(jnp.float32)
+
+        def fwd(x, w, s_w):
+            xb = x.astype(jnp.bfloat16)
+            wb = w.astype(jnp.bfloat16)
+            return (xb @ wb).astype(jnp.float32), (xb, wb)
+
+        def bwd(res, gy):
+            xb, wb = res
+            gyb = gy.astype(jnp.bfloat16)
+            dx = (gyb @ wb.T).astype(jnp.float32)
+            dw = (xb.T @ gyb).astype(jnp.float32)
+            return dx, dw, None
+
+        matmul.defvjp(fwd, bwd)
+        return matmul
+
+    if mode == "pertensor":
+        @jax.custom_vjp
+        def matmul(x, w, s_w):
+            return ref.per_tensor_linear(x, w, s_w=s_w)
+
+        def fwd(x, w, s_w):
+            q_x, s_x = ref.quant_per_tensor(x)
+            q_w, s_w = ref.quant_per_tensor(w, scale=s_w)
+            y = (q_x @ q_w) * (s_x * s_w)
+            return y, (q_x * s_x, q_w, s_w)
+
+        matmul.defvjp(fwd, _bwd_matmuls)
+        return matmul
+
+    if mode == "coat":
+        @jax.custom_vjp
+        def matmul(x, w, s_w):
+            return ref.coat_linear(x, w, group=cfg.group)
+
+        def fwd(x, w, s_w):
+            # COAT: JIT per-tensor weight scale (max-reduction every step).
+            y = ref.coat_linear(x, w, group=cfg.group)
+            q_x, s_x = ref.quant_per_group(x, group=cfg.group)
+            q_w, s_wj = ref.quant_per_tensor(w)
+            return y, (ref.dequant_per_group(q_x, s_x, cfg.group), q_w, s_wj)
+
+        matmul.defvjp(fwd, _bwd_matmuls)
+        return matmul
+
+    if mode == "moss":
+        quantize = (qk.two_level_quantize if cfg.use_pallas
+                    else ref.quant_two_level)
+
+        @jax.custom_vjp
+        def matmul(x, w, s_w):
+            return _moss_fwd_only(x, w, s_w)
+
+        def _moss_fwd_only(x, w, s_w):
+            q_x, s_x, ss_x = quantize(x, micro=cfg.micro)
+            q_w, s_w = ref.quant_per_tensor(w, scale=s_w)
+            if cfg.use_pallas:
+                return mx.mx_gemm(q_x, ss_x, q_w, s_x, s_w, micro=cfg.micro)
+            return ref.mx_gemm_epilogue(ref.mx_gemm(q_x, ss_x, q_w), s_x, s_w)
+
+        def fwd(x, w, s_w):
+            q_x, s_x, ss_x = quantize(x, micro=cfg.micro)
+            q_w, s_w = ref.quant_per_tensor(w, scale=s_w)
+            if cfg.use_pallas:
+                y = mx.mx_gemm(q_x, ss_x, q_w, s_x, s_w, micro=cfg.micro)
+            else:
+                y = ref.mx_gemm_epilogue(ref.mx_gemm(q_x, ss_x, q_w), s_x, s_w)
+            dq_x = ref.dequant_two_level(q_x, s_x, ss_x, micro=cfg.micro)
+            return y, (dq_x, q_w, s_w)
+
+        matmul.defvjp(fwd, _bwd_matmuls)
+        return matmul
+
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(q, k):
+    """Rotary position embeddings over the head dim."""
+    *_, s, hd = q.shape
+    half = hd // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos * inv[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+    return rot(q), rot(k)
+
+
+def _attention(x, wqkv, wo, s_qkv, s_o, cfg: ModelConfig, qmatmul):
+    b, s, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    qkv = qmatmul(x.reshape(b * s, d), wqkv, s_qkv).reshape(b, s, 3, h, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    q, k = jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2)   # [b, h, s, hd]
+    v = jnp.swapaxes(v, 1, 2)
+    q, k = rope(q, k)
+    # Attention score/value matmuls stay in f32 (non-linear-layer scope).
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    p = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    o = jnp.swapaxes(o, 1, 2).reshape(b * s, d)
+    return qmatmul(o, wo, s_o).reshape(b, s, d)
+
+
+def _mlp(x, w_up, w_down, s_up, s_down, cfg: ModelConfig, qmatmul):
+    b, s, d = x.shape
+    hmid = qmatmul(x.reshape(b * s, d), w_up, s_up)
+    hmid = jax.nn.gelu(hmid)
+    return qmatmul(hmid, w_down, s_down).reshape(b, s, d)
+
+
+def _layer(x, lp, scales, cfg: ModelConfig, qmatmul):
+    """One pre-norm decoder block. ``lp``: per-layer params; ``scales``: [4]."""
+    ln1, wqkv, wo, ln2, w_up, w_down = lp
+    x = x + _attention(rmsnorm(x, ln1), wqkv, wo, scales[0], scales[1], cfg, qmatmul)
+    x = x + _mlp(rmsnorm(x, ln2), w_up, w_down, scales[2], scales[3], cfg, qmatmul)
+    return x
+
+
+def forward(params, tokens, w_scales, cfg: ModelConfig, mode: str):
+    """Logits for ``tokens`` [B, S] -> [B, S, V].
+
+    ``w_scales`` [L, 4]: per-layer per-linear weight scales, consumed by
+    the pertensor/moss modes (automatic scaling); ignored by bf16/coat.
+    """
+    qmatmul = _make_qmatmul(mode, cfg)
+    x = params["embed"][tokens]
+
+    stacked = (params["ln1"], params["wqkv"], params["wo"],
+               params["ln2"], params["w_up"], params["w_down"])
+
+    def body(x, layer_in):
+        lp, scales = layer_in
+        return _layer(x, lp, scales, cfg, qmatmul), None
+
+    x, _ = jax.lax.scan(body, x, (stacked, w_scales))
+    x = rmsnorm(x, params["lnf"])
+    b, s, d = x.shape
+    # LM head stays BF16 in all modes (paper: "critical matmul" practice).
+    head = _make_qmatmul("bf16", cfg)
+    return head(x.reshape(b * s, d), params["head"], None).reshape(b, s, cfg.vocab)
+
+
+def loss_fn(params, tokens, w_scales, cfg: ModelConfig, mode: str):
+    """Next-token cross-entropy. ``tokens``: [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, w_scales, cfg, mode)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def eval_nll(params, tokens, cfg: ModelConfig, mode: str = "bf16"):
+    """Summed NLL + token count over ``tokens`` [B, S+1] (for perplexity)."""
+    w_scales = jnp.ones((cfg.layers, 4), jnp.float32)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, w_scales, cfg, mode)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), jnp.asarray(nll.size, jnp.float32)
+
+
+def greedy_logits(params, tokens, cfg: ModelConfig, mode: str = "bf16"):
+    """Logits of the last position for greedy decoding. tokens: [B, S]."""
+    w_scales = jnp.ones((cfg.layers, 4), jnp.float32)
+    logits = forward(params, tokens, w_scales, cfg, mode)
+    return logits[:, -1, :]
+
+
+def probe_activations(params, tokens, w_scales, cfg: ModelConfig,
+                      layer: int | None = None):
+    """Activations the paper samples for Table 7 (SNR study), from one
+    layer: (LayerNorm input, attention output, FFN intermediate).
+
+    Returned as 2-D [B*S, D] / [B*S, F] tensors, f32, *unquantized* — the
+    Rust SNR tooling quantizes them under the three schemes offline.
+    """
+    layer = cfg.layers // 2 if layer is None else layer
+    qmatmul = _make_qmatmul("bf16", cfg)
+    x = params["embed"][tokens]
+    b, s, d = x.shape
+    ln_in = attn_out = None
+    ffn_mid = None
+    for l in range(cfg.layers):
+        lp = tuple(params[n][l] for n in ("ln1", "wqkv", "wo", "ln2", "w_up", "w_down"))
+        ln1, wqkv, wo, ln2, w_up, w_down = lp
+        h = rmsnorm(x, ln1)
+        a = _attention(h, wqkv, wo, None, None, cfg, qmatmul)
+        x = x + a
+        h2 = rmsnorm(x, ln2)
+        mid = qmatmul(h2.reshape(b * s, d), w_up, None)
+        mid_act = jax.nn.gelu(mid)
+        x = x + qmatmul(mid_act, w_down, None).reshape(b, s, d)
+        if l == layer:
+            ln_in = h.reshape(b * s, d)
+            attn_out = a.reshape(b * s, d)
+            ffn_mid = mid_act
+    return ln_in, attn_out, ffn_mid

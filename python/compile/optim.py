@@ -1,0 +1,86 @@
+"""AdamW (paper Eq. 1) + the bounded-update machinery behind automatic
+scaling (paper §3.2, Theorem 2).
+
+The optimizer runs inside the lowered ``train_step`` HLO; the *scaling*
+of weights is decided outside, by the Rust coordinator, which injects
+per-tensor weight scales predicted via Theorem 2:
+
+    max|W_t| <= max|W_0| + eta * t      (Eq. 10: s_t = s_0 + eta*t / 448)
+
+``update_bound`` mirrors Eq. 8 and is cross-checked by property tests on
+both sides of the stack (test_optim.py, rust optim/bound.rs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    """Paper §4.1 defaults (OLMo/LLaMA recipe)."""
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0  # global-norm clip; <=0 disables
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+
+
+def adamw_step(params, m, v, grads, step, lr, cfg: AdamWConfig):
+    """One AdamW update (paper Eq. 1). ``step`` is 1-based (i32 scalar).
+
+    Returns ``(params', m', v', gnorm)``.
+    """
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.beta1 ** t
+    bc2 = 1.0 - cfg.beta2 ** t
+
+    def upd(p, mi, vi, g):
+        mi = cfg.beta1 * mi + (1.0 - cfg.beta1) * g
+        vi = cfg.beta2 * vi + (1.0 - cfg.beta2) * (g * g)
+        mhat = mi / bc1
+        vhat = vi / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+        return p, mi, vi
+
+    # params is a flat dict of arrays (model.PARAM_NAMES order).
+    params_new, m_new, v_new = {}, {}, {}
+    for name in params:
+        params_new[name], m_new[name], v_new[name] = upd(
+            params[name], m[name], v[name], grads[name])
+    return params_new, m_new, v_new, gnorm
+
+
+def update_bound(step, beta1: float = 0.9, beta2: float = 0.95):
+    """Theorem 2 (paper Eq. 8): bound on |Delta_t| / eta at step t."""
+    t = jnp.asarray(step, jnp.float32)
+    num = 1.0 - beta1 ** t
+    den = jnp.sqrt(1.0 - beta2 ** t)
+    return jnp.where(num > den, num / den, 1.0)
+
+
+def predicted_weight_absmax(absmax0, lr_sum):
+    """Eq. 10 generalized to a schedule: max|W_t| <= max|W_0| + sum_t eta_t.
+
+    The paper states the constant-lr form ``max|W_0| + eta*t``; with a
+    cosine schedule the per-step bound |Delta_t| <= eta_t accumulates to
+    the sum of learning rates, which the Rust AutoScaler tracks exactly.
+    """
+    return absmax0 + lr_sum

@@ -1,0 +1,20 @@
+"""Shared fixtures: activation-like random tensors and deterministic keys."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def activation_like(rng, m, k, chan_sigma=2.0, token_sigma=0.5, outlier_p=0.005):
+    """LLM-activation-like tensor: lognormal channel envelope (multi-octave
+    magnitude structure along K), mild token structure, rare outlier
+    channels — the regime the paper's Table 7 samples from."""
+    x = rng.normal(size=(m, k))
+    x *= np.exp(rng.normal(size=(1, k)) * chan_sigma)
+    x *= np.exp(rng.normal(size=(m, 1)) * token_sigma)
+    x *= np.where(rng.random((1, k)) < outlier_p, 30.0, 1.0)
+    return x.astype(np.float32)

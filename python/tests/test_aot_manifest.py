@@ -1,0 +1,86 @@
+"""AOT pipeline: manifest correctness against the lowered artifacts.
+
+Uses the `tiny` artifacts if already built (make artifacts); otherwise
+builds them into a tmpdir. Checks the manifest IO specs match what the
+lowered functions actually consume/produce — this is the contract the
+Rust runtime depends on.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M, optim as O
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "tiny")
+
+
+@pytest.fixture(scope="module")
+def manifest(tmp_path_factory):
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        out = str(tmp_path_factory.mktemp("art"))
+        aot.build("tiny", out, O.AdamWConfig())
+        path = os.path.join(out, "manifest.json")
+    with open(path) as f:
+        return json.load(f), os.path.dirname(path)
+
+
+EXPECTED_PROGRAMS = {
+    "train_step_bf16", "train_step_pertensor", "train_step_coat",
+    "train_step_moss", "eval_step", "logits_last", "init_params",
+    "weight_absmax", "probe_acts", "quant_dq_pertensor",
+    "quant_dq_pergroup", "quant_moss", "mx_gemm",
+}
+
+
+class TestManifest:
+    def test_all_programs_present(self, manifest):
+        man, _ = manifest
+        assert EXPECTED_PROGRAMS <= set(man["programs"])
+
+    def test_hlo_files_exist_and_parse_header(self, manifest):
+        man, d = manifest
+        for name, prog in man["programs"].items():
+            p = os.path.join(d, prog["file"])
+            assert os.path.exists(p), name
+            head = open(p).read(200)
+            assert head.startswith("HloModule"), name
+
+    def test_train_step_io_counts(self, manifest):
+        man, _ = manifest
+        prog = man["programs"]["train_step_moss"]
+        # 27 param/m/v + tokens + step + lr + w_scales
+        assert len(prog["inputs"]) == 31
+        # 27 updated + loss + gnorm
+        assert len(prog["outputs"]) == 29
+
+    def test_param_shapes_match_model(self, manifest):
+        man, _ = manifest
+        cfg = M.PRESETS[man["config_name"]]
+        shapes = M.param_shapes(cfg)
+        prog = man["programs"]["train_step_moss"]
+        for spec in prog["inputs"][:9]:
+            name = spec["name"].split(".", 1)[1]
+            assert tuple(spec["shape"]) == shapes[name], name
+
+    def test_entry_layout_matches_manifest(self, manifest):
+        # The HLO entry_computation_layout must list exactly the manifest
+        # inputs, in order — this is what the Rust runtime trusts.
+        man, d = manifest
+        prog = man["programs"]["eval_step"]
+        text = open(os.path.join(d, prog["file"])).read(4000)
+        layout = text.split("entry_computation_layout={", 1)[1]
+        for spec in prog["inputs"]:
+            dt = spec["dtype"].replace("i32", "s32").replace("i8", "s8")
+            dims = ",".join(str(x) for x in spec["shape"])
+            assert f"{dt}[{dims}" in layout, spec
+
+    def test_model_hyperparams_recorded(self, manifest):
+        man, _ = manifest
+        cfg = M.PRESETS[man["config_name"]]
+        assert man["model"]["param_count"] == cfg.param_count()
+        assert man["model"]["micro"] == 32
+        assert man["adamw"]["beta2"] == 0.95

@@ -1,0 +1,69 @@
+"""FP8 / E8M0 format emulation unit tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import fp8
+
+
+class TestCastToGrid:
+    def test_exact_values_survive(self):
+        # Representable E4M3 values round-trip unchanged.
+        vals = jnp.array([0.0, 1.0, -1.0, 448.0, -448.0, 0.5, 1.5, 240.0])
+        out = fp8.cast_to_fp8_grid(vals, "e4m3")
+        assert jnp.array_equal(out, vals)
+
+    def test_saturates_instead_of_nan(self):
+        out = fp8.cast_to_fp8_grid(jnp.array([1e6, -1e6, 500.0]), "e4m3")
+        assert jnp.array_equal(out, jnp.array([448.0, -448.0, 448.0]))
+        assert not jnp.any(jnp.isnan(out))
+
+    def test_e5m2_range(self):
+        out = fp8.cast_to_fp8_grid(jnp.array([57344.0, 1e9]), "e5m2")
+        assert jnp.array_equal(out, jnp.array([57344.0, 57344.0]))
+
+    def test_rounding_is_idempotent(self, rng):
+        x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32) * 100)
+        once = fp8.cast_to_fp8_grid(x, "e4m3")
+        twice = fp8.cast_to_fp8_grid(once, "e4m3")
+        assert jnp.array_equal(once, twice)
+
+    def test_grid_spacing_matches_format(self):
+        # Near 384 (exponent bucket [256, 448]), E4M3 step is 32.
+        out = fp8.cast_to_fp8_grid(jnp.array([384.0 + 10.0]), "e4m3")
+        assert float(out[0]) in (384.0, 416.0)
+
+    @pytest.mark.parametrize("fmt", ["e4m3", "e5m2"])
+    def test_sign_symmetry(self, rng, fmt):
+        x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32) * 10)
+        assert jnp.array_equal(fp8.cast_to_fp8_grid(-x, fmt),
+                               -fp8.cast_to_fp8_grid(x, fmt))
+
+
+class TestE8M0:
+    def test_exact_powers_of_two(self):
+        v = jnp.array([1.0, 0.5, 0.25, 2.0 ** -10])
+        e = fp8.e8m0_exponent(v)
+        assert list(np.asarray(e)) == [0, -1, -2, -10]
+
+    def test_ceil_never_underestimates(self, rng):
+        # The overflow-free property: 2^e >= v for v in (0, 1].
+        v = jnp.asarray(rng.random(512).astype(np.float32).clip(1e-6, 1.0))
+        dec = fp8.e8m0_decode(fp8.e8m0_exponent(v))
+        assert bool(jnp.all(dec >= v * (1 - 1e-6)))
+        # and never more than 2x above
+        assert bool(jnp.all(dec <= 2.0 * v))
+
+    def test_unit_ratio_maps_to_zero_exponent(self):
+        assert int(fp8.e8m0_exponent(jnp.array(1.0))) == 0
+
+    def test_nearest_variant_within_sqrt2(self, rng):
+        v = jnp.asarray(rng.random(512).astype(np.float32).clip(1e-6, 1.0))
+        dec = fp8.e8m0_decode(fp8.e8m0_exponent_nearest(v))
+        r = np.asarray(dec / v)
+        assert (r >= 2 ** -0.51).all() and (r <= 2 ** 0.51).all()
+
+    def test_clip_to_int8_range(self):
+        e = fp8.e8m0_exponent(jnp.array([1e-45]))
+        assert int(e[0]) >= -127

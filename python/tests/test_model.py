@@ -1,0 +1,125 @@
+"""Model-level tests: shapes, grads, mode parity, training sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import optim as O
+
+CFG = M.PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(jax.random.PRNGKey(1),
+                              (CFG.batch, CFG.seq + 1), 0, CFG.vocab)
+
+
+def ws():
+    return jnp.ones((CFG.layers, 4), jnp.float32)
+
+
+class TestForward:
+    def test_logits_shape(self, params, tokens):
+        logits = M.forward(params, tokens[:, :-1], ws(), CFG, "bf16")
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+
+    def test_param_count_matches_shapes(self):
+        shapes = M.param_shapes(CFG)
+        total = sum(int(np.prod(s)) for s in shapes.values())
+        assert total == CFG.param_count()
+
+    @pytest.mark.parametrize("mode", M.MODES)
+    def test_all_modes_finite(self, params, tokens, mode):
+        loss = M.loss_fn(params, tokens, ws(), CFG, mode)
+        assert np.isfinite(float(loss))
+
+    def test_quantized_modes_close_to_bf16(self, params, tokens):
+        base = float(M.loss_fn(params, tokens, ws(), CFG, "bf16"))
+        for mode in ("pertensor", "coat", "moss"):
+            got = float(M.loss_fn(params, tokens, ws(), CFG, mode))
+            assert abs(got - base) / base < 0.02, (mode, got, base)
+
+    def test_initial_loss_near_uniform(self, params, tokens):
+        # Random init: loss ~ log(V)
+        loss = float(M.loss_fn(params, tokens, ws(), CFG, "bf16"))
+        assert abs(loss - np.log(CFG.vocab)) < 1.0
+
+    def test_causality(self, params):
+        # Changing a future token must not affect earlier logits.
+        t1 = jax.random.randint(jax.random.PRNGKey(3), (1, CFG.seq), 0, CFG.vocab)
+        t2 = t1.at[0, -1].set((t1[0, -1] + 1) % CFG.vocab)
+        l1 = M.forward(params, t1, ws(), CFG, "bf16")
+        l2 = M.forward(params, t2, ws(), CFG, "bf16")
+        np.testing.assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestGradients:
+    @pytest.mark.parametrize("mode", M.MODES)
+    def test_grads_finite_and_nonzero(self, params, tokens, mode):
+        _, grads = jax.value_and_grad(M.loss_fn)(params, tokens, ws(), CFG, mode)
+        for name, g in grads.items():
+            a = np.asarray(g)
+            assert np.isfinite(a).all(), name
+        assert float(O.global_norm(grads)) > 0
+
+    def test_moss_grads_close_to_bf16(self, params, tokens):
+        _, g1 = jax.value_and_grad(M.loss_fn)(params, tokens, ws(), CFG, "bf16")
+        _, g2 = jax.value_and_grad(M.loss_fn)(params, tokens, ws(), CFG, "moss")
+        # cosine similarity per parameter tensor
+        for name in ("wqkv", "w_up", "embed"):
+            a = np.asarray(g1[name]).ravel()
+            b = np.asarray(g2[name]).ravel()
+            cos = a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12)
+            assert cos > 0.95, (name, cos)
+
+
+class TestTraining:
+    @pytest.mark.parametrize("mode", ["bf16", "moss"])
+    def test_loss_decreases(self, mode):
+        cfg = CFG
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        m, v = O.zeros_like_tree(params), O.zeros_like_tree(params)
+        ac = O.AdamWConfig()
+        import functools
+
+        @jax.jit
+        def step(p, m, v, tok, t):
+            loss, grads = jax.value_and_grad(M.loss_fn)(p, tok, ws(), cfg, mode)
+            p2, m2, v2, _ = O.adamw_step(p, m, v, grads, t, jnp.asarray(1e-3), ac)
+            return p2, m2, v2, loss
+
+        key = jax.random.PRNGKey(7)
+        first = last = None
+        for i in range(6):
+            key, k = jax.random.split(key)
+            tok = jax.random.randint(k, (cfg.batch, cfg.seq + 1), 0, 32)
+            params, m, v, loss = step(params, m, v, tok, jnp.asarray(i + 1))
+            if first is None:
+                first = float(loss)
+            last = float(loss)
+        assert last < first - 0.3, (first, last)
+
+
+class TestProbe:
+    def test_probe_shapes(self, params, tokens):
+        ln_in, attn_out, ffn_mid = M.probe_activations(
+            params, tokens[:, :-1], ws(), CFG)
+        n = CFG.batch * CFG.seq
+        assert ln_in.shape == (n, CFG.dim)
+        assert attn_out.shape == (n, CFG.dim)
+        assert ffn_mid.shape == (n, CFG.ffn)
+
+    def test_probe_matches_forward_semantics(self, params, tokens):
+        # probing must not change the data path: finite, reasonable scale
+        outs = M.probe_activations(params, tokens[:, :-1], ws(), CFG)
+        for o in outs:
+            assert np.isfinite(np.asarray(o)).all()

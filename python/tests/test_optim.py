@@ -1,0 +1,142 @@
+"""AdamW + Theorem 2 (bounded updates / automatic scaling) tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import optim as O
+
+
+def simple_params(rng, n=64):
+    return {"w": jnp.asarray(rng.normal(size=(n,)).astype(np.float32))}
+
+
+class TestAdamWStep:
+    def test_moves_against_gradient(self, rng):
+        p = simple_params(rng)
+        m = O.zeros_like_tree(p)
+        v = O.zeros_like_tree(p)
+        g = {"w": jnp.ones_like(p["w"])}
+        cfg = O.AdamWConfig(weight_decay=0.0)
+        p2, _, _, _ = O.adamw_step(p, m, v, g, jnp.asarray(1), jnp.asarray(1e-2), cfg)
+        assert bool(jnp.all(p2["w"] < p["w"]))
+
+    def test_weight_decay_shrinks(self, rng):
+        p = simple_params(rng)
+        g = {"w": jnp.zeros_like(p["w"])}
+        cfg = O.AdamWConfig(weight_decay=0.1, grad_clip=0.0)
+        p2, _, _, _ = O.adamw_step(p, O.zeros_like_tree(p), O.zeros_like_tree(p),
+                                   g, jnp.asarray(1), jnp.asarray(1e-2), cfg)
+        np.testing.assert_allclose(np.asarray(p2["w"]),
+                                   np.asarray(p["w"]) * (1 - 1e-2 * 0.1), rtol=1e-6)
+
+    def test_grad_clip_engages(self, rng):
+        p = simple_params(rng)
+        g = {"w": jnp.full_like(p["w"], 1e3)}
+        cfg = O.AdamWConfig(grad_clip=1.0)
+        _, m2, _, gnorm = O.adamw_step(p, O.zeros_like_tree(p), O.zeros_like_tree(p),
+                                       g, jnp.asarray(1), jnp.asarray(1e-2), cfg)
+        assert float(gnorm) > 1.0
+        # post-clip gradient norm fed into m is <= 1
+        assert float(jnp.linalg.norm(m2["w"] / (1 - cfg.beta1))) <= 1.0 + 1e-4
+
+    def test_scale_invariance_of_update(self, rng):
+        # Adam's diagonal-rescaling invariance (paper §2.2): scaling the
+        # gradient by s leaves the (unclipped, eps->0) update unchanged.
+        p = simple_params(rng)
+        cfg = O.AdamWConfig(weight_decay=0.0, grad_clip=0.0, eps=1e-30)
+        g1 = {"w": jnp.asarray(np.random.default_rng(5).normal(size=64).astype(np.float32))}
+        g2 = {"w": g1["w"] * 256.0}
+        z = O.zeros_like_tree(p)
+        pa, *_ = O.adamw_step(p, z, z, g1, jnp.asarray(1), jnp.asarray(1e-3), cfg)
+        pb, *_ = O.adamw_step(p, z, z, g2, jnp.asarray(1), jnp.asarray(1e-3), cfg)
+        np.testing.assert_allclose(np.asarray(pa["w"]), np.asarray(pb["w"]), rtol=1e-5)
+
+
+def cauchy_schwarz_bound(t, beta1=0.9, beta2=0.95):
+    """Exact elementwise worst case of |m_hat/sqrt(v_hat)| at step t:
+    sqrt(sum_k a_k^2 / b_k) over the bias-corrected EMA weights (by
+    Cauchy-Schwarz, attained by adversarial mixed-sign gradients).
+
+    Reproduction finding (EXPERIMENTS.md): this exceeds 1 — e.g. 1.0003
+    at t=2 growing toward ~1.17 asymptotically with the paper's betas —
+    so the paper's Theorem-2 "|Delta_t| <= eta" is a slight
+    understatement of the true bound; automatic scaling absorbs it in
+    its re-anchor interval headroom.
+    """
+    ks = np.arange(t)
+    a = (1 - beta1) * beta1 ** ks / (1 - beta1 ** t)
+    b = (1 - beta2) * beta2 ** ks / (1 - beta2 ** t)
+    return float(np.sqrt(np.sum(a * a / b)))
+
+
+class TestTheorem2:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), steps=st.integers(1, 60),
+           lr=st.sampled_from([1e-4, 1e-3, 1e-2]))
+    def test_update_bounded_by_eta_times_bound(self, seed, steps, lr):
+        """|W_{t+1} - W_t| <= eta * cs_bound(t) + eta*wd*|W| along any
+        gradient trajectory — the exact (Cauchy-Schwarz) version of the
+        paper's Eq. 8/9 bound; see ``cauchy_schwarz_bound``."""
+        rng = np.random.default_rng(seed)
+        p = {"w": jnp.asarray(rng.normal(size=(16,)).astype(np.float32))}
+        m = O.zeros_like_tree(p)
+        v = O.zeros_like_tree(p)
+        cfg = O.AdamWConfig(grad_clip=0.0)
+        for t in range(1, steps + 1):
+            g = {"w": jnp.asarray((rng.normal(size=(16,)) *
+                                   10.0 ** rng.uniform(-3, 3)).astype(np.float32))}
+            p2, m, v, _ = O.adamw_step(p, m, v, g, jnp.asarray(t), jnp.asarray(lr), cfg)
+            delta = np.abs(np.asarray(p2["w"] - p["w"]))
+            bound = lr * cauchy_schwarz_bound(t, cfg.beta1, cfg.beta2) \
+                + lr * cfg.weight_decay * np.abs(np.asarray(p["w"]))
+            # f32 arithmetic: the measured delta |p2 - p| carries a ULP
+            # of the *weight* (1e-7-scale for O(1) weights), not just of
+            # the update — allow that plus relative slack.
+            slack = 1e-5 * bound + 2e-7 * (1.0 + np.abs(np.asarray(p["w"])))
+            assert (delta <= bound + slack).all(), (t, delta.max(), bound.max())
+            p = p2
+
+    def test_cs_bound_exceeds_one_but_modestly(self):
+        # the Theorem-2 correction: paper bound 1.0, exact 1.0003..1.17
+        assert cauchy_schwarz_bound(1) == 1.0
+        assert 1.0 < cauchy_schwarz_bound(2) < 1.01
+        assert 1.1 < cauchy_schwarz_bound(1000) < 1.2
+
+    def test_bound_shrinks_to_eta(self):
+        # For t large, bound -> 1 (|Delta| <= eta); early steps may exceed.
+        assert float(O.update_bound(10000)) == 1.0
+        b1 = float(O.update_bound(1))
+        # with beta1=0.9, beta2=0.95: (1-0.9)/sqrt(1-0.95) ~ 0.447 < 1 -> 1
+        assert b1 == 1.0
+
+    def test_sparse_gradient_worst_case(self):
+        # Theorem 2 case 1: gradient zero until step t, nonzero at t.
+        p = {"w": jnp.zeros((1,), jnp.float32)}
+        m = O.zeros_like_tree(p)
+        v = O.zeros_like_tree(p)
+        cfg = O.AdamWConfig(weight_decay=0.0, grad_clip=0.0)
+        lr = 1e-2
+        for t in range(1, 20):
+            g = {"w": jnp.asarray([1.0 if t == 19 else 0.0], jnp.float32)}
+            p2, m, v, _ = O.adamw_step(p, m, v, g, jnp.asarray(t), jnp.asarray(lr), cfg)
+            delta = abs(float(p2["w"][0] - p["w"][0]))
+            assert delta <= lr * float(O.update_bound(t, cfg.beta1, cfg.beta2)) + 1e-9
+            p = p2
+
+    def test_predicted_absmax_dominates_trajectory(self, rng):
+        """Eq. 10: max|W_t| <= max|W_0| + sum(lr) along a real trajectory."""
+        p = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+        m, v = O.zeros_like_tree(p), O.zeros_like_tree(p)
+        cfg = O.AdamWConfig()
+        absmax0 = float(jnp.max(jnp.abs(p["w"])))
+        lr_sum = 0.0
+        for t in range(1, 40):
+            lr = 1e-2 * (1.0 - t / 80.0)  # decaying schedule
+            g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32) * 100)}
+            p, m, v, _ = O.adamw_step(p, m, v, g, jnp.asarray(t), jnp.asarray(lr), cfg)
+            lr_sum += lr
+            assert float(jnp.max(jnp.abs(p["w"]))) <= \
+                float(O.predicted_weight_absmax(absmax0, lr_sum)) + 1e-6

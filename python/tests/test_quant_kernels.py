@@ -1,0 +1,136 @@
+"""Pallas quantization kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes (and block decompositions) — the Pallas kernels
+must match ref.py BIT FOR BIT: identical FP8 payloads, identical E8M0
+exponents, identical scales.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+from .conftest import activation_like
+
+# Shapes: M anything >= 1, K a multiple of 32 (micro) / covers 128 (group).
+dims = st.tuples(
+    st.integers(min_value=1, max_value=96),
+    st.sampled_from([32, 64, 128, 160, 256, 384]),
+)
+
+
+def tensor_for(rng_seed, m, k, spread):
+    rng = np.random.default_rng(rng_seed)
+    return activation_like(rng, m, k, chan_sigma=spread)
+
+
+class TestTwoLevel:
+    @settings(max_examples=25, deadline=None)
+    @given(dims=dims, seed=st.integers(0, 2 ** 16), spread=st.sampled_from([0.5, 1.5, 2.5]))
+    def test_matches_oracle(self, dims, seed, spread):
+        m, k = dims
+        x = jnp.asarray(tensor_for(seed, m, k, spread))
+        q1, s1, ss1 = ref.quant_two_level(x)
+        q2, s2, ss2 = quant.two_level_quantize(x)
+        assert jnp.array_equal(q1, q2)
+        assert float(s1) == float(s2)
+        assert jnp.array_equal(ss1, ss2)
+
+    @settings(max_examples=10, deadline=None)
+    @given(dims=dims, seed=st.integers(0, 2 ** 16))
+    def test_subscales_in_unit_interval(self, dims, seed):
+        # Paper §3.1: ss_i in (0, 1]  <=>  exponents <= 0.
+        m, k = dims
+        x = jnp.asarray(tensor_for(seed, m, k, 2.0))
+        _, _, ss = quant.two_level_quantize(x)
+        assert int(jnp.max(ss)) <= 0
+
+    @settings(max_examples=10, deadline=None)
+    @given(dims=dims, seed=st.integers(0, 2 ** 16))
+    def test_no_overflow_payload(self, dims, seed):
+        # Ceil-rounded subscales guarantee payload <= 448 in magnitude
+        # without saturation ever engaging.
+        m, k = dims
+        x = jnp.asarray(tensor_for(seed, m, k, 2.0))
+        q, _, _ = quant.two_level_quantize(x)
+        assert float(jnp.max(jnp.abs(q))) <= 448.0
+
+    def test_dequant_roundtrip_error_bounded(self, rng):
+        # |dq - x| <= E4M3 relative step (2^-3) * effective scale * grid pos;
+        # conservative bound: 1/16 of the micro-group absmax * 2 (ceil).
+        x = jnp.asarray(activation_like(rng, 64, 256))
+        q, s, ss = quant.two_level_quantize(x)
+        dq = ref.dequant_two_level(q, s, ss)
+        gmax = np.repeat(np.max(np.abs(np.asarray(x).reshape(64, 8, 32)), -1), 32, -1)
+        assert (np.abs(np.asarray(dq - x)) <= gmax.reshape(64, 256) / 8 + 1e-6).all()
+
+    def test_block_rows_invariance(self, rng):
+        # Result must not depend on the grid decomposition.
+        x = jnp.asarray(activation_like(rng, 48, 128))
+        outs = [quant.two_level_quantize(x, block_rows=br) for br in (1, 4, 16, 48)]
+        for q, s, ss in outs[1:]:
+            assert jnp.array_equal(q, outs[0][0])
+            assert jnp.array_equal(ss, outs[0][2])
+
+
+class TestPerTensor:
+    @settings(max_examples=15, deadline=None)
+    @given(dims=dims, seed=st.integers(0, 2 ** 16))
+    def test_matches_oracle(self, dims, seed):
+        m, k = dims
+        x = jnp.asarray(tensor_for(seed, m, k, 1.0))
+        q1, s1 = ref.quant_per_tensor(x)
+        q2, s2 = quant.per_tensor_quantize(x)
+        assert jnp.array_equal(q1, q2)
+        assert float(s1) == float(s2)
+
+    def test_injected_scale_respected(self, rng):
+        # Automatic scaling path: an externally supplied scale is used as-is.
+        x = jnp.asarray(activation_like(rng, 32, 64))
+        q, s = quant.per_tensor_quantize(x, scale=2.0)
+        assert float(s) == 2.0
+        assert jnp.array_equal(q, ref.quant_per_tensor(x, scale=2.0)[0])
+
+    def test_e5m2_format(self, rng):
+        x = jnp.asarray(activation_like(rng, 16, 64)) * 1e3
+        q1, s1 = ref.quant_per_tensor(x, fmt="e5m2")
+        q2, s2 = quant.per_tensor_quantize(x, fmt="e5m2")
+        assert jnp.array_equal(q1, q2)
+
+
+class TestPerGroup:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.integers(1, 64),
+        k=st.sampled_from([128, 256, 384, 512]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_matches_oracle(self, m, k, seed):
+        x = jnp.asarray(tensor_for(seed, m, k, 1.5))
+        q1, s1 = ref.quant_per_group(x, 128)
+        q2, s2 = quant.per_group_quantize(x, 128)
+        # XLA may contract /448 to a reciprocal-multiply in one of the two
+        # paths: scales can differ by 1 ULP, payloads by one grid step.
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=3e-7)
+        d1 = np.asarray(ref.dequant_per_group(q1, s1, 128))
+        d2 = np.asarray(ref.dequant_per_group(q2, s2, 128))
+        np.testing.assert_allclose(d1, d2, rtol=1e-5,
+                                   atol=1e-6 * np.abs(d1).max())
+
+    def test_group_scales_bound_by_tensor_scale(self, rng):
+        x = jnp.asarray(activation_like(rng, 32, 256))
+        _, sg = ref.quant_per_group(x, 128)
+        _, stensor = ref.quant_per_tensor(x)
+        assert float(jnp.max(sg)) <= float(stensor) * (1 + 1e-6)
+
+
+class TestGroupAbsmax:
+    @settings(max_examples=15, deadline=None)
+    @given(dims=dims, seed=st.integers(0, 2 ** 16))
+    def test_matches_numpy(self, dims, seed):
+        m, k = dims
+        x = tensor_for(seed, m, k, 1.0)
+        got = np.asarray(quant.group_absmax(jnp.asarray(x), micro=32))
+        want = np.abs(x.reshape(m, k // 32, 32)).max(-1)
+        np.testing.assert_array_equal(got, want)

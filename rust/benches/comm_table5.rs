@@ -1,0 +1,27 @@
+//! Bench: Table 5 — memory & communication simulation, plus wall-clock
+//! of the real in-process ring all-reduce (f32 and FP8 wire).
+
+use moss::bench_util::{black_box, Bencher};
+use moss::distsim::allreduce::{ring_allreduce, Wire};
+use moss::report::comm::table5;
+use moss::util::rng::Rng;
+
+fn main() {
+    print!("{}", table5().render());
+    println!("paper Table 5: BF16 42.3GB/3.84GB/24.8ms/71.3% ; COAT 28.6/3.12/18.6/78.5 ; MOSS 23.5/2.74/16.2/83.4");
+
+    // real ring all-reduce over 8 in-process workers
+    let world = 8;
+    let n = 1 << 18; // 1 MiB of f32 per worker
+    let mut rng = Rng::new(1);
+    let inputs: Vec<Vec<f32>> =
+        (0..world).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect();
+    let b = Bencher::quick();
+    for wire in [Wire::F32, Wire::Fp8] {
+        let r = b.run(&format!("ring_allreduce_8x1MiB_{wire:?}"), || {
+            black_box(ring_allreduce(inputs.clone(), wire));
+        });
+        println!("{}", r.report_line());
+    }
+    println!("comm_table5 bench OK");
+}

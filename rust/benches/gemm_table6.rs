@@ -1,0 +1,53 @@
+//! Bench: Table 6 + Figure 1 — quantized FP8 GEMM runtimes under the
+//! H800 cost model, plus wall-clock timing of the cost model itself and
+//! of the *executable* Pallas mx_gemm artifact when present.
+
+use moss::bench_util::{black_box, Bencher};
+use moss::gemm_sim::machine::MachineModel;
+use moss::gemm_sim::schedule::{kernel_cost, table6_shapes, Scheme};
+use moss::gemm_sim::tables::{fig1, table6};
+
+fn main() {
+    let machine = MachineModel::h800();
+    print!("{}", table6(&machine).render());
+    print!("{}", fig1(&machine).render());
+
+    // paper-shape assertions (who wins, by how much)
+    let shapes = table6_shapes();
+    let avg = |s: Scheme| -> f64 {
+        shapes.iter().map(|&x| kernel_cost(&machine, s, x).total_secs).sum::<f64>()
+            / shapes.len() as f64 * 1e3
+    };
+    let (te, coat, dg, moss) = (avg(Scheme::TE), avg(Scheme::Coat), avg(Scheme::DeepGemm), avg(Scheme::Moss));
+    println!("avg ms — TE {te:.2} COAT {coat:.2} DeepSeek {dg:.2} MOSS {moss:.2}");
+    println!("paper    — TE 0.84 COAT 3.73 DeepSeek 0.54 MOSS 0.77");
+    assert!(dg < moss && moss < te * 1.2 && te < coat, "ordering violated");
+
+    // time the cost model itself (it sits in the Table-2 projection loop)
+    let b = Bencher::default();
+    let r = b.run("cost_model_7_shapes", || {
+        for s in &shapes {
+            for scheme in Scheme::FP8_ALL {
+                black_box(kernel_cost(&machine, scheme, *s));
+            }
+        }
+    });
+    println!("{}", r.report_line());
+
+    // executable Pallas MX-GEMM artifact timing (CPU interpret-mode —
+    // correctness substrate, not a TPU perf proxy; see DESIGN.md)
+    if std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        let rt = moss::runtime::Runtime::load(std::path::Path::new("artifacts/tiny")).unwrap();
+        let gemm = rt.program("mx_gemm").unwrap();
+        let mut rng = moss::util::rng::Rng::new(1);
+        let x = rng.activation_like(64, 256, 1.5);
+        let w: Vec<f32> = (0..256 * 64).map(|_| rng.normal_f32() * 0.05).collect();
+        let xl = moss::runtime::literal::lit_f32(&[64, 256], &x).unwrap();
+        let wl = moss::runtime::literal::lit_f32(&[256, 64], &w).unwrap();
+        let r = Bencher::quick().run("pallas_mx_gemm_64x256x64 (interpret)", || {
+            black_box(gemm.call(&[&xl, &wl]).unwrap());
+        });
+        println!("{}", r.report_line());
+    }
+    println!("gemm_table6 bench OK");
+}

@@ -1,0 +1,78 @@
+//! Bench: hot-path microbenchmarks of the numeric-format substrate —
+//! FP8 round-to-grid, E8M0 encode, the three quantizers, SNR kernels —
+//! the §Perf L3 profile targets.
+
+use moss::bench_util::{black_box, Bencher};
+use moss::formats::{bf16, e8m0, fp8::E4M3};
+use moss::quant::snr::{snr_relative_db, table7_snrs, Metric};
+use moss::quant::{PerGroupQuant, PerTensorQuant, TwoLevelQuant};
+use moss::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let n = 1 << 20;
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 3.0).collect();
+    let b = Bencher::default();
+    let gbs = |r: &moss::bench_util::BenchResult| 4.0 * n as f64 / r.summary.mean / 1e9;
+
+    let r = b.run("fp8_round_to_grid_1M", || {
+        let mut acc = 0f32;
+        for &x in &xs {
+            acc += E4M3.round_to_grid(black_box(x));
+        }
+        black_box(acc);
+    });
+    println!("{}  ({:.2} GB/s)", r.report_line(), gbs(&r));
+
+    let r = b.run("bf16_round_1M", || {
+        let mut acc = 0f32;
+        for &x in &xs {
+            acc += bf16::round_to_bf16(black_box(x));
+        }
+        black_box(acc);
+    });
+    println!("{}  ({:.2} GB/s)", r.report_line(), gbs(&r));
+
+    let pos: Vec<f32> = xs.iter().map(|x| x.abs().max(1e-9)).collect();
+    let r = b.run("e8m0_encode_ceil_1M", || {
+        let mut acc = 0i32;
+        for &x in &pos {
+            acc += e8m0::encode_ceil(black_box(x)) as i32;
+        }
+        black_box(acc);
+    });
+    println!("{}  ({:.2} GB/s)", r.report_line(), gbs(&r));
+
+    let (rows, cols) = (512, 2048);
+    let act = rng.activation_like(rows, cols, 2.0);
+    let bytes = (rows * cols * 4) as f64;
+    for name in ["per_tensor", "per_group", "two_level", "two_level_dequant"] {
+        let r = b.run(name, || match name {
+            "per_tensor" => {
+                black_box(PerTensorQuant::quantize(&act, &E4M3));
+            }
+            "per_group" => {
+                black_box(PerGroupQuant::quantize(&act, rows, cols, 128, &E4M3));
+            }
+            "two_level" => {
+                black_box(TwoLevelQuant::quantize(&act, rows, cols, 32, &E4M3));
+            }
+            _ => {
+                let q = TwoLevelQuant::quantize(&act, rows, cols, 32, &E4M3);
+                black_box(q.dequantize());
+            }
+        });
+        println!("{}  ({:.2} GB/s)", r.report_line(), bytes / r.summary.mean / 1e9);
+    }
+
+    let r = b.run("table7_snrs_model_512x2048", || {
+        black_box(table7_snrs(&act, rows, cols, Metric::Model));
+    });
+    println!("{}", r.report_line());
+    let dq = TwoLevelQuant::quantize(&act, rows, cols, 32, &E4M3).dequantize();
+    let r = b.run("snr_relative_512x2048", || {
+        black_box(snr_relative_db(&act, &dq));
+    });
+    println!("{}", r.report_line());
+    println!("quant_hotpath bench OK");
+}

@@ -1,0 +1,43 @@
+//! Bench: Table 7 + Figure 8 — quantization fidelity across schemes,
+//! plus throughput of the three Rust quantizers (the SNR tooling's own
+//! hot path).
+
+use moss::bench_util::{black_box, Bencher};
+use moss::formats::fp8::E4M3;
+use moss::quant::snr::Metric;
+use moss::quant::{PerGroupQuant, PerTensorQuant, TwoLevelQuant};
+use moss::report::snr::{fig8, table7};
+use moss::util::rng::Rng;
+
+fn main() {
+    for metric in [Metric::Model, Metric::Relative, Metric::Empirical] {
+        print!("{}", table7(metric, 7).render());
+    }
+    print!("{}", fig8(7).render());
+
+    // quantizer throughput on a [256, 4096] activation tensor
+    let mut rng = Rng::new(5);
+    let (rows, cols) = (256, 4096);
+    let x = rng.activation_like(rows, cols, 2.0);
+    let b = Bencher::default();
+    let bytes = (rows * cols * 4) as f64;
+    for (name, f_) in [
+        ("per_tensor", 0usize),
+        ("per_group_128", 1),
+        ("two_level_32", 2),
+    ] {
+        let r = b.run(name, || match f_ {
+            0 => {
+                black_box(PerTensorQuant::quantize(&x, &E4M3));
+            }
+            1 => {
+                black_box(PerGroupQuant::quantize(&x, rows, cols, 128, &E4M3));
+            }
+            _ => {
+                black_box(TwoLevelQuant::quantize(&x, rows, cols, 32, &E4M3));
+            }
+        });
+        println!("{}  ({:.2} GB/s)", r.report_line(), bytes / r.summary.mean / 1e9);
+    }
+    println!("snr_table7 bench OK");
+}

@@ -1,0 +1,61 @@
+//! Bench: Table 2/3 (system half) — measured end-to-end train-step time
+//! per quantization mode on this host (tiny artifacts), plus the H800
+//! throughput projection. The *model quality* half of Table 2 comes from
+//! `repro report --fig5 --tab2` (real training runs).
+
+use std::sync::Arc;
+
+use moss::bench_util::Bencher;
+use moss::config::{QuantMode, ScalingKind, TrainConfig};
+use moss::coordinator::Trainer;
+use moss::gemm_sim::machine::MachineModel;
+use moss::gemm_sim::tables::table2_throughputs;
+use moss::runtime::Runtime;
+use moss::util::table::{f, Table};
+
+fn main() {
+    // H800 projection (calibrated to the paper's BF16 measurement).
+    let mut t = Table::new(
+        "Table 2 (H800 projection) — OLMo-7B training throughput",
+        &["scheme", "tokens/s", "vs BF16"],
+    );
+    let tps = table2_throughputs(&MachineModel::h800());
+    let bf16 = tps[0].1;
+    for (s, tp) in &tps {
+        t.row(vec![s.name().into(), f(*tp, 0), format!("{:+.1}%", (tp / bf16 - 1.0) * 100.0)]);
+    }
+    print!("{}", t.render());
+    println!("paper Table 2: BF16 33,805 / COAT +19.6% / MOSS +34.2%");
+
+    // Measured CPU step times (tiny model, real runtime).
+    if !std::path::Path::new("artifacts/tiny/manifest.json").exists() {
+        println!("(skipping measured section: run `make artifacts`)");
+        return;
+    }
+    let rt = Arc::new(Runtime::load(std::path::Path::new("artifacts/tiny")).unwrap());
+    let mut mt = Table::new(
+        "measured step time per mode (tiny model, CPU PJRT)",
+        &["mode", "ms/step", "tokens/s"],
+    );
+    for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+        let mut cfg = TrainConfig::default();
+        cfg.mode = mode;
+        cfg.log_every = u64::MAX;
+        cfg.scaling = ScalingKind::Auto { interval: 100 };
+        let mut tr = Trainer::new(rt.clone(), cfg).unwrap();
+        tr.run(3).unwrap(); // warmup + compile
+        let b = Bencher::quick();
+        let r = b.run(&format!("train_step_{}", mode.name()), || {
+            tr.step().unwrap();
+        });
+        let toks = (rt.manifest.model.batch * rt.manifest.model.seq) as f64;
+        mt.row(vec![
+            mode.name().into(),
+            f(r.mean_ms(), 1),
+            f(toks / r.summary.mean, 0),
+        ]);
+    }
+    print!("{}", mt.render());
+    println!("(CPU wallclock is a correctness substrate; H800 relative performance comes from the cost model — DESIGN.md)");
+    println!("train_table2 bench OK");
+}

@@ -1,0 +1,143 @@
+//! Mini-criterion: warmup + timed iterations + summary statistics
+//! (criterion is unavailable offline; `cargo bench` targets use this).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.summary.mean * 1e3
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.summary.mean * 1e6
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<40} {:>12.3} ms/iter  (p50 {:.3}, p95 {:.3}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.summary.p50 * 1e3,
+            self.summary.p95 * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark harness: measures `f` after warmup, auto-scaling iteration
+/// count to the time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(1),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick harness for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(0),
+            budget: Duration::from_millis(300),
+            min_iters: 2,
+            max_iters: 50,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup until the warmup budget elapses (at least once).
+        let w0 = Instant::now();
+        loop {
+            f();
+            if w0.elapsed() >= self.warmup {
+                break;
+            }
+        }
+        // Estimate per-iter cost from a single probe, pick iter count.
+        let p0 = Instant::now();
+        f();
+        let probe = p0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget.as_secs_f64() / probe) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult { name: name.to_string(), summary: Summary::of(&samples), iters }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_busy_loop() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..20_000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters >= 3);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn relative_cost_ordering_holds() {
+        let b = Bencher::quick();
+        // black_box each step so LLVM cannot closed-form the range sum
+        let spin = |n: u64| {
+            let mut acc = 0u64;
+            for i in 0..black_box(n) {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc)
+        };
+        let cheap = b.run("cheap", || {
+            spin(1000);
+        });
+        let pricey = b.run("pricey", || {
+            spin(200_000);
+        });
+        assert!(pricey.summary.mean > cheap.summary.mean);
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `repro <subcommand> [--flag value] [--switch]` with typed
+//! accessors, defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` / `--switch` args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("empty flag");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+}
+
+/// Usage text builder shared by main.rs and the examples.
+pub fn usage(prog: &str, commands: &[(&str, &str)]) -> String {
+    let mut s = format!("usage: {prog} <command> [options]\n\ncommands:\n");
+    for (c, d) in commands {
+        s.push_str(&format!("  {c:<18} {d}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--steps", "100", "--mode=moss", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("mode"), Some("moss"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["x", "--n", "5", "--lr", "0.5"]);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("lr", 0).is_err());
+    }
+
+    #[test]
+    fn switch_at_end_and_negative_numbers() {
+        let a = parse(&["x", "--flag"]);
+        assert!(a.has("flag"));
+        // note: values starting with '-' but not '--' are consumed as values
+        let b = parse(&["x", "--delta", "-3"]);
+        assert_eq!(b.get("delta"), Some("-3"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,222 @@
+//! Configuration system: typed training/model/scaling configs, a
+//! TOML-subset parser for config files, named presets, and CLI overrides.
+
+pub mod parse;
+pub mod presets;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+/// Quantization mode of the train-step program (one AOT artifact each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantMode {
+    Bf16,
+    PerTensor,
+    Coat,
+    Moss,
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "bf16" => QuantMode::Bf16,
+            "pertensor" => QuantMode::PerTensor,
+            "coat" => QuantMode::Coat,
+            "moss" => QuantMode::Moss,
+            _ => bail!("unknown mode {s:?} (bf16|pertensor|coat|moss)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMode::Bf16 => "bf16",
+            QuantMode::PerTensor => "pertensor",
+            QuantMode::Coat => "coat",
+            QuantMode::Moss => "moss",
+        }
+    }
+
+    /// Artifact program name for this mode's train step.
+    pub fn train_program(&self) -> String {
+        format!("train_step_{}", self.name())
+    }
+}
+
+/// Weight-scaling strategy selection (paper §3.2 / Appendix E).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalingKind {
+    /// MOSS automatic scaling with re-anchor `interval`.
+    Auto { interval: u64 },
+    /// Max-reduction every step.
+    Jit,
+    /// TE-style history window.
+    Delayed { window: usize, refresh: u64 },
+}
+
+impl ScalingKind {
+    pub fn parse(s: &str, interval: u64) -> Result<Self> {
+        Ok(match s {
+            "auto" | "automatic" => ScalingKind::Auto { interval },
+            "jit" => ScalingKind::Jit,
+            "delayed" => ScalingKind::Delayed { window: 16, refresh: 4 },
+            _ => bail!("unknown scaling {s:?} (auto|jit|delayed)"),
+        })
+    }
+}
+
+/// Learning-rate schedule (paper §4.1: warmup + cosine to 10% of peak).
+#[derive(Debug, Clone, Copy)]
+pub struct LrSchedule {
+    pub peak: f64,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub final_ratio: f64,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f64 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.peak * (step + 1) as f64 / self.warmup_steps as f64;
+        }
+        let denom = (self.total_steps.saturating_sub(self.warmup_steps)).max(1);
+        let p = (step.saturating_sub(self.warmup_steps)) as f64 / denom as f64;
+        let p = p.min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+        self.peak * (self.final_ratio + (1.0 - self.final_ratio) * cos)
+    }
+}
+
+/// Data source for training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataKind {
+    /// Zipf-Markov synthetic language (pretraining).
+    Synthetic,
+    /// Arithmetic-reasoning tasks (fine-tuning, Table 3/4/11 analog).
+    MathTasks,
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Artifact config directory name under `artifacts/` (tiny|small|...).
+    pub artifact_config: String,
+    pub artifacts_root: PathBuf,
+    pub mode: QuantMode,
+    pub scaling: ScalingKind,
+    pub steps: u64,
+    pub seed: u64,
+    pub lr: LrSchedule,
+    pub data: DataKind,
+    pub eval_every: u64,
+    pub log_every: u64,
+    /// Steps between Table-7 activation-probe samples (0 = off).
+    pub probe_every: u64,
+    /// Record a Fig-4 scale-trajectory sample every N steps (0 = off).
+    pub traj_every: u64,
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_config: "tiny".into(),
+            artifacts_root: PathBuf::from("artifacts"),
+            mode: QuantMode::Moss,
+            scaling: ScalingKind::Auto { interval: 500 },
+            steps: 50,
+            seed: 0,
+            lr: LrSchedule { peak: 2e-4, warmup_steps: 20, total_steps: 50, final_ratio: 0.1 },
+            data: DataKind::Synthetic,
+            eval_every: 0,
+            log_every: 10,
+            probe_every: 0,
+            traj_every: 0,
+            out_dir: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply `--key value` CLI overrides on top of `self`.
+    pub fn apply_args(mut self, a: &Args) -> Result<Self> {
+        if let Some(c) = a.get("config") {
+            self.artifact_config = c.to_string();
+        }
+        if let Some(m) = a.get("mode") {
+            self.mode = QuantMode::parse(m)?;
+        }
+        self.steps = a.get_u64("steps", self.steps)?;
+        self.seed = a.get_u64("seed", self.seed)?;
+        let interval = a.get_u64("interval", 500)?;
+        if let Some(s) = a.get("scaling") {
+            self.scaling = ScalingKind::parse(s, interval)?;
+        } else if a.get("interval").is_some() {
+            self.scaling = ScalingKind::Auto { interval };
+        }
+        self.lr.peak = a.get_f64("lr", self.lr.peak)?;
+        self.lr.warmup_steps = a.get_u64("warmup", self.lr.warmup_steps)?;
+        self.lr.total_steps = self.steps.max(1);
+        self.eval_every = a.get_u64("eval-every", self.eval_every)?;
+        self.log_every = a.get_u64("log-every", self.log_every)?;
+        self.probe_every = a.get_u64("probe-every", self.probe_every)?;
+        self.traj_every = a.get_u64("traj-every", self.traj_every)?;
+        if let Some(d) = a.get("data") {
+            self.data = match d {
+                "synthetic" => DataKind::Synthetic,
+                "math" => DataKind::MathTasks,
+                _ => bail!("unknown data kind {d:?}"),
+            };
+        }
+        if let Some(o) = a.get("out") {
+            self.out_dir = Some(PathBuf::from(o));
+        }
+        if let Some(r) = a.get("artifacts") {
+            self.artifacts_root = PathBuf::from(r);
+        }
+        Ok(self)
+    }
+
+    pub fn artifact_dir(&self) -> PathBuf {
+        self.artifacts_root.join(&self.artifact_config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let s = LrSchedule { peak: 1.0, warmup_steps: 10, total_steps: 110, final_ratio: 0.1 };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(10) - 1.0).abs() < 0.05);
+        assert!(s.at(60) < 1.0);
+        assert!((s.at(110) - 0.1).abs() < 0.01);
+        assert!(s.at(10_000) >= 0.1 - 1e-9);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = crate::cli::Args::parse(
+            ["train", "--mode", "coat", "--steps", "7", "--scaling", "jit"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.mode, QuantMode::Coat);
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.scaling, ScalingKind::Jit);
+    }
+
+    #[test]
+    fn mode_roundtrip() {
+        for m in ["bf16", "pertensor", "coat", "moss"] {
+            assert_eq!(QuantMode::parse(m).unwrap().name(), m);
+        }
+        assert!(QuantMode::parse("fp4").is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! TOML-subset parser for config files (full toml crate unavailable
+//! offline). Supports `[section]` headers, `key = value` with string,
+//! number and boolean values, and `#` comments — enough for run configs:
+//!
+//! ```toml
+//! [train]
+//! mode = "moss"
+//! steps = 1000
+//! lr = 2e-4
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed config file: `section.key -> value` (top-level keys have an
+/// empty section prefix).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ConfigFile {
+    pub values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut out = ConfigFile::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            out.values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside of a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<Value> {
+    if let Some(stripped) = v.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("line {lineno}: unterminated string {v:?}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    match v.parse::<f64>() {
+        Ok(n) => Ok(Value::Num(n)),
+        Err(_) => bail!("line {lineno}: cannot parse value {v:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse(
+            "top = 1\n[train]\nmode = \"moss\" # comment\nsteps = 100\nlr = 2e-4\nfast = true\n",
+        )
+        .unwrap();
+        assert_eq!(c.f64_or("top", 0.0), 1.0);
+        assert_eq!(c.str_or("train.mode", ""), "moss");
+        assert_eq!(c.u64_or("train.steps", 0), 100);
+        assert!((c.f64_or("train.lr", 0.0) - 2e-4).abs() < 1e-12);
+        assert_eq!(c.get("train.fast").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ConfigFile::parse("[oops\n").is_err());
+        assert!(ConfigFile::parse("novalue\n").is_err());
+        assert!(ConfigFile::parse("x = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let c = ConfigFile::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("x", ""), "a#b");
+    }
+}

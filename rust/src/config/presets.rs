@@ -1,0 +1,84 @@
+//! Named experiment presets mirroring the paper's setups (Table 8,
+//! scaled per DESIGN.md §Scale-mapping) and the e2e driver defaults.
+
+use super::{DataKind, LrSchedule, QuantMode, ScalingKind, TrainConfig};
+
+/// Paper §4.1 pretraining recipe mapped onto the `small` artifact config.
+pub fn pretrain_small(steps: u64) -> TrainConfig {
+    TrainConfig {
+        artifact_config: "small".into(),
+        mode: QuantMode::Moss,
+        scaling: ScalingKind::Auto { interval: 500 },
+        steps,
+        lr: LrSchedule {
+            peak: 2e-4,
+            warmup_steps: (steps / 10).clamp(10, 2000),
+            total_steps: steps,
+            final_ratio: 0.1,
+        },
+        data: DataKind::Synthetic,
+        log_every: 10,
+        ..TrainConfig::default()
+    }
+}
+
+/// Fine-tuning recipe (paper §4.3: LLaMA-2 on MAmmoTH -> math tasks).
+pub fn finetune_small(steps: u64) -> TrainConfig {
+    TrainConfig {
+        artifact_config: "small".into(),
+        mode: QuantMode::Moss,
+        scaling: ScalingKind::Auto { interval: 500 },
+        steps,
+        lr: LrSchedule {
+            peak: 5e-5,
+            warmup_steps: (steps / 20).max(5),
+            total_steps: steps,
+            final_ratio: 0.1,
+        },
+        data: DataKind::MathTasks,
+        log_every: 10,
+        ..TrainConfig::default()
+    }
+}
+
+/// Smoke-test preset on the tiny artifact config (CI).
+pub fn smoke(steps: u64) -> TrainConfig {
+    TrainConfig {
+        artifact_config: "tiny".into(),
+        steps,
+        lr: LrSchedule { peak: 1e-3, warmup_steps: 5, total_steps: steps, final_ratio: 0.1 },
+        log_every: u64::MAX,
+        ..TrainConfig::default()
+    }
+}
+
+/// The ~100M-parameter end-to-end driver config (DESIGN.md e2e100m).
+pub fn e2e100m(steps: u64) -> TrainConfig {
+    TrainConfig {
+        artifact_config: "e2e100m".into(),
+        steps,
+        lr: LrSchedule {
+            peak: 3e-4,
+            warmup_steps: (steps / 10).max(10),
+            total_steps: steps,
+            final_ratio: 0.1,
+        },
+        ..pretrain_small(steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_internally_consistent() {
+        let p = pretrain_small(1000);
+        assert_eq!(p.lr.total_steps, 1000);
+        assert!(p.lr.warmup_steps <= 2000);
+        let f = finetune_small(200);
+        assert_eq!(f.data, DataKind::MathTasks);
+        assert!(f.lr.peak < p.lr.peak);
+        assert_eq!(e2e100m(100).artifact_config, "e2e100m");
+    }
+}

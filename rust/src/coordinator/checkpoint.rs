@@ -1,0 +1,111 @@
+//! Checkpointing: parameters + moments as a JSON header and raw little-
+//! endian f32 payloads, resumable across runs.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::runtime::literal::{lit_f32, to_f32};
+use crate::runtime::Runtime;
+use crate::util::json::{num, obj, s as jstr, Json};
+
+use super::state::TrainState;
+
+const MAGIC: &str = "moss-ckpt-v1";
+
+/// Save a training state to `path`.
+pub fn save(path: &Path, rt: &Runtime, state: &TrainState) -> Result<()> {
+    let man = &rt.manifest;
+    let mut payload: Vec<u8> = Vec::new();
+    let mut tensors = Vec::new();
+    for (group, lits) in
+        [("params", &state.params), ("m", &state.m), ("v", &state.v)]
+    {
+        for (name, lit) in man.param_names.iter().zip(lits.iter()) {
+            let data = to_f32(lit)?;
+            let off = payload.len();
+            payload.extend(data.iter().flat_map(|v| v.to_le_bytes()));
+            tensors.push(obj(vec![
+                ("group", jstr(group)),
+                ("name", jstr(name)),
+                ("offset", num(off as f64)),
+                ("elems", num(data.len() as f64)),
+            ]));
+        }
+    }
+    let header = obj(vec![
+        ("magic", jstr(MAGIC)),
+        ("config", jstr(&man.config_name)),
+        ("step", num(state.step as f64)),
+        ("tensors", Json::Arr(tensors)),
+    ])
+    .to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating checkpoint {path:?}"))?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    f.write_all(&payload)?;
+    Ok(())
+}
+
+/// Load a training state saved by [`save`]; validates the artifact
+/// config matches.
+pub fn load(path: &Path, rt: &Runtime) -> Result<TrainState> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+    if header.expect("magic")?.as_str()? != MAGIC {
+        bail!("{path:?} is not a moss checkpoint");
+    }
+    let cfg = header.expect("config")?.as_str()?;
+    if cfg != rt.manifest.config_name {
+        bail!(
+            "checkpoint was written for artifact config {cfg:?}, runtime has {:?}",
+            rt.manifest.config_name
+        );
+    }
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let man = &rt.manifest;
+    let shapes: std::collections::HashMap<&str, &[usize]> = {
+        let ts = man.program("train_step_moss").or_else(|_| man.program("train_step_bf16"))?;
+        man.param_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), ts.inputs[i].shape.as_slice()))
+            .collect()
+    };
+    let mut groups: std::collections::HashMap<String, Vec<Literal>> = Default::default();
+    for t in header.expect("tensors")?.as_arr()? {
+        let group = t.expect("group")?.as_str()?;
+        let name = t.expect("name")?.as_str()?;
+        let off = t.expect("offset")?.as_usize()?;
+        let elems = t.expect("elems")?.as_usize()?;
+        let bytes = &payload[off..off + elems * 4];
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let shape = shapes
+            .get(name)
+            .with_context(|| format!("unknown tensor {name:?} in checkpoint"))?;
+        groups.entry(group.to_string()).or_default().push(lit_f32(shape, &data)?);
+    }
+    let step = header.expect("step")?.as_usize()? as u64;
+    let mut take = |g: &str| -> Result<Vec<Literal>> {
+        let v = groups.remove(g).with_context(|| format!("checkpoint missing group {g:?}"))?;
+        if v.len() != man.param_names.len() {
+            bail!("group {g:?} has {} tensors, expected {}", v.len(), man.param_names.len());
+        }
+        Ok(v)
+    };
+    Ok(TrainState { params: take("params")?, m: take("m")?, v: take("v")?, step })
+}

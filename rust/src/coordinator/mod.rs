@@ -1,0 +1,11 @@
+//! The training coordinator (L3): owns the training loop, marshals state
+//! through the AOT train-step programs, drives the scaling strategies,
+//! samples activation probes, evaluates, and checkpoints.
+
+pub mod checkpoint;
+pub mod probe;
+pub mod state;
+pub mod trainer;
+
+pub use state::TrainState;
+pub use trainer::{StepOutcome, Trainer};

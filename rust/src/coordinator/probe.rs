@@ -1,0 +1,99 @@
+//! Activation probe storage for the Table-7 SNR study: the trainer
+//! samples (LayerNorm input, attention output, FFN intermediate) tensors
+//! from a mid-stack layer every `probe_every` steps; the SNR tooling
+//! quantizes them offline under the three schemes.
+
+/// One probe sample: three activation matrices from one step.
+#[derive(Debug, Clone)]
+pub struct ProbeSample {
+    pub step: u64,
+    /// [tokens, dim]
+    pub ln_in: Vec<f32>,
+    /// [tokens, dim]
+    pub attn_out: Vec<f32>,
+    /// [tokens, ffn]
+    pub ffn_mid: Vec<f32>,
+    pub dim: usize,
+    pub ffn: usize,
+}
+
+impl ProbeSample {
+    pub fn rows(&self) -> usize {
+        self.ln_in.len() / self.dim
+    }
+}
+
+/// Bounded store of probe samples (keeps first/last halves so early- and
+/// late-training stages are both represented, like the paper's Table 7).
+#[derive(Debug, Default)]
+pub struct ProbeStore {
+    pub samples: Vec<ProbeSample>,
+    pub max_samples: usize,
+}
+
+impl ProbeStore {
+    pub fn record(
+        &mut self,
+        step: u64,
+        ln_in: Vec<f32>,
+        attn_out: Vec<f32>,
+        ffn_mid: Vec<f32>,
+        dim: usize,
+        ffn: usize,
+    ) {
+        let cap = if self.max_samples == 0 { 64 } else { self.max_samples };
+        if self.samples.len() >= cap {
+            // drop the middle: keep index cap/2 rolling over the newest
+            let mid = cap / 2;
+            self.samples.remove(mid);
+        }
+        self.samples.push(ProbeSample { step, ln_in, attn_out, ffn_mid, dim, ffn });
+    }
+
+    /// Split samples into (early, late) halves by step, Table-7 style.
+    pub fn early_late(&self) -> (Vec<&ProbeSample>, Vec<&ProbeSample>) {
+        if self.samples.is_empty() {
+            return (vec![], vec![]);
+        }
+        let min = self.samples.iter().map(|s| s.step).min().unwrap();
+        let max = self.samples.iter().map(|s| s.step).max().unwrap();
+        let mid = (min + max) / 2;
+        let early = self.samples.iter().filter(|s| s.step <= mid).collect();
+        let late = self.samples.iter().filter(|s| s.step > mid).collect();
+        (early, late)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(step: u64) -> (u64, Vec<f32>, Vec<f32>, Vec<f32>, usize, usize) {
+        (step, vec![0.0; 8], vec![0.0; 8], vec![0.0; 16], 4, 8)
+    }
+
+    #[test]
+    fn early_late_split() {
+        let mut st = ProbeStore::default();
+        for step in [1, 2, 3, 10, 11, 12] {
+            let (s, a, b, c, d, f) = sample(step);
+            st.record(s, a, b, c, d, f);
+        }
+        let (e, l) = st.early_late();
+        assert_eq!(e.len(), 3);
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let mut st = ProbeStore { max_samples: 4, ..Default::default() };
+        for step in 0..20 {
+            let (s, a, b, c, d, f) = sample(step);
+            st.record(s, a, b, c, d, f);
+        }
+        assert!(st.samples.len() <= 5);
+        // first and last survive
+        assert_eq!(st.samples.first().unwrap().step, 0);
+        assert_eq!(st.samples.last().unwrap().step, 19);
+    }
+}

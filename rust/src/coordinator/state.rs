@@ -1,0 +1,74 @@
+//! Training state: parameters + AdamW moments as XLA literals, in the
+//! manifest's flattened order.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::literal::{lit_zeros, to_f32};
+use crate::runtime::Runtime;
+
+/// Model parameters + optimizer moments (host-resident literals between
+/// steps; uploaded per call by the PJRT literal execution path).
+pub struct TrainState {
+    /// One literal per `manifest.param_names` entry.
+    pub params: Vec<Literal>,
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    /// Completed optimizer steps (the next step is `step + 1`, 1-based).
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Initialize from the `init_params` artifact (seeded) with zeroed
+    /// moments.
+    pub fn init(rt: &Runtime, seed: i32) -> Result<TrainState> {
+        let init = rt.program("init_params")?;
+        let params = init.call(&[crate::runtime::literal::lit_scalar_i32(seed)])?;
+        let train_spec = rt.manifest.program("train_step_moss")
+            .or_else(|_| rt.manifest.program("train_step_bf16"))?;
+        let n = rt.manifest.param_names.len();
+        let m = train_spec.inputs[n..2 * n]
+            .iter()
+            .map(lit_zeros)
+            .collect::<Result<Vec<_>>>()?;
+        let v = train_spec.inputs[2 * n..3 * n]
+            .iter()
+            .map(lit_zeros)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    /// Index of a parameter by manifest name.
+    pub fn param_index(man: &Manifest, name: &str) -> Result<usize> {
+        match man.param_names.iter().position(|n| n == name) {
+            Some(i) => Ok(i),
+            None => bail!("no parameter named {name:?}"),
+        }
+    }
+
+    /// Download one parameter tensor to host f32.
+    pub fn param_f32(&self, man: &Manifest, name: &str) -> Result<Vec<f32>> {
+        Ok(to_f32(&self.params[Self::param_index(man, name)?])?)
+    }
+
+    /// Host-side absmax over each of the four per-layer linear weights —
+    /// the *reference* reduction used by tests; the hot path uses the
+    /// `weight_absmax` artifact instead.
+    pub fn host_absmax(&self, man: &Manifest) -> Result<Vec<f32>> {
+        let l = man.model.layers;
+        let mut out = vec![0f32; l * man.linear_names.len()];
+        for (col, lname) in man.linear_names.iter().enumerate() {
+            let pname = lname.replace("w_up", "w_up"); // names match manifest
+            let data = self.param_f32(man, &pname)?;
+            let per_layer = data.len() / l;
+            for layer in 0..l {
+                let amax = data[layer * per_layer..(layer + 1) * per_layer]
+                    .iter()
+                    .fold(0f32, |a, &x| a.max(x.abs()));
+                out[layer * man.linear_names.len() + col] = amax;
+            }
+        }
+        Ok(out)
+    }
+}

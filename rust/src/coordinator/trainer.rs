@@ -1,0 +1,239 @@
+//! The training loop: marshals state through the AOT `train_step_<mode>`
+//! program, drives the weight-scaling strategy, logs metrics, samples
+//! Table-7 activation probes and Fig-4 scale trajectories, and evaluates
+//! on held-out shards.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::config::{DataKind, ScalingKind, TrainConfig};
+use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
+use crate::data::synth::CorpusSpec;
+use crate::metrics::{Throughput, TrainHistory};
+use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_f32};
+use crate::runtime::{Program, Runtime};
+use crate::scaling::{
+    absmax_to_scales, AutoScaler, DelayedScaler, JitScaler, ScaleTrajectory, ScalingStrategy,
+};
+
+use super::probe::ProbeStore;
+use super::state::TrainState;
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutcome {
+    pub step: u64,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub lr: f64,
+}
+
+/// The L3 training coordinator.
+pub struct Trainer {
+    pub rt: Arc<Runtime>,
+    pub cfg: TrainConfig,
+    pub state: TrainState,
+    pub history: TrainHistory,
+    pub throughput: Throughput,
+    pub trajectory: ScaleTrajectory,
+    pub probes: ProbeStore,
+    train_prog: Arc<Program>,
+    absmax_prog: Arc<Program>,
+    scaler: Box<dyn ScalingStrategy>,
+    data: Box<dyn BatchSource>,
+    /// Indices of the 4 linear weights within the param list.
+    linear_param_idx: Vec<usize>,
+}
+
+impl Trainer {
+    pub fn new(rt: Arc<Runtime>, cfg: TrainConfig) -> Result<Trainer> {
+        let train_prog = rt
+            .program(&cfg.mode.train_program())
+            .with_context(|| format!("loading {}", cfg.mode.train_program()))?;
+        let absmax_prog = rt.program("weight_absmax")?;
+        let state = TrainState::init(&rt, cfg.seed as i32)?;
+        let scaler: Box<dyn ScalingStrategy> = match cfg.scaling {
+            ScalingKind::Auto { interval } => Box::new(AutoScaler::new(interval)),
+            ScalingKind::Jit => Box::new(JitScaler::new()),
+            ScalingKind::Delayed { window, refresh } => {
+                Box::new(DelayedScaler::new(window, refresh, 1.25))
+            }
+        };
+        let man = &rt.manifest;
+        let data: Box<dyn BatchSource> = match cfg.data {
+            DataKind::Synthetic => Box::new(SyntheticCorpus::new(CorpusSpec::pretrain(
+                man.model.vocab,
+                cfg.seed ^ 0xC0FFEE,
+            ))),
+            DataKind::MathTasks => Box::new(TaskMixSource::new(cfg.seed ^ 0x7A5C)),
+        };
+        let linear_param_idx = man
+            .linear_names
+            .iter()
+            .map(|n| TrainState::param_index(man, n))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Trainer {
+            rt,
+            cfg,
+            state,
+            history: TrainHistory::default(),
+            throughput: Throughput::new(),
+            trajectory: ScaleTrajectory::new(),
+            probes: ProbeStore::default(),
+            train_prog,
+            absmax_prog,
+            scaler,
+            data,
+            linear_param_idx,
+        })
+    }
+
+    /// Run the device-side max-reduction over the current weights.
+    pub fn device_absmax(&self) -> Result<Vec<f32>> {
+        let inputs: Vec<&Literal> =
+            self.linear_param_idx.iter().map(|&i| &self.state.params[i]).collect();
+        let out = self.absmax_prog.call(&inputs)?;
+        Ok(to_f32(&out[0])?)
+    }
+
+    /// Execute one training step.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let step_1b = self.state.step + 1; // 1-based optimizer step
+        let lr = self.cfg.lr.at(self.state.step) as f32;
+
+        // --- weight scales from the scaling strategy -----------------
+        let scales = {
+            let absmax_prog = &self.absmax_prog;
+            let params = &self.state.params;
+            let idx = &self.linear_param_idx;
+            let mut src = || -> Result<Vec<f32>> {
+                let inputs: Vec<&Literal> = idx.iter().map(|&i| &params[i]).collect();
+                let out = absmax_prog.call(&inputs)?;
+                Ok(to_f32(&out[0])?)
+            };
+            self.scaler.scales(step_1b, lr, &mut src)?
+        };
+
+        // --- batch ----------------------------------------------------
+        let man = &self.rt.manifest;
+        let (b, s) = (man.model.batch, man.model.seq);
+        let batch = self.data.next_batch(b, s + 1);
+        let tokens = lit_i32(&[b, s + 1], &batch.tokens)?;
+        let scales_lit = lit_f32(&[man.model.layers, man.linear_names.len()], &scales)?;
+
+        // --- execute train_step ----------------------------------------
+        let n = man.param_names.len();
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n + 4);
+        inputs.extend(self.state.params.iter());
+        inputs.extend(self.state.m.iter());
+        inputs.extend(self.state.v.iter());
+        let step_lit = lit_scalar_i32(step_1b as i32);
+        let lr_lit = lit_scalar_f32(lr);
+        inputs.push(&tokens);
+        inputs.push(&step_lit);
+        inputs.push(&lr_lit);
+        inputs.push(&scales_lit);
+        let mut outs = self.train_prog.call(&inputs)?;
+
+        // --- unpack ---------------------------------------------------
+        let gnorm = scalar_f32(&outs.pop().expect("gnorm"))? as f64;
+        let loss = scalar_f32(&outs.pop().expect("loss"))? as f64;
+        let v = outs.split_off(2 * n);
+        let m = outs.split_off(n);
+        self.state.params = outs;
+        self.state.m = m;
+        self.state.v = v;
+        self.state.step = step_1b;
+        self.throughput.step((b * s) as u64);
+        self.history.record_loss(step_1b, loss, gnorm);
+
+        // --- instrumentation -------------------------------------------
+        if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
+            let jit = absmax_to_scales(&self.device_absmax()?);
+            // The JIT reduction above sees the *post-update* weights; the
+            // Eq.-10 prediction covering them includes this step's lr
+            // drift (first linear only — paper Fig. 4 shows one curve).
+            self.trajectory
+                .record(step_1b, scales[0] + lr / crate::E4M3_MAX, jit[0]);
+        }
+        if self.cfg.probe_every > 0 && step_1b % self.cfg.probe_every == 0 {
+            self.sample_probe(&batch.tokens)?;
+        }
+
+        Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
+    }
+
+    /// Run `n` steps, logging per `cfg.log_every`.
+    pub fn run(&mut self, n: u64) -> Result<()> {
+        for _ in 0..n {
+            let out = self.step()?;
+            if self.cfg.log_every > 0 && out.step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{}] step {:>6} loss {:.4} gnorm {:.3} lr {:.2e} tok/s {:.0}",
+                    self.cfg.mode.name(),
+                    out.step,
+                    out.loss,
+                    out.grad_norm,
+                    out.lr,
+                    self.throughput.tokens_per_sec()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample the Table-7 activation probes on `tokens` ([B, S+1]; the
+    /// probe program takes [B, S]).
+    fn sample_probe(&mut self, tokens_bs1: &[i32]) -> Result<()> {
+        let man = &self.rt.manifest;
+        let (b, s) = (man.model.batch, man.model.seq);
+        let mut toks = Vec::with_capacity(b * s);
+        for row in 0..b {
+            toks.extend_from_slice(&tokens_bs1[row * (s + 1)..row * (s + 1) + s]);
+        }
+        let probe = self.rt.program("probe_acts")?;
+        let mut inputs: Vec<&Literal> = self.state.params.iter().collect();
+        let tl = lit_i32(&[b, s], &toks)?;
+        inputs.push(&tl);
+        let outs = probe.call(&inputs)?;
+        self.probes.record(
+            self.state.step,
+            to_f32(&outs[0])?,
+            to_f32(&outs[1])?,
+            to_f32(&outs[2])?,
+            man.model.dim,
+            man.model.ffn,
+        );
+        Ok(())
+    }
+
+    /// Perplexity over a held-out shard (uses the bf16 eval program).
+    pub fn evaluate(&mut self, shard: &crate::data::EvalShard) -> Result<f64> {
+        let eval = self.rt.program("eval_step")?;
+        let man = &self.rt.manifest;
+        let (b, s) = (man.model.batch, man.model.seq);
+        let mut nll = 0f64;
+        let mut count = 0f64;
+        for batch in &shard.batches {
+            let tokens = lit_i32(&[b, s + 1], &batch.tokens)?;
+            let mut inputs: Vec<&Literal> = self.state.params.iter().collect();
+            inputs.push(&tokens);
+            let outs = eval.call(&inputs)?;
+            nll += scalar_f32(&outs[0])? as f64;
+            count += scalar_f32(&outs[1])? as f64;
+        }
+        let ppl = (nll / count.max(1.0)).exp();
+        self.history.record_eval(self.state.step, &shard.name, ppl);
+        Ok(ppl)
+    }
+
+    pub fn scaling_stats(&self) -> crate::scaling::ScalingStats {
+        self.scaler.stats()
+    }
+
+    pub fn scaler_name(&self) -> &'static str {
+        self.scaler.name()
+    }
+}

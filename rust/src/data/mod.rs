@@ -1,0 +1,13 @@
+//! Data substrate: synthetic pretraining corpus (Dolma stand-in),
+//! byte-level tokenizer for real text, arithmetic-reasoning task
+//! generator (MAmmoTH/GSM8K/NumGLUE stand-ins), and batching.
+
+pub mod dataset;
+pub mod synth;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use dataset::{Batch, BatchSource, EvalShard, TaskMixSource};
+pub use synth::{CorpusSpec, SyntheticCorpus};
+pub use tasks::{TaskGenerator, TaskKind};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,169 @@
+//! Zipf-Markov synthetic language — the Dolma-corpus stand-in
+//! (DESIGN.md "Environment substitutions").
+//!
+//! Token t+1 is drawn from a context-conditioned candidate set: the
+//! hashed (t-1, t) context deterministically selects `branching`
+//! candidate tokens, weighted Zipf(alpha). This yields a stream with
+//! (a) learnable structure (conditional entropy ~= log(branching)
+//! nats scaled by the Zipf skew — a transformer's loss drops well below
+//! the unigram entropy), and (b) a heavy-tailed unigram distribution
+//! like natural text. Different seeds give disjoint "datasets": the
+//! WikiText/C4/Pile eval splits are three held-out seeds with slightly
+//! different parameters.
+
+use crate::util::rng::{Rng, ZipfTable};
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    /// Candidate fan-out per context (entropy knob).
+    pub branching: usize,
+    /// Zipf exponent over the candidate ranks.
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn pretrain(vocab: usize, seed: u64) -> Self {
+        CorpusSpec { vocab, branching: 8, alpha: 1.1, seed }
+    }
+
+    /// Eval-split flavours (paper Table 2: WikiText-103 / C4 / Pile).
+    pub fn eval_split(vocab: usize, name: &str) -> Self {
+        match name {
+            "wikitext" => CorpusSpec { vocab, branching: 8, alpha: 1.1, seed: 0x5717 },
+            "c4" => CorpusSpec { vocab, branching: 12, alpha: 1.0, seed: 0xC4 },
+            "pile" => CorpusSpec { vocab, branching: 16, alpha: 0.9, seed: 0x9113 },
+            _ => CorpusSpec::pretrain(vocab, 0xE7A1),
+        }
+    }
+}
+
+/// Streaming token generator over the synthetic language.
+pub struct SyntheticCorpus {
+    spec: CorpusSpec,
+    zipf: ZipfTable,
+    rng: Rng,
+    prev2: u32,
+    prev1: u32,
+}
+
+impl SyntheticCorpus {
+    pub fn new(spec: CorpusSpec) -> Self {
+        let zipf = ZipfTable::new(spec.branching, spec.alpha);
+        let rng = Rng::new(spec.seed).fork(0xDA7A);
+        SyntheticCorpus { spec, zipf, rng, prev2: 1, prev1: 2 }
+    }
+
+    /// Candidate token for (context, rank) — pure hash, no tables.
+    fn candidate(&self, rank: usize) -> u32 {
+        let mut h = (self.prev2 as u64) << 32 | self.prev1 as u64;
+        h ^= (rank as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+        h ^= h >> 31;
+        h = h.wrapping_mul(0x94D049BB133111EB);
+        h ^= h >> 29;
+        // Reserve token 0 as padding/BOS.
+        1 + (h % (self.spec.vocab as u64 - 1)) as u32
+    }
+
+    pub fn next_token(&mut self) -> u32 {
+        let rank = self.rng.zipf(&self.zipf);
+        let tok = self.candidate(rank);
+        self.prev2 = self.prev1;
+        self.prev1 = tok;
+        tok
+    }
+
+    /// Fill a [batch, seq+1] token matrix (the +1 column is the shifted
+    /// target, matching the train_step input spec).
+    pub fn fill_batch(&mut self, batch: usize, seq_plus_1: usize, out: &mut Vec<i32>) {
+        out.clear();
+        out.reserve(batch * seq_plus_1);
+        for _ in 0..batch {
+            for _ in 0..seq_plus_1 {
+                out.push(self.next_token() as i32);
+            }
+        }
+    }
+
+    /// Theoretical conditional entropy of the generator in nats (loss
+    /// floor for a perfect model of the context distribution).
+    pub fn conditional_entropy(&self) -> f64 {
+        // Zipf over `branching` candidates: H = -sum p ln p
+        let n = self.spec.branching;
+        let w: Vec<f64> = (1..=n).map(|k| (k as f64).powf(-self.spec.alpha)).collect();
+        let z: f64 = w.iter().sum();
+        -w.iter().map(|x| (x / z) * (x / z).ln()).sum::<f64>()
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = CorpusSpec::pretrain(1024, 7);
+        let mut a = SyntheticCorpus::new(spec.clone());
+        let mut b = SyntheticCorpus::new(spec);
+        for _ in 0..200 {
+            assert_eq!(a.next_token(), b.next_token());
+        }
+    }
+
+    #[test]
+    fn tokens_in_range_and_nonzero() {
+        let mut c = SyntheticCorpus::new(CorpusSpec::pretrain(256, 1));
+        for _ in 0..1000 {
+            let t = c.next_token();
+            assert!(t >= 1 && t < 256);
+        }
+    }
+
+    #[test]
+    fn stream_is_predictable_from_context() {
+        // given the same 2-token context, the candidate set is identical;
+        // verify the next-token distribution is concentrated (learnable)
+        let mut c = SyntheticCorpus::new(CorpusSpec::pretrain(4096, 3));
+        // drive to a fixed context
+        c.prev2 = 10;
+        c.prev1 = 20;
+        let cands: Vec<u32> = (0..8).map(|r| c.candidate(r)).collect();
+        for _ in 0..100 {
+            c.prev2 = 10;
+            c.prev1 = 20;
+            let t = c.next_token();
+            assert!(cands.contains(&t));
+        }
+    }
+
+    #[test]
+    fn entropy_well_below_unigram() {
+        let c = SyntheticCorpus::new(CorpusSpec::pretrain(4096, 5));
+        let h = c.conditional_entropy();
+        assert!(h < (4096f64).ln() / 2.0, "H={h}");
+        assert!(h > 0.5);
+    }
+
+    #[test]
+    fn eval_splits_differ() {
+        let mut w = SyntheticCorpus::new(CorpusSpec::eval_split(1024, "wikitext"));
+        let mut p = SyntheticCorpus::new(CorpusSpec::eval_split(1024, "pile"));
+        let ws: Vec<u32> = (0..50).map(|_| w.next_token()).collect();
+        let ps: Vec<u32> = (0..50).map(|_| p.next_token()).collect();
+        assert_ne!(ws, ps);
+    }
+
+    #[test]
+    fn batch_fill_shape() {
+        let mut c = SyntheticCorpus::new(CorpusSpec::pretrain(512, 2));
+        let mut buf = Vec::new();
+        c.fill_batch(4, 65, &mut buf);
+        assert_eq!(buf.len(), 4 * 65);
+    }
+}

@@ -1,0 +1,202 @@
+//! Arithmetic-reasoning task generator — the stand-in for the paper's
+//! fine-tuning datasets and benchmarks (MAmmoTH training; Mathematics /
+//! GSM8K / NumGLUE evaluation; DESIGN.md "Environment substitutions").
+//!
+//! Three task families of increasing structure:
+//! * [`TaskKind::Arithmetic`]  — `a+b=` / `a-b=`            (Mathematics)
+//! * [`TaskKind::MultiStep`]   — `a+b-c=`                   (GSM8K)
+//! * [`TaskKind::Compare`]     — `max(a,b)=` rendered `a?b=` (NumGLUE)
+//!
+//! Problems render into a fixed symbolic token alphabet that fits any
+//! model vocab >= 32; exact-match decoding of the answer digits is the
+//! accuracy metric (paper Tables 3/4/11).
+
+use crate::util::rng::Rng;
+
+/// Token alphabet (kept below 32 so every preset vocab can host it).
+pub const PAD: i32 = 0;
+pub const EOS: i32 = 2;
+pub const DIGIT_BASE: i32 = 3; // '0'..'9' -> 3..12
+pub const PLUS: i32 = 13;
+pub const MINUS: i32 = 14;
+pub const EQUALS: i32 = 16;
+pub const CMP: i32 = 18; // the "which is larger?" operator
+pub const NEG: i32 = 19; // unary minus for negative answers
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    Arithmetic,
+    MultiStep,
+    Compare,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 3] = [TaskKind::Arithmetic, TaskKind::MultiStep, TaskKind::Compare];
+
+    /// Paper benchmark this family stands in for.
+    pub fn benchmark_name(&self) -> &'static str {
+        match self {
+            TaskKind::Arithmetic => "Mathematics",
+            TaskKind::MultiStep => "GSM8K",
+            TaskKind::Compare => "NumGLUE",
+        }
+    }
+}
+
+/// One generated problem: prompt tokens (ending in `=`) and the answer
+/// token sequence (digits, possibly `NEG`-prefixed, no EOS).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub prompt: Vec<i32>,
+    pub answer: Vec<i32>,
+}
+
+/// Deterministic task stream.
+pub struct TaskGenerator {
+    pub kind: TaskKind,
+    rng: Rng,
+    /// Operand range [0, max_operand).
+    pub max_operand: i64,
+}
+
+impl TaskGenerator {
+    pub fn new(kind: TaskKind, seed: u64) -> Self {
+        TaskGenerator { kind, rng: Rng::new(seed).fork(kind as u64 + 1), max_operand: 100 }
+    }
+
+    pub fn next_problem(&mut self) -> Problem {
+        let a = self.rng.below(self.max_operand as u64) as i64;
+        let b = self.rng.below(self.max_operand as u64) as i64;
+        match self.kind {
+            TaskKind::Arithmetic => {
+                if self.rng.f64() < 0.5 {
+                    Problem { prompt: render_binop(a, PLUS, b), answer: digits(a + b) }
+                } else {
+                    Problem { prompt: render_binop(a, MINUS, b), answer: digits(a - b) }
+                }
+            }
+            TaskKind::MultiStep => {
+                let c = self.rng.below(self.max_operand as u64) as i64;
+                let mut p = render_binop(a, PLUS, b);
+                p.pop(); // strip '='
+                p.push(MINUS);
+                p.extend(digits(c));
+                p.push(EQUALS);
+                Problem { prompt: p, answer: digits(a + b - c) }
+            }
+            TaskKind::Compare => {
+                Problem { prompt: render_binop(a, CMP, b), answer: digits(a.max(b)) }
+            }
+        }
+    }
+
+    /// A full training sequence: prompt + answer + EOS, loss over all
+    /// positions, padded/truncated to `seq_plus_1`.
+    pub fn training_sequence(&mut self, seq_plus_1: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(seq_plus_1);
+        while out.len() < seq_plus_1 {
+            let p = self.next_problem();
+            out.extend_from_slice(&p.prompt);
+            out.extend_from_slice(&p.answer);
+            out.push(EOS);
+        }
+        out.truncate(seq_plus_1);
+        out
+    }
+}
+
+/// Render `a <op> b =` as tokens.
+fn render_binop(a: i64, op: i32, b: i64) -> Vec<i32> {
+    let mut t = digits(a);
+    t.push(op);
+    t.extend(digits(b));
+    t.push(EQUALS);
+    t
+}
+
+/// Decimal digits of `n` as tokens (NEG-prefixed when negative).
+pub fn digits(n: i64) -> Vec<i32> {
+    let mut out = Vec::new();
+    if n < 0 {
+        out.push(NEG);
+    }
+    let s = n.abs().to_string();
+    out.extend(s.bytes().map(|b| DIGIT_BASE + (b - b'0') as i32));
+    out
+}
+
+/// Parse an answer token sequence back to an integer (None if malformed).
+pub fn parse_answer(toks: &[i32]) -> Option<i64> {
+    let (neg, rest) = match toks.split_first() {
+        Some((&NEG, rest)) => (true, rest),
+        _ => (false, toks),
+    };
+    if rest.is_empty() {
+        return None;
+    }
+    let mut v: i64 = 0;
+    for &t in rest {
+        let d = t - DIGIT_BASE;
+        if !(0..=9).contains(&d) {
+            return None;
+        }
+        v = v * 10 + d as i64;
+    }
+    Some(if neg { -v } else { v })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_roundtrip() {
+        for n in [-123i64, -1, 0, 7, 42, 999] {
+            assert_eq!(parse_answer(&digits(n)), Some(n), "{n}");
+        }
+    }
+
+    #[test]
+    fn problems_are_solvable_and_consistent() {
+        for kind in TaskKind::ALL {
+            let mut g = TaskGenerator::new(kind, 11);
+            for _ in 0..50 {
+                let p = g.next_problem();
+                assert_eq!(*p.prompt.last().unwrap(), EQUALS);
+                assert!(parse_answer(&p.answer).is_some(), "{kind:?}");
+                assert!(p.prompt.iter().all(|&t| t > 0 && t < 32));
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        let mut g = TaskGenerator::new(TaskKind::Arithmetic, 3);
+        for _ in 0..20 {
+            let p = g.next_problem();
+            // re-parse the prompt and verify
+            let eq = p.prompt.len() - 1;
+            let op_pos = p.prompt.iter().position(|&t| t == PLUS || t == MINUS).unwrap();
+            let a = parse_answer(&p.prompt[..op_pos]).unwrap();
+            let b = parse_answer(&p.prompt[op_pos + 1..eq]).unwrap();
+            let want = if p.prompt[op_pos] == PLUS { a + b } else { a - b };
+            assert_eq!(parse_answer(&p.answer), Some(want));
+        }
+    }
+
+    #[test]
+    fn training_sequence_has_requested_length() {
+        let mut g = TaskGenerator::new(TaskKind::MultiStep, 5);
+        let s = g.training_sequence(129);
+        assert_eq!(s.len(), 129);
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = TaskGenerator::new(TaskKind::Compare, 9);
+        let mut b = TaskGenerator::new(TaskKind::Compare, 9);
+        for _ in 0..10 {
+            assert_eq!(a.next_problem().prompt, b.next_problem().prompt);
+        }
+    }
+}

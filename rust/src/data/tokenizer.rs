@@ -1,0 +1,148 @@
+//! Byte-level tokenizer with optional learned BPE merges — the substrate
+//! for feeding real text through the framework (the synthetic corpus
+//! path generates token ids directly).
+//!
+//! Vocabulary layout: 0 = PAD/BOS, 1..=256 = raw bytes (byte b -> b+1),
+//! 257.. = learned merges in creation order.
+
+use std::collections::HashMap;
+
+/// Byte-level tokenizer + greedy BPE.
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    /// Learned merges: (left, right) -> new token id, in rank order.
+    merges: Vec<(u32, u32)>,
+    merge_rank: HashMap<(u32, u32), u32>,
+}
+
+pub const PAD: u32 = 0;
+pub const BYTE_BASE: u32 = 1;
+pub const FIRST_MERGE: u32 = 257;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer { merges: Vec::new(), merge_rank: HashMap::new() }
+    }
+
+    /// Train `n_merges` BPE merges on `corpus` (greedy most-frequent-pair).
+    pub fn train(corpus: &[u8], n_merges: usize) -> Self {
+        let mut tok = ByteTokenizer::new();
+        let mut seq: Vec<u32> = corpus.iter().map(|&b| b as u32 + BYTE_BASE).collect();
+        for _ in 0..n_merges {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let id = FIRST_MERGE + tok.merges.len() as u32;
+            tok.merge_rank.insert(pair, id);
+            tok.merges.push(pair);
+            seq = merge_pass(&seq, pair, id);
+        }
+        tok
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        FIRST_MERGE as usize + self.merges.len()
+    }
+
+    /// Encode bytes to token ids (applies merges in rank order).
+    pub fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut seq: Vec<u32> = text.iter().map(|&b| b as u32 + BYTE_BASE).collect();
+        for (i, &pair) in self.merges.iter().enumerate() {
+            let id = FIRST_MERGE + i as u32;
+            if seq.len() < 2 {
+                break;
+            }
+            seq = merge_pass(&seq, pair, id);
+        }
+        seq
+    }
+
+    /// Decode token ids back to bytes.
+    pub fn decode(&self, toks: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in toks {
+            self.decode_one(t, &mut out);
+        }
+        out
+    }
+
+    fn decode_one(&self, t: u32, out: &mut Vec<u8>) {
+        if t == PAD {
+            return;
+        }
+        if t < FIRST_MERGE {
+            out.push((t - BYTE_BASE) as u8);
+            return;
+        }
+        let (l, r) = self.merges[(t - FIRST_MERGE) as usize];
+        self.decode_one(l, out);
+        self.decode_one(r, out);
+    }
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn merge_pass(seq: &[u32], pair: (u32, u32), id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(seq.len());
+    let mut i = 0;
+    while i < seq.len() {
+        if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+            out.push(id);
+            i += 2;
+        } else {
+            out.push(seq[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip_without_merges() {
+        let t = ByteTokenizer::new();
+        let text = b"hello, world! \xf0\x9f\x99\x82";
+        assert_eq!(t.decode(&t.encode(text)), text.to_vec());
+    }
+
+    #[test]
+    fn bpe_learns_frequent_pairs_and_roundtrips() {
+        let corpus = b"the cat sat on the mat the cat sat on the mat".repeat(10);
+        let t = ByteTokenizer::train(&corpus, 20);
+        // may stop early once no pair repeats; must learn most merges
+        assert!(t.vocab_size() > 257 + 10 && t.vocab_size() <= 257 + 20);
+        let enc = t.encode(&corpus);
+        assert!(enc.len() < corpus.len(), "compression expected");
+        assert_eq!(t.decode(&enc), corpus);
+    }
+
+    #[test]
+    fn merge_determinism() {
+        let corpus = b"abababab".to_vec();
+        let a = ByteTokenizer::train(&corpus, 4);
+        let b = ByteTokenizer::train(&corpus, 4);
+        assert_eq!(a.encode(b"abab"), b.encode(b"abab"));
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = ByteTokenizer::train(b"", 5);
+        assert!(t.encode(b"").is_empty());
+        assert!(t.decode(&[]).is_empty());
+    }
+}

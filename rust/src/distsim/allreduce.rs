@@ -1,0 +1,194 @@
+//! A real multi-threaded ring all-reduce over in-process workers —
+//! the executable substrate behind the Table-5 numbers (the analytic
+//! model in `netmodel` predicts its timing; this verifies semantics,
+//! including FP8-compressed payload variants).
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::formats::fp8::E4M3;
+use crate::quant::PerTensorQuant;
+
+/// Payload encoding on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    F32,
+    /// Chunk-wise per-tensor FP8 (models MOSS/COAT compressed gradients;
+    /// lossy — tests bound the error).
+    Fp8,
+}
+
+/// Ring all-reduce (reduce-scatter + all-gather) of each worker's
+/// `data` vector; returns every worker's reduced copy (the element-wise
+/// sum across workers, up to Wire::Fp8 rounding).
+pub fn ring_allreduce(inputs: Vec<Vec<f32>>, wire: Wire) -> Vec<Vec<f32>> {
+    let world = inputs.len();
+    assert!(world > 0);
+    let n = inputs[0].len();
+    assert!(inputs.iter().all(|v| v.len() == n), "mismatched lengths");
+    if world == 1 {
+        return inputs;
+    }
+
+    let mut senders = Vec::with_capacity(world);
+    let mut receivers = Vec::with_capacity(world);
+    for _ in 0..world {
+        let (tx, rx) = mpsc::channel::<Vec<f32>>();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let mut handles = Vec::with_capacity(world);
+    let mut rx_iter = receivers.into_iter();
+    for (rank, mut data) in inputs.into_iter().enumerate() {
+        let rx = rx_iter.next().unwrap();
+        let tx = senders[(rank + 1) % world].clone();
+        handles.push(thread::spawn(move || {
+            worker(rank, world, &mut data, rx, tx, wire);
+            data
+        }));
+    }
+    drop(senders);
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+fn chunk_bounds(n: usize, world: usize, c: usize) -> (usize, usize) {
+    let base = n / world;
+    let rem = n % world;
+    let start = c * base + c.min(rem);
+    let len = base + usize::from(c < rem);
+    (start, start + len)
+}
+
+fn encode(chunk: &[f32], wire: Wire) -> Vec<f32> {
+    match wire {
+        Wire::F32 => chunk.to_vec(),
+        Wire::Fp8 => {
+            // per-chunk scale rides in element 0
+            let q = PerTensorQuant::quantize(chunk, &E4M3);
+            let mut out = Vec::with_capacity(chunk.len() + 1);
+            out.push(q.scale);
+            out.extend_from_slice(&q.q);
+            out
+        }
+    }
+}
+
+fn decode(buf: &[f32], wire: Wire) -> Vec<f32> {
+    match wire {
+        Wire::F32 => buf.to_vec(),
+        Wire::Fp8 => {
+            let s = buf[0];
+            buf[1..].iter().map(|&q| q * s).collect()
+        }
+    }
+}
+
+/// Classic 2(world-1)-phase ring: world-1 reduce-scatter steps, then
+/// world-1 all-gather steps. Worker `rank` sends chunk
+/// `(rank - phase) mod world` in reduce-scatter.
+fn worker(
+    rank: usize,
+    world: usize,
+    data: &mut [f32],
+    rx: mpsc::Receiver<Vec<f32>>,
+    tx: mpsc::Sender<Vec<f32>>,
+    wire: Wire,
+) {
+    let n = data.len();
+    // --- reduce-scatter ---------------------------------------------
+    for phase in 0..world - 1 {
+        let send_c = (rank + world - phase) % world;
+        let recv_c = (rank + world - phase - 1) % world;
+        let (s0, s1) = chunk_bounds(n, world, send_c);
+        tx.send(encode(&data[s0..s1], wire)).expect("ring send");
+        let incoming = decode(&rx.recv().expect("ring recv"), wire);
+        let (r0, r1) = chunk_bounds(n, world, recv_c);
+        for (d, x) in data[r0..r1].iter_mut().zip(&incoming) {
+            *d += x;
+        }
+    }
+    // --- all-gather ---------------------------------------------------
+    for phase in 0..world - 1 {
+        let send_c = (rank + 1 + world - phase) % world;
+        let recv_c = (rank + world - phase) % world;
+        let (s0, s1) = chunk_bounds(n, world, send_c);
+        tx.send(encode(&data[s0..s1], wire)).expect("ring send");
+        let incoming = decode(&rx.recv().expect("ring recv"), wire);
+        let (r0, r1) = chunk_bounds(n, world, recv_c);
+        data[r0..r1].copy_from_slice(&incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn make_inputs(world: usize, n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let inputs: Vec<Vec<f32>> =
+            (0..world).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect();
+        let mut want = vec![0f32; n];
+        for inp in &inputs {
+            for (w, x) in want.iter_mut().zip(inp) {
+                *w += x;
+            }
+        }
+        (inputs, want)
+    }
+
+    #[test]
+    fn f32_allreduce_is_exact_sum() {
+        for world in [2, 3, 4, 8] {
+            let (inputs, want) = make_inputs(world, 1000, world as u64);
+            let out = ring_allreduce(inputs, Wire::F32);
+            for rank in 0..world {
+                for (a, b) in out[rank].iter().zip(&want) {
+                    assert!((a - b).abs() <= 1e-4 * b.abs().max(1.0), "world {world}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_chunks_are_handled() {
+        let (inputs, want) = make_inputs(3, 10, 9);
+        let out = ring_allreduce(inputs, Wire::F32);
+        for (a, b) in out[2].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn all_ranks_agree() {
+        let (inputs, _) = make_inputs(4, 257, 5);
+        let out = ring_allreduce(inputs, Wire::F32);
+        for rank in 1..4 {
+            assert_eq!(out[rank], out[0]);
+        }
+    }
+
+    #[test]
+    fn fp8_wire_is_close_and_volume_halves() {
+        // FP8 wire loses precision but stays within FP8 relative error of
+        // the exact sum (gradients tolerate this; paper §2.2 scale-
+        // invariance argument).
+        let (inputs, want) = make_inputs(4, 512, 7);
+        let out = ring_allreduce(inputs, Wire::Fp8);
+        let mut err = 0f64;
+        let mut mag = 0f64;
+        for (a, b) in out[0].iter().zip(&want) {
+            err += ((a - b) as f64).powi(2);
+            mag += (*b as f64).powi(2);
+        }
+        let rel = (err / mag).sqrt();
+        assert!(rel < 0.15, "relative error {rel}");
+    }
+
+    #[test]
+    fn single_worker_passthrough() {
+        let out = ring_allreduce(vec![vec![1.0, 2.0]], Wire::F32);
+        assert_eq!(out[0], vec![1.0, 2.0]);
+    }
+}

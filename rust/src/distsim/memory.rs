@@ -1,0 +1,132 @@
+//! Activation-memory accounting (Table 5 "Peak Activation").
+//!
+//! What each scheme must *save for backward* per decoder layer, per
+//! token (flash-attention style — no [S,S] score matrices retained):
+//!
+//!   ln1 input (residual stream), qkv input, qkv output (q,k,v), attn
+//!   output (wo input), ln2 input, up-proj input, GELU input (ffn),
+//!   down-proj input (ffn)
+//!
+//! BF16 stores all of them in 2 B/elem. COAT/MOSS store the *linear-
+//! layer inputs* (the paper's quantized activations) in FP8 payloads +
+//! scale metadata, and keep the non-GEMM tensors (residual/norm paths)
+//! in BF16. MOSS's metadata is 1 B per 32 elements (E8M0) vs COAT's
+//! 4 B per 128 (FP32 per-group) — plus COAT must ALSO keep the per-
+//! group scales of the qkv/up outputs it re-quantizes for the backward
+//! GEMMs, which is where the extra 1.8x-vs-1.48x gap comes from.
+
+/// Transformer shape for the accounting (paper: LLaMA-2-7B fine-tune).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelShape {
+    pub dim: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// tokens resident per GPU = micro-batch x seq
+    pub tokens: usize,
+}
+
+impl ModelShape {
+    /// Paper §4.4 setup: LLaMA-2-7B, batch 4 x seq 4096 per GPU.
+    pub fn llama7b_finetune() -> Self {
+        ModelShape { dim: 4096, ffn: 11008, layers: 32, heads: 32, tokens: 4 * 4096 }
+    }
+}
+
+/// Precision scheme for saved activations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryScheme {
+    Bf16,
+    Coat,
+    Moss,
+}
+
+impl MemoryScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MemoryScheme::Bf16 => "BF16",
+            MemoryScheme::Coat => "COAT",
+            MemoryScheme::Moss => "MOSS",
+        }
+    }
+}
+
+/// Bytes per element + per-element metadata overhead for a *quantized*
+/// saved tensor under each scheme.
+fn quantized_bytes_per_elem(s: MemoryScheme) -> f64 {
+    match s {
+        MemoryScheme::Bf16 => 2.0,
+        // FP8 payload + FP32 scale per 128 elements
+        MemoryScheme::Coat => 1.0 + 4.0 / 128.0,
+        // FP8 payload + E8M0 byte per 32 elements (+ amortized global)
+        MemoryScheme::Moss => 1.0 + 1.0 / 32.0,
+    }
+}
+
+/// Peak saved-activation memory in GB for one GPU.
+///
+/// Element classes per token per layer:
+///   * linear-layer inputs  (qkv-in d, wo-in d, up-in d, down-in f) —
+///     the activations all FP8 schemes quantize,
+///   * GELU input           (f) — COAT compresses it per-group, MOSS
+///     two-level,
+///   * q/k/v projections    (3d) — needed by attention backward; COAT
+///     keeps them BF16 (its compression targets the linear-layer saves),
+///     MOSS quantizes them with two-level microscaling as well — that is
+///     where the paper's extra 1.48x -> 1.8x saving comes from.
+pub fn activation_memory_gb(shape: &ModelShape, scheme: MemoryScheme) -> f64 {
+    let d = shape.dim as f64;
+    let f = shape.ffn as f64;
+    let t = shape.tokens as f64;
+    let l = shape.layers as f64;
+
+    let linear_inputs = d + d + d + f;
+    let gelu_in = f;
+    let qkv_out = 3.0 * d;
+
+    let q = quantized_bytes_per_elem(scheme);
+    let per_token_layer = match scheme {
+        MemoryScheme::Bf16 => (linear_inputs + gelu_in + qkv_out) * 2.0,
+        MemoryScheme::Coat => (linear_inputs + gelu_in) * q + qkv_out * 2.0,
+        MemoryScheme::Moss => (linear_inputs + gelu_in + qkv_out) * q,
+    };
+    per_token_layer * t * l / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_magnitudes() {
+        // paper Table 5: BF16 42.3 GB, COAT 28.6 GB, MOSS 23.5 GB
+        let s = ModelShape::llama7b_finetune();
+        let bf16 = activation_memory_gb(&s, MemoryScheme::Bf16);
+        let coat = activation_memory_gb(&s, MemoryScheme::Coat);
+        let moss = activation_memory_gb(&s, MemoryScheme::Moss);
+        assert!((bf16 - 42.3).abs() / 42.3 < 0.30, "bf16 {bf16}");
+        assert!((coat - 28.6).abs() / 28.6 < 0.30, "coat {coat}");
+        assert!((moss - 23.5).abs() / 23.5 < 0.30, "moss {moss}");
+    }
+
+    #[test]
+    fn table5_ratios() {
+        // savings ratios: COAT ~1.48x, MOSS ~1.8x over BF16
+        let s = ModelShape::llama7b_finetune();
+        let bf16 = activation_memory_gb(&s, MemoryScheme::Bf16);
+        let coat = bf16 / activation_memory_gb(&s, MemoryScheme::Coat);
+        let moss = bf16 / activation_memory_gb(&s, MemoryScheme::Moss);
+        assert!(moss > coat, "moss {moss} <= coat {coat}");
+        assert!((coat - 1.48).abs() < 0.3, "{coat}");
+        assert!((moss - 1.8).abs() < 0.35, "{moss}");
+    }
+
+    #[test]
+    fn memory_scales_linearly_with_tokens() {
+        let mut s = ModelShape::llama7b_finetune();
+        let a = activation_memory_gb(&s, MemoryScheme::Moss);
+        s.tokens *= 2;
+        let b = activation_memory_gb(&s, MemoryScheme::Moss);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Distributed-training simulation (paper §4.4, Table 5): activation-
+//! memory accounting per precision scheme, a *real* multi-threaded ring
+//! all-reduce with quantized payloads, an NVLink alpha-beta network
+//! model, and a compute/communication overlap timeline.
+
+pub mod allreduce;
+pub mod memory;
+pub mod netmodel;
+pub mod overlap;
+
+pub use allreduce::ring_allreduce;
+pub use memory::{activation_memory_gb, MemoryScheme, ModelShape};
+pub use netmodel::NetModel;
+pub use overlap::{overlap_ratio, OverlapConfig};

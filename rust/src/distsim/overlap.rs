@@ -1,0 +1,114 @@
+//! Compute/communication overlap timeline (Table 5 "Overlap Ratio").
+//!
+//! Event model of one backward pass under ZeRO-2: each decoder layer
+//! finishes its backward compute at time `i * layer_secs` and enqueues
+//! that layer's gradient bucket for all-reduce; the NIC drains buckets
+//! FIFO. Communication overlapping remaining backward compute is
+//! "hidden"; the exposed tail after the last layer determines
+//! `overlap = hidden_comm / total_comm`.
+//!
+//! FP8 schemes shrink the buckets *and* the compute window; the byte
+//! reduction dominates (as in the paper's 71% -> 83% measurement), which
+//! the model reproduces directionally. The BF16 per-layer backward time
+//! is the calibration constant (set so BF16 lands at the paper's 71%).
+
+use super::memory::MemoryScheme;
+use super::netmodel::{grad_bytes_per_step, NetModel};
+
+/// Inputs for the overlap simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapConfig {
+    pub layers: usize,
+    /// Backward-compute seconds per layer for this scheme.
+    pub layer_secs: f64,
+    /// Total gradient wire bytes per step for this scheme.
+    pub grad_bytes: f64,
+    pub net: NetModel,
+}
+
+/// Simulate and return (overlap_ratio, total_comm_secs, exposed_secs).
+pub fn overlap_ratio(cfg: &OverlapConfig) -> (f64, f64, f64) {
+    let bucket_bytes = cfg.grad_bytes / cfg.layers as f64;
+    let bucket_secs = cfg.net.allreduce_secs(bucket_bytes);
+    let total_comm = bucket_secs * cfg.layers as f64;
+    let mut nic_free = 0f64;
+    for i in 0..cfg.layers {
+        let ready = (i + 1) as f64 * cfg.layer_secs;
+        nic_free = nic_free.max(ready) + bucket_secs;
+    }
+    let compute_end = cfg.layers as f64 * cfg.layer_secs;
+    let exposed = (nic_free - compute_end).max(0.0).min(total_comm);
+    let hidden = total_comm - exposed;
+    (hidden / total_comm, total_comm, exposed)
+}
+
+/// BF16 per-layer backward-compute time — calibrated so the BF16 row of
+/// Table 5 reproduces the paper's 71.3% overlap under the measured
+/// 24.8 ms of communication.
+const BF16_LAYER_SECS: f64 = 0.57e-3;
+
+/// End-to-end step speedups (paper Table 2/3) used to scale the
+/// backward-compute window per scheme.
+fn compute_speedup(scheme: MemoryScheme) -> f64 {
+    match scheme {
+        MemoryScheme::Bf16 => 1.0,
+        MemoryScheme::Coat => 1.196,
+        MemoryScheme::Moss => 1.342,
+    }
+}
+
+/// Table-5 overlap for a scheme (LLaMA-7B backward on 8xH200).
+pub fn table5_overlap(scheme: MemoryScheme, params: f64, net: NetModel) -> (f64, f64, f64) {
+    let cfg = OverlapConfig {
+        layers: 32,
+        layer_secs: BF16_LAYER_SECS / compute_speedup(scheme),
+        grad_bytes: grad_bytes_per_step(params, scheme),
+        net,
+    };
+    overlap_ratio(&cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_bucket_is_always_exposed() {
+        // even with infinite bandwidth headroom, the final layer's bucket
+        // cannot be hidden: overlap <= 1 - 1/layers
+        let cfg = OverlapConfig {
+            layers: 4,
+            layer_secs: 1.0,
+            grad_bytes: 1e6,
+            net: NetModel { eff_bw: 1e12, alpha: 0.0, world: 8 },
+        };
+        let (r, total, exposed) = overlap_ratio(&cfg);
+        assert!((r - 0.75).abs() < 1e-6, "{r}");
+        assert!((exposed - total / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mostly_exposed_when_comm_dominates() {
+        let cfg = OverlapConfig {
+            layers: 4,
+            layer_secs: 1e-6,
+            grad_bytes: 1e12,
+            net: NetModel { eff_bw: 1e9, alpha: 0.0, world: 8 },
+        };
+        let (r, _, _) = overlap_ratio(&cfg);
+        assert!(r < 0.05, "{r}");
+    }
+
+    #[test]
+    fn table5_overlap_ordering_and_bf16_calibration() {
+        // paper: BF16 71.3% < COAT 78.5% < MOSS 83.4%
+        let net = NetModel::h200_nvlink();
+        let p = 6.74e9;
+        let (bf16, ..) = table5_overlap(MemoryScheme::Bf16, p, net);
+        let (coat, ..) = table5_overlap(MemoryScheme::Coat, p, net);
+        let (moss, ..) = table5_overlap(MemoryScheme::Moss, p, net);
+        assert!(bf16 < coat && coat < moss, "{bf16} {coat} {moss}");
+        assert!((bf16 - 0.713).abs() < 0.06, "{bf16}");
+        assert!(moss < 0.97, "{moss}");
+    }
+}

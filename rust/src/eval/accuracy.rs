@@ -1,0 +1,142 @@
+//! Exact-match accuracy on the arithmetic-reasoning tasks via greedy
+//! decoding through the `logits_last` artifact (the GSM8K/Mathematics/
+//! NumGLUE stand-in metric; paper Tables 3/4/11).
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::coordinator::TrainState;
+use crate::data::tasks::{parse_answer, Problem, TaskGenerator, TaskKind, EOS, PAD};
+use crate::runtime::literal::{lit_i32, to_f32};
+use crate::runtime::Runtime;
+
+/// Maximum answer tokens to decode (answers are <= 4 digits + sign).
+const MAX_DECODE: usize = 6;
+
+/// Greedy-decode answers for a batch of problems and score exact match.
+pub fn eval_task_accuracy(
+    rt: &Runtime,
+    state: &TrainState,
+    kind: TaskKind,
+    n_problems: usize,
+    seed: u64,
+) -> Result<f64> {
+    let man = &rt.manifest;
+    let (b, s, vocab) = (man.model.batch, man.model.seq, man.model.vocab);
+    let logits_prog = rt.program("logits_last")?;
+    // Held-out generator: offset seed stream from training.
+    let mut gen = TaskGenerator::new(kind, seed ^ 0x5EED_EA1u64);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut problems: Vec<Problem> = Vec::new();
+    while total + problems.len() < n_problems {
+        problems.push(gen.next_problem());
+        if problems.len() == b {
+            correct += decode_batch(rt, state, &logits_prog, &problems, b, s, vocab)?;
+            total += b;
+            problems.clear();
+        }
+    }
+    if !problems.is_empty() {
+        while problems.len() < b {
+            problems.push(problems[0].clone()); // pad batch with repeats
+        }
+        let extra = n_problems - total;
+        let scored = decode_batch_partial(rt, state, &logits_prog, &problems, b, s, vocab, extra)?;
+        correct += scored;
+        total += extra;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+fn decode_batch(
+    rt: &Runtime,
+    state: &TrainState,
+    prog: &std::sync::Arc<crate::runtime::Program>,
+    problems: &[Problem],
+    b: usize,
+    s: usize,
+    vocab: usize,
+) -> Result<usize> {
+    decode_batch_partial(rt, state, prog, problems, b, s, vocab, problems.len())
+}
+
+/// Decode a full batch but only score the first `count` rows.
+fn decode_batch_partial(
+    _rt: &Runtime,
+    state: &TrainState,
+    prog: &std::sync::Arc<crate::runtime::Program>,
+    problems: &[Problem],
+    b: usize,
+    s: usize,
+    vocab: usize,
+    count: usize,
+) -> Result<usize> {
+    // Left-padded rolling windows of length s, prompt at the right edge.
+    let mut rows: Vec<Vec<i32>> = problems
+        .iter()
+        .map(|p| {
+            let mut row = vec![PAD; s];
+            let take = p.prompt.len().min(s);
+            row[s - take..].copy_from_slice(&p.prompt[p.prompt.len() - take..]);
+            row
+        })
+        .collect();
+    let mut answers: Vec<Vec<i32>> = vec![Vec::new(); b];
+    let mut done = vec![false; b];
+    for _ in 0..MAX_DECODE {
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        let tokens = lit_i32(&[b, s], &flat)?;
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.push(&tokens);
+        let outs = prog.call(&inputs)?;
+        let logits = to_f32(&outs[0])?; // [b, vocab]
+        for r in 0..b {
+            if done[r] {
+                continue;
+            }
+            let row_logits = &logits[r * vocab..(r + 1) * vocab];
+            let tok = argmax(row_logits) as i32;
+            if tok == EOS {
+                done[r] = true;
+                continue;
+            }
+            answers[r].push(tok);
+            rows[r].remove(0);
+            rows[r].push(tok);
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+    }
+    let mut correct = 0;
+    for r in 0..count {
+        let want = parse_answer(&problems[r].answer);
+        let got = parse_answer(&answers[r]);
+        if want.is_some() && want == got {
+            correct += 1;
+        }
+    }
+    Ok(correct)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation: perplexity over held-out synthetic splits (paper Table 2)
+//! and exact-match accuracy on the arithmetic-reasoning tasks (Tables
+//! 3/4/11).
+
+pub mod accuracy;
+pub mod perplexity;
+
+pub use accuracy::eval_task_accuracy;
+pub use perplexity::eval_perplexity;

@@ -1,0 +1,44 @@
+//! Perplexity evaluation over held-out shards (the WikiText/C4/Pile
+//! stand-ins; paper Table 2 "Model Performance (PPL)").
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::coordinator::TrainState;
+use crate::data::EvalShard;
+use crate::runtime::literal::{lit_i32, scalar_f32};
+use crate::runtime::Runtime;
+
+/// Perplexity of `state`'s model over `shard`.
+pub fn eval_perplexity(rt: &Runtime, state: &TrainState, shard: &EvalShard) -> Result<f64> {
+    let eval = rt.program("eval_step")?;
+    let man = &rt.manifest;
+    let (b, s) = (man.model.batch, man.model.seq);
+    let mut nll = 0f64;
+    let mut count = 0f64;
+    for batch in &shard.batches {
+        let tokens = lit_i32(&[b, s + 1], &batch.tokens)?;
+        let mut inputs: Vec<&Literal> = state.params.iter().collect();
+        inputs.push(&tokens);
+        let outs = eval.call(&inputs)?;
+        nll += scalar_f32(&outs[0])? as f64;
+        count += scalar_f32(&outs[1])? as f64;
+    }
+    Ok((nll / count.max(1.0)).exp())
+}
+
+/// Standard three-split evaluation (paper Table 2 columns).
+pub fn eval_three_splits(
+    rt: &Runtime,
+    state: &TrainState,
+    n_batches: usize,
+) -> Result<Vec<(String, f64)>> {
+    let man = &rt.manifest;
+    let (b, s, v) = (man.model.batch, man.model.seq, man.model.vocab);
+    let mut out = Vec::new();
+    for split in ["wikitext", "c4", "pile"] {
+        let shard = EvalShard::synthetic(split, v, n_batches, b, s + 1);
+        out.push((split.to_string(), eval_perplexity(rt, state, &shard)?));
+    }
+    Ok(out)
+}

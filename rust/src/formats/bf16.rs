@@ -1,0 +1,80 @@
+//! bfloat16 rounding (round-to-nearest-even via the classic bias trick) —
+//! the baseline precision MOSS is compared against, used by the memory
+//! accounting in `distsim` and by reference computations in tests.
+
+/// Round an f32 to the nearest bf16-representable value (ties to even).
+pub fn round_to_bf16(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let bits = x.to_bits();
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    let out = (bits.wrapping_add(rounding_bias)) & 0xFFFF_0000;
+    f32::from_bits(out)
+}
+
+/// Encode to the 16-bit payload (truncation after RNE).
+pub fn encode(x: f32) -> u16 {
+    (round_to_bf16(x).to_bits() >> 16) as u16
+}
+
+/// Decode a bf16 payload to f32.
+pub fn decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round a slice in place.
+pub fn round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = round_to_bf16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_survive() {
+        for v in [0.0f32, 1.0, -2.5, 256.0] {
+            assert_eq!(round_to_bf16(v), v);
+        }
+    }
+
+    #[test]
+    fn rne_behaviour() {
+        // bf16 has 7 mantissa bits: step at 1.0 is 2^-7, tie at 1 + 2^-8.
+        // Ties go to even -> 1.0.
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(round_to_bf16(x), 1.0);
+        // slightly above the tie rounds up
+        let y = 1.0 + 2f32.powi(-8) + 2f32.powi(-16);
+        assert_eq!(round_to_bf16(y), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn roundtrip_all_payload_samples() {
+        for b in (0u16..=0xFF00).step_by(257) {
+            let v = decode(b);
+            if v.is_finite() {
+                assert_eq!(encode(v), b);
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut x = 1e-3f32;
+        while x < 1e3 {
+            let r = (round_to_bf16(x) - x).abs() / x;
+            // half a ulp of the 7-bit mantissa
+            assert!(r <= 2f32.powi(-8) * (1.0 + 1e-6), "{x} -> rel {r}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(round_to_bf16(f32::NAN).is_nan());
+    }
+}

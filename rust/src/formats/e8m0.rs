@@ -1,0 +1,96 @@
+//! E8M0: the OCP MX shared-scale format — an 8-bit power-of-two exponent,
+//! no sign, no mantissa. MOSS stores its level-2 microscales in E8M0
+//! (paper §3.1); since `ss_i = s_i / s <= 1`, exponents are always <= 0
+//! and fit comfortably in the i8 we use as the wire type (matching the
+//! int8 exponents the AOT artifacts carry).
+
+/// Clamp range for unbiased exponents (E8M0 encodes 2^-127 .. 2^127).
+pub const EXP_MIN: i32 = -127;
+pub const EXP_MAX: i32 = 127;
+
+/// Epsilon that positive scale inputs are clamped to before taking log2
+/// (matches `fp8.SCALE_EPS` on the Python side).
+pub const SCALE_EPS: f32 = 1e-12;
+
+/// Ceil-rounded E8M0 exponent: smallest e with 2^e >= v (overflow-free
+/// convention; see DESIGN.md §SNR-metrics for why not round-to-nearest).
+/// Uses exact integer math on the f32 bit pattern, no log2 rounding.
+pub fn encode_ceil(v: f32) -> i8 {
+    let v = v.max(SCALE_EPS);
+    let bits = v.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32 - 127;
+    let mantissa = bits & 0x7F_FFFF;
+    // v == 2^e exactly when mantissa == 0 (normals; SCALE_EPS keeps us
+    // out of the f32-subnormal range).
+    let ceil = if mantissa == 0 { e } else { e + 1 };
+    ceil.clamp(EXP_MIN, EXP_MAX) as i8
+}
+
+/// Round-to-nearest (in log2) E8M0 exponent — the paper Eq. 3 literal
+/// reading, kept for the SNR ablation.
+pub fn encode_nearest(v: f32) -> i8 {
+    let v = v.max(SCALE_EPS);
+    let e = (v as f64).log2().round();
+    (e as i32).clamp(EXP_MIN, EXP_MAX) as i8
+}
+
+/// Materialize an exponent as the f32 power of two it denotes.
+pub fn decode(e: i8) -> f32 {
+    2f64.powi(e as i32) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powers_of_two() {
+        assert_eq!(encode_ceil(1.0), 0);
+        assert_eq!(encode_ceil(0.5), -1);
+        assert_eq!(encode_ceil(0.25), -2);
+        assert_eq!(encode_ceil(2.0f32.powi(-20)), -20);
+    }
+
+    #[test]
+    fn ceil_never_underestimates() {
+        let mut v = 1.0e-6f32;
+        while v < 1.0 {
+            let d = decode(encode_ceil(v));
+            assert!(d >= v, "{v} -> {d}");
+            assert!(d <= 2.0 * v * (1.0 + 1e-6), "{v} -> {d}");
+            v *= 1.37;
+        }
+    }
+
+    #[test]
+    fn just_above_power_of_two_rounds_up() {
+        let v = f32::from_bits(1.0f32.to_bits() + 1); // 1 + ulp
+        assert_eq!(encode_ceil(v), 1);
+        let v = f32::from_bits(0.5f32.to_bits() + 1);
+        assert_eq!(encode_ceil(v), 0);
+    }
+
+    #[test]
+    fn clamps_to_e8m0_range() {
+        assert_eq!(encode_ceil(0.0), encode_ceil(SCALE_EPS));
+        assert!(encode_ceil(SCALE_EPS) >= EXP_MIN as i8);
+    }
+
+    #[test]
+    fn nearest_is_within_half_octave() {
+        let mut v = 1.0e-4f32;
+        while v < 1.0 {
+            let d = decode(encode_nearest(v)) as f64 / v as f64;
+            assert!(d >= 2f64.powf(-0.51) && d <= 2f64.powf(0.51), "{v}");
+            v *= 1.618;
+        }
+    }
+
+    #[test]
+    fn decode_is_exact_power() {
+        for e in [-127i8, -64, -1, 0, 1, 64, 127] {
+            let d = decode(e);
+            assert_eq!(d.log2(), e as f32);
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! FP8 codecs: E4M3FN (1-4-3, bias 7, no Inf, max 448) and E5M2
+//! (1-5-2, bias 15, max 57344), per the OCP OFP8 spec the paper cites.
+//!
+//! `round_to_grid` implements saturating round-to-nearest-even onto the
+//! format's representable set — the exact semantics of the JAX emulation
+//! (`clip` + `astype(float8)`) used in the AOT artifacts, and of Tensor
+//! Core saturating conversion.
+
+/// Static description of an FP8 format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fp8Format {
+    pub name: &'static str,
+    /// Mantissa (fraction) bits.
+    pub mant: u32,
+    /// Minimum normal exponent (unbiased).
+    pub emin: i32,
+    /// Largest representable magnitude.
+    pub max: f32,
+    /// Exponent bias for payload encode/decode.
+    pub bias: i32,
+}
+
+/// E4M3FN: the activation/weight format (finite-only, max 448).
+pub const E4M3: Fp8Format = Fp8Format { name: "e4m3", mant: 3, emin: -6, max: 448.0, bias: 7 };
+/// E5M2: the gradient format (wider range, max 57344).
+pub const E5M2: Fp8Format = Fp8Format { name: "e5m2", mant: 2, emin: -14, max: 57344.0, bias: 15 };
+
+impl Fp8Format {
+    /// Smallest positive subnormal (one quantum at emin).
+    pub fn min_subnormal(&self) -> f32 {
+        (2f64.powi(self.emin - self.mant as i32)) as f32
+    }
+
+    /// Round `x` to the nearest representable value (ties to even),
+    /// saturating at +/- max. NaN propagates.
+    pub fn round_to_grid(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return x;
+        }
+        let a = x.abs();
+        if a == 0.0 {
+            return x; // preserves signed zero
+        }
+        let clipped = a.min(self.max);
+        // Unbiased exponent of `clipped` (f32 normal range guaranteed:
+        // min we care about is far above f32 subnormals after the clamp
+        // below; f32-subnormal inputs land in the emin bucket anyway).
+        let e = if clipped >= f32::MIN_POSITIVE {
+            ((clipped.to_bits() >> 23) as i32) - 127
+        } else {
+            -127
+        };
+        let qe = e.max(self.emin) - self.mant as i32;
+        // Quantum = 2^qe, exact in f64.
+        let quantum = 2f64.powi(qe);
+        // RNE of clipped/quantum: the quotient is at most 2^(mant+1)+eps,
+        // exactly representable in f64, so round_ties_even is exact RNE.
+        let n = (clipped as f64 / quantum).round_ties_even();
+        let v = (n * quantum) as f32;
+        // Rounding can carry past max (e.g. 465 -> 480 in E4M3's absent
+        // bucket): saturate.
+        let v = v.min(self.max);
+        if x < 0.0 {
+            -v
+        } else {
+            v
+        }
+    }
+
+    /// Round a whole slice in place.
+    pub fn round_slice(&self, xs: &mut [f32]) {
+        for x in xs.iter_mut() {
+            *x = self.round_to_grid(*x);
+        }
+    }
+
+    /// Encode a (grid or off-grid) value to the 8-bit payload.
+    pub fn encode(&self, x: f32) -> u8 {
+        let v = self.round_to_grid(x);
+        if v.is_nan() {
+            return 0x7F; // canonical NaN (E4M3FN S.1111.111)
+        }
+        let sign = if v.is_sign_negative() { 0x80u8 } else { 0 };
+        let a = v.abs();
+        if a == 0.0 {
+            return sign;
+        }
+        let e = ((a.to_bits() >> 23) as i32) - 127;
+        if e < self.emin {
+            // subnormal: payload mantissa = a / 2^(emin - mant)
+            let m = (a as f64 / 2f64.powi(self.emin - self.mant as i32)).round() as u8;
+            return sign | m;
+        }
+        let biased = (e + self.bias) as u8;
+        let frac_bits = (a.to_bits() >> (23 - self.mant)) & ((1 << self.mant) - 1);
+        sign | (biased << self.mant) | frac_bits as u8
+    }
+
+    /// Decode an 8-bit payload to f32.
+    pub fn decode(&self, b: u8) -> f32 {
+        let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+        let mag = b & 0x7F;
+        let exp_field = (mag >> self.mant) as i32;
+        let frac = (mag & ((1 << self.mant) - 1)) as f64;
+        let m = 1 << self.mant;
+        let v = if exp_field == 0 {
+            // subnormal
+            frac * 2f64.powi(self.emin - self.mant as i32)
+        } else {
+            let e = exp_field - self.bias;
+            (1.0 + frac / m as f64) * 2f64.powi(e)
+        };
+        sign * v as f32
+    }
+
+    /// Number of finite representable non-negative magnitudes (testing).
+    pub fn enumerate_magnitudes(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for b in 0u8..=0x7F {
+            let v = self.decode(b);
+            if v.is_finite() && v <= self.max {
+                out.push(v);
+            }
+        }
+        out.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_known_values() {
+        assert_eq!(E4M3.round_to_grid(448.0), 448.0);
+        assert_eq!(E4M3.round_to_grid(1000.0), 448.0); // saturates
+        assert_eq!(E4M3.round_to_grid(1.0), 1.0);
+        assert_eq!(E4M3.round_to_grid(-0.5), -0.5);
+        assert_eq!(E4M3.round_to_grid(0.0), 0.0);
+        // min subnormal = 2^-9
+        assert_eq!(E4M3.min_subnormal(), 0.001953125);
+    }
+
+    #[test]
+    fn e4m3_grid_spacing() {
+        // In [256, 448], step is 32; RNE: 384+10 -> 384, 384+17 -> 416
+        assert_eq!(E4M3.round_to_grid(394.0), 384.0);
+        assert_eq!(E4M3.round_to_grid(401.0), 416.0);
+        // tie 400 -> even mantissa neighbour (384 has frac 100, 416 has 101)
+        assert_eq!(E4M3.round_to_grid(400.0), 384.0);
+    }
+
+    #[test]
+    fn e5m2_known_values() {
+        assert_eq!(E5M2.round_to_grid(57344.0), 57344.0);
+        assert_eq!(E5M2.round_to_grid(1e9), 57344.0);
+        assert_eq!(E5M2.round_to_grid(3.0), 3.0);
+        assert_eq!(E5M2.min_subnormal(), 2f32.powi(-16));
+    }
+
+    #[test]
+    fn rounding_idempotent_on_all_payloads() {
+        for fmt in [E4M3, E5M2] {
+            for b in 0u8..=255 {
+                let v = fmt.decode(b);
+                if v.is_finite() && v.abs() <= fmt.max {
+                    assert_eq!(fmt.round_to_grid(v), v, "{} payload {b:#x}", fmt.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for fmt in [E4M3, E5M2] {
+            for b in 0u8..=255 {
+                let v = fmt.decode(b);
+                if !v.is_finite() || v.abs() > fmt.max {
+                    continue;
+                }
+                let b2 = fmt.encode(v);
+                assert_eq!(fmt.decode(b2), v, "{} payload {b:#x}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // E4M3 around 1.0: step 1/8. 1.0625 is exactly between 1.0 and
+        // 1.125; even mantissa is 1.0 (frac 000).
+        assert_eq!(E4M3.round_to_grid(1.0625), 1.0);
+        // 1.1875 between 1.125 (001) and 1.25 (010): even is 1.25.
+        assert_eq!(E4M3.round_to_grid(1.1875), 1.25);
+    }
+
+    #[test]
+    fn subnormal_region() {
+        // E4M3 subnormal quantum 2^-9; 1.5 quanta rounds to even (2 quanta)
+        let q = E4M3.min_subnormal();
+        assert_eq!(E4M3.round_to_grid(1.5 * q), 2.0 * q);
+        assert_eq!(E4M3.round_to_grid(0.4 * q), 0.0);
+        assert_eq!(E4M3.round_to_grid(0.6 * q), q);
+    }
+
+    #[test]
+    fn magnitude_counts() {
+        // E4M3FN: 126 positive finite magnitudes below NaN + zero... we
+        // enumerate <= 448: exponent fields 0..15 with the 1111.111 NaN
+        // excluded; just sanity-check density.
+        let mags = E4M3.enumerate_magnitudes();
+        assert!(mags.len() > 100 && mags.len() <= 128);
+        assert_eq!(*mags.last().unwrap(), 448.0);
+    }
+
+    #[test]
+    fn sign_symmetry_and_nan() {
+        for x in [0.3f32, 7.7, 500.0, 1e-4] {
+            assert_eq!(E4M3.round_to_grid(-x), -E4M3.round_to_grid(x));
+        }
+        assert!(E4M3.round_to_grid(f32::NAN).is_nan());
+    }
+}

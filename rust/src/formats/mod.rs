@@ -1,0 +1,18 @@
+//! Numeric-format substrate: software codecs for the low-precision
+//! formats MOSS builds on.
+//!
+//! * [`fp8`] — OCP OFP8 `E4M3FN` / `E5M2`: encode to 8-bit payloads,
+//!   decode, and round-to-grid (bit-exact with the JAX emulation in
+//!   `python/compile/fp8.py`, which is what the AOT artifacts execute).
+//! * [`e8m0`] — OCP MX shared-scale exponent format (power-of-two scales).
+//! * [`bf16`] — bfloat16 rounding (the baseline training precision).
+//!
+//! Everything here is pure integer/float arithmetic with round-to-nearest-
+//! even semantics; the Python tests cross-check these codecs against the
+//! lowered XLA `convert` ops through the `quant_*` artifacts.
+
+pub mod bf16;
+pub mod e8m0;
+pub mod fp8;
+
+pub use fp8::{Fp8Format, E4M3, E5M2};

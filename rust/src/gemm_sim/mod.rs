@@ -1,0 +1,11 @@
+//! H800 GEMM cost model: reproduces the *shape* of the paper's kernel
+//! comparisons (Fig. 1, Table 6) from first principles — where each
+//! scheme spends Tensor-Core vs CUDA-core vs HBM time — since no H800 is
+//! attached to this machine (DESIGN.md "Environment substitutions").
+
+pub mod machine;
+pub mod schedule;
+pub mod tables;
+
+pub use machine::MachineModel;
+pub use schedule::{GemmShape, KernelCost, Scheme};

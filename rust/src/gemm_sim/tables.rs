@@ -1,0 +1,157 @@
+//! Table-6 / Fig-1 generators over the cost model, plus the model-level
+//! throughput estimator used by Table 2/3 (end-to-end training speedups
+//! on the paper's hardware, which this machine cannot measure directly).
+
+use crate::util::table::{f, Table};
+
+use super::machine::MachineModel;
+use super::schedule::{kernel_cost, table6_shapes, GemmShape, Scheme};
+
+/// Render Table 6: runtime of quantized FP8 GEMM per scheme and shape.
+pub fn table6(machine: &MachineModel) -> Table {
+    let mut t = Table::new(
+        "Table 6 — Runtime of quantized FP8 GEMM on (modeled) H800, ms",
+        &["M", "N", "K", "TE", "COAT", "DeepSeek", "MOSS"],
+    );
+    let mut sums = [0f64; 4];
+    let shapes = table6_shapes();
+    for s in &shapes {
+        let mut row = vec![s.m.to_string(), s.n.to_string(), s.k.to_string()];
+        for (i, scheme) in Scheme::FP8_ALL.iter().enumerate() {
+            let ms = kernel_cost(machine, *scheme, *s).total_secs * 1e3;
+            sums[i] += ms;
+            row.push(f(ms, 2));
+        }
+        t.row(row);
+    }
+    let n = shapes.len() as f64;
+    t.row(vec![
+        "Avg".into(),
+        "".into(),
+        "".into(),
+        f(sums[0] / n, 2),
+        f(sums[1] / n, 2),
+        f(sums[2] / n, 2),
+        f(sums[3] / n, 2),
+    ]);
+    t
+}
+
+/// Fig 1: per-tensor (TE) vs per-group (COAT) runtime across shapes —
+/// the motivating comparison.
+pub fn fig1(machine: &MachineModel) -> Table {
+    let mut t = Table::new(
+        "Figure 1 — Quantized GEMM runtime comparison (modeled H800, ms)",
+        &["shape", "per-tensor (TE)", "per-group (COAT)", "slowdown"],
+    );
+    for s in table6_shapes() {
+        let te = kernel_cost(machine, Scheme::TE, s).total_secs * 1e3;
+        let coat = kernel_cost(machine, Scheme::Coat, s).total_secs * 1e3;
+        t.row(vec![
+            format!("{}x{}x{}", s.m, s.n, s.k),
+            f(te, 2),
+            f(coat, 2),
+            format!("{:.1}x", coat / te),
+        ]);
+    }
+    t
+}
+
+/// GEMM shapes of one decoder layer (fwd) for a model with hidden `d`,
+/// ffn `f`, over `tokens` tokens: qkv, attn-out, up, down.
+pub fn layer_gemms(d: usize, ffn: usize, tokens: usize) -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(tokens, 3 * d, d),
+        GemmShape::new(tokens, d, d),
+        GemmShape::new(tokens, ffn, d),
+        GemmShape::new(tokens, d, ffn),
+    ]
+}
+
+/// Modeled time for one train step's linear-layer GEMMs (fwd + 2x bwd)
+/// for a given scheme — the basis of the Table-2 throughput projection.
+pub fn step_linear_secs(
+    machine: &MachineModel,
+    scheme: Scheme,
+    d: usize,
+    ffn: usize,
+    layers: usize,
+    tokens: usize,
+) -> f64 {
+    let fwd: f64 = layer_gemms(d, ffn, tokens)
+        .into_iter()
+        .map(|s| kernel_cost(machine, scheme, s).total_secs)
+        .sum();
+    // backward: dX and dW GEMMs of the same shapes (2x fwd FLOPs)
+    layers as f64 * fwd * 3.0
+}
+
+/// End-to-end Table-2 throughput projection for OLMo-7B on 8xH800.
+///
+/// Model: `step = gemm(scheme) + other(scheme)`, where
+///  * `gemm` comes from the cost model for BF16/TE/MOSS/DeepGEMM; for
+///    COAT we use COAT's *own reported* end-to-end GEMM efficiency
+///    (x0.62 of BF16 GEMM time) — the paper's Fig-1/Table-6 COAT kernel
+///    measurements (per-group dequant serialized in the main loop) are
+///    inconsistent with COAT's reported +19.6% e2e throughput, a real
+///    discrepancy in the source material documented in EXPERIMENTS.md;
+///  * `other` (attention, norms, optimizer, comm, host) is calibrated so
+///    BF16 reproduces the measured 33,805 tokens/s, and is reduced for
+///    FP8 schemes by their activation-memory and communication savings
+///    (Table 5: MOSS 1.8x memory, 1.53x comm -> x0.80 of the BF16
+///    non-GEMM time; COAT x0.88; TE x0.95, weights-only).
+pub fn table2_throughputs(machine: &MachineModel) -> Vec<(Scheme, f64)> {
+    let (d, ffn, layers) = (4096, 11008, 32);
+    let tokens_global = 256 * 2048; // global batch x seq
+    let tokens_gpu = tokens_global / 8;
+    let target_bf16 = 33_805.0;
+    let lin_bf16 = step_linear_secs(machine, Scheme::Bf16, d, ffn, layers, tokens_gpu);
+    let other_bf16 = (tokens_global as f64 / target_bf16 - lin_bf16).max(0.0);
+    let project = |scheme: Scheme| -> f64 {
+        let gemm = match scheme {
+            Scheme::Coat => lin_bf16 * 0.62,
+            s => step_linear_secs(machine, s, d, ffn, layers, tokens_gpu),
+        };
+        let other_scale = match scheme {
+            Scheme::Bf16 => 1.0,
+            Scheme::TE => 0.95,
+            Scheme::Coat => 0.88,
+            Scheme::Moss => 0.80,
+            Scheme::DeepGemm => 0.80,
+        };
+        tokens_global as f64 / (gemm + other_bf16 * other_scale)
+    };
+    [Scheme::Bf16, Scheme::Coat, Scheme::Moss, Scheme::TE, Scheme::DeepGemm]
+        .iter()
+        .map(|&s| (s, project(s)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_speedups_match_paper_shape() {
+        // paper Table 2: BF16 33,805 / COAT +19.6% / MOSS +34.2%
+        let m = MachineModel::h800();
+        let tp = table2_throughputs(&m);
+        let get = |s: Scheme| tp.iter().find(|(x, _)| *x == s).unwrap().1;
+        let bf16 = get(Scheme::Bf16);
+        assert!((bf16 - 33_805.0).abs() / 33_805.0 < 0.01, "calibration");
+        let moss = get(Scheme::Moss) / bf16;
+        let coat = get(Scheme::Coat) / bf16;
+        assert!(moss > coat, "moss {moss} vs coat {coat}");
+        assert!(moss > 1.15 && moss < 1.60, "moss speedup {moss}");
+        assert!(coat > 1.02 && coat < 1.35, "coat speedup {coat}");
+    }
+
+    #[test]
+    fn tables_render() {
+        let m = MachineModel::h800();
+        let t6 = table6(&m).render();
+        assert!(t6.contains("DeepSeek") && t6.contains("Avg"));
+        let f1 = fig1(&m).render();
+        assert!(f1.contains("slowdown"));
+    }
+}

@@ -1,0 +1,41 @@
+//! # moss — FP8 LLM training with two-level microscaling & automatic scaling
+//!
+//! Rust + JAX + Pallas reproduction of *"MOSS: Efficient and Accurate FP8
+//! LLM Training with Microscaling and Automatic Scaling"* (CS.LG 2025).
+//!
+//! Layer 3 of the three-layer stack (see `DESIGN.md`): this crate owns the
+//! training coordinator, the scaling managers (the paper's §3.2
+//! contribution), the PJRT runtime that executes the AOT-lowered JAX/Pallas
+//! programs from `artifacts/`, every supporting substrate (FP8/E8M0 codecs,
+//! quantizers, synthetic data, evaluation, the H800 GEMM cost model, the
+//! multi-GPU communication simulator), and the benchmark harness that
+//! regenerates every table and figure of the paper's evaluation.
+//!
+//! Python/JAX runs only at build time (`make artifacts`); nothing on the
+//! training hot path touches Python.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distsim;
+pub mod eval;
+pub mod formats;
+pub mod gemm_sim;
+pub mod metrics;
+pub mod optim;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod scaling;
+pub mod util;
+
+/// Maximum representable magnitude of FP8 E4M3FN (OCP OFP8).
+pub const E4M3_MAX: f32 = 448.0;
+/// Maximum representable magnitude of FP8 E5M2.
+pub const E5M2_MAX: f32 = 57344.0;
+/// MOSS level-2 micro-group size (OCP MX spec).
+pub const MICRO_GROUP: usize = 32;
+/// COAT / DeepSeek per-group quantization group size.
+pub const COAT_GROUP: usize = 128;

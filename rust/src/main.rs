@@ -1,0 +1,157 @@
+//! `repro` — the MOSS framework launcher.
+//!
+//! Subcommands map to the paper's workflows:
+//!   train       pretrain on the synthetic corpus (Fig. 5 / Table 2)
+//!   finetune    fine-tune on arithmetic-reasoning tasks (Fig. 6 / Table 3)
+//!   eval        perplexity of a checkpoint over the three eval splits
+//!   snr         Table-7 SNR study on random or probed activations
+//!   gemm-table  Table-6 / Fig-1 GEMM cost-model tables
+//!   comm-table  Table-5 memory & communication simulation
+//!   scale-sim   Fig-4 scale-trajectory demo
+//!   report      regenerate every table/figure into results/
+//!   hlo-stats   artifact inventory + op statistics (L2 perf checks)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+use moss::cli::{usage, Args};
+use moss::config::TrainConfig;
+use moss::coordinator::Trainer;
+use moss::runtime::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("train", "pretrain on the synthetic corpus (--mode, --steps, --config, --scaling)"),
+    ("finetune", "fine-tune on math tasks and report accuracy"),
+    ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
+    ("snr", "Table-7 SNR study across quantization schemes"),
+    ("gemm-table", "Table-6/Fig-1 H800 GEMM cost model"),
+    ("comm-table", "Table-5 memory & communication simulation"),
+    ("scale-sim", "Fig-4 automatic-vs-JIT scale trajectories"),
+    ("report", "regenerate all paper tables/figures into results/"),
+    ("hlo-stats", "artifact inventory and HLO op statistics"),
+];
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.has("help") || args.subcommand.is_none() {
+        print!("{}", usage("repro", COMMANDS));
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "train" => cmd_train(&args),
+        "finetune" => cmd_finetune(&args),
+        "eval" => cmd_eval(&args),
+        "snr" => moss::report::snr::run_cli(&args),
+        "gemm-table" => moss::report::gemm::run_cli(&args),
+        "comm-table" => moss::report::comm::run_cli(&args),
+        "scale-sim" => moss::report::scaling::run_cli(&args),
+        "report" => moss::report::run_all(&args),
+        "hlo-stats" => moss::report::hlo_stats::run_cli(&args),
+        other => bail!("unknown command {other:?}\n{}", usage("repro", COMMANDS)),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::default().apply_args(args)?;
+    let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
+    eprintln!(
+        "model: {} ({} params), mode {}, {} steps",
+        rt.manifest.config_name,
+        rt.manifest.model.param_count,
+        cfg.mode.name(),
+        cfg.steps
+    );
+    let steps = cfg.steps;
+    let eval_every = cfg.eval_every;
+    let mut trainer = Trainer::new(rt.clone(), cfg.clone())?;
+    let mut remaining = steps;
+    while remaining > 0 {
+        let chunk = if eval_every > 0 { eval_every.min(remaining) } else { remaining };
+        trainer.run(chunk)?;
+        remaining -= chunk;
+        if eval_every > 0 {
+            for (split, ppl) in
+                moss::eval::perplexity::eval_three_splits(&rt, &trainer.state, 4)?
+            {
+                eprintln!("  eval {split}: ppl {ppl:.2}");
+            }
+        }
+    }
+    let tail = trainer.history.tail_loss(20);
+    println!(
+        "done: {} steps, final loss {:.4}, {:.0} tokens/s (scaling: {} absmax calls)",
+        trainer.state.step,
+        tail,
+        trainer.throughput.tokens_per_sec(),
+        trainer.scaling_stats().absmax_calls,
+    );
+    if args.has("profile") {
+        // §Perf L3 breakdown: where the coordinator's wall time goes.
+        let wall = trainer.throughput.elapsed_secs();
+        eprintln!("\n-- hot-path profile (wall {wall:.1}s) --");
+        let mut total_exec = 0.0;
+        let mut total_dl = 0.0;
+        for (name, st) in rt.all_stats() {
+            if st.calls == 0 {
+                continue;
+            }
+            eprintln!(
+                "  {name:<22} calls {:>5}  exec {:>8.2}s ({:>4.1}%)  download {:>6.2}s",
+                st.calls,
+                st.exec_secs,
+                st.exec_secs / wall * 100.0,
+                st.download_secs
+            );
+            total_exec += st.exec_secs;
+            total_dl += st.download_secs;
+        }
+        eprintln!(
+            "  coordinator overhead (data gen, marshalling, scaling, logging): {:.2}s ({:.1}%)",
+            wall - total_exec - total_dl,
+            (wall - total_exec - total_dl) / wall * 100.0
+        );
+    }
+    if let Some(out) = &trainer.cfg.out_dir {
+        std::fs::create_dir_all(out)?;
+        std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
+        moss::coordinator::checkpoint::save(&out.join("ckpt.bin"), &rt, &trainer.state)?;
+        eprintln!("wrote {}/losses.csv and ckpt.bin", out.display());
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let mut cfg = moss::config::presets::finetune_small(args.get_u64("steps", 200)?);
+    cfg = cfg.apply_args(args)?;
+    cfg.data = moss::config::DataKind::MathTasks;
+    let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
+    let mut trainer = Trainer::new(rt.clone(), cfg.clone())?;
+    trainer.run(cfg.steps)?;
+    println!("finetune done: final loss {:.4}", trainer.history.tail_loss(20));
+    let n = args.get_usize("eval-problems", 64)?;
+    for kind in moss::data::TaskKind::ALL {
+        let acc = moss::eval::eval_task_accuracy(&rt, &trainer.state, kind, n, cfg.seed)?;
+        println!("  {:<12} accuracy: {:.1}%", kind.benchmark_name(), acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::default().apply_args(args)?;
+    let rt = Runtime::load(&cfg.artifact_dir())?;
+    let state = match args.get("ckpt") {
+        Some(p) => moss::coordinator::checkpoint::load(std::path::Path::new(p), &rt)?,
+        None => moss::coordinator::TrainState::init(&rt, cfg.seed as i32)?,
+    };
+    for (split, ppl) in moss::eval::perplexity::eval_three_splits(&rt, &state, 8)? {
+        println!("{split:<10} ppl {ppl:.2}");
+    }
+    Ok(())
+}

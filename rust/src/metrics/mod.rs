@@ -1,0 +1,121 @@
+//! Training metrics: throughput meter, loss history, CSV/JSON emission.
+
+use std::time::Instant;
+
+use crate::util::stats::Ema;
+
+/// Tokens/sec + step-time tracking over the training loop.
+#[derive(Debug)]
+pub struct Throughput {
+    started: Instant,
+    last_step: Instant,
+    pub steps: u64,
+    pub tokens: u64,
+    step_time_ema: Ema,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Throughput {
+            started: now,
+            last_step: now,
+            steps: 0,
+            tokens: 0,
+            step_time_ema: Ema::new(0.1),
+        }
+    }
+
+    /// Record a completed step that consumed `tokens` tokens.
+    pub fn step(&mut self, tokens: u64) {
+        let now = Instant::now();
+        self.step_time_ema.update((now - self.last_step).as_secs_f64());
+        self.last_step = now;
+        self.steps += 1;
+        self.tokens += tokens;
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn step_time_secs(&self) -> f64 {
+        self.step_time_ema.get().unwrap_or(0.0)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Per-run training history (loss curve + eval points) for figures.
+#[derive(Debug, Clone, Default)]
+pub struct TrainHistory {
+    pub losses: Vec<(u64, f64)>,
+    pub grad_norms: Vec<(u64, f64)>,
+    pub evals: Vec<(u64, String, f64)>,
+}
+
+impl TrainHistory {
+    pub fn record_loss(&mut self, step: u64, loss: f64, gnorm: f64) {
+        self.losses.push((step, loss));
+        self.grad_norms.push((step, gnorm));
+    }
+
+    pub fn record_eval(&mut self, step: u64, split: &str, ppl: f64) {
+        self.evals.push((step, split.to_string(), ppl));
+    }
+
+    pub fn loss_series(&self) -> Vec<f64> {
+        self.losses.iter().map(|(_, l)| *l).collect()
+    }
+
+    /// Mean loss over the last `n` recorded steps.
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|(_, l)| l).sum::<f64>() / tail.len() as f64
+    }
+
+    /// CSV rendering of the loss curve (results/ artifacts).
+    pub fn losses_csv(&self) -> String {
+        let mut s = String::from("step,loss,grad_norm\n");
+        for ((step, loss), (_, g)) in self.losses.iter().zip(&self.grad_norms) {
+            s.push_str(&format!("{step},{loss},{g}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.step(100);
+        t.step(100);
+        assert_eq!(t.steps, 2);
+        assert_eq!(t.tokens, 200);
+        assert!(t.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn history_tail() {
+        let mut h = TrainHistory::default();
+        for i in 0..10 {
+            h.record_loss(i, 10.0 - i as f64, 1.0);
+        }
+        assert!((h.tail_loss(2) - 1.5).abs() < 1e-9);
+        assert!(h.losses_csv().lines().count() == 11);
+    }
+}

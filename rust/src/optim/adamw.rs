@@ -1,0 +1,110 @@
+//! Host-side AdamW (paper Eq. 1) over flat f32 buffers.
+
+/// AdamW hyperparameters (paper §4.1 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWParams {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamWParams {
+    fn default() -> Self {
+        AdamWParams { beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
+    }
+}
+
+/// One parameter tensor's optimizer state.
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    pub hp: AdamWParams,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based step counter.
+    pub t: u64,
+}
+
+impl AdamW {
+    pub fn new(n: usize, hp: AdamWParams) -> Self {
+        AdamW { hp, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// In-place update of `w` with gradient `g` at learning rate `lr`
+    /// (paper Eq. 1, decoupled weight decay).
+    pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(w.len(), g.len());
+        assert_eq!(w.len(), self.m.len());
+        self.t += 1;
+        let t = self.t as f64;
+        let bc1 = 1.0 - (self.hp.beta1 as f64).powf(t);
+        let bc2 = 1.0 - (self.hp.beta2 as f64).powf(t);
+        let (b1, b2) = (self.hp.beta1, self.hp.beta2);
+        for i in 0..w.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = self.m[i] as f64 / bc1;
+            let vhat = self.v[i] as f64 / bc2;
+            let upd = mhat / (vhat.sqrt() + self.hp.eps as f64)
+                + self.hp.weight_decay as f64 * w[i] as f64;
+            w[i] -= (lr as f64 * upd) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn descends_a_quadratic() {
+        // minimize f(w) = |w - 3|^2 / 2; gradient = w - 3
+        let mut w = vec![0f32];
+        let mut opt = AdamW::new(1, AdamWParams { weight_decay: 0.0, ..Default::default() });
+        for _ in 0..2000 {
+            let g = vec![w[0] - 3.0];
+            opt.step(&mut w, &g, 1e-2);
+        }
+        assert!((w[0] - 3.0).abs() < 0.05, "{}", w[0]);
+    }
+
+    #[test]
+    fn update_magnitude_bounded_by_lr_times_bound() {
+        // Theorem 2 along a heavy-tailed gradient trajectory.
+        let mut rng = Rng::new(17);
+        let mut w = vec![0.5f32; 8];
+        let mut opt = AdamW::new(8, AdamWParams::default());
+        let lr = 1e-3f32;
+        for t in 1..=100u64 {
+            let g: Vec<f32> = (0..8)
+                .map(|_| (rng.normal() * 10f64.powf(rng.range_f64(-3.0, 3.0))) as f32)
+                .collect();
+            let before = w.clone();
+            opt.step(&mut w, &g, lr);
+            let bound = lr * super::super::bound::update_bound(t, 0.9, 0.95);
+            for i in 0..8 {
+                let delta = (w[i] - before[i]).abs();
+                let wd = lr * 0.1 * before[i].abs();
+                assert!(delta <= bound * 1.0001 + wd + 1e-7,
+                        "t={t} delta={delta} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_invariance_of_adam_direction() {
+        // paper §2.2: g and 256*g give the same (wd=0, eps->0) update.
+        let hp = AdamWParams { weight_decay: 0.0, eps: 1e-30, ..Default::default() };
+        let g1 = vec![0.3f32, -2.0, 5.0];
+        let g2: Vec<f32> = g1.iter().map(|x| x * 256.0).collect();
+        let mut wa = vec![1.0f32; 3];
+        let mut wb = vec![1.0f32; 3];
+        AdamW::new(3, hp).step(&mut wa, &g1, 1e-3);
+        AdamW::new(3, hp).step(&mut wb, &g2, 1e-3);
+        for (a, b) in wa.iter().zip(&wb) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

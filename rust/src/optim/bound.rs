@@ -1,0 +1,62 @@
+//! Theorem 2 (paper Eq. 8) — the bounded-update property automatic
+//! scaling is built on.
+
+/// Bound on `|Delta_t| / eta` at (1-based) step `t`:
+/// `max(1, (1-b1^t)/sqrt(1-b2^t))` collapsed per Eq. 8 (the ratio
+/// exceeds 1 only in the sparse-gradient corner case).
+pub fn update_bound(t: u64, beta1: f32, beta2: f32) -> f32 {
+    let t = t as f64;
+    let num = 1.0 - (beta1 as f64).powf(t);
+    let den = (1.0 - (beta2 as f64).powf(t)).sqrt();
+    if num > den {
+        (num / den) as f32
+    } else {
+        1.0
+    }
+}
+
+/// Eq. 10 generalized to a schedule: `max|W_t| <= max|W_0| + sum eta_i`.
+pub fn predicted_absmax(absmax0: f32, lr_sum: f32) -> f32 {
+    absmax0 + lr_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn late_steps_bound_is_one() {
+        assert_eq!(update_bound(10_000, 0.9, 0.95), 1.0);
+    }
+
+    #[test]
+    fn paper_defaults_stay_practically_at_eta() {
+        // With b1=0.9, b2=0.95 the ratio (1-b1^t)/sqrt(1-b2^t) is below
+        // 1 only for t <~ 8 and peaks around 1.10 near t~21 before
+        // decaying back to 1 — i.e. the paper's "|Delta_t| <= eta" holds
+        // up to a ~10% early-phase correction (which the warmup schedule
+        // and the /448 scale conversion absorb; a finding worth noting —
+        // see EXPERIMENTS.md).
+        for t in 1..=7 {
+            assert_eq!(update_bound(t, 0.9, 0.95), 1.0, "t={t}");
+        }
+        let peak = (1..2000).map(|t| update_bound(t, 0.9, 0.95)).fold(0f32, f32::max);
+        assert!(peak < 1.11, "peak {peak}");
+        assert!(update_bound(100_000, 0.9, 0.95) <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn adam_classic_betas_exceed_one_early() {
+        // beta2=0.999: den at t=1 is sqrt(0.001)=0.0316 < num 0.1
+        let b = update_bound(1, 0.9, 0.999);
+        assert!(b > 3.0 && b < 3.3, "{b}");
+        // decays back toward 1
+        assert!(update_bound(100, 0.9, 0.999) > 1.0);
+        assert_eq!(update_bound(100_000, 0.9, 0.999), 1.0);
+    }
+
+    #[test]
+    fn predicted_absmax_is_additive() {
+        assert_eq!(predicted_absmax(2.0, 0.5), 2.5);
+    }
+}

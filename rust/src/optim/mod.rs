@@ -1,0 +1,12 @@
+//! Host-side AdamW reference + the Theorem-2 bound machinery.
+//!
+//! The *production* optimizer runs inside the AOT `train_step` HLO (L2);
+//! this module is the verification substrate: property tests of the
+//! bounded-update theorem that automatic scaling rests on, and the
+//! host-side mirror used by unit tests and the distributed simulator.
+
+pub mod adamw;
+pub mod bound;
+
+pub use adamw::{AdamW, AdamWParams};
+pub use bound::{predicted_absmax, update_bound};

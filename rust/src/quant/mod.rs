@@ -1,0 +1,29 @@
+//! Rust-native quantizers mirroring the L1 kernels bit-for-bit
+//! (`python/compile/kernels/ref.py`): per-tensor (TE-style), per-group
+//! (COAT-style, along K) and the paper's two-level microscaling.
+//!
+//! These serve three roles: (1) offline SNR tooling for Table 7 / Fig 8
+//! on activations sampled from real training runs, (2) the FSDP
+//! simulator's payload compression, and (3) a cross-check target — the
+//! integration test `quant_cross_check` feeds identical inputs through
+//! these and through the AOT `quant_*` artifacts and asserts equality.
+
+pub mod pergroup;
+pub mod pertensor;
+pub mod snr;
+pub mod twolevel;
+
+pub use pergroup::PerGroupQuant;
+pub use pertensor::PerTensorQuant;
+pub use twolevel::TwoLevelQuant;
+
+use crate::formats::fp8::Fp8Format;
+
+/// Scale clamp matching `fp8.SCALE_EPS` on the Python side.
+pub const SCALE_EPS: f32 = 1e-12;
+
+/// JIT per-tensor scale: `max|x| / fp8_max` with the epsilon clamp —
+/// this is the max-reduction whose cost automatic scaling eliminates.
+pub fn jit_scale(xs: &[f32], fmt: &Fp8Format) -> f32 {
+    (crate::util::stats::absmax(xs) / fmt.max).max(SCALE_EPS)
+}

@@ -1,0 +1,123 @@
+//! Per-group FP8 quantization along the inner (K) dimension — the
+//! COAT / DeepSeek-V3 scheme the paper compares against.
+
+use crate::formats::fp8::Fp8Format;
+
+use super::SCALE_EPS;
+
+/// Per-group quantization of a row-major [rows, cols] tensor; one FP32
+/// scale per `group` consecutive elements of each row.
+#[derive(Debug, Clone)]
+pub struct PerGroupQuant {
+    pub q: Vec<f32>,
+    /// Row-major [rows, cols/group] scales.
+    pub scales: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    pub group: usize,
+}
+
+impl PerGroupQuant {
+    pub fn quantize(xs: &[f32], rows: usize, cols: usize, group: usize, fmt: &Fp8Format) -> Self {
+        let group = group.min(cols);
+        assert_eq!(xs.len(), rows * cols);
+        assert_eq!(cols % group, 0, "cols {cols} % group {group} != 0");
+        let g = cols / group;
+        let mut q = vec![0f32; xs.len()];
+        let mut scales = Vec::with_capacity(rows * g);
+        for r in 0..rows {
+            let row = &xs[r * cols..(r + 1) * cols];
+            for gi in 0..g {
+                let chunk = &row[gi * group..(gi + 1) * group];
+                let amax = chunk.iter().fold(0f32, |a, &x| a.max(x.abs()));
+                let s = (amax / fmt.max).max(SCALE_EPS);
+                scales.push(s);
+                for (j, &x) in chunk.iter().enumerate() {
+                    q[r * cols + gi * group + j] = fmt.round_to_grid(x / s);
+                }
+            }
+        }
+        PerGroupQuant { q, scales, rows, cols, group }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let g = self.cols / self.group;
+        let mut out = vec![0f32; self.q.len()];
+        for r in 0..self.rows {
+            for gi in 0..g {
+                let s = self.scales[r * g + gi];
+                for j in 0..self.group {
+                    let idx = r * self.cols + gi * self.group + j;
+                    out[idx] = self.q[idx] * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-element effective scale map.
+    pub fn effective_scales(&self) -> Vec<f32> {
+        let g = self.cols / self.group;
+        let mut out = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            for gi in 0..g {
+                out.extend(std::iter::repeat(self.scales[r * g + gi]).take(self.group));
+            }
+        }
+        out
+    }
+
+    /// Payload bytes if stored natively (1 B/elem + 4 B/group scale).
+    pub fn payload_bytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::E4M3;
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn group_scales_are_local_maxima() {
+        // rows of very different magnitude: each group scale tracks its row
+        let xs = vec![1.0f32, -2.0, 100.0, 50.0];
+        let q = PerGroupQuant::quantize(&xs, 2, 2, 2, &E4M3);
+        assert_eq!(q.scales, vec![2.0 / 448.0, 100.0 / 448.0]);
+    }
+
+    #[test]
+    fn dequant_beats_per_tensor_on_structured_rows(){
+        let mut rng = Rng::new(2);
+        let mut xs = rng.activation_like(16, 256, 2.0);
+        // roundtrip errors
+        let pg = PerGroupQuant::quantize(&xs, 16, 256, 128, &E4M3);
+        let dq_g = pg.dequantize();
+        let pt = super::super::PerTensorQuant::quantize(&xs, &E4M3);
+        let dq_t = pt.dequantize();
+        let rel = |dq: &[f32]| -> f64 {
+            xs.iter().zip(dq).filter(|(x, _)| x.abs() > 1e-20)
+                .map(|(x, d)| (((d - x) / x.abs()) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(rel(&dq_g) < rel(&dq_t));
+        xs.clear(); // silence unused-mut
+    }
+
+    #[test]
+    fn clamps_group_to_cols() {
+        let xs = vec![1.0f32; 8];
+        let q = PerGroupQuant::quantize(&xs, 2, 4, 128, &E4M3);
+        assert_eq!(q.group, 4);
+        assert_eq!(q.scales.len(), 2);
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let xs = vec![0.5f32; 256];
+        let q = PerGroupQuant::quantize(&xs, 2, 128, 128, &E4M3);
+        assert_eq!(q.payload_bytes(), 256 + 8);
+    }
+}

@@ -1,0 +1,85 @@
+//! Per-tensor FP8 quantization (Transformer-Engine style, paper §2.1).
+
+use crate::formats::fp8::Fp8Format;
+
+use super::{jit_scale, SCALE_EPS};
+
+/// Per-tensor quantization result: FP8-grid payload + one FP32 scale.
+#[derive(Debug, Clone)]
+pub struct PerTensorQuant {
+    /// Values on the FP8 grid (dequantized = q * scale).
+    pub q: Vec<f32>,
+    pub scale: f32,
+}
+
+impl PerTensorQuant {
+    /// Quantize with a JIT (max-reduction) scale.
+    pub fn quantize(xs: &[f32], fmt: &Fp8Format) -> Self {
+        Self::quantize_with_scale(xs, fmt, jit_scale(xs, fmt))
+    }
+
+    /// Quantize with an externally supplied scale (automatic scaling).
+    pub fn quantize_with_scale(xs: &[f32], fmt: &Fp8Format, scale: f32) -> Self {
+        let scale = scale.max(SCALE_EPS);
+        let q = xs.iter().map(|&x| fmt.round_to_grid(x / scale)).collect();
+        PerTensorQuant { q, scale }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.q.iter().map(|&q| q * self.scale).collect()
+    }
+
+    /// Per-element effective scale map (for the model-SNR metric).
+    pub fn effective_scales(&self, n: usize) -> Vec<f32> {
+        vec![self.scale; n]
+    }
+
+    /// Payload bytes if stored natively (1 B/elem + 4 B scale).
+    pub fn payload_bytes(&self) -> usize {
+        self.q.len() + 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::E4M3;
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn max_maps_to_fp8_max() {
+        let xs = vec![1.0f32, -7.0, 3.5];
+        let q = PerTensorQuant::quantize(&xs, &E4M3);
+        assert_eq!(q.scale, 7.0 / 448.0);
+        // the max element lands exactly on the top of the grid
+        assert_eq!(q.q[1], -448.0);
+    }
+
+    #[test]
+    fn dequant_error_bounded_by_relative_step() {
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.normal_f32() * 10.0).collect();
+        let q = PerTensorQuant::quantize(&xs, &E4M3);
+        let dq = q.dequantize();
+        let amax = crate::util::stats::absmax(&xs);
+        for (x, d) in xs.iter().zip(&dq) {
+            // worst-case absolute error: half a step at the top bucket
+            assert!((x - d).abs() <= amax / 448.0 * 16.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn injected_scale_used_verbatim() {
+        let q = PerTensorQuant::quantize_with_scale(&[1.0, 2.0], &E4M3, 0.5);
+        assert_eq!(q.scale, 0.5);
+        assert_eq!(q.q, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_tensor_is_stable() {
+        let q = PerTensorQuant::quantize(&[0.0; 8], &E4M3);
+        assert!(q.scale > 0.0);
+        assert!(q.dequantize().iter().all(|&x| x == 0.0));
+    }
+}

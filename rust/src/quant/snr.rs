@@ -1,0 +1,158 @@
+//! SNR analysis (paper Eq. 4 + Theorem 1) over the three quantization
+//! schemes — the engine behind Table 7 and Figure 8.
+//!
+//! Three metrics, per DESIGN.md §SNR-metrics:
+//! * `snr_db`          — empirical power-weighted SNR (paper Eq. 4)
+//! * `snr_model_db`    — uniform-noise-model SNR from effective scales
+//!                       (the metric the paper's Theorem-1 proof uses)
+//! * `snr_relative_db` — per-element relative-error SNR (equal weight)
+
+use crate::formats::fp8::{Fp8Format, E4M3};
+use crate::quant::{PerGroupQuant, PerTensorQuant, TwoLevelQuant};
+
+/// Empirical SNR in dB: 10 log10( E[x^2] / E[(dq-x)^2] ).
+pub fn snr_db(x: &[f32], dq: &[f32]) -> f64 {
+    assert_eq!(x.len(), dq.len());
+    let sig: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / x.len() as f64;
+    let noise: f64 = x
+        .iter()
+        .zip(dq)
+        .map(|(&a, &b)| ((b - a) as f64).powi(2))
+        .sum::<f64>()
+        / x.len() as f64;
+    10.0 * (sig / noise.max(1e-30)).log10()
+}
+
+/// Uniform-noise-model SNR (paper Eqs. 5-7): noise = E[s_eff^2] / 12.
+pub fn snr_model_db(x: &[f32], eff_scales: &[f32]) -> f64 {
+    assert_eq!(x.len(), eff_scales.len());
+    let sig: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / x.len() as f64;
+    let noise: f64 = eff_scales.iter().map(|&s| (s as f64).powi(2)).sum::<f64>()
+        / (12.0 * eff_scales.len() as f64);
+    10.0 * (sig / noise.max(1e-30)).log10()
+}
+
+/// Per-element relative-error SNR: -10 log10 E[((dq-x)/|x|)^2].
+pub fn snr_relative_db(x: &[f32], dq: &[f32]) -> f64 {
+    assert_eq!(x.len(), dq.len());
+    let mut acc = 0f64;
+    let mut n = 0usize;
+    for (&a, &b) in x.iter().zip(dq) {
+        if a.abs() > 1e-20 {
+            let r = ((b - a) / a.abs()) as f64;
+            acc += r * r;
+            n += 1;
+        }
+    }
+    -10.0 * (acc / n.max(1) as f64 + 1e-30).log10()
+}
+
+/// The three schemes' SNR under one metric, for one tensor.
+#[derive(Debug, Clone, Copy)]
+pub struct SchemeSnrs {
+    pub per_tensor: f64,
+    pub per_group: f64,
+    pub moss: f64,
+}
+
+/// Which SNR metric to evaluate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Paper Eq. 4 measured on real FP8 casts.
+    Empirical,
+    /// Paper Eqs. 5-7 uniform-noise model (used for Table 7).
+    Model,
+    /// Per-element relative error.
+    Relative,
+}
+
+/// Quantize `x` ([rows, cols], row-major) under all three schemes and
+/// report SNR under `metric`. `group`/`micro` default to the paper's
+/// 128/32 at call sites.
+pub fn scheme_snrs(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    group: usize,
+    micro: usize,
+    metric: Metric,
+    fmt: &Fp8Format,
+) -> SchemeSnrs {
+    let pt = PerTensorQuant::quantize(x, fmt);
+    let pg = PerGroupQuant::quantize(x, rows, cols, group, fmt);
+    let tl = TwoLevelQuant::quantize(x, rows, cols, micro, fmt);
+    match metric {
+        Metric::Empirical => SchemeSnrs {
+            per_tensor: snr_db(x, &pt.dequantize()),
+            per_group: snr_db(x, &pg.dequantize()),
+            moss: snr_db(x, &tl.dequantize()),
+        },
+        Metric::Model => SchemeSnrs {
+            per_tensor: snr_model_db(x, &pt.effective_scales(x.len())),
+            per_group: snr_model_db(x, &pg.effective_scales()),
+            moss: snr_model_db(x, &tl.effective_scales()),
+        },
+        Metric::Relative => SchemeSnrs {
+            per_tensor: snr_relative_db(x, &pt.dequantize()),
+            per_group: snr_relative_db(x, &pg.dequantize()),
+            moss: snr_relative_db(x, &tl.dequantize()),
+        },
+    }
+}
+
+/// Convenience: Table-7 style evaluation on E4M3 with paper group sizes.
+pub fn table7_snrs(x: &[f32], rows: usize, cols: usize, metric: Metric) -> SchemeSnrs {
+    scheme_snrs(x, rows, cols, crate::COAT_GROUP, crate::MICRO_GROUP, metric, &E4M3)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn theorem1_model_ordering_on_activation_like() {
+        // Property check over seeds: the paper's Theorem-1 ordering under
+        // the uniform-noise model on channel-structured tensors.
+        for seed in 0..20u64 {
+            let sigma = 1.0 + (seed % 3) as f64 * 0.75;
+            let xs = Rng::new(seed).activation_like(64, 512, sigma);
+            let s = table7_snrs(&xs, 64, 512, Metric::Model);
+            assert!(s.per_tensor <= s.per_group + 1e-9, "{seed}: {s:?}");
+            assert!(s.per_group <= s.moss + 1e-9, "{seed}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn relative_ordering_on_activation_like() {
+        for seed in 0..10u64 {
+            let xs = Rng::new(100 + seed).activation_like(64, 512, 2.0);
+            let s = table7_snrs(&xs, 64, 512, Metric::Relative);
+            assert!(s.per_tensor < s.per_group + 0.5, "{seed}: {s:?}");
+            assert!(s.per_group < s.moss + 0.5, "{seed}: {s:?}");
+            assert!(s.per_tensor < s.moss, "{seed}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn empirical_tensor_below_group() {
+        let xs = Rng::new(7).activation_like(64, 512, 2.0);
+        let s = table7_snrs(&xs, 64, 512, Metric::Empirical);
+        assert!(s.per_tensor < s.per_group, "{s:?}");
+    }
+
+    #[test]
+    fn snr_of_perfect_reconstruction_is_huge() {
+        let xs = vec![1.0f32, -2.0, 3.0];
+        assert!(snr_db(&xs, &xs) > 200.0);
+    }
+
+    #[test]
+    fn model_snr_matches_hand_computation() {
+        // x = [1,1], eff = [s,s]: SNR = 10 log10(12/s^2)
+        let got = snr_model_db(&[1.0, 1.0], &[0.1, 0.1]);
+        let want = 10.0 * (12.0 / 0.01f64).log10();
+        assert!((got - want).abs() < 1e-6); // f32 inputs widen to f64
+    }
+}

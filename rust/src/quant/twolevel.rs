@@ -1,0 +1,176 @@
+//! Two-level microscaling — the paper's §3.1 contribution.
+//!
+//! Level 1: one FP32 global scale `s = max_i s_i` for the whole tensor
+//! (paper Fig. 2: one scale per ~10K-element block; our tensors are the
+//! per-linear activations so the block is the tensor).
+//! Level 2: per-32-element E8M0 subscales `ss_i = ceil_pow2(s_i / s)`,
+//! carried as i8 exponents.
+//!
+//! Bit-compatible with `ref.quant_two_level` / the `quant_moss` artifact.
+
+use crate::formats::e8m0;
+use crate::formats::fp8::Fp8Format;
+
+use super::SCALE_EPS;
+
+/// Two-level quantization of a row-major [rows, cols] tensor.
+#[derive(Debug, Clone)]
+pub struct TwoLevelQuant {
+    /// FP8-grid payload.
+    pub q: Vec<f32>,
+    /// Level-1 global FP32 scale.
+    pub scale: f32,
+    /// Level-2 E8M0 exponents, row-major [rows, cols/micro].
+    pub ss_exp: Vec<i8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub micro: usize,
+}
+
+impl TwoLevelQuant {
+    pub fn quantize(xs: &[f32], rows: usize, cols: usize, micro: usize, fmt: &Fp8Format) -> Self {
+        assert_eq!(xs.len(), rows * cols);
+        assert_eq!(cols % micro, 0, "cols {cols} % micro {micro} != 0");
+        let g = cols / micro;
+        // Stage 1 (Eq. 2): fine-grained FP32 scales per micro-group.
+        let mut s_i = Vec::with_capacity(rows * g);
+        for r in 0..rows {
+            let row = &xs[r * cols..(r + 1) * cols];
+            for gi in 0..g {
+                let amax = row[gi * micro..(gi + 1) * micro]
+                    .iter()
+                    .fold(0f32, |a, &x| a.max(x.abs()));
+                s_i.push((amax / fmt.max).max(SCALE_EPS));
+            }
+        }
+        // Stage 2 (Eq. 3): global scale + E8M0 subscales.
+        let scale = s_i.iter().fold(0f32, |a, &x| a.max(x));
+        let ss_exp: Vec<i8> = s_i.iter().map(|&si| e8m0::encode_ceil(si / scale)).collect();
+        let mut q = vec![0f32; xs.len()];
+        for r in 0..rows {
+            for gi in 0..g {
+                let eff = scale * e8m0::decode(ss_exp[r * g + gi]);
+                for j in 0..micro {
+                    let idx = r * cols + gi * micro + j;
+                    q[idx] = fmt.round_to_grid(xs[idx] / eff);
+                }
+            }
+        }
+        TwoLevelQuant { q, scale, ss_exp, rows, cols, micro }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let g = self.cols / self.micro;
+        let mut out = vec![0f32; self.q.len()];
+        for r in 0..self.rows {
+            for gi in 0..g {
+                let eff = self.scale * e8m0::decode(self.ss_exp[r * g + gi]);
+                for j in 0..self.micro {
+                    let idx = r * self.cols + gi * self.micro + j;
+                    out[idx] = self.q[idx] * eff;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-element effective scale map (`s * 2^ss`), for the model SNR.
+    pub fn effective_scales(&self) -> Vec<f32> {
+        let g = self.cols / self.micro;
+        let mut out = Vec::with_capacity(self.q.len());
+        for r in 0..self.rows {
+            for gi in 0..g {
+                let eff = self.scale * e8m0::decode(self.ss_exp[r * g + gi]);
+                out.extend(std::iter::repeat(eff).take(self.micro));
+            }
+        }
+        out
+    }
+
+    /// Payload bytes if stored natively: 1 B/elem + 1 B/micro-group (E8M0)
+    /// + 4 B global scale. The metadata ratio vs per-group FP32 scales is
+    /// the paper's storage argument.
+    pub fn payload_bytes(&self) -> usize {
+        self.q.len() + self.ss_exp.len() + 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::E4M3;
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn sample(rows: usize, cols: usize, sigma: f64, seed: u64) -> Vec<f32> {
+        Rng::new(seed).activation_like(rows, cols, sigma)
+    }
+
+    #[test]
+    fn subscales_in_unit_interval() {
+        let xs = sample(16, 256, 2.0, 1);
+        let q = TwoLevelQuant::quantize(&xs, 16, 256, 32, &E4M3);
+        assert!(q.ss_exp.iter().all(|&e| e <= 0), "ss_i in (0,1] (paper §3.1)");
+    }
+
+    #[test]
+    fn payload_never_saturates_with_ceil() {
+        let xs = sample(32, 512, 2.5, 2);
+        let q = TwoLevelQuant::quantize(&xs, 32, 512, 32, &E4M3);
+        assert!(q.q.iter().all(|&v| v.abs() <= 448.0));
+        // and at least one micro-group max reaches the top half of the grid
+        assert!(q.q.iter().any(|&v| v.abs() >= 224.0));
+    }
+
+    #[test]
+    fn effective_scale_within_2x_of_exact() {
+        let xs = sample(8, 128, 1.5, 3);
+        let q = TwoLevelQuant::quantize(&xs, 8, 128, 32, &E4M3);
+        let eff = q.effective_scales();
+        for r in 0..8 {
+            for gi in 0..4 {
+                let amax = xs[r * 128 + gi * 32..r * 128 + (gi + 1) * 32]
+                    .iter()
+                    .fold(0f32, |a, &x| a.max(x.abs()));
+                let exact = (amax / 448.0).max(SCALE_EPS);
+                let e = eff[r * 128 + gi * 32];
+                assert!(e >= exact * (1.0 - 1e-6) && e <= 2.0 * exact * (1.0 + 1e-6),
+                        "eff {e} exact {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_rescues_small_groups() {
+        // tensor with one huge row and one tiny row: per-tensor flushes
+        // the tiny row to zero, two-level must preserve it
+        let mut xs = vec![0f32; 2 * 64];
+        for j in 0..64 {
+            xs[j] = 300.0 + j as f32;
+            xs[64 + j] = 1e-4 * (1.0 + j as f32 / 64.0);
+        }
+        let tl = TwoLevelQuant::quantize(&xs, 2, 64, 32, &E4M3);
+        let dq = tl.dequantize();
+        assert!(dq[64..].iter().all(|&v| v != 0.0), "small row flushed");
+        let pt = super::super::PerTensorQuant::quantize(&xs, &E4M3);
+        let dqt = pt.dequantize();
+        assert!(dqt[64..].iter().all(|&v| v == 0.0), "per-tensor should flush");
+    }
+
+    #[test]
+    fn metadata_overhead_is_one_thirtysecond() {
+        let xs = vec![1.0f32; 128 * 256];
+        let q = TwoLevelQuant::quantize(&xs, 128, 256, 32, &E4M3);
+        let meta = q.payload_bytes() - q.q.len();
+        assert_eq!(meta, 128 * 8 + 4); // 1 byte per 32 elems + global scale
+    }
+
+    #[test]
+    fn deterministic() {
+        let xs = sample(4, 64, 1.0, 9);
+        let a = TwoLevelQuant::quantize(&xs, 4, 64, 32, &E4M3);
+        let b = TwoLevelQuant::quantize(&xs, 4, 64, 32, &E4M3);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.ss_exp, b.ss_exp);
+    }
+}

@@ -1,0 +1,49 @@
+//! `repro comm-table`: Table 5 — memory footprint and communication
+//! efficiency across BF16 / COAT / MOSS, from the distsim models.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::distsim::memory::{activation_memory_gb, MemoryScheme, ModelShape};
+use crate::distsim::netmodel::{grad_bytes_per_step, NetModel};
+use crate::distsim::overlap::table5_overlap;
+use crate::util::table::{f, Table};
+
+const LLAMA7B_PARAMS: f64 = 6.74e9;
+
+pub fn table5() -> Table {
+    let shape = ModelShape::llama7b_finetune();
+    let net = NetModel::h200_nvlink();
+    let mut t = Table::new(
+        "Table 5 — Memory & communication (simulated 8xH200, LLaMA-2-7B ft)",
+        &[
+            "scheme",
+            "peak act (GB)",
+            "allreduce vol (GB/step)",
+            "saving",
+            "allreduce latency (ms)",
+            "overlap %",
+        ],
+    );
+    let bf16_mem = activation_memory_gb(&shape, MemoryScheme::Bf16);
+    for scheme in [MemoryScheme::Bf16, MemoryScheme::Coat, MemoryScheme::Moss] {
+        let mem = activation_memory_gb(&shape, scheme);
+        let bytes = grad_bytes_per_step(LLAMA7B_PARAMS, scheme);
+        let vol = bytes / 1e9;
+        let lat = net.allreduce_secs(bytes) * 1e3;
+        let (ov, ..) = table5_overlap(scheme, LLAMA7B_PARAMS, net);
+        t.row(vec![
+            scheme.name().into(),
+            f(mem, 1),
+            f(vol, 2),
+            format!("{:.2}x", bf16_mem / mem),
+            f(lat, 1),
+            f(ov * 100.0, 1),
+        ]);
+    }
+    t
+}
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    super::emit(args, "table5_memory_comm", &table5())
+}

@@ -1,0 +1,32 @@
+//! `repro gemm-table`: Table 6 + Figure 1 from the H800 cost model.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::gemm_sim::machine::MachineModel;
+use crate::gemm_sim::tables::{fig1, table2_throughputs, table6};
+use crate::util::table::{f, Table};
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    let m = MachineModel::h800();
+    super::emit(args, "table6_gemm_runtime", &table6(&m))?;
+    super::emit(args, "fig1_gemm_comparison", &fig1(&m))?;
+
+    // Table-2 throughput projection (the modeled H800 half; measured CPU
+    // numbers come from report::training).
+    let mut t = Table::new(
+        "Table 2 (throughput projection) — OLMo-7B on 8x(modeled) H800",
+        &["scheme", "tokens/s", "vs BF16"],
+    );
+    let tps = table2_throughputs(&m);
+    let bf16 = tps.iter().find(|(s, _)| s.name() == "BF16").unwrap().1;
+    for (scheme, tp) in &tps {
+        t.row(vec![
+            scheme.name().into(),
+            f(*tp, 0),
+            format!("{:+.1}%", (tp / bf16 - 1.0) * 100.0),
+        ]);
+    }
+    super::emit(args, "table2_throughput_projection", &t)?;
+    Ok(())
+}

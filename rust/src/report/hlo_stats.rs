@@ -1,0 +1,107 @@
+//! `repro hlo-stats`: artifact inventory + HLO op statistics — the L2
+//! structural profiling used in the §Perf pass (checks that the lowered
+//! graphs contain the expected op mix: one dot per quantized matmul per
+//! direction, no duplicated quantization subgraphs after CSE).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::runtime::artifact::Manifest;
+use crate::util::table::Table;
+
+/// Count HLO instructions by opcode in one artifact file.
+pub fn op_histogram(path: &Path) -> Result<BTreeMap<String, usize>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut h: BTreeMap<String, usize> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim_start();
+        // instruction lines look like: `%name = type[
+        // shape]{layout} opcode(args...)`
+        let Some(eq) = line.find(" = ") else { continue };
+        let rest = &line[eq + 3..];
+        // skip the type/shape to the opcode token
+        let Some(sp) = rest.find(' ') else { continue };
+        let op = rest[sp + 1..].split('(').next().unwrap_or("").trim();
+        if op.is_empty() || !op.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+            continue;
+        }
+        *h.entry(op.to_string()).or_default() += 1;
+    }
+    Ok(h)
+}
+
+/// Summary row per program: file size, instruction count, dots, converts,
+/// while-loops (pallas grids), custom-calls (should be zero on CPU).
+pub fn inventory(man: &Manifest) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("HLO inventory — artifacts/{}", man.config_name),
+        &["program", "KB", "instrs", "dot", "convert", "while", "custom-call"],
+    );
+    for (name, spec) in &man.programs {
+        let path = man.dir.join(&spec.file);
+        let kb = std::fs::metadata(&path)?.len() / 1024;
+        let h = op_histogram(&path)?;
+        let total: usize = h.values().sum();
+        let g = |k: &str| h.get(k).copied().unwrap_or(0).to_string();
+        t.row(vec![
+            name.clone(),
+            kb.to_string(),
+            total.to_string(),
+            g("dot"),
+            g("convert"),
+            g("while"),
+            g("custom-call"),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"))
+        .join(args.get_or("config", "tiny"));
+    let man = Manifest::load(&dir)?;
+    super::emit(args, &format!("hlo_stats_{}", man.config_name), &inventory(&man)?)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_parses_hlo_syntax() {
+        let tmp = std::env::temp_dir().join("moss_hlo_stats_test.txt");
+        std::fs::write(
+            &tmp,
+            "HloModule m\nENTRY e {\n  %a = f32[2,2]{1,0} parameter(0)\n  \
+             %d = f32[2,2]{1,0} dot(%a, %a), lhs_contracting_dims={1}\n  \
+             %c = f8e4m3fn[2,2]{1,0} convert(%d)\n}\n",
+        )
+        .unwrap();
+        let h = op_histogram(&tmp).unwrap();
+        assert_eq!(h.get("dot"), Some(&1));
+        assert_eq!(h.get("convert"), Some(&1));
+        assert_eq!(h.get("parameter"), Some(&1));
+        let _ = std::fs::remove_file(tmp);
+    }
+
+    #[test]
+    fn real_artifacts_have_no_custom_calls() {
+        let dir = std::path::Path::new("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        for (name, spec) in &man.programs {
+            let h = op_histogram(&man.dir.join(&spec.file)).unwrap();
+            assert_eq!(
+                h.get("custom-call"),
+                None,
+                "{name} contains a custom-call (Mosaic leak? must lower interpret=True)"
+            );
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Report generators: every table and figure of the paper's evaluation,
+//! regenerated from this framework's own runs, written as ASCII tables +
+//! CSV under `results/`.
+
+pub mod comm;
+pub mod gemm;
+pub mod hlo_stats;
+pub mod scaling;
+pub mod snr;
+pub mod training;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+
+/// Output directory for generated reports.
+pub fn results_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.get_or("results", "results"))
+}
+
+/// Write a rendered table (ASCII + CSV) into results/.
+pub fn emit(args: &Args, name: &str, table: &crate::util::table::Table) -> Result<()> {
+    let dir = results_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), table.render())?;
+    std::fs::write(dir.join(format!("{name}.csv")), table.to_csv())?;
+    print!("{}", table.render());
+    Ok(())
+}
+
+/// Write free-form text (figures) into results/.
+pub fn emit_text(args: &Args, name: &str, text: &str) -> Result<()> {
+    let dir = results_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), text)?;
+    print!("{text}");
+    Ok(())
+}
+
+/// `repro report [--all | --fig1 --tab6 ...]` — regenerate everything
+/// that does not need a long training run; training-dependent reports
+/// live in `report::training` and the benches.
+pub fn run_all(args: &Args) -> Result<()> {
+    let all = args.has("all") || args.switches.is_empty();
+    if all || args.has("fig1") || args.has("tab6") {
+        gemm::run_cli(args)?;
+    }
+    if all || args.has("tab5") {
+        comm::run_cli(args)?;
+    }
+    if all || args.has("tab7") || args.has("fig8") {
+        snr::run_cli(args)?;
+    }
+    if all || args.has("fig4") {
+        scaling::run_cli(args)?;
+    }
+    if all || args.has("fig5") || args.has("tab2") {
+        training::run_pretrain_report(args)?;
+    }
+    if args.has("tab3") || args.has("tab11") {
+        training::run_finetune_report(args)?;
+    }
+    if args.has("tab4") {
+        training::run_table4_report(args)?;
+    }
+    if args.has("fig7") {
+        training::run_longrun_report(args)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! `repro scale-sim`: Figure 4 — automatic vs JIT scale trajectories,
+//! plus Table 1 (scale-computation time vs tensor size) measured on this
+//! host's real max-reduction.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::optim::adamw::{AdamW, AdamWParams};
+use crate::scaling::{AutoScaler, JitScaler, ScalingStrategy};
+use crate::util::plot::multi_line_plot;
+use crate::util::rng::Rng;
+use crate::util::stats::absmax;
+use crate::util::table::{f, Table};
+
+/// Host-side Fig-4 simulation: run AdamW on a real weight vector with
+/// heavy-tailed gradients; record the automatic-scaling prediction vs
+/// the true JIT scale each `sample_every` steps.
+pub fn fig4_trajectories(
+    steps: u64,
+    interval: u64,
+    lr: f32,
+    seed: u64,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    let n = 4096;
+    let mut rng = Rng::new(seed);
+    let mut w: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.05).collect();
+    let mut opt = AdamW::new(n, AdamWParams::default());
+    let mut auto = AutoScaler::new(interval);
+    let mut jit = JitScaler::new();
+    let mut pred_series = Vec::new();
+    let mut jit_series = Vec::new();
+    let mut violations = 0u64;
+    for t in 1..=steps {
+        let scales = {
+            let wref = &w;
+            let mut src = || Ok(vec![absmax(wref)]);
+            auto.scales(t, lr, &mut src).unwrap()
+        };
+        let jit_scale = {
+            let wref = &w;
+            let mut src = || Ok(vec![absmax(wref)]);
+            jit.scales(t, lr, &mut src).unwrap()[0]
+        };
+        pred_series.push(scales[0] as f64);
+        jit_series.push(jit_scale as f64);
+        if scales[0] < jit_scale * (1.0 - 1e-6) {
+            violations += 1;
+        }
+        let g: Vec<f32> = (0..n)
+            .map(|_| (rng.normal() * 10f64.powf(rng.range_f64(-2.0, 2.0))) as f32)
+            .collect();
+        opt.step(&mut w, &g, lr);
+    }
+    (pred_series, jit_series, violations as f64 / steps as f64)
+}
+
+/// Table 1: time to compute per-tensor scaling factors, JIT (real
+/// max-reduction over the tensor) vs automatic (O(1) update), on this
+/// host. Absolute times differ from the paper's H800 (HBM vs DDR) but
+/// the asymmetry — O(N) memory-bound vs O(1) — is the reproduced claim.
+pub fn table1() -> Table {
+    let sizes: [(usize, usize); 4] =
+        [(11008, 16384), (11008, 8192), (4096, 12288), (4096, 4096)];
+    let mut t = Table::new(
+        "Table 1 — Scale-factor computation time (this host)",
+        &["tensor", "JIT scaling (ms)", "automatic scaling (ms)", "ratio"],
+    );
+    let mut rng = Rng::new(3);
+    for (r, c) in sizes {
+        let data: Vec<f32> = (0..r * c).map(|_| rng.normal_f32()).collect();
+        // JIT: full max-reduction
+        let reps = 5;
+        let t0 = Instant::now();
+        let mut acc = 0f32;
+        for _ in 0..reps {
+            acc = acc.max(absmax(std::hint::black_box(&data)));
+        }
+        let jit_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        std::hint::black_box(acc);
+        // automatic: s += lr/448 per linear (O(1))
+        let mut s = acc / 448.0;
+        let t1 = Instant::now();
+        let inner = 1000;
+        for _ in 0..reps * inner {
+            s = std::hint::black_box(s + 2e-4 / 448.0);
+        }
+        let auto_ms = t1.elapsed().as_secs_f64() * 1e3 / (reps * inner) as f64;
+        t.row(vec![
+            format!("{r} x {c}"),
+            f(jit_ms, 3),
+            format!("{auto_ms:.6}"),
+            format!("{:.0}x", jit_ms / auto_ms.max(1e-9)),
+        ]);
+    }
+    t
+}
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    let steps = args.get_u64("steps", 2000)?;
+    let interval = args.get_u64("interval", 500)?;
+    let (pred, jit, viol) = fig4_trajectories(steps, interval, 1e-3, 42);
+    let plot = multi_line_plot(
+        &format!("Figure 4 — scale trajectory (interval={interval}, violations={:.2}%)", viol * 100.0),
+        &[("automatic (predicted)", &pred), ("jit (true max/448)", &jit)],
+        72,
+        16,
+    );
+    super::emit_text(args, "fig4_scale_trajectory", &plot)?;
+    super::emit(args, "table1_scaling_time", &table1())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_dominance() {
+        let (pred, jit, viol) = fig4_trajectories(400, 100, 1e-3, 1);
+        assert_eq!(pred.len(), 400);
+        assert_eq!(viol, 0.0, "predicted scale dipped below JIT");
+        // curves stay close (paper: "remain relatively close")
+        let last_ratio = pred.last().unwrap() / jit.last().unwrap();
+        assert!(last_ratio < 3.0, "{last_ratio}");
+    }
+}

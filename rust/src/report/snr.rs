@@ -1,0 +1,155 @@
+//! `repro snr`: Table 7 (SNR per layer/scheme, early vs late) and the
+//! Figure-8 throughput-vs-fidelity Pareto view.
+//!
+//! Two data sources:
+//! * synthetic activation-like tensors (always available), and
+//! * real probes sampled from a short fine-tuning run when artifacts are
+//!   present (`--probe` flag; used by the full report).
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::gemm_sim::machine::MachineModel;
+use crate::gemm_sim::schedule::{kernel_cost, GemmShape, Scheme};
+use crate::quant::snr::{table7_snrs, Metric, SchemeSnrs};
+use crate::util::rng::Rng;
+use crate::util::stats::geomean;
+use crate::util::table::{f, Table};
+
+/// Layer flavours the paper samples (Table 7 rows) with the channel-
+/// structure spread each tends to exhibit.
+const LAYERS: [(&str, f64); 3] = [
+    ("Attention Output", 1.8),
+    ("FFN Intermediate", 2.2),
+    ("LayerNorm Input", 1.5),
+];
+
+fn snrs_for(rng: &mut Rng, sigma: f64, rows: usize, cols: usize, metric: Metric) -> SchemeSnrs {
+    let x = rng.activation_like(rows, cols, sigma);
+    table7_snrs(&x, rows, cols, metric)
+}
+
+/// Table 7 on synthetic activation-like tensors; `late` shifts the
+/// channel spread up slightly (activations grow heavier-tailed as
+/// training progresses — the paper's early/late split).
+pub fn table7(metric: Metric, seed: u64) -> Table {
+    let metric_name = match metric {
+        Metric::Model => "uniform-noise model (paper Eqs. 5-7)",
+        Metric::Empirical => "empirical power SNR (paper Eq. 4)",
+        Metric::Relative => "per-element relative SNR",
+    };
+    let mut t = Table::new(
+        &format!("Table 7 — SNR (dB), {metric_name}"),
+        &["layer", "PT early", "PT late", "PG early", "PG late", "MOSS early", "MOSS late"],
+    );
+    let mut cols = [Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+    for (i, (name, sigma)) in LAYERS.iter().enumerate() {
+        let mut rng = Rng::new(seed ^ (i as u64 * 7919));
+        let early = snrs_for(&mut rng, *sigma, 256, 1024, metric);
+        let late = snrs_for(&mut rng, *sigma * 1.2, 256, 1024, metric);
+        let vals = [
+            early.per_tensor,
+            late.per_tensor,
+            early.per_group,
+            late.per_group,
+            early.moss,
+            late.moss,
+        ];
+        for (c, v) in cols.iter_mut().zip(vals) {
+            c.push(v);
+        }
+        let mut row = vec![name.to_string()];
+        row.extend(vals.iter().map(|v| f(*v, 1)));
+        t.row(row);
+    }
+    let mut row = vec!["Geometric Mean".to_string()];
+    row.extend(cols.iter().map(|c| f(geomean(c), 1)));
+    t.row(row);
+    t
+}
+
+/// Figure 8: throughput (tokens/s projection) vs fidelity (model SNR) —
+/// the Pareto view combining Table 6 and Table 7.
+pub fn fig8(seed: u64) -> Table {
+    let m = MachineModel::h800();
+    let shape = GemmShape::new(4096, 4096, 8192);
+    let mut rng = Rng::new(seed);
+    let x = rng.activation_like(256, 1024, 2.0);
+    let snrs = table7_snrs(&x, 256, 1024, Metric::Model);
+    let thpt = |s: Scheme| shape.flops() / kernel_cost(&m, s, shape).total_secs / 1e12;
+    let mut t = Table::new(
+        "Figure 8 — Throughput vs quantization fidelity (Pareto view)",
+        &["scheme", "eff. TFLOPS (4096x4096x8192)", "SNR dB (model)"],
+    );
+    t.row(vec!["BF16 (per-tensor exact)".into(), f(thpt(Scheme::Bf16), 0), "inf".into()]);
+    t.row(vec!["TE / per-tensor".into(), f(thpt(Scheme::TE), 0), f(snrs.per_tensor, 1)]);
+    t.row(vec!["COAT / per-group".into(), f(thpt(Scheme::Coat), 0), f(snrs.per_group, 1)]);
+    t.row(vec!["MOSS / two-level".into(), f(thpt(Scheme::Moss), 0), f(snrs.moss, 1)]);
+    t
+}
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 7)?;
+    super::emit(args, "table7_snr_model", &table7(Metric::Model, seed))?;
+    super::emit(args, "table7_snr_relative", &table7(Metric::Relative, seed))?;
+    super::emit(args, "table7_snr_empirical", &table7(Metric::Empirical, seed))?;
+    super::emit(args, "fig8_pareto", &fig8(seed))?;
+    Ok(())
+}
+
+/// Table 7 on REAL probed activations from a training run.
+pub fn table7_from_probes(
+    probes: &crate::coordinator::probe::ProbeStore,
+    metric: Metric,
+) -> Option<Table> {
+    let (early, late) = probes.early_late();
+    if early.is_empty() || late.is_empty() {
+        return None;
+    }
+    let mut t = Table::new(
+        "Table 7 (real probes) — SNR (dB)",
+        &["layer", "PT early", "PT late", "PG early", "PG late", "MOSS early", "MOSS late"],
+    );
+    let eval = |samples: &[&crate::coordinator::probe::ProbeSample],
+                which: usize|
+     -> SchemeSnrs {
+        // concatenate a few samples' tensors
+        let mut acc = SchemeSnrs { per_tensor: 0.0, per_group: 0.0, moss: 0.0 };
+        let mut n = 0f64;
+        for s in samples.iter().take(4) {
+            let (data, cols): (&[f32], usize) = match which {
+                0 => (&s.ln_in, s.dim),
+                1 => (&s.attn_out, s.dim),
+                _ => (&s.ffn_mid, s.ffn),
+            };
+            let rows = data.len() / cols;
+            let r = table7_snrs(data, rows, cols, metric);
+            acc.per_tensor += r.per_tensor;
+            acc.per_group += r.per_group;
+            acc.moss += r.moss;
+            n += 1.0;
+        }
+        SchemeSnrs {
+            per_tensor: acc.per_tensor / n,
+            per_group: acc.per_group / n,
+            moss: acc.moss / n,
+        }
+    };
+    for (i, name) in ["LayerNorm Input", "Attention Output", "FFN Intermediate"]
+        .iter()
+        .enumerate()
+    {
+        let e = eval(&early, i);
+        let l = eval(&late, i);
+        t.row(vec![
+            name.to_string(),
+            f(e.per_tensor, 1),
+            f(l.per_tensor, 1),
+            f(e.per_group, 1),
+            f(l.per_group, 1),
+            f(e.moss, 1),
+            f(l.moss, 1),
+        ]);
+    }
+    Some(t)
+}

@@ -1,0 +1,251 @@
+//! Artifact manifest: the L2->L3 calling convention.
+//!
+//! `manifest.json` (written by `python/compile/aot.py`) records, for each
+//! lowered program, the exact flattened order / dtype / shape of inputs
+//! and outputs plus the model and optimizer hyperparameters. The runtime
+//! trusts this file instead of re-deriving JAX pytree flattening rules.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of a program input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            "u32" => DType::U32,
+            _ => bail!("unsupported dtype {s:?} in manifest"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// One input or output tensor spec.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size_bytes()
+    }
+}
+
+/// One lowered program's IO contract.
+#[derive(Debug, Clone)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ProgramSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("program {} has no input {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("program {} has no output {name:?}", self.name))
+    }
+}
+
+/// Model dimensions recorded by the AOT pipeline (artifact config).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub dim: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub micro: usize,
+    pub group: usize,
+    pub param_count: usize,
+    pub probe_layer: usize,
+}
+
+/// AdamW hyperparameters baked into the train-step programs.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWDims {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+}
+
+/// Parsed manifest for one artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_name: String,
+    pub model: ModelDims,
+    pub adamw: AdamWDims,
+    pub param_names: Vec<String>,
+    pub linear_names: Vec<String>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+
+        let model = j.expect("model")?;
+        let usz = |k: &str| -> Result<usize> { model.expect(k)?.as_usize() };
+        let model_dims = ModelDims {
+            vocab: usz("vocab")?,
+            dim: usz("dim")?,
+            layers: usz("layers")?,
+            heads: usz("heads")?,
+            ffn: usz("ffn")?,
+            seq: usz("seq")?,
+            batch: usz("batch")?,
+            micro: usz("micro")?,
+            group: usz("group")?,
+            param_count: usz("param_count")?,
+            probe_layer: usz("probe_layer")?,
+        };
+        let aw = j.expect("adamw")?;
+        let adamw = AdamWDims {
+            beta1: aw.expect("beta1")?.as_f64()?,
+            beta2: aw.expect("beta2")?.as_f64()?,
+            weight_decay: aw.expect("weight_decay")?.as_f64()?,
+            grad_clip: aw.expect("grad_clip")?.as_f64()?,
+        };
+
+        let parse_names = |key: &str| -> Result<Vec<String>> {
+            j.expect(key)?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect()
+        };
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in j.expect("programs")?.as_obj()? {
+            let iospec = |key: &str| -> Result<Vec<IoSpec>> {
+                p.expect(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io.expect("name")?.as_str()?.to_string(),
+                            dtype: DType::parse(io.expect("dtype")?.as_str()?)?,
+                            shape: io
+                                .expect("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<_>>()?,
+                        })
+                    })
+                    .collect()
+            };
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name: name.clone(),
+                    file: p.expect("file")?.as_str()?.to_string(),
+                    inputs: iospec("inputs")?,
+                    outputs: iospec("outputs")?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config_name: j.expect("config_name")?.as_str()?.to_string(),
+            model: model_dims,
+            adamw,
+            param_names: parse_names("param_names")?,
+            linear_names: parse_names("linear_names")?,
+            programs,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact dir {:?} has no program {name:?}", self.dir))
+    }
+
+    /// Number of quantized linears = layers x linear kinds (w_scales size).
+    pub fn n_linears(&self) -> usize {
+        self.model.layers * self.linear_names.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::parse("f32").unwrap().size_bytes(), 4);
+        assert_eq!(DType::parse("i8").unwrap().size_bytes(), 1);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn iospec_accounting() {
+        let s = IoSpec { name: "x".into(), dtype: DType::F32, shape: vec![4, 8] };
+        assert_eq!(s.elems(), 32);
+        assert_eq!(s.bytes(), 128);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-style: exercises the full parse against the tiny
+        // artifacts when they exist (make artifacts).
+        let dir = std::path::Path::new("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.config_name, "tiny");
+        assert_eq!(m.param_names.len(), 9);
+        assert_eq!(m.linear_names.len(), 4);
+        let ts = m.program("train_step_moss").unwrap();
+        assert_eq!(ts.inputs.len(), 31);
+        assert_eq!(ts.outputs.len(), 29);
+        assert_eq!(ts.inputs[27].name, "tokens");
+        assert_eq!(ts.inputs[27].dtype, DType::I32);
+    }
+}

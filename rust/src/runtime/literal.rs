@@ -1,0 +1,125 @@
+//! Host <-> XLA literal marshalling helpers.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::artifact::{DType, IoSpec};
+
+fn as_bytes<T>(v: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Build an f32 literal of `shape` from row-major data.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, as_bytes(data))?)
+}
+
+/// Build an i32 literal of `shape` from row-major data.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, as_bytes(data))?)
+}
+
+/// Build an i8 literal of `shape` (E8M0 exponents).
+pub fn lit_i8(shape: &[usize], data: &[i8]) -> Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S8, shape, as_bytes(data))?)
+}
+
+/// Scalar literals (rank-0).
+pub fn lit_scalar_f32(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Zero-filled literal matching `spec` (optimizer-state init).
+pub fn lit_zeros(spec: &IoSpec) -> Result<Literal> {
+    let ty = element_type(spec.dtype);
+    Ok(Literal::create_from_shape(ty.primitive_type(), &spec.shape))
+}
+
+pub fn element_type(dt: DType) -> ElementType {
+    match dt {
+        DType::F32 => ElementType::F32,
+        DType::I32 => ElementType::S32,
+        DType::I8 => ElementType::S8,
+        DType::U32 => ElementType::U32,
+    }
+}
+
+/// Download a literal's contents as f32 (must be an F32 literal).
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+pub fn to_i8(lit: &Literal) -> Result<Vec<i8>> {
+    Ok(lit.to_vec::<i8>()?)
+}
+
+/// First element of a rank-0/any f32 literal (loss/gnorm outputs).
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Validate a literal against a spec (dtype + element count).
+pub fn check_matches(lit: &Literal, spec: &IoSpec) -> Result<()> {
+    let n = lit.element_count();
+    if n != spec.elems() {
+        bail!("literal for {:?} has {} elements, spec wants {}", spec.name, n, spec.elems());
+    }
+    let ty = lit.ty()?;
+    if ty != element_type(spec.dtype) {
+        bail!("literal for {:?} has type {:?}, spec wants {:?}", spec.name, ty, spec.dtype);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0];
+        let lit = lit_f32(&[2, 2], &data).unwrap();
+        assert_eq!(to_f32(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_and_i8_roundtrip() {
+        let ints = vec![1i32, -7, 42];
+        assert_eq!(to_i32(&lit_i32(&[3], &ints).unwrap()).unwrap(), ints);
+        let bytes = vec![-3i8, 0, 7];
+        assert_eq!(to_i8(&lit_i8(&[3], &bytes).unwrap()).unwrap(), bytes);
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let spec = IoSpec { name: "m".into(), dtype: DType::F32, shape: vec![3, 5] };
+        let z = lit_zeros(&spec).unwrap();
+        assert_eq!(to_f32(&z).unwrap(), vec![0.0; 15]);
+        check_matches(&z, &spec).unwrap();
+    }
+
+    #[test]
+    fn check_rejects_mismatch() {
+        let spec = IoSpec { name: "x".into(), dtype: DType::F32, shape: vec![4] };
+        let lit = lit_i32(&[4], &[0, 1, 2, 3]).unwrap();
+        assert!(check_matches(&lit, &spec).is_err());
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(scalar_f32(&lit_scalar_f32(2.5)).unwrap(), 2.5);
+        assert_eq!(lit_scalar_i32(7).get_first_element::<i32>().unwrap(), 7);
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/<config>/*.hlo.txt`
+//! + `manifest.json`) and executes them on the PJRT CPU client. This is
+//! the only boundary between the Rust coordinator and the JAX/Pallas
+//! compute stack — and Python is never involved at run time.
+
+pub mod artifact;
+pub mod literal;
+pub mod program;
+
+pub use artifact::{DType, IoSpec, Manifest, ModelDims, ProgramSpec};
+pub use program::{Program, Runtime};

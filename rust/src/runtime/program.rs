@@ -1,0 +1,307 @@
+//! Program loading and execution on the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::artifact::{Manifest, ProgramSpec};
+use super::literal::check_matches;
+
+/// A compiled artifact program bound to its IO contract.
+pub struct Program {
+    pub spec: ProgramSpec,
+    exe: PjRtLoadedExecutable,
+    /// Keep-mask over manifest inputs: XLA dead-code-eliminates entry
+    /// parameters a mode does not consume (e.g. `w_scales` in the bf16
+    /// train step); this mask — derived from the HLO text's
+    /// `entry_computation_layout` — says which manifest inputs survive.
+    pub keep: Vec<bool>,
+    /// Cumulative execution stats (hot-path profiling, §Perf).
+    pub stats: Mutex<ExecStats>,
+}
+
+/// Parse the entry parameter type list from HLO text, e.g.
+/// `entry_computation_layout={(f32[2,64]{1,0}, s32[])->(...)}` into
+/// `[("f32", [2, 64]), ("s32", [])]`.
+pub(crate) fn parse_entry_params(hlo_text: &str) -> Result<Vec<(String, Vec<usize>)>> {
+    let start = hlo_text
+        .find("entry_computation_layout={(")
+        .context("no entry_computation_layout in HLO")?
+        + "entry_computation_layout={(".len();
+    let rest = &hlo_text[start..];
+    let end = rest.find(")->").context("malformed entry_computation_layout")?;
+    let list = &rest[..end];
+    let mut out = Vec::new();
+    for tok in list.split(", ") {
+        // strip `/*index=N*/` annotations the HLO printer inserts
+        let mut tok = tok.trim();
+        while let Some(cs) = tok.find("/*") {
+            let ce = tok[cs..].find("*/").context("unclosed comment")? + cs + 2;
+            if cs == 0 {
+                tok = tok[ce..].trim_start();
+            } else {
+                tok = &tok[..cs];
+            }
+        }
+        if tok.is_empty() {
+            continue;
+        }
+        let (dtype, dims) = match tok.find('[') {
+            Some(b) => {
+                let close = tok[b..].find(']').context("unclosed dims")? + b;
+                let dims: Vec<usize> = tok[b + 1..close]
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<std::result::Result<_, _>>()?;
+                (tok[..b].to_string(), dims)
+            }
+            None => (tok.to_string(), Vec::new()),
+        };
+        out.push((dtype, dims));
+    }
+    Ok(out)
+}
+
+fn dtype_hlo_name(dt: crate::runtime::artifact::DType) -> &'static str {
+    use crate::runtime::artifact::DType as D;
+    match dt {
+        D::F32 => "f32",
+        D::I32 => "s32",
+        D::I8 => "s8",
+        D::U32 => "u32",
+    }
+}
+
+/// Compute the keep-mask: greedy in-order alignment of the manifest's
+/// input list against the (possibly shorter) entry parameter list.
+pub(crate) fn keep_mask(
+    spec: &ProgramSpec,
+    entry: &[(String, Vec<usize>)],
+) -> Result<Vec<bool>> {
+    let mut keep = vec![false; spec.inputs.len()];
+    let mut j = 0usize;
+    for (i, inp) in spec.inputs.iter().enumerate() {
+        if j < entry.len()
+            && entry[j].0 == dtype_hlo_name(inp.dtype)
+            && entry[j].1 == inp.shape
+        {
+            keep[i] = true;
+            j += 1;
+        }
+    }
+    if j != entry.len() {
+        bail!(
+            "program {}: could not align {} HLO entry params with {} manifest inputs",
+            spec.name,
+            entry.len(),
+            spec.inputs.len()
+        );
+    }
+    Ok(keep)
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub download_secs: f64,
+}
+
+impl Program {
+    /// Execute with host literals; returns one literal per manifest output.
+    ///
+    /// Handles both PJRT result conventions (auto-untupled buffers vs a
+    /// single tuple buffer) — xla_extension 0.5.1's CPU client returns a
+    /// tuple for jax-lowered `return_tuple=True` programs.
+    pub fn call<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "program {} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        if cfg!(debug_assertions) {
+            for (lit, spec) in inputs.iter().zip(&self.spec.inputs) {
+                check_matches(lit.borrow(), spec)
+                    .with_context(|| format!("program {} input", self.spec.name))?;
+            }
+        }
+        let t0 = Instant::now();
+        // Filter out inputs XLA pruned from the entry signature.
+        let bufs = if self.keep.iter().all(|&k| k) {
+            self.exe.execute::<L>(inputs)?
+        } else {
+            let kept: Vec<&Literal> = inputs
+                .iter()
+                .zip(&self.keep)
+                .filter(|(_, &k)| k)
+                .map(|(l, _)| l.borrow())
+                .collect();
+            self.exe.execute::<&Literal>(&kept)?
+        };
+        let exec = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let outs = &bufs[0];
+        let literals: Vec<Literal> = if outs.len() == self.spec.outputs.len() && outs.len() > 1 {
+            // PJRT already untupled.
+            outs.iter().map(|b| Ok(b.to_literal_sync()?)).collect::<Result<_>>()?
+        } else {
+            let mut root = outs[0].to_literal_sync()?;
+            match root.ty() {
+                // Tuple literals report an error for ty(); decompose then.
+                Ok(_) if self.spec.outputs.len() == 1 => vec![root],
+                _ => root.decompose_tuple()?,
+            }
+        };
+        if literals.len() != self.spec.outputs.len() {
+            bail!(
+                "program {} returned {} outputs, manifest says {}",
+                self.spec.name,
+                literals.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.calls += 1;
+        st.exec_secs += exec;
+        st.download_secs += t1.elapsed().as_secs_f64();
+        Ok(literals)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The runtime: one PJRT client + a lazily-loaded program cache for one
+/// artifact directory.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    programs: Mutex<HashMap<String, Arc<Program>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over `artifacts/<config>`.
+    pub fn load(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, programs: Mutex::new(HashMap::new()) })
+    }
+
+    /// Get (compiling on first use) a program by manifest name.
+    pub fn program(&self, name: &str) -> Result<Arc<Program>> {
+        if let Some(p) = self.programs.lock().unwrap().get(name) {
+            return Ok(p.clone());
+        }
+        let spec = self.manifest.program(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        // header is enough for the entry layout (first line of the file)
+        let text_head: String = {
+            use std::io::Read;
+            let mut f = std::fs::File::open(&path)?;
+            let mut buf = vec![0u8; 64 * 1024];
+            let n = f.read(&mut buf)?;
+            String::from_utf8_lossy(&buf[..n]).into_owned()
+        };
+        let entry = parse_entry_params(&text_head)
+            .with_context(|| format!("parsing entry layout of {name}"))?;
+        let keep = keep_mask(&spec, &entry)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let secs = t0.elapsed().as_secs_f64();
+        if secs > 1.0 {
+            eprintln!("[runtime] compiled {name} in {secs:.1}s");
+        }
+        let prog = Arc::new(Program { spec, exe, keep, stats: Mutex::new(ExecStats::default()) });
+        self.programs.lock().unwrap().insert(name.to_string(), prog.clone());
+        Ok(prog)
+    }
+
+    /// Per-program cumulative stats snapshot (profiling reports).
+    pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
+        self.programs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.stats()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{DType, IoSpec};
+
+    fn spec(inputs: Vec<(&str, DType, Vec<usize>)>) -> ProgramSpec {
+        ProgramSpec {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            inputs: inputs
+                .into_iter()
+                .map(|(n, d, s)| IoSpec { name: n.into(), dtype: d, shape: s })
+                .collect(),
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn parses_entry_layout() {
+        let hlo = "HloModule m, entry_computation_layout={(f32[2,64]{1,0}, s32[], s8[4]{0})->(f32[])}\n";
+        let e = parse_entry_params(hlo).unwrap();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[0], ("f32".into(), vec![2, 64]));
+        assert_eq!(e[1], ("s32".into(), vec![]));
+        assert_eq!(e[2], ("s8".into(), vec![4]));
+    }
+
+    #[test]
+    fn parses_index_annotations() {
+        let hlo = "HloModule m, entry_computation_layout={(f32[2]{0}, /*index=5*/f32[3]{0}, s32[])->(f32[])}\n";
+        let e = parse_entry_params(hlo).unwrap();
+        assert_eq!(e.len(), 3);
+        assert_eq!(e[1], ("f32".into(), vec![3]));
+    }
+
+    #[test]
+    fn keep_mask_handles_pruned_tail() {
+        let s = spec(vec![
+            ("a", DType::F32, vec![2, 64]),
+            ("step", DType::I32, vec![]),
+            ("w_scales", DType::F32, vec![2, 4]), // pruned by DCE
+        ]);
+        let entry = vec![("f32".into(), vec![2, 64]), ("s32".into(), vec![])];
+        assert_eq!(keep_mask(&s, &entry).unwrap(), vec![true, true, false]);
+    }
+
+    #[test]
+    fn keep_mask_handles_pruned_middle() {
+        let s = spec(vec![
+            ("lnf", DType::F32, vec![64]),     // pruned
+            ("head", DType::F32, vec![64, 256]), // pruned
+            ("tokens", DType::I32, vec![4, 64]),
+        ]);
+        let entry = vec![("s32".into(), vec![4, 64])];
+        assert_eq!(keep_mask(&s, &entry).unwrap(), vec![false, false, true]);
+    }
+
+    #[test]
+    fn keep_mask_rejects_misalignment() {
+        let s = spec(vec![("a", DType::F32, vec![2])]);
+        let entry = vec![("f32".into(), vec![3])];
+        assert!(keep_mask(&s, &entry).is_err());
+    }
+}

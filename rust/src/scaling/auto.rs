@@ -1,0 +1,116 @@
+//! MOSS automatic scaling (paper §3.2, Eq. 10).
+//!
+//! Between true max-reductions, the scale evolves by the Theorem-2 bound
+//! `s_t = s_anchor + (sum of learning rates since anchor) / 448`.
+//!
+//! (the paper writes the constant-lr form `s_0 + eta*t/448`; accumulating
+//! the actual schedule is the exact generalization — `optim.py` docs).
+//! Every `interval` steps the anchor is refreshed with a real absmax —
+//! the paper's "dynamic re-scaling at fixed intervals".
+
+use anyhow::Result;
+
+use super::{absmax_to_scales, timed_absmax, AbsmaxSource, ScalingStats, ScalingStrategy};
+
+#[derive(Debug)]
+pub struct AutoScaler {
+    /// Re-anchor period in steps (paper default: 500).
+    pub interval: u64,
+    anchor_scales: Option<Vec<f32>>,
+    lr_sum: f32,
+    stats: ScalingStats,
+}
+
+impl AutoScaler {
+    pub fn new(interval: u64) -> Self {
+        AutoScaler { interval: interval.max(1), anchor_scales: None, lr_sum: 0.0, stats: ScalingStats::default() }
+    }
+
+    /// The predicted scales without paying for any reduction (Eq. 10).
+    pub fn predict(&self) -> Option<Vec<f32>> {
+        let drift = self.lr_sum / crate::E4M3_MAX;
+        self.anchor_scales
+            .as_ref()
+            .map(|s| s.iter().map(|&s0| s0 + drift).collect())
+    }
+}
+
+impl ScalingStrategy for AutoScaler {
+    fn name(&self) -> &'static str {
+        "automatic"
+    }
+
+    fn scales(&mut self, step: u64, lr: f32, absmax: &mut dyn AbsmaxSource) -> Result<Vec<f32>> {
+        let needs_anchor = self.anchor_scales.is_none()
+            || (self.interval > 0 && step % self.interval == 0);
+        if needs_anchor {
+            let amax = timed_absmax(absmax, &mut self.stats)?;
+            self.anchor_scales = Some(absmax_to_scales(&amax));
+            self.lr_sum = 0.0;
+        }
+        let t0 = std::time::Instant::now();
+        let scales = self.predict().expect("anchored above");
+        // The *upcoming* update moves weights by at most lr (Thm 2), so it
+        // is accounted into the scale used from the next step on.
+        self.lr_sum += lr;
+        self.stats.update_secs += t0.elapsed().as_secs_f64();
+        Ok(scales)
+    }
+
+    fn stats(&self) -> ScalingStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    use super::super::testutil::VecSource;
+    use super::*;
+
+    #[test]
+    fn anchors_only_every_interval() {
+        let calls = Rc::new(Cell::new(0));
+        let mut src = VecSource { values: vec![448.0], calls: calls.clone() };
+        let mut s = AutoScaler::new(10);
+        for step in 1..=25u64 {
+            s.scales(step, 1e-3, &mut src).unwrap();
+        }
+        // anchored at step 1 (first), 10, 20 -> 3 calls
+        assert_eq!(calls.get(), 3);
+        assert_eq!(s.stats().absmax_calls, 3);
+    }
+
+    #[test]
+    fn predicted_scale_grows_by_lr_sum() {
+        let calls = Rc::new(Cell::new(0));
+        let mut src = VecSource { values: vec![448.0], calls };
+        let mut s = AutoScaler::new(1000);
+        let s1 = s.scales(1, 0.5, &mut src).unwrap();
+        assert!((s1[0] - 1.0).abs() < 1e-6); // anchor: 448/448
+        let s2 = s.scales(2, 0.5, &mut src).unwrap();
+        assert!((s2[0] - (1.0 + 0.5 / 448.0)).abs() < 1e-6);
+        let s3 = s.scales(3, 0.5, &mut src).unwrap();
+        assert!((s3[0] - (1.0 + 1.0 / 448.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dominates_true_absmax_along_bounded_trajectory() {
+        // Weights drift by at most lr per step; the predicted scale must
+        // stay >= the true JIT scale at every step (Fig. 4's property).
+        let mut w = 1.0f32;
+        let calls = Rc::new(Cell::new(0));
+        let mut s = AutoScaler::new(500);
+        let lr = 1e-2f32;
+        let mut rng = crate::util::rng::Rng::new(3);
+        for step in 1..=200u64 {
+            let mut src = VecSource { values: vec![w], calls: calls.clone() };
+            let pred = s.scales(step, lr, &mut src).unwrap()[0];
+            assert!(pred >= w / 448.0 - 1e-7, "step {step}: {pred} < {}", w / 448.0);
+            // adversarial-but-bounded weight walk
+            w += lr * (rng.f32() * 2.0 - 1.0).clamp(-1.0, 1.0);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Delayed scaling: Transformer-Engine style history-window maximum.
+//!
+//! The scale for step t is the max of the last `window` *observed* absmax
+//! values, refreshed by a true reduction every `refresh` steps (TE gets
+//! amax quasi-free from the previous GEMM epilogue; on our substrate the
+//! amortized refresh models that reduced cost). A safety `margin`
+//! headroom guards the statistical-consistency assumption the paper
+//! notes this method is vulnerable to (§5.2).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::{absmax_to_scales, timed_absmax, AbsmaxSource, ScalingStats, ScalingStrategy};
+
+#[derive(Debug)]
+pub struct DelayedScaler {
+    pub window: usize,
+    pub refresh: u64,
+    pub margin: f32,
+    history: VecDeque<Vec<f32>>,
+    stats: ScalingStats,
+}
+
+impl DelayedScaler {
+    pub fn new(window: usize, refresh: u64, margin: f32) -> Self {
+        DelayedScaler {
+            window: window.max(1),
+            refresh: refresh.max(1),
+            margin,
+            history: VecDeque::new(),
+            stats: ScalingStats::default(),
+        }
+    }
+
+    /// TE defaults scaled to our trainer: 16-deep history, refresh 4.
+    pub fn te_like() -> Self {
+        Self::new(16, 4, 1.25)
+    }
+}
+
+impl ScalingStrategy for DelayedScaler {
+    fn name(&self) -> &'static str {
+        "delayed"
+    }
+
+    fn scales(&mut self, step: u64, _lr: f32, absmax: &mut dyn AbsmaxSource) -> Result<Vec<f32>> {
+        if self.history.is_empty() || step % self.refresh == 0 {
+            let amax = timed_absmax(absmax, &mut self.stats)?;
+            self.history.push_back(amax);
+            if self.history.len() > self.window {
+                self.history.pop_front();
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let n = self.history[0].len();
+        let mut maxes = vec![0f32; n];
+        for h in &self.history {
+            for (m, &v) in maxes.iter_mut().zip(h) {
+                *m = m.max(v);
+            }
+        }
+        for m in maxes.iter_mut() {
+            *m *= self.margin;
+        }
+        let scales = absmax_to_scales(&maxes);
+        self.stats.update_secs += t0.elapsed().as_secs_f64();
+        Ok(scales)
+    }
+
+    fn stats(&self) -> ScalingStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    use super::super::testutil::VecSource;
+    use super::*;
+
+    #[test]
+    fn refreshes_at_configured_rate() {
+        let calls = Rc::new(Cell::new(0));
+        let mut src = VecSource { values: vec![448.0], calls: calls.clone() };
+        let mut s = DelayedScaler::new(4, 5, 1.0);
+        for step in 1..=20u64 {
+            s.scales(step, 1e-3, &mut src).unwrap();
+        }
+        // first call + steps 5,10,15,20 -> 5 reductions (vs 20 for JIT)
+        assert_eq!(calls.get(), 5);
+    }
+
+    #[test]
+    fn uses_window_maximum_with_margin() {
+        let calls = Rc::new(Cell::new(0));
+        let mut s = DelayedScaler::new(4, 1, 1.25);
+        for (step, v) in [(1u64, 100.0f32), (2, 300.0), (3, 50.0)] {
+            let mut src = VecSource { values: vec![v], calls: calls.clone() };
+            let sc = s.scales(step, 1e-3, &mut src).unwrap();
+            let expect_max = match step {
+                1 => 100.0,
+                _ => 300.0,
+            };
+            assert!((sc[0] - expect_max * 1.25 / 448.0).abs() < 1e-6, "step {step}");
+        }
+    }
+
+    #[test]
+    fn outlier_leaves_after_window_slides() {
+        let calls = Rc::new(Cell::new(0));
+        let mut s = DelayedScaler::new(2, 1, 1.0);
+        let seq = [500.0f32, 10.0, 10.0, 10.0];
+        let mut last = 0.0;
+        for (i, v) in seq.iter().enumerate() {
+            let mut src = VecSource { values: vec![*v], calls: calls.clone() };
+            last = s.scales(i as u64 + 1, 1e-3, &mut src).unwrap()[0];
+        }
+        assert!((last - 10.0 / 448.0).abs() < 1e-6);
+    }
+}

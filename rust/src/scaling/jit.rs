@@ -1,0 +1,55 @@
+//! Just-in-time scaling: a full max-reduction at every step (the paper's
+//! costly baseline — "reading all FP32 values from HBM to compute the
+//! maximum absolute value", §3.2).
+
+use anyhow::Result;
+
+use super::{absmax_to_scales, timed_absmax, AbsmaxSource, ScalingStats, ScalingStrategy};
+
+#[derive(Debug, Default)]
+pub struct JitScaler {
+    stats: ScalingStats,
+}
+
+impl JitScaler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ScalingStrategy for JitScaler {
+    fn name(&self) -> &'static str {
+        "jit"
+    }
+
+    fn scales(&mut self, _step: u64, _lr: f32, absmax: &mut dyn AbsmaxSource) -> Result<Vec<f32>> {
+        let amax = timed_absmax(absmax, &mut self.stats)?;
+        Ok(absmax_to_scales(&amax))
+    }
+
+    fn stats(&self) -> ScalingStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::cell::Cell;
+    use std::rc::Rc;
+
+    use super::super::testutil::VecSource;
+    use super::*;
+
+    #[test]
+    fn reduces_every_step() {
+        let calls = Rc::new(Cell::new(0));
+        let mut src = VecSource { values: vec![224.0, 44.8], calls: calls.clone() };
+        let mut s = JitScaler::new();
+        for step in 1..=7 {
+            let sc = s.scales(step, 1e-3, &mut src).unwrap();
+            assert!((sc[0] - 0.5).abs() < 1e-6);
+            assert!((sc[1] - 0.1).abs() < 1e-6);
+        }
+        assert_eq!(calls.get(), 7);
+    }
+}

@@ -1,0 +1,105 @@
+//! Weight-scale management — the paper's §3.2 system contribution.
+//!
+//! Per-tensor FP8 weight scales for every quantized linear must track
+//! `max|W_t| / 448`. Three strategies, matching the paper's comparison
+//! (§5.2, Appendix E):
+//!
+//! * [`JitScaler`] — just-in-time: a full max-reduction over every weight
+//!   tensor at every step (the costly baseline; its overhead is what
+//!   Tables 1/10 measure).
+//! * [`DelayedScaler`] — history-window max with periodic refresh
+//!   (Transformer-Engine style).
+//! * [`AutoScaler`] — MOSS automatic scaling: predicts the scale from the
+//!   Theorem-2 bound `max|W_t| <= max|W_0| + sum eta_t` (Eq. 10), with a
+//!   true max-reduction only every `interval` steps.
+//!
+//! All strategies speak through [`ScalingStrategy`]: the trainer gives
+//! them the step's learning rate and a *lazy* absmax source (running the
+//! `weight_absmax` artifact is the expensive part); they return the
+//! per-linear scale vector to inject into the train-step program.
+
+pub mod auto;
+pub mod delayed;
+pub mod jit;
+pub mod trajectory;
+
+pub use auto::AutoScaler;
+pub use delayed::DelayedScaler;
+pub use jit::JitScaler;
+pub use trajectory::ScaleTrajectory;
+
+use anyhow::Result;
+
+/// Lazily computes `max|W|` for every quantized linear (length = L*4 in
+/// the trainer). Implementations: the PJRT `weight_absmax` program, or a
+/// host-side reduction in tests.
+pub trait AbsmaxSource {
+    fn absmax(&mut self) -> Result<Vec<f32>>;
+}
+
+impl<F: FnMut() -> Result<Vec<f32>>> AbsmaxSource for F {
+    fn absmax(&mut self) -> Result<Vec<f32>> {
+        self()
+    }
+}
+
+/// Cost accounting shared by all strategies.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalingStats {
+    /// Number of max-reduction invocations so far.
+    pub absmax_calls: u64,
+    /// Wall time spent in max-reductions (seconds).
+    pub absmax_secs: f64,
+    /// Wall time spent in O(1) scale updates (seconds).
+    pub update_secs: f64,
+}
+
+/// A weight-scaling strategy driven by the training loop.
+pub trait ScalingStrategy {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Produce the per-linear scales for step `step` (1-based), given the
+    /// learning rate that will be applied at this step. May call
+    /// `absmax` (and pays its cost).
+    fn scales(&mut self, step: u64, lr: f32, absmax: &mut dyn AbsmaxSource)
+        -> Result<Vec<f32>>;
+
+    /// Accumulated cost accounting.
+    fn stats(&self) -> ScalingStats;
+}
+
+/// Shared helper: time an absmax call and fold it into stats.
+pub(crate) fn timed_absmax(
+    src: &mut dyn AbsmaxSource,
+    stats: &mut ScalingStats,
+) -> Result<Vec<f32>> {
+    let t0 = std::time::Instant::now();
+    let v = src.absmax()?;
+    stats.absmax_calls += 1;
+    stats.absmax_secs += t0.elapsed().as_secs_f64();
+    Ok(v)
+}
+
+/// Convert weight absmax values to per-tensor FP8 scales (`/ 448`).
+pub fn absmax_to_scales(absmax: &[f32]) -> Vec<f32> {
+    absmax.iter().map(|&a| (a / crate::E4M3_MAX).max(crate::quant::SCALE_EPS)).collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// An absmax source over a mutable weight snapshot, counting calls.
+    pub struct VecSource {
+        pub values: Vec<f32>,
+        pub calls: std::rc::Rc<std::cell::Cell<u64>>,
+    }
+
+    impl AbsmaxSource for VecSource {
+        fn absmax(&mut self) -> Result<Vec<f32>> {
+            self.calls.set(self.calls.get() + 1);
+            Ok(self.values.clone())
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Scale-trajectory recording for Figure 4 (automatic vs JIT scaling).
+
+/// One sampled point of a scale trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct TrajPoint {
+    pub step: u64,
+    /// Scale the strategy under test produced.
+    pub predicted: f32,
+    /// Ground-truth JIT scale (max-reduction) at the same step.
+    pub jit: f32,
+}
+
+/// Recorder for one linear's scale over training.
+#[derive(Debug, Clone, Default)]
+pub struct ScaleTrajectory {
+    pub points: Vec<TrajPoint>,
+}
+
+impl ScaleTrajectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, step: u64, predicted: f32, jit: f32) {
+        self.points.push(TrajPoint { step, predicted, jit });
+    }
+
+    /// Fig-4 property: predicted curve lies on/above the JIT curve
+    /// (values stay representable), returns the fraction of violating
+    /// samples (0.0 = clean) and the mean relative headroom.
+    pub fn check_dominance(&self) -> (f64, f64) {
+        if self.points.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut viol = 0usize;
+        let mut headroom = 0f64;
+        for p in &self.points {
+            if p.predicted < p.jit * (1.0 - 1e-6) {
+                viol += 1;
+            }
+            headroom += (p.predicted as f64 / p.jit.max(1e-12) as f64) - 1.0;
+        }
+        (
+            viol as f64 / self.points.len() as f64,
+            headroom / self.points.len() as f64,
+        )
+    }
+
+    pub fn series(&self) -> (Vec<f64>, Vec<f64>) {
+        (
+            self.points.iter().map(|p| p.predicted as f64).collect(),
+            self.points.iter().map(|p| p.jit as f64).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_check() {
+        let mut t = ScaleTrajectory::new();
+        t.record(1, 1.0, 0.9);
+        t.record(2, 1.1, 1.0);
+        let (viol, head) = t.check_dominance();
+        assert_eq!(viol, 0.0);
+        assert!(head > 0.0);
+        t.record(3, 0.5, 1.0);
+        let (viol, _) = t.check_dominance();
+        assert!((viol - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,32 @@
+//! Commodity substrates hand-rolled for the offline environment
+//! (DESIGN.md "Environment substitutions"): JSON, RNG, statistics,
+//! ASCII tables/plots, CSV.
+
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Round `v` to `n` significant decimal digits (report formatting).
+pub fn round_sig(v: f64, n: i32) -> f64 {
+    if v == 0.0 || !v.is_finite() {
+        return v;
+    }
+    let mag = v.abs().log10().floor() as i32;
+    let f = 10f64.powi(n - 1 - mag);
+    (v * f).round() / f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_sig_basic() {
+        assert_eq!(round_sig(1234.5, 3), 1230.0);
+        assert_eq!(round_sig(0.0012345, 2), 0.0012);
+        assert_eq!(round_sig(0.0, 3), 0.0);
+        assert_eq!(round_sig(-9.876, 2), -9.9);
+    }
+}

@@ -1,0 +1,85 @@
+//! ASCII line plots — loss curves (Figs. 5-7) and scale trajectories
+//! (Fig. 4) render directly into the terminal and EXPERIMENTS.md.
+
+/// Render one or more named series into an ASCII plot of `w` x `h` chars.
+/// Series are drawn with distinct glyphs; x is the sample index mapped to
+/// [0, w) and y is min..max across all series.
+pub fn multi_line_plot(title: &str, series: &[(&str, &[f64])], w: usize, h: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in ys.iter().filter(|y| y.is_finite()) {
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+    }
+    if !ymin.is_finite() || ymin == ymax {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; w]; h];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        if ys.is_empty() {
+            continue;
+        }
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let x = if ys.len() == 1 { 0 } else { i * (w - 1) / (ys.len() - 1) };
+            let fy = (y - ymin) / (ymax - ymin);
+            let row = h - 1 - ((fy * (h - 1) as f64).round() as usize).min(h - 1);
+            grid[row][x] = g;
+        }
+    }
+    let mut out = format!("-- {title} --\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:>10.4} |")
+        } else if i == h - 1 {
+            format!("{ymin:>10.4} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(w)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| format!("{} {}", GLYPHS[i % GLYPHS.len()], n))
+        .collect();
+    out.push_str(&format!("{:>12}{}\n", "", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_series_glyphs_and_bounds() {
+        let a: Vec<f64> = (0..50).map(|i| 5.0 - i as f64 * 0.05).collect();
+        let b: Vec<f64> = (0..50).map(|i| 5.0 - i as f64 * 0.04).collect();
+        let p = multi_line_plot("loss", &[("bf16", &a), ("moss", &b)], 60, 12);
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.contains("5.0000"));
+        assert!(p.contains("bf16") && p.contains("moss"));
+    }
+
+    #[test]
+    fn handles_constant_series() {
+        let a = [1.0; 10];
+        let p = multi_line_plot("c", &[("x", &a[..])], 20, 5);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn handles_single_point() {
+        let p = multi_line_plot("p", &[("x", &[2.0][..])], 10, 4);
+        assert!(p.contains('*'));
+    }
+}

@@ -1,0 +1,187 @@
+//! Deterministic RNG substrate (rand is unavailable offline).
+//!
+//! SplitMix64 core + helpers for uniform/normal/Zipf sampling. Every
+//! stochastic component in the framework (data generation, init seeds,
+//! worker shards) derives from one of these so runs are reproducible
+//! from a single seed.
+
+/// SplitMix64: tiny, fast, passes BigCrush as a 64-bit mixer.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    /// Derive an independent stream (worker shards, per-layer keys).
+    pub fn fork(&self, stream: u64) -> Rng {
+        let mut r = Rng::new(self.state ^ stream.wrapping_mul(0xA24BAED4963EE407));
+        r.next_u64(); // decorrelate
+        r
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection-free variant is fine here:
+        // bias < 2^-64 * n, negligible for n << 2^32.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal (Box-Muller; one value per call for simplicity).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill with activation-like data: lognormal channel envelope along
+    /// the last dim (multi-octave structure, the paper's Table-7 regime).
+    pub fn activation_like(&mut self, rows: usize, cols: usize, chan_sigma: f64) -> Vec<f32> {
+        let env: Vec<f64> = (0..cols).map(|_| (self.normal() * chan_sigma).exp()).collect();
+        let mut out = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let tok = (self.normal() * 0.5).exp();
+            for e in &env {
+                out.push((self.normal() * e * tok) as f32);
+            }
+        }
+        out
+    }
+
+    /// Sample from a Zipf(alpha) distribution over [0, n) via inverse CDF
+    /// on a precomputed table.
+    pub fn zipf(&mut self, table: &ZipfTable) -> usize {
+        let u = self.f64();
+        match table.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(table.cdf.len() - 1),
+        }
+    }
+}
+
+/// Precomputed Zipf CDF (vocabulary-scale tables are built once).
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        let mut w: Vec<f64> = (1..=n).map(|k| (k as f64).powf(-alpha)).collect();
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for x in w.iter_mut() {
+            acc += *x / total;
+            *x = acc;
+        }
+        ZipfTable { cdf: w }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let r = Rng::new(42);
+        let mut a = r.fork(1);
+        let mut b = r.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_head() {
+        let t = ZipfTable::new(1000, 1.2);
+        let mut r = Rng::new(11);
+        let mut head = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            if r.zipf(&t) < 10 {
+                head += 1;
+            }
+        }
+        // top-10 of a 1000-symbol Zipf(1.2) should carry a large mass
+        assert!(head as f64 / n as f64 > 0.35, "{head}");
+    }
+}
