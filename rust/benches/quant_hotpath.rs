@@ -4,6 +4,8 @@
 
 use moss::bench_util::{black_box, Bencher};
 use moss::formats::{bf16, e8m0, fp8::E4M3};
+use moss::kernels::gemm::GemmConfig;
+use moss::kernels::{dequant_then_naive_gemm, packed_gemm, packed_gemm_with, PackedFp8Tensor};
 use moss::quant::snr::{snr_relative_db, table7_snrs, Metric};
 use moss::quant::{PerGroupQuant, PerTensorQuant, TwoLevelQuant};
 use moss::util::rng::Rng;
@@ -74,5 +76,46 @@ fn main() {
         black_box(snr_relative_db(&act, &dq));
     });
     println!("{}", r.report_line());
+
+    // --- packed tiled GEMM vs dequantize-then-f32 GEMM (the tentpole
+    // claim: dequantization off the critical path; kernels/ module docs).
+    // M = N = K = 512, micro = 32, E4M3 both operands. Runs last so the
+    // perf gate below cannot abort any other measurement in this binary.
+    let dim = 512usize;
+    let a512 = rng.activation_like(dim, dim, 1.5);
+    let b512 = rng.activation_like(dim, dim, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a512, dim, dim, 32, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b512, dim, dim, 32, &E4M3);
+    let bq = Bencher::quick();
+    let packed = bq.run("packed_tiled_gemm_512", || {
+        black_box(packed_gemm(black_box(&ap), black_box(&bp)));
+    });
+    let flops = 2.0 * (dim * dim * dim) as f64;
+    println!("{}  ({:.2} GFLOP/s)", packed.report_line(), flops / packed.summary.mean / 1e9);
+    // Single-thread run isolates the *schedule* win (LUT + group exponent
+    // adds + blocking) from the threading win; reported, not gated.
+    let one = GemmConfig { threads: 1, ..GemmConfig::default() };
+    let packed1 = bq.run("packed_tiled_gemm_512_1thread", || {
+        black_box(packed_gemm_with(black_box(&ap), black_box(&bp), one));
+    });
+    println!("{}  ({:.2} GFLOP/s)", packed1.report_line(), flops / packed1.summary.mean / 1e9);
+    let baseline = bq.run("dequant_then_f32_gemm_512", || {
+        black_box(dequant_then_naive_gemm(black_box(&ap), black_box(&bp)));
+    });
+    println!(
+        "{}  ({:.2} GFLOP/s)",
+        baseline.report_line(),
+        flops / baseline.summary.mean / 1e9
+    );
+    // p50 is less sensitive to noisy-neighbor stalls than the mean.
+    let speedup = baseline.summary.p50 / packed.summary.p50;
+    let speedup1 = baseline.summary.p50 / packed1.summary.p50;
+    println!(
+        "packed vs dequantize-then-f32 at 512^3: {speedup:.2}x ({speedup1:.2}x single-thread, p50)"
+    );
+    assert!(
+        speedup >= 2.0,
+        "packed GEMM must be >= 2x the dequantize-then-f32 baseline, got {speedup:.2}x"
+    );
     println!("quant_hotpath bench OK");
 }

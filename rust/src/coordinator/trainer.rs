@@ -5,12 +5,13 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use xla::Literal;
 
 use crate::config::{DataKind, ScalingKind, TrainConfig};
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
 use crate::data::synth::CorpusSpec;
+use crate::kernels::{linear_backward_packed, linear_forward_packed};
 use crate::metrics::{Throughput, TrainHistory};
 use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_f32};
 use crate::runtime::{Program, Runtime};
@@ -88,6 +89,86 @@ impl Trainer {
             data,
             linear_param_idx,
         })
+    }
+
+    /// Download one layer's weight for a quantized linear: returns
+    /// `(w_row_major, K, N)` with `Y[.., N] = X[.., K] @ W[K, N]`.
+    /// `wqkv`/`wo`/`w_up` contract over `dim`, `w_down` over `ffn`; the
+    /// output width is derived from the tensor size rather than assumed.
+    ///
+    /// Public so callers running a forward+backward sequence (or many
+    /// microbatches) can fetch the weight once and drive
+    /// `kernels::linear` directly, instead of paying a full parameter
+    /// download inside every `packed_forward`/`packed_backward` call.
+    pub fn layer_weight(&self, layer: usize, name: &str) -> Result<(Vec<f32>, usize, usize)> {
+        let man = &self.rt.manifest;
+        if !man.linear_names.iter().any(|n| n == name) {
+            bail!("{name:?} is not a quantized linear (have {:?})", man.linear_names);
+        }
+        if layer >= man.model.layers {
+            bail!("layer {layer} out of range (model has {})", man.model.layers);
+        }
+        let data = self.state.param_f32(man, name)?;
+        let per_layer = data.len() / man.model.layers;
+        let k = if name == "w_down" { man.model.ffn } else { man.model.dim };
+        let n = per_layer / k;
+        if k * n != per_layer {
+            bail!("weight {name:?}: per-layer size {per_layer} not divisible by K={k}");
+        }
+        Ok((data[layer * per_layer..(layer + 1) * per_layer].to_vec(), k, n))
+    }
+
+    /// Host-side packed-FP8 forward of one linear layer: quantizes
+    /// `x[rows, K]` and the named weight with two-level microscaling
+    /// (E4M3) and executes the tiled packed GEMM — the engine path that
+    /// mirrors what the AOT `train_step_moss` artifact computes on
+    /// device. Used by the differential suite and the perf benches.
+    pub fn packed_forward(
+        &self,
+        layer: usize,
+        name: &str,
+        x: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let (w, k, n) = self.layer_weight(layer, name)?;
+        if x.len() != rows * k {
+            bail!("activation is {} elems, layer {layer} {name:?} wants [{rows}, {k}]", x.len());
+        }
+        let micro = self.rt.manifest.model.micro;
+        if k % micro != 0 {
+            bail!("layer {layer} {name:?}: K={k} is not a multiple of micro={micro}");
+        }
+        Ok(linear_forward_packed(x, rows, k, &w, n, micro))
+    }
+
+    /// Host-side packed-FP8 backward of one linear layer: E5M2 gradients,
+    /// E4M3 saved activations/weights. Returns `(dX[rows,K], dW[K,N])`.
+    pub fn packed_backward(
+        &self,
+        layer: usize,
+        name: &str,
+        x: &[f32],
+        dy: &[f32],
+        rows: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (w, k, n) = self.layer_weight(layer, name)?;
+        if x.len() != rows * k || dy.len() != rows * n {
+            bail!(
+                "layer {layer} {name:?}: x has {} elems (want [{rows}, {k}]), dy has {} (want [{rows}, {n}])",
+                x.len(),
+                dy.len()
+            );
+        }
+        let micro = self.rt.manifest.model.micro;
+        // backward contracts over N (dX) and over the row count (dW):
+        // both must be micro-divisible or the quantizers would panic.
+        if n % micro != 0 || rows % micro != 0 {
+            bail!(
+                "layer {layer} {name:?}: backward needs N={n} and rows={rows} \
+                 to be multiples of micro={micro}"
+            );
+        }
+        Ok(linear_backward_packed(x, &w, dy, rows, k, n, micro))
     }
 
     /// Run the device-side max-reduction over the current weights.

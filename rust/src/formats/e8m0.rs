@@ -93,4 +93,63 @@ mod tests {
             assert_eq!(d.log2(), e as f32);
         }
     }
+
+    #[test]
+    fn ratios_at_and_below_scale_eps_clamp_identically() {
+        // Everything at or below the epsilon floor maps to one exponent:
+        // the encode of SCALE_EPS itself (ceil(log2 1e-12) = -39).
+        let floor = encode_ceil(SCALE_EPS);
+        assert_eq!(floor, -39);
+        for v in [0.0f32, -1.0, f32::MIN_POSITIVE, 1e-300_f64 as f32, SCALE_EPS, 1e-13] {
+            assert_eq!(encode_ceil(v), floor, "{v}");
+            assert_eq!(encode_nearest(v), encode_nearest(SCALE_EPS), "{v}");
+        }
+        // and the first value above the floor can exceed it
+        assert!(encode_ceil(SCALE_EPS * 4.0) > floor);
+    }
+
+    #[test]
+    fn ratios_above_one_get_positive_exponents() {
+        // Two-level subscales are always <= 1, but the codec itself must
+        // stay correct above 1 (delayed-scaling margins produce these).
+        assert_eq!(encode_ceil(1.0), 0);
+        assert_eq!(encode_ceil(1.5), 1);
+        assert_eq!(encode_ceil(2.0), 1);
+        assert_eq!(encode_ceil(3.0), 2);
+        assert_eq!(encode_ceil(1024.0), 10);
+        let just_above = f32::from_bits(2.0f32.to_bits() + 1);
+        assert_eq!(encode_ceil(just_above), 2);
+    }
+
+    #[test]
+    fn saturating_exponents_clamp_to_i8_range() {
+        // Values whose ceil-log2 exceeds 127 must clamp, not wrap: f32::MAX
+        // has exponent 127 with a nonzero mantissa, so the unclamped ceil
+        // would be 128 == i8 wraparound to -128 — the exact bug this test
+        // guards against.
+        assert_eq!(encode_ceil(f32::MAX), EXP_MAX as i8);
+        assert_eq!(encode_ceil(2.0f32.powi(127)), 127);
+        let above_pow127 = f32::from_bits(2.0f32.powi(127).to_bits() + 1);
+        assert_eq!(encode_ceil(above_pow127), EXP_MAX as i8);
+        assert_eq!(encode_nearest(f32::MAX), EXP_MAX as i8);
+        // +inf saturates too (exponent field 0xFF -> huge ceil, clamped)
+        assert_eq!(encode_ceil(f32::INFINITY), EXP_MAX as i8);
+        // and the bottom of the range clamps symmetrically
+        assert_eq!((-127i32).clamp(EXP_MIN, EXP_MAX), -127);
+        assert!(encode_ceil(SCALE_EPS) > EXP_MIN as i8);
+    }
+
+    #[test]
+    fn ceil_dominance_holds_across_the_whole_positive_axis() {
+        // Property: for any positive v in the representable span,
+        // decode(encode_ceil(v)) >= v, and within one octave.
+        let mut v = 1.0e-12f64;
+        while v < 1.0e12 {
+            let f = v as f32;
+            let d = decode(encode_ceil(f)) as f64;
+            assert!(d >= f as f64 * (1.0 - 1e-6), "{f} -> {d}");
+            assert!(d <= (f as f64) * 2.0 * (1.0 + 1e-6) || f < SCALE_EPS, "{f} -> {d}");
+            v *= 1.9973;
+        }
+    }
 }

@@ -96,11 +96,21 @@ impl Fp8Format {
         sign | (biased << self.mant) | frac_bits as u8
     }
 
-    /// Decode an 8-bit payload to f32.
+    /// Decode an 8-bit payload to f32, honoring the OCP OFP8 special
+    /// values: E4M3FN reserves only `S.1111.111` as NaN (no infinities);
+    /// E5M2 follows IEEE-754 — exponent field 31 is inf (zero fraction)
+    /// or NaN. Without this, the packed engine would silently decode a
+    /// NaN payload to a large finite value and hide divergence.
     pub fn decode(&self, b: u8) -> f32 {
         let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
         let mag = b & 0x7F;
+        if self.mant == 3 && mag == 0x7F {
+            return f32::NAN;
+        }
         let exp_field = (mag >> self.mant) as i32;
+        if self.mant == 2 && exp_field == 31 {
+            return if mag & 0x3 == 0 { sign * f32::INFINITY } else { f32::NAN };
+        }
         let frac = (mag & ((1 << self.mant) - 1)) as f64;
         let m = 1 << self.mant;
         let v = if exp_field == 0 {
@@ -111,6 +121,19 @@ impl Fp8Format {
             (1.0 + frac / m as f64) * 2f64.powi(e)
         };
         sign * v as f32
+    }
+
+    /// 256-entry payload -> f32 decode table: `lut[b] == decode(b)` for
+    /// every byte. The packed-tensor GEMM engine (`kernels::`) replaces
+    /// per-element bit decoding with one indexed load through this table,
+    /// which is what keeps dequantization off the inner-loop critical
+    /// path (paper Fig. 3b).
+    pub fn decode_lut(&self) -> [f32; 256] {
+        let mut lut = [0f32; 256];
+        for (b, slot) in lut.iter_mut().enumerate() {
+            *slot = self.decode(b as u8);
+        }
+        lut
     }
 
     /// Number of finite representable non-negative magnitudes (testing).

@@ -1,0 +1,369 @@
+//! Tiled microscaled GEMM over packed FP8 operands — the executable form
+//! of the MOSS kernel schedule (paper §3.1, Fig. 3b).
+//!
+//! `C[M,N] = A[M,K] @ B[K,N]` with both operands micro-grouped along the
+//! contraction dim K, so B is consumed in transposed layout `Bt[N,K]`
+//! (the natural weight layout for an FP8 training engine: each GEMM
+//! quantizes its operand along its own K). Per output element the
+//! schedule is:
+//!
+//! ```text
+//! for each micro-group g (in K order):
+//!     p  = <unscaled payload dot over the 32-group>     // Tensor-Core analog
+//!     acc += p * 2^(ssA[g] + ssB[g])                    // E8M0 add, operand path
+//! C = acc * (scaleA * scaleB)                           // one FP32 epilogue rescale
+//! ```
+//!
+//! Dequantization never touches the inner loop: payloads decode through a
+//! 256-entry LUT, subscales fold in as one power-of-two multiply per
+//! 32-element group, and the two FP32 global scales appear exactly once,
+//! in the epilogue — the schedule `gemm_sim::schedule` charges MOSS for.
+//!
+//! ## Bit-exactness contract
+//!
+//! [`packed_gemm`] (cache-blocked, multi-threaded, `u8` + LUT) and
+//! [`reference_gemm_grid`] (naive loops over the `TwoLevelQuant` f32-grid
+//! representation) produce **bit-identical** results: both fix the same
+//! per-output-element f32 operation sequence — the 4-lane interleaved
+//! group dot of [`group_dot_grid`], group contributions added in K order,
+//! one epilogue multiply — and neither tiling, threading, nor the LUT can
+//! reorder it (LUT decode equals the grid floats payload-for-payload;
+//! scaling by a power of two is exact). `tests/packed_gemm_differential.rs`
+//! locks this down across shapes and formats.
+//!
+//! [`dequant_then_naive_gemm`] is the *baseline* the packed engine is
+//! benchmarked against (what the repo did before this module existed:
+//! materialize f32 tensors, then a textbook dot-product GEMM). It is
+//! numerically close but not bit-identical — it applies scales per
+//! element before the dot, which inserts a rounding per element that the
+//! MOSS schedule avoids by construction.
+
+use crate::quant::TwoLevelQuant;
+
+use super::packed::PackedFp8Tensor;
+
+/// Exponent sums `ssA + ssB` span [-254, 254]; the table is indexed by
+/// `e + EXP2_BIAS`.
+const EXP2_BIAS: i32 = 254;
+const EXP2_LEN: usize = 509;
+
+/// `2^e` as f32 (exact; underflows to subnormal/zero, overflows to inf —
+/// the same value every schedule in this module uses for an E8M0 sum).
+pub fn exp2i(e: i32) -> f32 {
+    2f64.powi(e) as f32
+}
+
+fn exp2_table() -> Vec<f32> {
+    (0..EXP2_LEN as i32).map(|i| exp2i(i - EXP2_BIAS)).collect()
+}
+
+/// Tiling/threading knobs for [`packed_gemm_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct GemmConfig {
+    /// Columns of C (rows of Bt) per cache block; `nb * K` payload bytes
+    /// of Bt stay hot across a whole row band.
+    pub nb: usize,
+    /// Worker threads (rows of C are split into contiguous bands).
+    pub threads: usize,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        GemmConfig {
+            nb: 64,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+fn check_operands(a: &PackedFp8Tensor, bt: &PackedFp8Tensor) {
+    assert_eq!(a.cols, bt.cols, "contraction dims differ: A K={} Bt K={}", a.cols, bt.cols);
+    assert_eq!(a.micro, bt.micro, "micro-group sizes differ");
+    assert!(a.micro > 0 && a.cols % a.micro == 0, "K {} % micro {} != 0", a.cols, a.micro);
+}
+
+/// The engine's fixed intra-group reduction: a 4-lane interleaved dot
+/// over one micro-group, combined as `(p0 + p1) + (p2 + p3)` (the MMA
+/// lane-accumulator analog; also what buys the scalar build its ILP).
+/// Falls back to a serial dot when the group size is not a multiple of 4.
+/// Both the packed engine and the grid oracle route through this exact
+/// sequence — it *defines* the engine's reduction order.
+#[inline]
+fn group_dot_grid(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() % 4 != 0 {
+        let mut p = 0f32;
+        for (x, y) in a.iter().zip(b) {
+            p += x * y;
+        }
+        return p;
+    }
+    let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);
+    let mut t = 0;
+    while t < a.len() {
+        p0 += a[t] * b[t];
+        p1 += a[t + 1] * b[t + 1];
+        p2 += a[t + 2] * b[t + 2];
+        p3 += a[t + 3] * b[t + 3];
+        t += 4;
+    }
+    (p0 + p1) + (p2 + p3)
+}
+
+/// Same reduction sequence over packed payload bytes via the decode LUTs.
+#[inline]
+fn group_dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() % 4 != 0 {
+        let mut p = 0f32;
+        for (x, y) in a.iter().zip(b) {
+            p += lut_a[*x as usize] * lut_b[*y as usize];
+        }
+        return p;
+    }
+    let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);
+    let mut t = 0;
+    while t < a.len() {
+        p0 += lut_a[a[t] as usize] * lut_b[b[t] as usize];
+        p1 += lut_a[a[t + 1] as usize] * lut_b[b[t + 1] as usize];
+        p2 += lut_a[a[t + 2] as usize] * lut_b[b[t + 2] as usize];
+        p3 += lut_a[a[t + 3] as usize] * lut_b[b[t + 3] as usize];
+        t += 4;
+    }
+    (p0 + p1) + (p2 + p3)
+}
+
+/// Tiled, multi-threaded microscaled GEMM over packed operands with the
+/// default configuration. `a` is [M, K], `bt` is [N, K] (B transposed);
+/// returns row-major `C[M, N]` in f32.
+pub fn packed_gemm(a: &PackedFp8Tensor, bt: &PackedFp8Tensor) -> Vec<f32> {
+    packed_gemm_with(a, bt, GemmConfig::default())
+}
+
+/// [`packed_gemm`] with explicit tiling/threading knobs.
+pub fn packed_gemm_with(a: &PackedFp8Tensor, bt: &PackedFp8Tensor, cfg: GemmConfig) -> Vec<f32> {
+    check_operands(a, bt);
+    let (m, n) = (a.rows, bt.rows);
+    let lut_a = a.fmt.decode_lut();
+    let lut_b = bt.fmt.decode_lut();
+    let exp2 = exp2_table();
+    let gscale = a.scale * bt.scale;
+    let nb = cfg.nb.max(1);
+    let mut c = vec![0f32; m * n];
+    let threads = cfg.threads.clamp(1, m.max(1));
+    let band = m.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        for (t, chunk) in c.chunks_mut(band * n.max(1)).enumerate() {
+            let (lut_a, lut_b, exp2) = (&lut_a, &lut_b, &exp2);
+            scope.spawn(move || {
+                gemm_band(a, bt, chunk, t * band, lut_a, lut_b, exp2, gscale, nb);
+            });
+        }
+    });
+    c
+}
+
+/// One thread's row band: C rows [i0, i0 + out.len()/N). Column blocks of
+/// `nb` keep an `nb x K` Bt payload tile L1-resident across the band.
+#[allow(clippy::too_many_arguments)]
+fn gemm_band(
+    a: &PackedFp8Tensor,
+    bt: &PackedFp8Tensor,
+    out: &mut [f32],
+    i0: usize,
+    lut_a: &[f32; 256],
+    lut_b: &[f32; 256],
+    exp2: &[f32],
+    gscale: f32,
+    nb: usize,
+) {
+    let (n, k, micro) = (bt.rows, a.cols, a.micro);
+    if n == 0 {
+        return;
+    }
+    let g = k / micro;
+    let rows_here = out.len() / n;
+    for jb in (0..n).step_by(nb) {
+        let je = (jb + nb).min(n);
+        for ii in 0..rows_here {
+            let i = i0 + ii;
+            let a_row = &a.data[i * k..(i + 1) * k];
+            let a_exp = &a.ss_exp[i * g..(i + 1) * g];
+            for j in jb..je {
+                let b_row = &bt.data[j * k..(j + 1) * k];
+                let b_exp = &bt.ss_exp[j * g..(j + 1) * g];
+                let mut acc = 0f32;
+                for gi in 0..g {
+                    let lo = gi * micro;
+                    let hi = lo + micro;
+                    let p = group_dot_packed(&a_row[lo..hi], &b_row[lo..hi], lut_a, lut_b);
+                    let e = a_exp[gi] as i32 + b_exp[gi] as i32 + EXP2_BIAS;
+                    acc += p * exp2[e as usize];
+                }
+                out[ii * n + j] = acc * gscale;
+            }
+        }
+    }
+}
+
+/// Naive (untiled, single-threaded) microscaled GEMM over the f32-grid
+/// representation — the reference oracle the packed engine must match
+/// bit-for-bit. `a` is [M, K], `bt` is [N, K], both `TwoLevelQuant`.
+pub fn reference_gemm_grid(a: &TwoLevelQuant, bt: &TwoLevelQuant) -> Vec<f32> {
+    assert_eq!(a.cols, bt.cols, "contraction dims differ");
+    assert_eq!(a.micro, bt.micro, "micro-group sizes differ");
+    let (m, n, k, micro) = (a.rows, bt.rows, a.cols, a.micro);
+    let g = k / micro;
+    let gscale = a.scale * bt.scale;
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for gi in 0..g {
+                let lo = gi * micro;
+                let hi = lo + micro;
+                let p = group_dot_grid(&a.q[i * k + lo..i * k + hi], &bt.q[j * k + lo..j * k + hi]);
+                let e = a.ss_exp[i * g + gi] as i32 + bt.ss_exp[j * g + gi] as i32;
+                acc += p * exp2i(e);
+            }
+            c[i * n + j] = acc * gscale;
+        }
+    }
+    c
+}
+
+/// The pre-packed-engine baseline: fully dequantize both operands to f32
+/// tensors, then run a textbook serial dot-product GEMM. This is what
+/// `quant::TwoLevelQuant` consumers had to do before `kernels::` existed;
+/// `benches/quant_hotpath.rs` measures the packed engine against it.
+pub fn dequant_then_naive_gemm(a: &PackedFp8Tensor, bt: &PackedFp8Tensor) -> Vec<f32> {
+    check_operands(a, bt);
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let adq = a.dequantize();
+    let btdq = bt.dequantize();
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for t in 0..k {
+                acc += adq[i * k + t] * btdq[j * k + t];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// f64 ground truth over the dequantized operands (accuracy bounds in the
+/// differential suite).
+pub fn dequant_gemm_f64(a: &PackedFp8Tensor, bt: &PackedFp8Tensor) -> Vec<f64> {
+    check_operands(a, bt);
+    let (m, n, k) = (a.rows, bt.rows, a.cols);
+    let adq = a.dequantize();
+    let btdq = bt.dequantize();
+    let mut c = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for t in 0..k {
+                acc += adq[i * k + t] as f64 * btdq[j * k + t] as f64;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::{E4M3, E5M2};
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn packed_pair(
+        m: usize,
+        n: usize,
+        k: usize,
+        seed: u64,
+    ) -> (PackedFp8Tensor, PackedFp8Tensor) {
+        let mut rng = Rng::new(seed);
+        let a = rng.activation_like(m, k, 1.5);
+        let b = rng.activation_like(n, k, 1.0);
+        (
+            PackedFp8Tensor::quantize(&a, m, k, 32, &E4M3),
+            PackedFp8Tensor::quantize(&b, n, k, 32, &E4M3),
+        )
+    }
+
+    #[test]
+    fn tiled_matches_oracle_bitwise_small() {
+        let mut rng = Rng::new(11);
+        let (m, n, k) = (17, 9, 96);
+        let a = rng.activation_like(m, k, 2.0);
+        let b = rng.activation_like(n, k, 1.0);
+        let ap = PackedFp8Tensor::quantize(&a, m, k, 32, &E4M3);
+        let bp = PackedFp8Tensor::quantize(&b, n, k, 32, &E5M2);
+        let ag = TwoLevelQuant::quantize(&a, m, k, 32, &E4M3);
+        let bg = TwoLevelQuant::quantize(&b, n, k, 32, &E5M2);
+        let tiled = packed_gemm_with(&ap, &bp, GemmConfig { nb: 4, threads: 3 });
+        let oracle = reference_gemm_grid(&ag, &bg);
+        for (i, (x, y)) in tiled.iter().zip(&oracle).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn thread_and_tile_counts_do_not_change_bits() {
+        let (ap, bp) = packed_pair(23, 31, 64, 5);
+        let base = packed_gemm_with(&ap, &bp, GemmConfig { nb: 1, threads: 1 });
+        for (nb, threads) in [(2, 2), (7, 4), (64, 8), (31, 23)] {
+            let c = packed_gemm_with(&ap, &bp, GemmConfig { nb, threads });
+            assert_eq!(c.len(), base.len());
+            for (x, y) in c.iter().zip(&base) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nb={nb} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn close_to_f64_ground_truth() {
+        let (ap, bp) = packed_pair(16, 16, 128, 9);
+        let c = packed_gemm(&ap, &bp);
+        let truth = dequant_gemm_f64(&ap, &bp);
+        let scale = truth.iter().fold(0f64, |acc, v| acc.max(v.abs()));
+        for (x, t) in c.iter().zip(&truth) {
+            assert!((*x as f64 - t).abs() <= 1e-5 * scale + 1e-6, "{x} vs {t}");
+        }
+    }
+
+    #[test]
+    fn baseline_agrees_within_tolerance() {
+        let (ap, bp) = packed_pair(8, 8, 64, 3);
+        let packed = packed_gemm(&ap, &bp);
+        let baseline = dequant_then_naive_gemm(&ap, &bp);
+        let scale = baseline.iter().fold(0f32, |acc, v| acc.max(v.abs()));
+        for (x, y) in packed.iter().zip(&baseline) {
+            assert!((x - y).abs() <= 1e-4 * scale + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn exp2_table_spans_the_e8m0_sum_range() {
+        assert_eq!(exp2i(0), 1.0);
+        assert_eq!(exp2i(-1), 0.5);
+        assert_eq!(exp2i(127), 2f32.powi(127));
+        assert_eq!(exp2i(-254), 0.0); // below f32 subnormals: flushes
+        let t = exp2_table();
+        assert_eq!(t.len(), EXP2_LEN);
+        assert_eq!(t[EXP2_BIAS as usize].to_bits(), 1f32.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction dims differ")]
+    fn mismatched_k_is_rejected() {
+        let (ap, _) = packed_pair(4, 4, 32, 1);
+        let (_, bp) = packed_pair(4, 4, 64, 2);
+        packed_gemm(&ap, &bp);
+    }
+}

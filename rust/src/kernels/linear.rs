@@ -1,0 +1,158 @@
+//! Linear-layer forward/backward routed through the packed GEMM — the
+//! host-side execution path of one quantized linear (the three GEMMs of
+//! FP8 training, paper §2.1), with the paper's format recipe: E4M3 for
+//! activations and weights, E5M2 for gradients.
+//!
+//! Every GEMM quantizes its operands along its own contraction dimension
+//! (micro-groups must run along K for the in-loop exponent adds to be
+//! well-formed), which is why the backward pass re-quantizes transposed
+//! views instead of reusing the forward packing — the same re-quantize-
+//! per-layout rule real MX training engines follow.
+
+use crate::formats::fp8::{E4M3, E5M2};
+
+use super::gemm::packed_gemm;
+use super::packed::PackedFp8Tensor;
+
+/// Row-major transpose: [rows, cols] -> [cols, rows].
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols);
+    let mut out = vec![0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = x[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Forward: `Y[M,N] = X[M,K] @ W[K,N]`, both operands quantized E4M3
+/// two-level microscaled, executed by the packed tiled GEMM.
+/// Requires `K % micro == 0`.
+pub fn linear_forward_packed(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    micro: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let xa = PackedFp8Tensor::quantize(x, m, k, micro, &E4M3);
+    let wt = transpose(w, k, n); // [N, K]: groups along K
+    let wb = PackedFp8Tensor::quantize(&wt, n, k, micro, &E4M3);
+    packed_gemm(&xa, &wb)
+}
+
+/// Backward: given `dY[M,N]`, produce
+/// `dX[M,K] = dY @ W^T` (contraction over N) and
+/// `dW[K,N] = X^T @ dY` (contraction over M).
+/// Gradients quantize E5M2, saved activations/weights E4M3.
+/// Requires `N % micro == 0` and `M % micro == 0`.
+pub fn linear_backward_packed(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    micro: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(dy.len(), m * n);
+    // dX: dY is [M, N] grouped along N; W is already [K, N] row-major,
+    // i.e. exactly the transposed-operand layout the GEMM consumes.
+    let dya = PackedFp8Tensor::quantize(dy, m, n, micro, &E5M2);
+    let wb = PackedFp8Tensor::quantize(w, k, n, micro, &E4M3);
+    let dx = packed_gemm(&dya, &wb);
+    // dW: X^T is [K, M] grouped along M; dY^T is [N, M] likewise.
+    let xt = transpose(x, m, k);
+    let xa = PackedFp8Tensor::quantize(&xt, k, m, micro, &E4M3);
+    let dyt = transpose(dy, m, n);
+    let dyb = PackedFp8Tensor::quantize(&dyt, n, m, micro, &E5M2);
+    let dw = packed_gemm(&xa, &dyb);
+    (dx, dw)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn f64_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..k {
+                    acc += a[i * k + t] as f64 * b[t * n + j] as f64;
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn assert_close(got: &[f32], want: &[f64], rel: f64) {
+        let scale = want.iter().fold(0f64, |a, v| a.max(v.abs())).max(1e-12);
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!((*g as f64 - w).abs() <= rel * scale, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let t = transpose(&x, 3, 4);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // (1,0) of the transposed [4,3]
+        assert_eq!(transpose(&t, 4, 3), x);
+    }
+
+    #[test]
+    fn forward_tracks_exact_matmul() {
+        let (m, k, n) = (16, 64, 24);
+        let mut rng = Rng::new(21);
+        let x = rng.activation_like(m, k, 1.0);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+        let y = linear_forward_packed(&x, m, k, &w, n, 32);
+        // FP8 quantization noise only: a few percent of the output scale.
+        assert_close(&y, &f64_matmul(&x, &w, m, k, n), 0.05);
+    }
+
+    #[test]
+    fn backward_shapes_and_accuracy() {
+        let (m, k, n) = (32, 48, 64);
+        let mut rng = Rng::new(22);
+        let x = rng.activation_like(m, k, 1.0);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal_f32()).collect();
+        let (dx, dw) = linear_backward_packed(&x, &w, &dy, m, k, n, 32);
+        assert_eq!(dx.len(), m * k);
+        assert_eq!(dw.len(), k * n);
+        // dX = dY @ W^T
+        let wt = transpose(&w, k, n);
+        assert_close(&dx, &f64_matmul(&dy, &wt, m, n, k), 0.08);
+        // dW = X^T @ dY
+        let xt = transpose(&x, m, k);
+        assert_close(&dw, &f64_matmul(&xt, &dy, k, m, n), 0.08);
+    }
+
+    #[test]
+    fn gradient_format_is_wider_range() {
+        // E5M2 grads survive magnitudes E4M3 would clip: the packed
+        // backward must keep a 1e4-magnitude gradient finite and close.
+        let (m, k, n) = (32, 32, 32);
+        let mut rng = Rng::new(23);
+        let x = rng.activation_like(m, k, 1.0);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal_f32() * 1e4).collect();
+        let (dx, _) = linear_backward_packed(&x, &w, &dy, m, k, n, 32);
+        assert!(dx.iter().all(|v| v.is_finite()));
+        let wt = transpose(&w, k, n);
+        assert_close(&dx, &f64_matmul(&dy, &wt, m, n, k), 0.08);
+    }
+}

@@ -1,0 +1,36 @@
+//! Packed-FP8 execution engine — the layer that turns the quantizers and
+//! the `gemm_sim` cost model into *running* kernels.
+//!
+//! The quant layer (`quant::twolevel`) describes two-level microscaled
+//! tensors as FP8-grid `Vec<f32>` values; this module gives the same
+//! tensors their native storage and an executable GEMM over it:
+//!
+//! * [`packed`] — [`PackedFp8Tensor`]: contiguous `u8` FP8 payloads
+//!   (1 B/elem via `Fp8Format::encode`), per-32 E8M0 micro-exponents
+//!   (`i8`), and one FP32 global scale — exactly `TwoLevelQuant`'s
+//!   logical layout, materialized. 256-entry decode LUTs per format.
+//! * [`gemm`] — a cache-blocked, multi-threaded tiled GEMM that consumes
+//!   packed operands directly, applying subscale exponent adds per
+//!   micro-group **inside** the K loop and a single FP32 global rescale
+//!   in the epilogue — the MOSS schedule of paper Fig. 3b that
+//!   `gemm_sim::schedule` only costs out.
+//! * [`linear`] — forward/backward of one linear layer routed through
+//!   the packed GEMM with the paper's format recipe (E4M3 for
+//!   activations/weights, E5M2 for gradients), used by the coordinator's
+//!   host execution path.
+//!
+//! Numerics contract (locked down by `tests/packed_gemm_differential.rs`):
+//! the packed path is **bit-identical** to the f32-grid oracle — LUT
+//! decode equals `TwoLevelQuant`'s grid floats payload-for-payload, and
+//! the tiled threaded GEMM reproduces the naive grid-schedule GEMM
+//! exactly, because tiling/threading never reorders the per-output-element
+//! f32 operation sequence (groups accumulate in K order; scaling by a
+//! power of two per group and one global rescale at the end).
+
+pub mod gemm;
+pub mod linear;
+pub mod packed;
+
+pub use gemm::{dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid};
+pub use linear::{linear_backward_packed, linear_forward_packed};
+pub use packed::PackedFp8Tensor;

@@ -1,0 +1,174 @@
+//! Native storage for two-level microscaled FP8 tensors.
+//!
+//! `TwoLevelQuant` keeps its payload as `Vec<f32>` grid values — ideal as
+//! a reference oracle, useless as a storage or kernel story. This module
+//! materializes the layout the paper (and the OCP MX spec) actually
+//! describes:
+//!
+//! ```text
+//! PackedFp8Tensor, row-major [rows, cols], micro = 32:
+//!   data   : [u8; rows*cols]        1 B/elem FP8 payload (E4M3 or E5M2)
+//!   ss_exp : [i8; rows*cols/32]     level-2 E8M0 micro-exponent per group
+//!   scale  : f32                    level-1 global scale (4 B total)
+//! ```
+//!
+//! Dequantized value of element (r, c):
+//! `lut[data[r*cols+c]] * scale * 2^ss_exp[r*(cols/32) + c/32]`.
+//!
+//! Bit-compatibility with the grid path is structural: `encode` rounds to
+//! the grid first, and `decode(encode(g)) == g` for every grid value `g`
+//! (the codec round-trip property tested in `formats::fp8`), so LUT
+//! decode reproduces `TwoLevelQuant.q` payload-for-payload.
+
+use crate::formats::e8m0;
+use crate::formats::fp8::Fp8Format;
+use crate::quant::TwoLevelQuant;
+
+/// A two-level microscaled FP8 tensor in native packed storage.
+#[derive(Debug, Clone)]
+pub struct PackedFp8Tensor {
+    /// Row-major [rows, cols] FP8 payload bytes.
+    pub data: Vec<u8>,
+    /// Level-1 global FP32 scale.
+    pub scale: f32,
+    /// Row-major [rows, cols/micro] level-2 E8M0 exponents.
+    pub ss_exp: Vec<i8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub micro: usize,
+    /// Payload format (E4M3 for activations/weights, E5M2 for grads).
+    pub fmt: Fp8Format,
+}
+
+impl PackedFp8Tensor {
+    /// Quantize a row-major [rows, cols] f32 tensor straight into packed
+    /// storage. The scale staging (Eq. 2/3) is the *same code* as
+    /// `TwoLevelQuant::quantize` (`quant::twolevel::two_level_scales`);
+    /// the only difference is `Fp8Format::encode` instead of grid floats.
+    pub fn quantize(xs: &[f32], rows: usize, cols: usize, micro: usize, fmt: &Fp8Format) -> Self {
+        let (scale, ss_exp) = crate::quant::twolevel::two_level_scales(xs, rows, cols, micro, fmt);
+        let g = cols / micro;
+        let mut data = vec![0u8; xs.len()];
+        for r in 0..rows {
+            for gi in 0..g {
+                let eff = scale * e8m0::decode(ss_exp[r * g + gi]);
+                for j in 0..micro {
+                    let idx = r * cols + gi * micro + j;
+                    data[idx] = fmt.encode(xs[idx] / eff);
+                }
+            }
+        }
+        PackedFp8Tensor { data, scale, ss_exp, rows, cols, micro, fmt: *fmt }
+    }
+
+    /// Pack an existing f32-grid quantization in its own recorded format
+    /// (no re-rounding: the grid values encode losslessly). This is the
+    /// bridge the differential suite leans on:
+    /// `from_twolevel(q).dequantize()` must equal `q.dequantize()` bit
+    /// for bit.
+    pub fn from_twolevel(q: &TwoLevelQuant) -> Self {
+        let data = q.q.iter().map(|&v| q.fmt.encode(v)).collect();
+        PackedFp8Tensor {
+            data,
+            scale: q.scale,
+            ss_exp: q.ss_exp.clone(),
+            rows: q.rows,
+            cols: q.cols,
+            micro: q.micro,
+            fmt: q.fmt,
+        }
+    }
+
+    /// Number of micro-groups per row.
+    pub fn groups_per_row(&self) -> usize {
+        self.cols / self.micro
+    }
+
+    /// Dequantize through the 256-entry LUT. Matches
+    /// `TwoLevelQuant::dequantize` bitwise on packed-equivalent inputs.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let lut = self.fmt.decode_lut();
+        let g = self.groups_per_row();
+        let mut out = vec![0f32; self.data.len()];
+        for r in 0..self.rows {
+            for gi in 0..g {
+                let eff = self.scale * e8m0::decode(self.ss_exp[r * g + gi]);
+                for j in 0..self.micro {
+                    let idx = r * self.cols + gi * self.micro + j;
+                    out[idx] = lut[self.data[idx] as usize] * eff;
+                }
+            }
+        }
+        out
+    }
+
+    /// Grid floats (unscaled payload values) via the LUT — the packed
+    /// counterpart of `TwoLevelQuant.q`, used by the differential tests.
+    pub fn grid_values(&self) -> Vec<f32> {
+        let lut = self.fmt.decode_lut();
+        self.data.iter().map(|&b| lut[b as usize]).collect()
+    }
+
+    /// Actual bytes of native storage: 1 B/elem payload + 1 B/micro-group
+    /// E8M0 + 4 B global scale — the paper's storage argument, now
+    /// measured on real buffers instead of computed from counts.
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len() + self.ss_exp.len() + std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::{E4M3, E5M2};
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    #[test]
+    fn quantize_matches_twolevel_bitwise() {
+        for (fmt, seed) in [(E4M3, 1u64), (E5M2, 2)] {
+            let xs = Rng::new(seed).activation_like(16, 128, 2.0);
+            let packed = PackedFp8Tensor::quantize(&xs, 16, 128, 32, &fmt);
+            let grid = TwoLevelQuant::quantize(&xs, 16, 128, 32, &fmt);
+            assert_eq!(packed.scale.to_bits(), grid.scale.to_bits(), "{}", fmt.name);
+            assert_eq!(packed.ss_exp, grid.ss_exp, "{}", fmt.name);
+            let gv = packed.grid_values();
+            for (i, (p, q)) in gv.iter().zip(&grid.q).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{} elem {i}", fmt.name);
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_matches_twolevel_bitwise() {
+        let xs = Rng::new(3).activation_like(8, 96, 1.5);
+        let grid = TwoLevelQuant::quantize(&xs, 8, 96, 32, &E4M3);
+        let packed = PackedFp8Tensor::from_twolevel(&grid);
+        let a = packed.dequantize();
+        let b = grid.dequantize();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn storage_is_one_byte_per_element_plus_metadata() {
+        let xs = vec![0.25f32; 64 * 256];
+        let p = PackedFp8Tensor::quantize(&xs, 64, 256, 32, &E4M3);
+        assert_eq!(p.data.len(), 64 * 256);
+        assert_eq!(p.ss_exp.len(), 64 * 8);
+        assert_eq!(p.payload_bytes(), 64 * 256 + 64 * 8 + 4);
+        // ~3.9x smaller than the f32 grid representation
+        assert!(p.payload_bytes() * 3 < 64 * 256 * 4);
+    }
+
+    #[test]
+    fn negative_and_zero_payloads_roundtrip() {
+        let xs = vec![0.0f32, -0.0, 1.0, -1.0, 448.0, -448.0, 1e-9, -1e-9];
+        let p = PackedFp8Tensor::quantize(&xs, 1, 8, 8, &E4M3);
+        let q = TwoLevelQuant::quantize(&xs, 1, 8, 8, &E4M3);
+        for (a, b) in p.grid_values().iter().zip(&q.q) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -23,6 +23,7 @@ pub mod distsim;
 pub mod eval;
 pub mod formats;
 pub mod gemm_sim;
+pub mod kernels;
 pub mod metrics;
 pub mod optim;
 pub mod quant;

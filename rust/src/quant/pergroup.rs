@@ -15,6 +15,9 @@ pub struct PerGroupQuant {
     pub rows: usize,
     pub cols: usize,
     pub group: usize,
+    /// Grid format the payload was rounded onto — recorded so packed
+    /// emission cannot re-round through the wrong format.
+    pub fmt: Fp8Format,
 }
 
 impl PerGroupQuant {
@@ -37,7 +40,7 @@ impl PerGroupQuant {
                 }
             }
         }
-        PerGroupQuant { q, scales, rows, cols, group }
+        PerGroupQuant { q, scales, rows, cols, group, fmt: *fmt }
     }
 
     pub fn dequantize(&self) -> Vec<f32> {
@@ -70,6 +73,23 @@ impl PerGroupQuant {
     /// Payload bytes if stored natively (1 B/elem + 4 B/group scale).
     pub fn payload_bytes(&self) -> usize {
         self.q.len() + 4 * self.scales.len()
+    }
+
+    /// Emit the native `u8` payload bytes for the grid values in the
+    /// format the tensor was quantized with (COAT keeps FP32 group
+    /// scales, so unlike the two-level path there is no E8M0 metadata —
+    /// just payloads + `self.scales`). Lossless: every grid value
+    /// encodes/decodes exactly, so `decode_lut[payload[i]] == q[i]`
+    /// bit for bit.
+    pub fn packed_payload(&self) -> Vec<u8> {
+        self.q.iter().map(|&v| self.fmt.encode(v)).collect()
+    }
+
+    /// Reconstruct the f32-grid payload from packed bytes via the decode
+    /// LUT (inverse of [`Self::packed_payload`]).
+    pub fn grid_from_payload(payload: &[u8], fmt: &Fp8Format) -> Vec<f32> {
+        let lut = fmt.decode_lut();
+        payload.iter().map(|&b| lut[b as usize]).collect()
     }
 }
 
@@ -119,5 +139,17 @@ mod tests {
         let xs = vec![0.5f32; 256];
         let q = PerGroupQuant::quantize(&xs, 2, 128, 128, &E4M3);
         assert_eq!(q.payload_bytes(), 256 + 8);
+    }
+
+    #[test]
+    fn packed_payload_roundtrips_bitwise() {
+        let xs = Rng::new(7).activation_like(8, 256, 2.0);
+        let q = PerGroupQuant::quantize(&xs, 8, 256, 128, &E4M3);
+        let payload = q.packed_payload();
+        assert_eq!(payload.len(), q.q.len());
+        let grid = PerGroupQuant::grid_from_payload(&payload, &E4M3);
+        for (i, (a, b)) in grid.iter().zip(&q.q).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}");
+        }
     }
 }

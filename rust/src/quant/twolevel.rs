@@ -25,27 +25,48 @@ pub struct TwoLevelQuant {
     pub rows: usize,
     pub cols: usize,
     pub micro: usize,
+    /// Grid format the payload was rounded onto (E4M3 or E5M2) —
+    /// recorded so packed emission cannot re-round through the wrong
+    /// format.
+    pub fmt: Fp8Format,
+}
+
+/// The shared scale staging of two-level microscaling (paper Eq. 2/3):
+/// per-micro-group FP32 fine scales -> one global scale -> E8M0 ceil
+/// subscale exponents. Both the f32-grid oracle (`TwoLevelQuant`) and
+/// the packed engine (`kernels::PackedFp8Tensor`) route through this
+/// single implementation so their scales cannot drift apart.
+pub(crate) fn two_level_scales(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    micro: usize,
+    fmt: &Fp8Format,
+) -> (f32, Vec<i8>) {
+    assert_eq!(xs.len(), rows * cols);
+    assert_eq!(cols % micro, 0, "cols {cols} % micro {micro} != 0");
+    let g = cols / micro;
+    // Stage 1 (Eq. 2): fine-grained FP32 scales per micro-group.
+    let mut s_i = Vec::with_capacity(rows * g);
+    for r in 0..rows {
+        let row = &xs[r * cols..(r + 1) * cols];
+        for gi in 0..g {
+            let amax = row[gi * micro..(gi + 1) * micro]
+                .iter()
+                .fold(0f32, |a, &x| a.max(x.abs()));
+            s_i.push((amax / fmt.max).max(SCALE_EPS));
+        }
+    }
+    // Stage 2 (Eq. 3): global scale + E8M0 subscales.
+    let scale = s_i.iter().fold(0f32, |a, &x| a.max(x));
+    let ss_exp: Vec<i8> = s_i.iter().map(|&si| e8m0::encode_ceil(si / scale)).collect();
+    (scale, ss_exp)
 }
 
 impl TwoLevelQuant {
     pub fn quantize(xs: &[f32], rows: usize, cols: usize, micro: usize, fmt: &Fp8Format) -> Self {
-        assert_eq!(xs.len(), rows * cols);
-        assert_eq!(cols % micro, 0, "cols {cols} % micro {micro} != 0");
+        let (scale, ss_exp) = two_level_scales(xs, rows, cols, micro, fmt);
         let g = cols / micro;
-        // Stage 1 (Eq. 2): fine-grained FP32 scales per micro-group.
-        let mut s_i = Vec::with_capacity(rows * g);
-        for r in 0..rows {
-            let row = &xs[r * cols..(r + 1) * cols];
-            for gi in 0..g {
-                let amax = row[gi * micro..(gi + 1) * micro]
-                    .iter()
-                    .fold(0f32, |a, &x| a.max(x.abs()));
-                s_i.push((amax / fmt.max).max(SCALE_EPS));
-            }
-        }
-        // Stage 2 (Eq. 3): global scale + E8M0 subscales.
-        let scale = s_i.iter().fold(0f32, |a, &x| a.max(x));
-        let ss_exp: Vec<i8> = s_i.iter().map(|&si| e8m0::encode_ceil(si / scale)).collect();
         let mut q = vec![0f32; xs.len()];
         for r in 0..rows {
             for gi in 0..g {
@@ -56,7 +77,7 @@ impl TwoLevelQuant {
                 }
             }
         }
-        TwoLevelQuant { q, scale, ss_exp, rows, cols, micro }
+        TwoLevelQuant { q, scale, ss_exp, rows, cols, micro, fmt: *fmt }
     }
 
     pub fn dequantize(&self) -> Vec<f32> {
@@ -92,6 +113,15 @@ impl TwoLevelQuant {
     /// the paper's storage argument.
     pub fn payload_bytes(&self) -> usize {
         self.q.len() + self.ss_exp.len() + 4
+    }
+
+    /// Emit the native packed representation (`u8` payloads + `i8` E8M0
+    /// exponents + FP32 scale) this grid-float form describes, in the
+    /// format the tensor was quantized with. The grid path stays the
+    /// reference oracle; `kernels::` executes on the packed form.
+    /// Lossless: grid values encode/decode exactly.
+    pub fn to_packed(&self) -> crate::kernels::PackedFp8Tensor {
+        crate::kernels::PackedFp8Tensor::from_twolevel(self)
     }
 }
 

@@ -1,0 +1,101 @@
+//! Golden-fixture tests for `runtime::artifact` manifest parsing — the
+//! Rust mirror of `python/tests/test_aot_manifest.py`: a known-good
+//! manifest parses into exactly the expected contract, and each
+//! corruption class (malformed JSON, missing fields, unknown dtypes,
+//! unknown kernel names, absent file) fails loudly with a diagnosable
+//! error instead of a panic or a silently wrong spec.
+
+use std::path::{Path, PathBuf};
+
+use moss::runtime::artifact::{DType, Manifest};
+
+fn fixture(name: &str) -> PathBuf {
+    // CARGO_MANIFEST_DIR keeps the paths correct regardless of the
+    // working directory cargo test runs each binary from.
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+#[test]
+fn valid_manifest_parses_into_the_full_contract() {
+    let man = Manifest::load(&fixture("manifest_valid")).unwrap();
+    assert_eq!(man.config_name, "golden");
+    // model dims
+    assert_eq!(man.model.vocab, 256);
+    assert_eq!(man.model.dim, 64);
+    assert_eq!(man.model.layers, 2);
+    assert_eq!(man.model.ffn, 256);
+    assert_eq!(man.model.micro, 32);
+    assert_eq!(man.model.group, 128);
+    assert_eq!(man.model.param_count, 315648);
+    // optimizer hyperparameters (the python test checks beta2 == 0.95)
+    assert_eq!(man.adamw.beta1, 0.9);
+    assert_eq!(man.adamw.beta2, 0.95);
+    assert_eq!(man.adamw.weight_decay, 0.1);
+    assert_eq!(man.adamw.grad_clip, 1.0);
+    // name lists preserve manifest order (the runtime calling convention)
+    assert_eq!(man.param_names.len(), 9);
+    assert_eq!(man.param_names[0], "embed");
+    assert_eq!(man.linear_names, vec!["wqkv", "wo", "w_up", "w_down"]);
+    assert_eq!(man.n_linears(), 8);
+}
+
+#[test]
+fn valid_manifest_program_io_specs() {
+    let man = Manifest::load(&fixture("manifest_valid")).unwrap();
+    let absmax = man.program("weight_absmax").unwrap();
+    assert_eq!(absmax.inputs.len(), 4);
+    assert_eq!(absmax.outputs.len(), 1);
+    assert_eq!(absmax.inputs[0].name, "wqkv");
+    assert_eq!(absmax.inputs[0].dtype, DType::F32);
+    assert_eq!(absmax.inputs[0].shape, vec![2, 64, 192]);
+    assert_eq!(absmax.inputs[0].elems(), 2 * 64 * 192);
+    assert_eq!(absmax.inputs[0].bytes(), 2 * 64 * 192 * 4);
+    assert_eq!(absmax.input_index("w_down").unwrap(), 3);
+    assert!(absmax.input_index("nonexistent").is_err());
+    // the quantizer program carries the i8 E8M0 output
+    let quant = man.program("quant_moss").unwrap();
+    assert_eq!(quant.outputs[2].dtype, DType::I8);
+    assert_eq!(quant.outputs[2].bytes(), 64 * 8);
+    assert_eq!(quant.output_index("ss_exp").unwrap(), 2);
+    // scalar (rank-0) input shapes parse to empty dims
+    let init = man.program("init_params").unwrap();
+    assert_eq!(init.inputs[0].shape, Vec::<usize>::new());
+    assert_eq!(init.inputs[0].elems(), 1);
+}
+
+#[test]
+fn unknown_kernel_name_is_a_lookup_error() {
+    let man = Manifest::load(&fixture("manifest_valid")).unwrap();
+    let err = man.program("train_step_fp4").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("train_step_fp4"), "{msg}");
+}
+
+#[test]
+fn malformed_json_is_a_parse_error_not_a_panic() {
+    let err = Manifest::load(&fixture("manifest_malformed")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "error should name the file: {msg}");
+}
+
+#[test]
+fn missing_model_field_is_reported_by_key() {
+    // The fixture's model block has no "vocab".
+    let err = Manifest::load(&fixture("manifest_missing_fields")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("vocab"), "error should name the missing key: {msg}");
+}
+
+#[test]
+fn unknown_dtype_in_program_specs_is_rejected() {
+    let err = Manifest::load(&fixture("manifest_bad_dtype")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("f64"), "error should name the bad dtype: {msg}");
+}
+
+#[test]
+fn absent_manifest_directory_mentions_the_build_step() {
+    let err = Manifest::load(&fixture("no_such_config")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}

@@ -1,0 +1,210 @@
+//! Differential suite: the packed-`u8` FP8 engine vs the f32-grid oracle.
+//!
+//! The contract under test (see `kernels::gemm` module docs):
+//!
+//! 1. **Codec/LUT** — the 256-entry decode LUT equals `Fp8Format::decode`
+//!    on every byte, and encode/decode round-trips every canonical finite
+//!    payload for both formats.
+//! 2. **Storage** — `PackedFp8Tensor::quantize` produces byte payloads
+//!    whose LUT decode is bit-identical to `TwoLevelQuant::quantize`'s
+//!    f32-grid values (same scales, same E8M0 exponents).
+//! 3. **Kernel** — the cache-blocked multi-threaded packed GEMM is
+//!    bit-identical to the naive single-threaded GEMM over the grid
+//!    representation, across shapes, formats and tiling configs. This is
+//!    achievable (and meaningful) because both fix the same per-output
+//!    f32 operation sequence; tiling, threading and `u8`+LUT storage are
+//!    exactly the things being proven not to change a single bit.
+//! 4. **Accuracy** — against the dequantize-then-f32 baseline the packed
+//!    path agrees to quantization-noise tolerance (bit-equality is
+//!    impossible there *by design*: the baseline rounds `q * scale` per
+//!    element before the dot, while the MOSS schedule defers scales to
+//!    group boundaries and the epilogue — the whole point of Fig. 3b).
+
+use moss::formats::fp8::{Fp8Format, E4M3, E5M2};
+use moss::kernels::gemm::{dequant_gemm_f64, GemmConfig};
+use moss::kernels::{
+    dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid, PackedFp8Tensor,
+};
+use moss::quant::TwoLevelQuant;
+use moss::util::rng::Rng;
+use moss::MICRO_GROUP;
+
+const FORMATS: [Fp8Format; 2] = [E4M3, E5M2];
+
+#[test]
+fn lut_matches_decode_on_all_256_payloads() {
+    for fmt in FORMATS {
+        let lut = fmt.decode_lut();
+        for b in 0u8..=255 {
+            let direct = fmt.decode(b);
+            let via_lut = lut[b as usize];
+            if direct.is_nan() {
+                assert!(via_lut.is_nan(), "{} payload {b:#04x}", fmt.name);
+            } else {
+                assert_eq!(via_lut.to_bits(), direct.to_bits(), "{} payload {b:#04x}", fmt.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn all_canonical_payloads_roundtrip_through_encode() {
+    // Every byte whose decode is a finite in-range value must encode back
+    // to itself: the payload space is the storage format, so a single
+    // non-roundtripping byte would corrupt packed tensors silently.
+    for fmt in FORMATS {
+        let lut = fmt.decode_lut();
+        let mut checked = 0usize;
+        for b in 0u8..=255 {
+            let v = lut[b as usize];
+            if !v.is_finite() || v.abs() > fmt.max {
+                continue; // E5M2 inf/NaN region, E4M3 NaN + out-of-grid
+            }
+            assert_eq!(fmt.encode(v), b, "{} payload {b:#04x} ({v})", fmt.name);
+            checked += 1;
+        }
+        // sanity: the roundtrip covered nearly the whole payload space
+        assert!(checked >= 240, "{}: only {checked} payloads checked", fmt.name);
+    }
+}
+
+#[test]
+fn packed_quantize_is_bitwise_equal_to_grid_quantize() {
+    for fmt in FORMATS {
+        for (rows, cols, sigma, seed) in
+            [(4usize, 64usize, 1.0f64, 1u64), (16, 256, 2.0, 2), (64, 512, 2.5, 3)]
+        {
+            let xs = Rng::new(seed).activation_like(rows, cols, sigma);
+            let packed = PackedFp8Tensor::quantize(&xs, rows, cols, MICRO_GROUP, &fmt);
+            let grid = TwoLevelQuant::quantize(&xs, rows, cols, MICRO_GROUP, &fmt);
+            assert_eq!(packed.scale.to_bits(), grid.scale.to_bits(), "{} scale", fmt.name);
+            assert_eq!(packed.ss_exp, grid.ss_exp, "{} ss_exp", fmt.name);
+            let gv = packed.grid_values();
+            for (i, (p, q)) in gv.iter().zip(&grid.q).enumerate() {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "{} [{rows}x{cols}] elem {i}: {p} vs {q}",
+                    fmt.name
+                );
+            }
+            // and the dequantized tensors match bit for bit too
+            for (i, (p, q)) in packed.dequantize().iter().zip(&grid.dequantize()).enumerate() {
+                assert_eq!(p.to_bits(), q.to_bits(), "{} dequant elem {i}", fmt.name);
+            }
+            // both construction routes (direct quantize vs grid-then-pack)
+            // must produce identical bytes
+            let via_grid = grid.to_packed();
+            assert_eq!(via_grid.data, packed.data, "{} to_packed bytes", fmt.name);
+            assert_eq!(via_grid.ss_exp, packed.ss_exp, "{} to_packed exps", fmt.name);
+        }
+    }
+}
+
+#[test]
+fn tiled_packed_gemm_is_bitwise_equal_to_grid_oracle() {
+    // Several shapes (including ragged M/N), both formats, micro = 32.
+    let shapes: [(usize, usize, usize); 5] =
+        [(4, 4, 32), (16, 8, 64), (33, 17, 96), (64, 48, 256), (128, 96, 512)];
+    for fmt in FORMATS {
+        for (m, n, k) in shapes {
+            let mut rng = Rng::new((m * 31 + n * 7 + k) as u64);
+            let a = rng.activation_like(m, k, 1.5);
+            let b = rng.activation_like(n, k, 1.0);
+            let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &fmt);
+            let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &fmt);
+            let ag = TwoLevelQuant::quantize(&a, m, k, MICRO_GROUP, &fmt);
+            let bg = TwoLevelQuant::quantize(&b, n, k, MICRO_GROUP, &fmt);
+            let packed = packed_gemm(&ap, &bp);
+            let oracle = reference_gemm_grid(&ag, &bg);
+            assert_eq!(packed.len(), oracle.len());
+            for (i, (x, y)) in packed.iter().zip(&oracle).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{} {m}x{n}x{k} elem {i}: {x} vs {y}",
+                    fmt.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_format_gemm_matches_oracle_bitwise() {
+    // The backward pass multiplies E5M2 gradients by E4M3 weights; the
+    // bit-exactness contract must hold across mixed operand formats.
+    let (m, n, k) = (48, 32, 128);
+    let mut rng = Rng::new(77);
+    let a = rng.activation_like(m, k, 2.0);
+    let b = rng.activation_like(n, k, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &E5M2);
+    let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &E4M3);
+    let ag = TwoLevelQuant::quantize(&a, m, k, MICRO_GROUP, &E5M2);
+    let bg = TwoLevelQuant::quantize(&b, n, k, MICRO_GROUP, &E4M3);
+    let packed = packed_gemm(&ap, &bp);
+    let oracle = reference_gemm_grid(&ag, &bg);
+    for (i, (x, y)) in packed.iter().zip(&oracle).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "elem {i}");
+    }
+}
+
+#[test]
+fn every_tiling_and_thread_count_is_bitwise_stable() {
+    let (m, n, k) = (37, 29, 160);
+    let mut rng = Rng::new(13);
+    let a = rng.activation_like(m, k, 1.5);
+    let b = rng.activation_like(n, k, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &E4M3);
+    let base = packed_gemm_with(&ap, &bp, GemmConfig { nb: 1, threads: 1 });
+    for nb in [2usize, 3, 8, 29, 64, 1024] {
+        for threads in [1usize, 2, 3, 5, 16, 64] {
+            let c = packed_gemm_with(&ap, &bp, GemmConfig { nb, threads });
+            for (i, (x, y)) in c.iter().zip(&base).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "nb={nb} threads={threads} elem {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_tracks_f64_ground_truth_and_baseline() {
+    let (m, n, k) = (32, 32, 256);
+    let mut rng = Rng::new(5);
+    let a = rng.activation_like(m, k, 1.5);
+    let b = rng.activation_like(n, k, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &E4M3);
+    let packed = packed_gemm(&ap, &bp);
+    let truth = dequant_gemm_f64(&ap, &bp);
+    let baseline = dequant_then_naive_gemm(&ap, &bp);
+    let scale = truth.iter().fold(0f64, |acc, v| acc.max(v.abs())).max(1e-12);
+    for ((p, t), bl) in packed.iter().zip(&truth).zip(&baseline) {
+        // both f32 paths sit within f32-accumulation distance of f64
+        assert!((*p as f64 - t).abs() <= 1e-5 * scale, "{p} vs {t}");
+        assert!((*bl as f64 - t).abs() <= 1e-5 * scale, "{bl} vs {t}");
+    }
+}
+
+#[test]
+fn zero_and_degenerate_shapes() {
+    // All-zero operands: every payload byte is 0 (or 0x80), output is 0.
+    let zeros = vec![0f32; 4 * 32];
+    let zp = PackedFp8Tensor::quantize(&zeros, 4, 32, MICRO_GROUP, &E4M3);
+    assert!(zp.data.iter().all(|&b| b == 0 || b == 0x80));
+    let c = packed_gemm(&zp, &zp);
+    assert!(c.iter().all(|&v| v == 0.0));
+    // Single-row / single-column shapes.
+    let mut rng = Rng::new(99);
+    let a = rng.activation_like(1, 32, 1.0);
+    let b = rng.activation_like(1, 32, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, 1, 32, MICRO_GROUP, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b, 1, 32, MICRO_GROUP, &E4M3);
+    let ag = TwoLevelQuant::quantize(&a, 1, 32, MICRO_GROUP, &E4M3);
+    let bg = TwoLevelQuant::quantize(&b, 1, 32, MICRO_GROUP, &E4M3);
+    let c = packed_gemm(&ap, &bp);
+    let o = reference_gemm_grid(&ag, &bg);
+    assert_eq!(c.len(), 1);
+    assert_eq!(c[0].to_bits(), o[0].to_bits());
+}
