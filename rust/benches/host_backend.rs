@@ -1,0 +1,95 @@
+//! Bench: host-backend end-to-end step throughput plus the packed-GEMM
+//! speedup, emitted as machine-readable `BENCH_host.json` so CI can
+//! upload the per-PR perf trajectory as an artifact instead of losing
+//! it in logs. No asserts here — the hard >=2x gate lives in
+//! `quant_hotpath`; this binary only measures and records.
+
+use std::time::Instant;
+
+use moss::backend::HostTrainer;
+use moss::bench_util::{black_box, Bencher};
+use moss::config::{BackendKind, HostSpec, LrSchedule, TrainConfig};
+use moss::formats::fp8::E4M3;
+use moss::kernels::{dequant_then_naive_gemm, packed_gemm, PackedFp8Tensor};
+use moss::util::rng::Rng;
+
+fn main() {
+    // --- packed vs dequantize-then-f32 at 512^3 (the quant_hotpath
+    // gate shape, re-measured here for the JSON record) --------------
+    let dim = 512usize;
+    let mut rng = Rng::new(7);
+    let a = rng.activation_like(dim, dim, 1.5);
+    let b = rng.activation_like(dim, dim, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, dim, dim, 32, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b, dim, dim, 32, &E4M3);
+    let bench = Bencher::quick();
+    let packed = bench.run("packed_tiled_gemm_512", || {
+        black_box(packed_gemm(black_box(&ap), black_box(&bp)));
+    });
+    let baseline = bench.run("dequant_then_f32_gemm_512", || {
+        black_box(dequant_then_naive_gemm(black_box(&ap), black_box(&bp)));
+    });
+    let speedup = baseline.summary.p50 / packed.summary.p50;
+    println!("{}", packed.report_line());
+    println!("{}", baseline.report_line());
+    println!("packed vs dequantize-then-f32 at 512^3: {speedup:.2}x (p50)");
+
+    // --- host train-step throughput (default spec) ------------------
+    let steps = 20u64;
+    let cfg = TrainConfig {
+        backend: BackendKind::Host,
+        host: HostSpec::default(),
+        steps,
+        lr: LrSchedule { peak: 5e-3, warmup_steps: 2, total_steps: steps, final_ratio: 0.1 },
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let spec = cfg.host;
+    let mut trainer = HostTrainer::new(cfg).expect("host trainer");
+    let t0 = Instant::now();
+    trainer.run(steps).expect("host steps");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens = (spec.batch * spec.seq * spec.microbatches) as u64 * steps;
+    let tok_per_sec = tokens as f64 / wall.max(1e-9);
+    let final_loss = trainer.history.tail_loss(5);
+    let cache = trainer.cache.stats();
+    println!(
+        "host step: {steps} steps in {wall:.2}s -> {tok_per_sec:.0} tokens/s \
+         (final loss {final_loss:.4}, packs {}, hits {})",
+        cache.packs, cache.hits
+    );
+
+    // --- machine-readable artifact ----------------------------------
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"packed_gemm_speedup_512_p50\": {:.3},\n",
+            "  \"packed_gemm_p50_ms\": {:.3},\n",
+            "  \"dequant_f32_gemm_p50_ms\": {:.3},\n",
+            "  \"host_step_tokens_per_sec\": {:.1},\n",
+            "  \"host_steps_measured\": {},\n",
+            "  \"host_final_loss\": {:.6},\n",
+            "  \"host_weight_packs\": {},\n",
+            "  \"host_cache_hits\": {},\n",
+            "  \"host_model\": {{\"vocab\": {}, \"dim\": {}, \"ffn\": {}, ",
+            "\"layers\": {}, \"batch\": {}, \"seq\": {}}}\n",
+            "}}\n"
+        ),
+        speedup,
+        packed.summary.p50 * 1e3,
+        baseline.summary.p50 * 1e3,
+        tok_per_sec,
+        steps,
+        final_loss,
+        cache.packs,
+        cache.hits,
+        spec.vocab,
+        spec.dim,
+        spec.ffn,
+        spec.layers,
+        spec.batch,
+        spec.seq
+    );
+    std::fs::write("BENCH_host.json", &json).expect("writing BENCH_host.json");
+    println!("wrote BENCH_host.json");
+}

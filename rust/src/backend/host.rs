@@ -1,0 +1,497 @@
+//! Host-native FP8 training backend: the full train step built from the
+//! packed kernels, with no AOT artifacts anywhere on the path.
+//!
+//! The model is a token-embedding + residual MLP stack + output head —
+//! every matmul a quantized linear routed through `kernels::linear`
+//! (E4M3 activations/weights, E5M2 gradients, paper §2.1's three GEMMs
+//! per linear), the loss a host softmax cross-entropy, the update the
+//! host AdamW (`optim::adamw`, paper Eq. 1):
+//!
+//! ```text
+//! x0 = embed[tokens]                          [rows, dim]
+//! for each layer:  x = x + W_down·relu(W_up·x)    (residual MLP block)
+//! logits = W_out·x                            [rows, vocab]
+//! ```
+//!
+//! Two paper mechanisms drive the step:
+//!
+//! * **Automatic scaling (§3.2)** — weight quantization takes its
+//!   level-1 scale from the configured [`ScalingStrategy`]
+//!   (`AutoScaler` predicts between re-anchors; `JitScaler` /
+//!   `DelayedScaler` are the baselines). The absmax source is a host
+//!   reduction, so the strategy's call accounting
+//!   (`ScalingStats::absmax_calls`) means the same thing it does on the
+//!   AOT path.
+//! * **Step-scoped weight packing** — weights are immutable between
+//!   optimizer steps, so both packed operand layouts are quantized once
+//!   per step through [`PackedWeightCache`] and reused across every
+//!   microbatch forward/backward, then invalidated after the AdamW
+//!   update.
+
+use anyhow::{bail, Result};
+
+use crate::config::{BackendKind, DataKind, HostSpec, ScalingKind, TrainConfig};
+use crate::coordinator::StepOutcome;
+use crate::data::synth::CorpusSpec;
+use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
+use crate::kernels::{linear_backward_prepacked, linear_forward_prepacked, PackedWeightCache};
+use crate::metrics::{Throughput, TrainHistory};
+use crate::optim::{AdamW, AdamWParams};
+use crate::scaling::{
+    absmax_to_scales, AutoScaler, DelayedScaler, JitScaler, ScaleTrajectory, ScalingStrategy,
+};
+use crate::util::rng::Rng;
+
+/// Global gradient-norm clip (paper §4.1 recipe).
+pub const GRAD_CLIP: f64 = 1.0;
+
+/// One quantized linear's shape: `Y[.., n] = X[.., k] @ W[k, n]`.
+#[derive(Debug, Clone)]
+pub struct LinearSlot {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Host-resident model parameters.
+pub struct HostModel {
+    pub spec: HostSpec,
+    /// Token embedding, row-major [vocab, dim]. Not quantized (lookup,
+    /// not a GEMM) — matches the AOT models keeping embeddings bf16.
+    pub embed: Vec<f32>,
+    /// Quantized linear weights, row-major [k, n] per [`LinearSlot`].
+    /// Order: per layer `w_up` [dim,ffn], `w_down` [ffn,dim]; then
+    /// `w_out` [dim,vocab].
+    pub weights: Vec<Vec<f32>>,
+    pub slots: Vec<LinearSlot>,
+}
+
+impl HostModel {
+    /// Seeded init: embeddings at 0.1, linears at `1/sqrt(k)` fan-in.
+    pub fn init(spec: HostSpec, seed: u64) -> HostModel {
+        let root = Rng::new(seed ^ 0x4057_AB1E);
+        let mut slots = Vec::with_capacity(spec.n_linears());
+        for l in 0..spec.layers {
+            slots.push(LinearSlot { name: format!("l{l}.w_up"), k: spec.dim, n: spec.ffn });
+            slots.push(LinearSlot { name: format!("l{l}.w_down"), k: spec.ffn, n: spec.dim });
+        }
+        slots.push(LinearSlot { name: "w_out".into(), k: spec.dim, n: spec.vocab });
+        let mut embed = Vec::with_capacity(spec.vocab * spec.dim);
+        let mut erng = root.fork(0xE0BED);
+        for _ in 0..spec.vocab * spec.dim {
+            embed.push(erng.normal_f32() * 0.1);
+        }
+        let weights = slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let mut wrng = root.fork(1 + i as u64);
+                let sd = 1.0 / (s.k as f32).sqrt();
+                (0..s.k * s.n).map(|_| wrng.normal_f32() * sd).collect()
+            })
+            .collect();
+        HostModel { spec, embed, weights, slots }
+    }
+
+    /// `max|W|` per quantized linear — the host absmax source the
+    /// scaling strategies reduce over (order matches [`Self::slots`]).
+    pub fn weight_absmax(&self) -> Vec<f32> {
+        self.weights
+            .iter()
+            .map(|w| w.iter().fold(0f32, |a, &x| a.max(x.abs())))
+            .collect()
+    }
+
+    /// Pack weight `i` into `cache` (both layouts) under the strategy's
+    /// scale if stale; count a hit otherwise.
+    fn ensure_packed(&self, cache: &mut PackedWeightCache, i: usize, scales: &[f32]) {
+        let s = &self.slots[i];
+        cache.ensure(i, &self.weights[i], s.k, s.n, self.spec.micro, Some(scales[i]));
+    }
+}
+
+/// Saved forward activations of one microbatch.
+struct Trace {
+    /// Layer-block inputs; `xs[layers]` is the final hidden state.
+    xs: Vec<Vec<f32>>,
+    /// `relu(u)` per layer — also carries the backward ReLU mask
+    /// (`act > 0` iff `u > 0`), so pre-activations need not be saved.
+    acts: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+}
+
+/// Accumulated gradients of one optimizer step.
+struct Grads {
+    w: Vec<Vec<f32>>,
+    embed: Vec<f32>,
+}
+
+fn forward(
+    model: &HostModel,
+    cache: &mut PackedWeightCache,
+    scales: &[f32],
+    inputs: &[i32],
+) -> Trace {
+    let spec = &model.spec;
+    let (dim, rows) = (spec.dim, inputs.len());
+    let mut x0 = vec![0f32; rows * dim];
+    for (r, &t) in inputs.iter().enumerate() {
+        let t = t as usize;
+        x0[r * dim..(r + 1) * dim].copy_from_slice(&model.embed[t * dim..(t + 1) * dim]);
+    }
+    let mut xs = vec![x0];
+    let mut acts = Vec::with_capacity(spec.layers);
+    for l in 0..spec.layers {
+        let (iu, id) = (2 * l, 2 * l + 1);
+        model.ensure_packed(cache, iu, scales);
+        let u = linear_forward_prepacked(&xs[l], rows, cache.fwd(iu));
+        let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+        model.ensure_packed(cache, id, scales);
+        let h = linear_forward_prepacked(&a, rows, cache.fwd(id));
+        let xnext: Vec<f32> = xs[l].iter().zip(&h).map(|(x, y)| x + y).collect();
+        acts.push(a);
+        xs.push(xnext);
+    }
+    let iout = 2 * spec.layers;
+    model.ensure_packed(cache, iout, scales);
+    let logits = linear_forward_prepacked(&xs[spec.layers], rows, cache.fwd(iout));
+    Trace { xs, acts, logits }
+}
+
+/// Mean softmax cross-entropy over rows + gradient w.r.t. the logits.
+fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, Vec<f32>) {
+    let rows = targets.len();
+    assert_eq!(logits.len(), rows * vocab);
+    let inv = 1.0 / rows as f32;
+    let mut d = vec![0f32; logits.len()];
+    let mut loss = 0f64;
+    for (r, &t) in targets.iter().enumerate() {
+        let row = &logits[r * vocab..(r + 1) * vocab];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0f64;
+        for &v in row {
+            sum += ((v - max) as f64).exp();
+        }
+        let t = t as usize;
+        loss += sum.ln() + max as f64 - row[t] as f64;
+        let dr = &mut d[r * vocab..(r + 1) * vocab];
+        for (dj, &v) in dr.iter_mut().zip(row) {
+            *dj = (((v - max) as f64).exp() / sum) as f32 * inv;
+        }
+        dr[t] -= inv;
+    }
+    (loss / rows as f64, d)
+}
+
+fn backward(
+    model: &HostModel,
+    cache: &mut PackedWeightCache,
+    scales: &[f32],
+    trace: &Trace,
+    dlogits: &[f32],
+    inputs: &[i32],
+    grads: &mut Grads,
+) {
+    fn accum(dst: &mut [f32], src: &[f32]) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d += s;
+        }
+    }
+    let spec = &model.spec;
+    let rows = inputs.len();
+    let iout = 2 * spec.layers;
+    model.ensure_packed(cache, iout, scales);
+    let (mut dx, dw_out) =
+        linear_backward_prepacked(&trace.xs[spec.layers], cache.bwd(iout), dlogits, rows);
+    accum(&mut grads.w[iout], &dw_out);
+    for l in (0..spec.layers).rev() {
+        let (iu, id) = (2 * l, 2 * l + 1);
+        model.ensure_packed(cache, id, scales);
+        let (da, dw_down) = linear_backward_prepacked(&trace.acts[l], cache.bwd(id), &dx, rows);
+        accum(&mut grads.w[id], &dw_down);
+        let du: Vec<f32> = da
+            .iter()
+            .zip(&trace.acts[l])
+            .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
+            .collect();
+        model.ensure_packed(cache, iu, scales);
+        let (dxb, dw_up) = linear_backward_prepacked(&trace.xs[l], cache.bwd(iu), &du, rows);
+        accum(&mut grads.w[iu], &dw_up);
+        // residual: grads from the identity path and the MLP branch add
+        accum(&mut dx, &dxb);
+    }
+    let dim = spec.dim;
+    for (r, &t) in inputs.iter().enumerate() {
+        let t = t as usize;
+        accum(&mut grads.embed[t * dim..(t + 1) * dim], &dx[r * dim..(r + 1) * dim]);
+    }
+}
+
+/// Split a [batch, seq+1] token matrix into inputs and shifted targets.
+fn split_tokens(tokens: &[i32], b: usize, s: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut inputs = Vec::with_capacity(b * s);
+    let mut targets = Vec::with_capacity(b * s);
+    for r in 0..b {
+        let row = &tokens[r * (s + 1)..(r + 1) * (s + 1)];
+        inputs.extend_from_slice(&row[..s]);
+        targets.extend_from_slice(&row[1..]);
+    }
+    (inputs, targets)
+}
+
+/// The host-backend training coordinator — the artifact-free sibling of
+/// `coordinator::Trainer`, emitting the same [`StepOutcome`] /
+/// [`TrainHistory`] / [`ScaleTrajectory`] streams.
+pub struct HostTrainer {
+    pub cfg: TrainConfig,
+    pub model: HostModel,
+    pub cache: PackedWeightCache,
+    pub history: TrainHistory,
+    pub throughput: Throughput,
+    pub trajectory: ScaleTrajectory,
+    /// Completed optimizer steps (1-based inside `step`).
+    pub steps_done: u64,
+    opt_w: Vec<AdamW>,
+    opt_embed: AdamW,
+    scaler: Box<dyn ScalingStrategy>,
+    data: Box<dyn BatchSource>,
+    last_scales: Vec<f32>,
+}
+
+impl HostTrainer {
+    pub fn new(cfg: TrainConfig) -> Result<HostTrainer> {
+        if cfg.backend != BackendKind::Host {
+            bail!("HostTrainer requires backend=host (got {})", cfg.backend.name());
+        }
+        cfg.host.validate()?;
+        let spec = cfg.host;
+        if cfg.data == DataKind::MathTasks && spec.vocab < 32 {
+            bail!("math tasks use a 32-token alphabet; host vocab {} is too small", spec.vocab);
+        }
+        let scaler: Box<dyn ScalingStrategy> = match cfg.scaling {
+            ScalingKind::Auto { interval } => Box::new(AutoScaler::new(interval)),
+            ScalingKind::Jit => Box::new(JitScaler::new()),
+            ScalingKind::Delayed { window, refresh } => {
+                Box::new(DelayedScaler::new(window, refresh, 1.25))
+            }
+        };
+        let data: Box<dyn BatchSource> = match cfg.data {
+            DataKind::Synthetic => Box::new(SyntheticCorpus::new(CorpusSpec::pretrain(
+                spec.vocab,
+                cfg.seed ^ 0xC0FFEE,
+            ))),
+            DataKind::MathTasks => Box::new(TaskMixSource::new(cfg.seed ^ 0x7A5C)),
+        };
+        let model = HostModel::init(spec, cfg.seed);
+        let opt_w = model
+            .weights
+            .iter()
+            .map(|w| AdamW::new(w.len(), AdamWParams::default()))
+            .collect();
+        let opt_embed = AdamW::new(model.embed.len(), AdamWParams::default());
+        let mut cache = PackedWeightCache::new(spec.n_linears());
+        cache.enabled = spec.cache_weights;
+        Ok(HostTrainer {
+            cfg,
+            model,
+            cache,
+            history: TrainHistory::default(),
+            throughput: Throughput::new(),
+            trajectory: ScaleTrajectory::new(),
+            steps_done: 0,
+            opt_w,
+            opt_embed,
+            scaler,
+            data,
+            last_scales: Vec::new(),
+        })
+    }
+
+    /// Execute one optimizer step (all microbatches + AdamW update).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let spec = self.cfg.host;
+        let step_1b = self.steps_done + 1;
+        let lr = self.cfg.lr.at(self.steps_done) as f32;
+
+        // --- weight scales from the scaling strategy -----------------
+        let scales = {
+            let model = &self.model;
+            let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
+            self.scaler.scales(step_1b, lr, &mut src)?
+        };
+        self.last_scales.clone_from(&scales);
+
+        // --- microbatch loop: weights pack once, reuse thereafter ----
+        let (b, s) = (spec.batch, spec.seq);
+        let mut grads = Grads {
+            w: self.model.weights.iter().map(|w| vec![0f32; w.len()]).collect(),
+            embed: vec![0f32; self.model.embed.len()],
+        };
+        let mut loss_sum = 0f64;
+        for _ in 0..spec.microbatches {
+            let batch = self.data.next_batch(b, s + 1);
+            let (inputs, targets) = split_tokens(&batch.tokens, b, s);
+            let trace = forward(&self.model, &mut self.cache, &scales, &inputs);
+            let (loss, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
+            loss_sum += loss;
+            backward(
+                &self.model,
+                &mut self.cache,
+                &scales,
+                &trace,
+                &dlogits,
+                &inputs,
+                &mut grads,
+            );
+        }
+
+        // --- average over microbatches, clip the global norm ---------
+        let inv = 1.0 / spec.microbatches as f64;
+        let mut sq = 0f64;
+        for g in grads.w.iter().flat_map(|g| g.iter()).chain(grads.embed.iter()) {
+            sq += (*g as f64) * (*g as f64);
+        }
+        let gnorm = sq.sqrt() * inv;
+        let factor = (inv * if gnorm > GRAD_CLIP { GRAD_CLIP / gnorm } else { 1.0 }) as f32;
+        for g in grads.w.iter_mut().flat_map(|g| g.iter_mut()).chain(grads.embed.iter_mut()) {
+            *g *= factor;
+        }
+
+        // --- AdamW update, then the packings are stale ---------------
+        for (i, w) in self.model.weights.iter_mut().enumerate() {
+            self.opt_w[i].step(w, &grads.w[i], lr);
+        }
+        self.opt_embed.step(&mut self.model.embed, &grads.embed, lr);
+        self.cache.invalidate();
+        self.steps_done = step_1b;
+
+        let loss = loss_sum / spec.microbatches as f64;
+        self.throughput.step((b * s * spec.microbatches) as u64);
+        self.history.record_loss(step_1b, loss, gnorm);
+
+        // --- instrumentation (same Fig-4 sampling as the AOT path) ---
+        if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
+            let jit = self.exact_scales();
+            self.trajectory.record(step_1b, scales[0] + lr / crate::E4M3_MAX, jit[0]);
+        }
+
+        Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
+    }
+
+    /// Run `n` steps, logging per `cfg.log_every`.
+    pub fn run(&mut self, n: u64) -> Result<()> {
+        for _ in 0..n {
+            let out = self.step()?;
+            if self.cfg.log_every > 0 && out.step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[host] step {:>6} loss {:.4} gnorm {:.3} lr {:.2e} tok/s {:.0}",
+                    out.step,
+                    out.loss,
+                    out.grad_norm,
+                    out.lr,
+                    self.throughput.tokens_per_sec()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Scales the strategy produced for the most recent step (the ones
+    /// the weight packings were quantized under).
+    pub fn last_scales(&self) -> &[f32] {
+        &self.last_scales
+    }
+
+    /// Exact per-step scales: a true host max-reduction over the
+    /// current weights, `absmax / 448` — what `JitScaler` would produce
+    /// right now.
+    pub fn exact_scales(&self) -> Vec<f32> {
+        absmax_to_scales(&self.model.weight_absmax())
+    }
+
+    pub fn scaling_stats(&self) -> crate::scaling::ScalingStats {
+        self.scaler.stats()
+    }
+
+    pub fn scaler_name(&self) -> &'static str {
+        self.scaler.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::LrSchedule;
+
+    use super::*;
+
+    fn tiny_cfg(steps: u64) -> TrainConfig {
+        TrainConfig {
+            backend: BackendKind::Host,
+            host: HostSpec {
+                vocab: 64,
+                dim: 32,
+                ffn: 64,
+                layers: 2,
+                seq: 16,
+                batch: 2,
+                micro: 32,
+                microbatches: 1,
+                cache_weights: true,
+            },
+            steps,
+            lr: LrSchedule { peak: 5e-3, warmup_steps: 3, total_steps: steps, final_ratio: 0.1 },
+            log_every: 0,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn initial_loss_is_near_log_vocab() {
+        let mut t = HostTrainer::new(tiny_cfg(1)).unwrap();
+        let out = t.step().unwrap();
+        let expect = (t.cfg.host.vocab as f64).ln();
+        assert!((out.loss - expect).abs() < 0.5, "loss {} vs ln(V) {}", out.loss, expect);
+        assert!(out.grad_norm.is_finite() && out.grad_norm > 0.0);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_matches_finite_differences() {
+        let vocab = 8;
+        let mut rng = Rng::new(31);
+        let logits: Vec<f32> = (0..2 * vocab).map(|_| rng.normal_f32()).collect();
+        let targets = vec![3i32, 5];
+        let (_, d) = softmax_xent(&logits, &targets, vocab);
+        let eps = 1e-3f32;
+        for i in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp[i] += eps;
+            let (up, _) = softmax_xent(&lp, &targets, vocab);
+            let mut lm = logits.clone();
+            lm[i] -= eps;
+            let (um, _) = softmax_xent(&lm, &targets, vocab);
+            let fd = ((up - um) / (2.0 * eps as f64)) as f32;
+            assert!((d[i] - fd).abs() < 1e-3, "elem {i}: {} vs {fd}", d[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_aot_backend_and_bad_specs() {
+        let mut cfg = tiny_cfg(1);
+        cfg.backend = BackendKind::Aot;
+        assert!(HostTrainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg(1);
+        cfg.host.dim = 33;
+        assert!(HostTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn deterministic_across_trainers() {
+        let mut a = HostTrainer::new(tiny_cfg(3)).unwrap();
+        let mut b = HostTrainer::new(tiny_cfg(3)).unwrap();
+        for _ in 0..3 {
+            let (oa, ob) = (a.step().unwrap(), b.step().unwrap());
+            assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
+            assert_eq!(oa.grad_norm.to_bits(), ob.grad_norm.to_bits());
+        }
+    }
+}

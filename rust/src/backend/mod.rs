@@ -1,0 +1,12 @@
+//! Execution backends for the training loop.
+//!
+//! The coordinator can drive two engines: the AOT/PJRT path
+//! (`coordinator::Trainer`, requires `make artifacts`) and the pure-host
+//! packed-FP8 path in [`host`], which builds the whole train step —
+//! forward, loss, backward, AdamW — from `kernels::linear` and runs
+//! end-to-end with **zero artifacts**. Selection is
+//! `config::BackendKind` (`repro train --backend host|aot`).
+
+pub mod host;
+
+pub use host::{HostModel, HostTrainer};

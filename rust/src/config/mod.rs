@@ -45,6 +45,117 @@ impl QuantMode {
     }
 }
 
+/// Which engine executes the train step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT `train_step_<mode>` artifacts through the PJRT runtime
+    /// (requires `make artifacts`).
+    Aot,
+    /// Pure-host packed-FP8 engine (`backend::host`): runs end-to-end
+    /// with zero artifacts.
+    Host,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "aot" => BackendKind::Aot,
+            "host" => BackendKind::Host,
+            _ => bail!("unknown backend {s:?} (aot|host)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Aot => "aot",
+            BackendKind::Host => "host",
+        }
+    }
+}
+
+/// Model shape of the host-native backend. The AOT path reads its dims
+/// from the artifact manifest; the host path has no manifest, so the
+/// shape lives here. Every contraction the packed GEMM performs must be
+/// micro-divisible: `dim`, `ffn`, `vocab` (forward/backward K and N)
+/// and `batch * seq` (the dW contraction over rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostSpec {
+    pub vocab: usize,
+    pub dim: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// Micro-group size along contraction dims (OCP MX: 32).
+    pub micro: usize,
+    /// Gradient-accumulation microbatches per optimizer step.
+    pub microbatches: usize,
+    /// Step-scoped packed-weight cache (false = re-pack every GEMM,
+    /// the differential baseline).
+    pub cache_weights: bool,
+}
+
+impl Default for HostSpec {
+    fn default() -> Self {
+        HostSpec {
+            vocab: 256,
+            dim: 64,
+            ffn: 128,
+            layers: 2,
+            seq: 32,
+            batch: 4,
+            micro: 32,
+            microbatches: 1,
+            cache_weights: true,
+        }
+    }
+}
+
+impl HostSpec {
+    pub fn apply_args(mut self, a: &Args) -> Result<Self> {
+        self.vocab = a.get_usize("vocab", self.vocab)?;
+        self.dim = a.get_usize("dim", self.dim)?;
+        self.ffn = a.get_usize("ffn", self.ffn)?;
+        self.layers = a.get_usize("layers", self.layers)?;
+        self.seq = a.get_usize("seq", self.seq)?;
+        self.batch = a.get_usize("batch", self.batch)?;
+        self.microbatches = a.get_usize("microbatches", self.microbatches)?.max(1);
+        if a.has("no-weight-cache") {
+            self.cache_weights = false;
+        }
+        Ok(self)
+    }
+
+    /// Check the micro-divisibility constraints of the packed GEMM.
+    pub fn validate(&self) -> Result<()> {
+        if self.micro == 0 || self.layers == 0 || self.vocab < 2 {
+            bail!("host spec needs micro > 0, layers > 0, vocab >= 2");
+        }
+        for (name, v) in [
+            ("dim", self.dim),
+            ("ffn", self.ffn),
+            ("vocab", self.vocab),
+            ("batch*seq", self.batch * self.seq),
+        ] {
+            if v == 0 || v % self.micro != 0 {
+                bail!("host spec: {name}={v} must be a nonzero multiple of micro={}", self.micro);
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantized linears in the model: per layer `w_up` and `w_down`,
+    /// plus the output head.
+    pub fn n_linears(&self) -> usize {
+        2 * self.layers + 1
+    }
+
+    /// Trainable parameters (embedding + quantized linears).
+    pub fn param_count(&self) -> usize {
+        self.vocab * self.dim + self.layers * 2 * (self.dim * self.ffn) + self.dim * self.vocab
+    }
+}
+
 /// Weight-scaling strategy selection (paper §3.2 / Appendix E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalingKind {
@@ -104,6 +215,10 @@ pub struct TrainConfig {
     /// Artifact config directory name under `artifacts/` (tiny|small|...).
     pub artifact_config: String,
     pub artifacts_root: PathBuf,
+    pub backend: BackendKind,
+    /// Model shape of the host backend (ignored by the AOT path, which
+    /// reads dims from the artifact manifest).
+    pub host: HostSpec,
     pub mode: QuantMode,
     pub scaling: ScalingKind,
     pub steps: u64,
@@ -124,6 +239,8 @@ impl Default for TrainConfig {
         TrainConfig {
             artifact_config: "tiny".into(),
             artifacts_root: PathBuf::from("artifacts"),
+            backend: BackendKind::Aot,
+            host: HostSpec::default(),
             mode: QuantMode::Moss,
             scaling: ScalingKind::Auto { interval: 500 },
             steps: 50,
@@ -145,10 +262,21 @@ impl TrainConfig {
         if let Some(c) = a.get("config") {
             self.artifact_config = c.to_string();
         }
+        if let Some(b) = a.get("backend") {
+            self.backend = BackendKind::parse(b)?;
+        }
+        self.host = self.host.apply_args(a)?;
         if let Some(m) = a.get("mode") {
             self.mode = QuantMode::parse(m)?;
         }
         self.steps = a.get_u64("steps", self.steps)?;
+        if self.backend == BackendKind::Host {
+            // The tiny host model trains with a hotter recipe than the
+            // AOT defaults; the generic --lr/--warmup parse below still
+            // overrides these whenever the flags are present.
+            self.lr.peak = 5e-3;
+            self.lr.warmup_steps = (self.steps / 10).clamp(1, 20);
+        }
         self.seed = a.get_u64("seed", self.seed)?;
         let interval = a.get_u64("interval", 500)?;
         if let Some(s) = a.get("scaling") {
@@ -210,6 +338,50 @@ mod tests {
         assert_eq!(c.mode, QuantMode::Coat);
         assert_eq!(c.steps, 7);
         assert_eq!(c.scaling, ScalingKind::Jit);
+    }
+
+    #[test]
+    fn host_backend_overrides_and_recipe() {
+        let args = crate::cli::Args::parse(
+            [
+                "train", "--backend", "host", "--steps", "40", "--dim", "32", "--ffn", "64",
+                "--microbatches", "3", "--no-weight-cache",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.backend, BackendKind::Host);
+        assert_eq!(c.host.dim, 32);
+        assert_eq!(c.host.ffn, 64);
+        assert_eq!(c.host.microbatches, 3);
+        assert!(!c.host.cache_weights);
+        // host default recipe kicks in when --lr/--warmup are absent
+        assert!((c.lr.peak - 5e-3).abs() < 1e-12);
+        assert_eq!(c.lr.warmup_steps, 4);
+        // ... and explicit flags win
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--lr", "1e-4", "--warmup", "7"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert!((c.lr.peak - 1e-4).abs() < 1e-12);
+        assert_eq!(c.lr.warmup_steps, 7);
+    }
+
+    #[test]
+    fn host_spec_validates_micro_divisibility() {
+        assert!(HostSpec::default().validate().is_ok());
+        assert_eq!(HostSpec::default().n_linears(), 5);
+        let bad = HostSpec { dim: 48, ..HostSpec::default() };
+        assert!(bad.validate().is_err());
+        let bad = HostSpec { batch: 3, seq: 7, ..HostSpec::default() };
+        assert!(bad.validate().is_err());
+        assert!(BackendKind::parse("cuda").is_err());
+        assert_eq!(BackendKind::parse("host").unwrap().name(), "host");
     }
 
     #[test]

@@ -59,8 +59,8 @@ impl TrainState {
         let l = man.model.layers;
         let mut out = vec![0f32; l * man.linear_names.len()];
         for (col, lname) in man.linear_names.iter().enumerate() {
-            let pname = lname.replace("w_up", "w_up"); // names match manifest
-            let data = self.param_f32(man, &pname)?;
+            // linear names are parameter names in the manifest
+            let data = self.param_f32(man, lname)?;
             let per_layer = data.len() / l;
             for layer in 0..l {
                 let amax = data[layer * per_layer..(layer + 1) * per_layer]

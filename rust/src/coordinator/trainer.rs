@@ -3,6 +3,7 @@
 //! Table-7 activation probes and Fig-4 scale trajectories, and evaluates
 //! on held-out shards.
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -11,7 +12,9 @@ use xla::Literal;
 use crate::config::{DataKind, ScalingKind, TrainConfig};
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
 use crate::data::synth::CorpusSpec;
-use crate::kernels::{linear_backward_packed, linear_forward_packed};
+use crate::kernels::{
+    linear_backward_prepacked, linear_forward_prepacked, CacheStats, PackedWeightCache,
+};
 use crate::metrics::{Throughput, TrainHistory};
 use crate::runtime::literal::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, scalar_f32, to_f32};
 use crate::runtime::{Program, Runtime};
@@ -46,6 +49,12 @@ pub struct Trainer {
     data: Box<dyn BatchSource>,
     /// Indices of the 4 linear weights within the param list.
     linear_param_idx: Vec<usize>,
+    /// Step-scoped packed-weight cache for the host execution path:
+    /// `packed_forward`/`packed_backward` quantize each weight once per
+    /// optimizer step (both operand layouts, and the parameter download
+    /// is only paid on a miss), invalidated by `step()` after the
+    /// update. `RefCell` because the packed entry points take `&self`.
+    weight_cache: RefCell<PackedWeightCache>,
 }
 
 impl Trainer {
@@ -75,6 +84,7 @@ impl Trainer {
             .iter()
             .map(|n| TrainState::param_index(man, n))
             .collect::<Result<Vec<_>>>()?;
+        let weight_cache = RefCell::new(PackedWeightCache::new(man.n_linears()));
         Ok(Trainer {
             rt,
             cfg,
@@ -88,7 +98,27 @@ impl Trainer {
             scaler,
             data,
             linear_param_idx,
+            weight_cache,
         })
+    }
+
+    /// Weight-cache slot of (`layer`, `name`): row-major over
+    /// `layers x linear_names`.
+    fn cache_slot(&self, layer: usize, name: &str) -> Result<usize> {
+        let man = &self.rt.manifest;
+        let col = match man.linear_names.iter().position(|n| n == name) {
+            Some(c) => c,
+            None => bail!("{name:?} is not a quantized linear (have {:?})", man.linear_names),
+        };
+        if layer >= man.model.layers {
+            bail!("layer {layer} out of range (model has {})", man.model.layers);
+        }
+        Ok(layer * man.linear_names.len() + col)
+    }
+
+    /// Packed-weight cache accounting (packs vs per-step reuse hits).
+    pub fn weight_cache_stats(&self) -> CacheStats {
+        self.weight_cache.borrow().stats()
     }
 
     /// Download one layer's weight for a quantized linear: returns
@@ -118,11 +148,36 @@ impl Trainer {
         Ok((data[layer * per_layer..(layer + 1) * per_layer].to_vec(), k, n))
     }
 
+    /// Pack (`layer`, `name`) into the step-scoped weight cache if its
+    /// slot is stale; the parameter download only happens on a miss.
+    /// Both operand layouts are built in one event, so K *and* N must
+    /// be micro-divisible.
+    fn ensure_weight_packed(
+        &self,
+        cache: &mut PackedWeightCache,
+        idx: usize,
+        layer: usize,
+        name: &str,
+    ) -> Result<()> {
+        let micro = self.rt.manifest.model.micro;
+        cache.ensure_with(idx, micro, None, || -> Result<(Vec<f32>, usize, usize)> {
+            let (w, k, n) = self.layer_weight(layer, name)?;
+            if k % micro != 0 || n % micro != 0 {
+                bail!(
+                    "layer {layer} {name:?}: K={k} and N={n} must be multiples of micro={micro}"
+                );
+            }
+            Ok((w, k, n))
+        })?;
+        Ok(())
+    }
+
     /// Host-side packed-FP8 forward of one linear layer: quantizes
-    /// `x[rows, K]` and the named weight with two-level microscaling
-    /// (E4M3) and executes the tiled packed GEMM — the engine path that
-    /// mirrors what the AOT `train_step_moss` artifact computes on
-    /// device. Used by the differential suite and the perf benches.
+    /// `x[rows, K]` with two-level microscaling (E4M3) and executes the
+    /// tiled packed GEMM against the step-cached weight packing — the
+    /// engine path that mirrors what the AOT `train_step_moss` artifact
+    /// computes on device. Used by the differential suite and the perf
+    /// benches.
     pub fn packed_forward(
         &self,
         layer: usize,
@@ -130,19 +185,23 @@ impl Trainer {
         x: &[f32],
         rows: usize,
     ) -> Result<Vec<f32>> {
-        let (w, k, n) = self.layer_weight(layer, name)?;
-        if x.len() != rows * k {
-            bail!("activation is {} elems, layer {layer} {name:?} wants [{rows}, {k}]", x.len());
+        let idx = self.cache_slot(layer, name)?;
+        let mut cache = self.weight_cache.borrow_mut();
+        self.ensure_weight_packed(&mut cache, idx, layer, name)?;
+        let wfwd = cache.fwd(idx);
+        if x.len() != rows * wfwd.cols {
+            bail!(
+                "activation is {} elems, layer {layer} {name:?} wants [{rows}, {}]",
+                x.len(),
+                wfwd.cols
+            );
         }
-        let micro = self.rt.manifest.model.micro;
-        if k % micro != 0 {
-            bail!("layer {layer} {name:?}: K={k} is not a multiple of micro={micro}");
-        }
-        Ok(linear_forward_packed(x, rows, k, &w, n, micro))
+        Ok(linear_forward_prepacked(x, rows, wfwd))
     }
 
     /// Host-side packed-FP8 backward of one linear layer: E5M2 gradients,
-    /// E4M3 saved activations/weights. Returns `(dX[rows,K], dW[K,N])`.
+    /// E4M3 saved activations, step-cached weight packing. Returns
+    /// `(dX[rows,K], dW[K,N])`.
     pub fn packed_backward(
         &self,
         layer: usize,
@@ -151,7 +210,19 @@ impl Trainer {
         dy: &[f32],
         rows: usize,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let (w, k, n) = self.layer_weight(layer, name)?;
+        let idx = self.cache_slot(layer, name)?;
+        let micro = self.rt.manifest.model.micro;
+        // backward contracts over N (dX) and over the row count (dW):
+        // both must be micro-divisible or the quantizers would panic.
+        if rows % micro != 0 {
+            bail!(
+                "layer {layer} {name:?}: backward needs rows={rows} to be a multiple of micro={micro}"
+            );
+        }
+        let mut cache = self.weight_cache.borrow_mut();
+        self.ensure_weight_packed(&mut cache, idx, layer, name)?;
+        let wbwd = cache.bwd(idx);
+        let (k, n) = (wbwd.rows, wbwd.cols);
         if x.len() != rows * k || dy.len() != rows * n {
             bail!(
                 "layer {layer} {name:?}: x has {} elems (want [{rows}, {k}]), dy has {} (want [{rows}, {n}])",
@@ -159,16 +230,7 @@ impl Trainer {
                 dy.len()
             );
         }
-        let micro = self.rt.manifest.model.micro;
-        // backward contracts over N (dX) and over the row count (dW):
-        // both must be micro-divisible or the quantizers would panic.
-        if n % micro != 0 || rows % micro != 0 {
-            bail!(
-                "layer {layer} {name:?}: backward needs N={n} and rows={rows} \
-                 to be multiples of micro={micro}"
-            );
-        }
-        Ok(linear_backward_packed(x, &w, dy, rows, k, n, micro))
+        Ok(linear_backward_prepacked(x, wbwd, dy, rows))
     }
 
     /// Run the device-side max-reduction over the current weights.
@@ -227,6 +289,9 @@ impl Trainer {
         self.state.m = m;
         self.state.v = v;
         self.state.step = step_1b;
+        // The optimizer just mutated every weight: packed operand
+        // layouts from this step must not survive into the next.
+        self.weight_cache.borrow_mut().invalidate();
         self.throughput.step((b * s) as u64);
         self.history.record_loss(step_1b, loss, gnorm);
 

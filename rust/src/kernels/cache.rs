@@ -1,0 +1,242 @@
+//! Step-scoped packed-weight cache.
+//!
+//! `PackedFp8Tensor` weights are immutable between optimizer steps, so
+//! quantizing them per GEMM (what `linear_forward_packed` /
+//! `linear_backward_packed` do) repeats the same transpose + two-level
+//! quantization for every microbatch. This cache packs each weight
+//! **once per optimizer step** — both operand layouts in one event:
+//! forward `[N,K]` grouped along K and backward `[K,N]` grouped along N
+//! — and hands out references until [`PackedWeightCache::invalidate`]
+//! is called after the optimizer update.
+//!
+//! Counting contract (asserted by `tests/host_train_e2e.rs`): with the
+//! cache enabled, `stats().packs` equals *optimizer steps x weights*,
+//! not GEMM invocations; every additional `ensure` within the step is a
+//! hit. With `enabled = false` the cache degrades to the
+//! pack-every-call baseline (each `ensure` repacks) — the differential
+//! path that would expose a stale cache surviving an optimizer update.
+
+use super::linear::{pack_weight_bwd, pack_weight_fwd};
+use super::packed::PackedFp8Tensor;
+
+/// Cache cost accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Weight quantization events (one event packs both layouts).
+    pub packs: u64,
+    /// `ensure` calls served from a fresh slot without repacking.
+    pub hits: u64,
+    /// Step-boundary invalidations.
+    pub invalidations: u64,
+}
+
+struct Slot {
+    /// Cache generation this slot was packed in.
+    version: u64,
+    /// `[N,K]` E4M3 grouped along K — the forward GEMM operand.
+    fwd: PackedFp8Tensor,
+    /// `[K,N]` E4M3 grouped along N — the backward-dX GEMM operand.
+    bwd: PackedFp8Tensor,
+}
+
+/// Per-step cache of packed weight operands, indexed by weight slot.
+pub struct PackedWeightCache {
+    slots: Vec<Option<Slot>>,
+    version: u64,
+    /// `false` turns every `ensure` into a repack (differential baseline).
+    pub enabled: bool,
+    stats: CacheStats,
+}
+
+impl PackedWeightCache {
+    /// A cache with `n` weight slots.
+    pub fn new(n: usize) -> Self {
+        PackedWeightCache {
+            slots: (0..n).map(|_| None).collect(),
+            version: 0,
+            enabled: true,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Whether slot `i` holds packings from the current generation.
+    pub fn is_fresh(&self, i: usize) -> bool {
+        self.slots[i].as_ref().is_some_and(|s| s.version == self.version)
+    }
+
+    /// Make slot `i` hold current packings of `w` (`[K,N]` row-major,
+    /// level-1 scale optionally predicted by a scaling strategy).
+    /// Packs only when the slot is stale or the cache is disabled;
+    /// returns `true` when a pack actually happened.
+    pub fn ensure(
+        &mut self,
+        i: usize,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        micro: usize,
+        scale: Option<f32>,
+    ) -> bool {
+        if self.enabled && self.is_fresh(i) {
+            self.stats.hits += 1;
+            return false;
+        }
+        self.pack_slot(i, w, k, n, micro, scale);
+        true
+    }
+
+    /// Like [`Self::ensure`], but fetches the weight lazily — the fetch
+    /// (e.g. a device->host parameter download) is only paid on a miss.
+    pub fn ensure_with<E, F>(
+        &mut self,
+        i: usize,
+        micro: usize,
+        scale: Option<f32>,
+        fetch: F,
+    ) -> Result<bool, E>
+    where
+        F: FnOnce() -> Result<(Vec<f32>, usize, usize), E>,
+    {
+        if self.enabled && self.is_fresh(i) {
+            self.stats.hits += 1;
+            return Ok(false);
+        }
+        let (w, k, n) = fetch()?;
+        self.pack_slot(i, &w, k, n, micro, scale);
+        Ok(true)
+    }
+
+    fn pack_slot(
+        &mut self,
+        i: usize,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        micro: usize,
+        scale: Option<f32>,
+    ) {
+        self.slots[i] = Some(Slot {
+            version: self.version,
+            fwd: pack_weight_fwd(w, k, n, micro, scale),
+            bwd: pack_weight_bwd(w, k, n, micro, scale),
+        });
+        self.stats.packs += 1;
+    }
+
+    /// Forward operand (`[N,K]` grouped along K) of slot `i`.
+    /// Panics if the slot was not packed this generation — call
+    /// [`Self::ensure`] first.
+    pub fn fwd(&self, i: usize) -> &PackedFp8Tensor {
+        assert!(self.is_fresh(i), "weight slot {i} not packed this step");
+        &self.slots[i].as_ref().unwrap().fwd
+    }
+
+    /// Backward operand (`[K,N]` grouped along N) of slot `i`.
+    pub fn bwd(&self, i: usize) -> &PackedFp8Tensor {
+        assert!(self.is_fresh(i), "weight slot {i} not packed this step");
+        &self.slots[i].as_ref().unwrap().bwd
+    }
+
+    /// Drop every packing: called after the optimizer update mutates
+    /// the weights. O(1) — slots are lazily repacked on next `ensure`.
+    pub fn invalidate(&mut self) {
+        self.version += 1;
+        self.stats.invalidations += 1;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn weights(seed: u64, k: usize, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..k * n).map(|_| rng.normal_f32() * 0.1).collect()
+    }
+
+    #[test]
+    fn packs_once_until_invalidated() {
+        let w = weights(1, 64, 32);
+        let mut c = PackedWeightCache::new(1);
+        assert!(c.ensure(0, &w, 64, 32, 32, None));
+        for _ in 0..5 {
+            assert!(!c.ensure(0, &w, 64, 32, 32, None));
+        }
+        assert_eq!(c.stats(), CacheStats { packs: 1, hits: 5, invalidations: 0 });
+        c.invalidate();
+        assert!(!c.is_fresh(0));
+        assert!(c.ensure(0, &w, 64, 32, 32, None));
+        assert_eq!(c.stats().packs, 2);
+    }
+
+    #[test]
+    fn invalidation_picks_up_mutated_weights() {
+        // The exact bug the cache must not have: an optimizer update
+        // mutates W, and a stale packing would keep serving old bytes.
+        let mut w = weights(2, 64, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure(0, &w, 64, 32, 32, None);
+        let before = c.fwd(0).data.clone();
+        for v in w.iter_mut() {
+            *v += 0.05;
+        }
+        c.invalidate();
+        c.ensure(0, &w, 64, 32, 32, None);
+        assert_ne!(before, c.fwd(0).data);
+        // and the refreshed packing equals a from-scratch pack, bitwise
+        let fresh = pack_weight_fwd(&w, 64, 32, 32, None);
+        assert_eq!(c.fwd(0).data, fresh.data);
+        assert_eq!(c.fwd(0).ss_exp, fresh.ss_exp);
+        assert_eq!(c.fwd(0).scale.to_bits(), fresh.scale.to_bits());
+    }
+
+    #[test]
+    fn disabled_cache_repacks_every_call() {
+        let w = weights(3, 32, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.enabled = false;
+        for _ in 0..4 {
+            assert!(c.ensure(0, &w, 32, 32, 32, None));
+        }
+        assert_eq!(c.stats(), CacheStats { packs: 4, hits: 0, invalidations: 0 });
+    }
+
+    #[test]
+    fn lazy_fetch_only_runs_on_miss() {
+        let mut fetches = 0u32;
+        let mut c = PackedWeightCache::new(1);
+        for _ in 0..3 {
+            c.ensure_with(0, 32, None, || -> Result<(Vec<f32>, usize, usize), ()> {
+                fetches += 1;
+                Ok((weights(4, 32, 32), 32, 32))
+            })
+            .unwrap();
+        }
+        assert_eq!(fetches, 1);
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not packed this step")]
+    fn stale_access_panics() {
+        let w = weights(5, 32, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure(0, &w, 32, 32, 32, None);
+        c.invalidate();
+        c.bwd(0);
+    }
+}

@@ -8,27 +8,126 @@
 //! well-formed), which is why the backward pass re-quantizes transposed
 //! views instead of reusing the forward packing — the same re-quantize-
 //! per-layout rule real MX training engines follow.
+//!
+//! Weights are the exception: they are immutable between optimizer
+//! steps, so their two packings (forward `[N,K]` grouped along K,
+//! backward `[K,N]` grouped along N) can be built once per step and
+//! reused across every microbatch. [`pack_weight_fwd`]/[`pack_weight_bwd`]
+//! build those layouts (optionally under an externally predicted global
+//! scale, §3.2), and the `*_prepacked` entry points consume them; the
+//! plain `*_packed` functions remain the pack-every-call form and are
+//! defined *in terms of* the prepacked ones so the two paths cannot
+//! drift numerically.
 
 use crate::formats::fp8::{E4M3, E5M2};
 
 use super::gemm::packed_gemm;
 use super::packed::PackedFp8Tensor;
 
+/// Transpose tile edge: 32x32 f32 tiles (8 KiB working set) keep both
+/// the read rows and the written columns cache-resident.
+const TRANSPOSE_TILE: usize = 32;
+
 /// Row-major transpose: [rows, cols] -> [cols, rows].
+///
+/// Blocked over `TRANSPOSE_TILE`-square tiles so the strided writes stay
+/// within a cache-resident window (the naive column-major write pattern
+/// misses on every store once `rows` exceeds a page). Pure data
+/// movement: bit-identical to the naive loop for every shape.
 pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     assert_eq!(x.len(), rows * cols);
     let mut out = vec![0f32; x.len()];
-    for r in 0..rows {
-        for c in 0..cols {
-            out[c * rows + r] = x[r * cols + c];
+    for rb in (0..rows).step_by(TRANSPOSE_TILE) {
+        let re = (rb + TRANSPOSE_TILE).min(rows);
+        for cb in (0..cols).step_by(TRANSPOSE_TILE) {
+            let ce = (cb + TRANSPOSE_TILE).min(cols);
+            for r in rb..re {
+                for c in cb..ce {
+                    out[c * rows + r] = x[r * cols + c];
+                }
+            }
         }
     }
     out
 }
 
+/// Pack a weight `W[K,N]` into its *forward* operand layout: `[N,K]`
+/// E4M3, micro-groups along K (the contraction dim of `Y = X @ W`).
+/// `scale` optionally overrides the level-1 global scale with a
+/// strategy-predicted value (paper §3.2).
+pub fn pack_weight_fwd(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    micro: usize,
+    scale: Option<f32>,
+) -> PackedFp8Tensor {
+    assert_eq!(w.len(), k * n);
+    let wt = transpose(w, k, n); // [N, K]: groups along K
+    match scale {
+        Some(s) => PackedFp8Tensor::quantize_with_scale(&wt, n, k, micro, &E4M3, s),
+        None => PackedFp8Tensor::quantize(&wt, n, k, micro, &E4M3),
+    }
+}
+
+/// Pack a weight `W[K,N]` into its *backward* operand layout: `[K,N]`
+/// E4M3, micro-groups along N (the contraction dim of `dX = dY @ W^T`).
+pub fn pack_weight_bwd(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    micro: usize,
+    scale: Option<f32>,
+) -> PackedFp8Tensor {
+    assert_eq!(w.len(), k * n);
+    match scale {
+        Some(s) => PackedFp8Tensor::quantize_with_scale(w, k, n, micro, &E4M3, s),
+        None => PackedFp8Tensor::quantize(w, k, n, micro, &E4M3),
+    }
+}
+
+/// Forward against a prepacked weight (`wfwd` from [`pack_weight_fwd`]):
+/// `Y[M,N] = X[M,K] @ W[K,N]`, activation quantized E4M3 per call.
+pub fn linear_forward_prepacked(x: &[f32], m: usize, wfwd: &PackedFp8Tensor) -> Vec<f32> {
+    let k = wfwd.cols;
+    assert_eq!(x.len(), m * k, "activation is {} elems, want [{m}, {k}]", x.len());
+    let xa = PackedFp8Tensor::quantize(x, m, k, wfwd.micro, &E4M3);
+    packed_gemm(&xa, wfwd)
+}
+
+/// Backward against a prepacked weight (`wbwd` from [`pack_weight_bwd`]):
+/// given `dY[M,N]`, produce `dX[M,K] = dY @ W^T` and `dW[K,N] = X^T @ dY`.
+/// Gradients quantize E5M2 per call; the saved activation re-quantizes
+/// E4M3 in its transposed `[K,M]` view (groups must run along the dW
+/// contraction dim M — a fresh layout every microbatch, unlike the
+/// weight). Requires `N % micro == 0` and `M % micro == 0`.
+pub fn linear_backward_prepacked(
+    x: &[f32],
+    wbwd: &PackedFp8Tensor,
+    dy: &[f32],
+    m: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let (k, n, micro) = (wbwd.rows, wbwd.cols, wbwd.micro);
+    assert_eq!(x.len(), m * k, "x is {} elems, want [{m}, {k}]", x.len());
+    assert_eq!(dy.len(), m * n, "dy is {} elems, want [{m}, {n}]", dy.len());
+    // dX: dY is [M, N] grouped along N; wbwd is already [K, N] row-major,
+    // i.e. exactly the transposed-operand layout the GEMM consumes.
+    let dya = PackedFp8Tensor::quantize(dy, m, n, micro, &E5M2);
+    let dx = packed_gemm(&dya, wbwd);
+    // dW: X^T is [K, M] grouped along M; dY^T is [N, M] likewise.
+    let xt = transpose(x, m, k);
+    let xa = PackedFp8Tensor::quantize(&xt, k, m, micro, &E4M3);
+    let dyt = transpose(dy, m, n);
+    let dyb = PackedFp8Tensor::quantize(&dyt, n, m, micro, &E5M2);
+    let dw = packed_gemm(&xa, &dyb);
+    (dx, dw)
+}
+
 /// Forward: `Y[M,N] = X[M,K] @ W[K,N]`, both operands quantized E4M3
 /// two-level microscaled, executed by the packed tiled GEMM.
-/// Requires `K % micro == 0`.
+/// Requires `K % micro == 0`. Packs the weight on every call — prefer
+/// [`linear_forward_prepacked`] + a per-step cache when the same weight
+/// serves several microbatches.
 pub fn linear_forward_packed(
     x: &[f32],
     m: usize,
@@ -38,18 +137,15 @@ pub fn linear_forward_packed(
     micro: usize,
 ) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
-    assert_eq!(w.len(), k * n);
-    let xa = PackedFp8Tensor::quantize(x, m, k, micro, &E4M3);
-    let wt = transpose(w, k, n); // [N, K]: groups along K
-    let wb = PackedFp8Tensor::quantize(&wt, n, k, micro, &E4M3);
-    packed_gemm(&xa, &wb)
+    linear_forward_prepacked(x, m, &pack_weight_fwd(w, k, n, micro, None))
 }
 
 /// Backward: given `dY[M,N]`, produce
 /// `dX[M,K] = dY @ W^T` (contraction over N) and
 /// `dW[K,N] = X^T @ dY` (contraction over M).
 /// Gradients quantize E5M2, saved activations/weights E4M3.
-/// Requires `N % micro == 0` and `M % micro == 0`.
+/// Requires `N % micro == 0` and `M % micro == 0`. Packs the weight on
+/// every call — prefer [`linear_backward_prepacked`] + a per-step cache.
 pub fn linear_backward_packed(
     x: &[f32],
     w: &[f32],
@@ -62,18 +158,7 @@ pub fn linear_backward_packed(
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(dy.len(), m * n);
-    // dX: dY is [M, N] grouped along N; W is already [K, N] row-major,
-    // i.e. exactly the transposed-operand layout the GEMM consumes.
-    let dya = PackedFp8Tensor::quantize(dy, m, n, micro, &E5M2);
-    let wb = PackedFp8Tensor::quantize(w, k, n, micro, &E4M3);
-    let dx = packed_gemm(&dya, &wb);
-    // dW: X^T is [K, M] grouped along M; dY^T is [N, M] likewise.
-    let xt = transpose(x, m, k);
-    let xa = PackedFp8Tensor::quantize(&xt, k, m, micro, &E4M3);
-    let dyt = transpose(dy, m, n);
-    let dyb = PackedFp8Tensor::quantize(&dyt, n, m, micro, &E5M2);
-    let dw = packed_gemm(&xa, &dyb);
-    (dx, dw)
+    linear_backward_prepacked(x, &pack_weight_bwd(w, k, n, micro, None), dy, m)
 }
 
 #[cfg(test)]
@@ -113,6 +198,27 @@ mod tests {
     }
 
     #[test]
+    fn blocked_transpose_matches_naive_across_shapes() {
+        // The tiling is pure data movement; every element must land at
+        // the naive mapping for shapes around/above the tile edge.
+        for &(rows, cols) in
+            &[(1, 1), (5, 7), (31, 33), (32, 32), (33, 31), (64, 96), (100, 3)]
+        {
+            let x: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+            let t = transpose(&x, rows, cols);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(
+                        t[c * rows + r].to_bits(),
+                        x[r * cols + c].to_bits(),
+                        "({rows}x{cols}) at ({r},{c})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn forward_tracks_exact_matmul() {
         let (m, k, n) = (16, 64, 24);
         let mut rng = Rng::new(21);
@@ -139,6 +245,29 @@ mod tests {
         // dW = X^T @ dY
         let xt = transpose(&x, m, k);
         assert_close(&dw, &f64_matmul(&xt, &dy, k, m, n), 0.08);
+    }
+
+    #[test]
+    fn prepacked_paths_match_pack_every_call_bitwise() {
+        // The cached-weight path must be indistinguishable from the
+        // pack-per-GEMM path: same packing code, same GEMM schedule.
+        let (m, k, n) = (32, 64, 32);
+        let mut rng = Rng::new(24);
+        let x = rng.activation_like(m, k, 1.0);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32() * 0.05).collect();
+        let dy: Vec<f32> = (0..m * n).map(|_| rng.normal_f32()).collect();
+        let wfwd = pack_weight_fwd(&w, k, n, 32, None);
+        let wbwd = pack_weight_bwd(&w, k, n, 32, None);
+        let y0 = linear_forward_packed(&x, m, k, &w, n, 32);
+        let y1 = linear_forward_prepacked(&x, m, &wfwd);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (dx0, dw0) = linear_backward_packed(&x, &w, &dy, m, k, n, 32);
+        let (dx1, dw1) = linear_backward_prepacked(&x, &wbwd, &dy, m);
+        for (a, b) in dx0.iter().zip(&dx1).chain(dw0.iter().zip(&dw1)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -18,6 +18,10 @@
 //!   the packed GEMM with the paper's format recipe (E4M3 for
 //!   activations/weights, E5M2 for gradients), used by the coordinator's
 //!   host execution path.
+//! * [`cache`] — [`PackedWeightCache`]: step-scoped reuse of weight
+//!   packings. Weights are immutable between optimizer steps, so both
+//!   operand layouts are quantized once per step and shared across all
+//!   microbatch forwards/backwards, then invalidated on update.
 //!
 //! Numerics contract (locked down by `tests/packed_gemm_differential.rs`):
 //! the packed path is **bit-identical** to the f32-grid oracle — LUT
@@ -27,10 +31,15 @@
 //! f32 operation sequence (groups accumulate in K order; scaling by a
 //! power of two per group and one global rescale at the end).
 
+pub mod cache;
 pub mod gemm;
 pub mod linear;
 pub mod packed;
 
+pub use cache::{CacheStats, PackedWeightCache};
 pub use gemm::{dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid};
-pub use linear::{linear_backward_packed, linear_forward_packed};
+pub use linear::{
+    linear_backward_packed, linear_backward_prepacked, linear_forward_packed,
+    linear_forward_prepacked, pack_weight_bwd, pack_weight_fwd,
+};
 pub use packed::PackedFp8Tensor;

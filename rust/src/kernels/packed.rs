@@ -46,7 +46,37 @@ impl PackedFp8Tensor {
     /// `TwoLevelQuant::quantize` (`quant::twolevel::two_level_scales`);
     /// the only difference is `Fp8Format::encode` instead of grid floats.
     pub fn quantize(xs: &[f32], rows: usize, cols: usize, micro: usize, fmt: &Fp8Format) -> Self {
-        let (scale, ss_exp) = crate::quant::twolevel::two_level_scales(xs, rows, cols, micro, fmt);
+        Self::quantize_impl(xs, rows, cols, micro, fmt, None)
+    }
+
+    /// [`Self::quantize`] with an externally supplied level-1 global
+    /// scale — what automatic scaling (paper §3.2) feeds the weight
+    /// quantizer: the predicted `max|W|/448` replaces the data-derived
+    /// max-reduction. Per-group E8M0 subscales are still ceil-rounded
+    /// against the provided scale, so payloads never clip even when the
+    /// prediction over- or under-shoots.
+    pub fn quantize_with_scale(
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        micro: usize,
+        fmt: &Fp8Format,
+        scale: f32,
+    ) -> Self {
+        Self::quantize_impl(xs, rows, cols, micro, fmt, Some(scale))
+    }
+
+    fn quantize_impl(
+        xs: &[f32],
+        rows: usize,
+        cols: usize,
+        micro: usize,
+        fmt: &Fp8Format,
+        global: Option<f32>,
+    ) -> Self {
+        let (scale, ss_exp) = crate::quant::twolevel::two_level_scales_with_global(
+            xs, rows, cols, micro, fmt, global,
+        );
         let g = cols / micro;
         let mut data = vec![0u8; xs.len()];
         for r in 0..rows {
@@ -160,6 +190,35 @@ mod tests {
         assert_eq!(p.payload_bytes(), 64 * 256 + 64 * 8 + 4);
         // ~3.9x smaller than the f32 grid representation
         assert!(p.payload_bytes() * 3 < 64 * 256 * 4);
+    }
+
+    #[test]
+    fn provided_scale_equal_to_derived_is_bitwise_identical() {
+        let xs = Rng::new(5).activation_like(8, 64, 1.5);
+        let auto = PackedFp8Tensor::quantize(&xs, 8, 64, 32, &E4M3);
+        let given = PackedFp8Tensor::quantize_with_scale(&xs, 8, 64, 32, &E4M3, auto.scale);
+        assert_eq!(auto.scale.to_bits(), given.scale.to_bits());
+        assert_eq!(auto.ss_exp, given.ss_exp);
+        assert_eq!(auto.data, given.data);
+    }
+
+    #[test]
+    fn over_and_undershooting_scales_never_clip() {
+        // Automatic scaling feeds a *predicted* global scale; the ceil
+        // subscales must absorb both directions without saturating the
+        // payload or losing more than ~one extra octave of precision.
+        let xs = Rng::new(6).activation_like(8, 64, 2.0);
+        let auto = PackedFp8Tensor::quantize(&xs, 8, 64, 32, &E4M3);
+        for factor in [0.25f32, 0.5, 2.0, 8.0] {
+            let p =
+                PackedFp8Tensor::quantize_with_scale(&xs, 8, 64, 32, &E4M3, auto.scale * factor);
+            assert!(p.grid_values().iter().all(|v| v.abs() <= 448.0), "factor {factor}");
+            let dq = p.dequantize();
+            let amax = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            for (d, x) in dq.iter().zip(&xs) {
+                assert!((d - x).abs() <= 0.1 * amax, "factor {factor}: {d} vs {x}");
+            }
+        }
     }
 
     #[test]

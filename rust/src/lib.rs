@@ -14,6 +14,7 @@
 //! Python/JAX runs only at build time (`make artifacts`); nothing on the
 //! training hot path touches Python.
 
+pub mod backend;
 pub mod bench_util;
 pub mod cli;
 pub mod config;

@@ -14,8 +14,9 @@
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
+use moss::backend::HostTrainer;
 use moss::cli::{usage, Args};
-use moss::config::TrainConfig;
+use moss::config::{BackendKind, TrainConfig};
 use moss::coordinator::Trainer;
 use moss::runtime::Runtime;
 
@@ -27,7 +28,7 @@ fn main() {
 }
 
 const COMMANDS: &[(&str, &str)] = &[
-    ("train", "pretrain on the synthetic corpus (--mode, --steps, --config, --scaling)"),
+    ("train", "pretrain on the synthetic corpus (--backend host|aot, --mode, --steps, --scaling)"),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
     ("snr", "Table-7 SNR study across quantization schemes"),
@@ -60,6 +61,9 @@ fn run() -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::default().apply_args(args)?;
+    if cfg.backend == BackendKind::Host {
+        return cmd_train_host(args, cfg);
+    }
     let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
     eprintln!(
         "model: {} ({} params), mode {}, {} steps",
@@ -123,6 +127,62 @@ fn cmd_train(args: &Args) -> Result<()> {
         std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
         moss::coordinator::checkpoint::save(&out.join("ckpt.bin"), &rt, &trainer.state)?;
         eprintln!("wrote {}/losses.csv and ckpt.bin", out.display());
+    }
+    Ok(())
+}
+
+/// `train --backend host`: the artifact-free packed-FP8 train loop.
+/// `--assert-improved` turns "the loss went down and stayed finite"
+/// into the exit code — the contract the `e2e-host-train` CI job gates.
+fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
+    let spec = cfg.host;
+    if cfg.mode != moss::config::QuantMode::Moss {
+        eprintln!(
+            "note: the host backend always runs the MOSS recipe; --mode {} is ignored",
+            cfg.mode.name()
+        );
+    }
+    eprintln!(
+        "host backend: vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} microbatches",
+        spec.vocab,
+        spec.dim,
+        spec.ffn,
+        spec.layers,
+        spec.param_count(),
+        cfg.steps,
+        spec.microbatches
+    );
+    let steps = cfg.steps;
+    let mut trainer = HostTrainer::new(cfg)?;
+    trainer.run(steps)?;
+    let first = trainer.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
+    let tail = trainer.history.tail_loss(10);
+    let cache = trainer.cache.stats();
+    println!(
+        "done: {} steps, first loss {:.4}, final loss {:.4}, {:.0} tokens/s \
+         (scaling {}: {} absmax calls; weight packs {}, cache hits {})",
+        trainer.steps_done,
+        first,
+        tail,
+        trainer.throughput.tokens_per_sec(),
+        trainer.scaler_name(),
+        trainer.scaling_stats().absmax_calls,
+        cache.packs,
+        cache.hits,
+    );
+    if let Some(out) = &trainer.cfg.out_dir {
+        std::fs::create_dir_all(out)?;
+        std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
+        eprintln!("wrote {}/losses.csv", out.display());
+    }
+    if args.has("assert-improved") {
+        if !first.is_finite() || !tail.is_finite() {
+            bail!("non-finite loss: first {first}, final {tail}");
+        }
+        if tail >= first {
+            bail!("loss did not decrease: first {first:.4} -> final {tail:.4}");
+        }
+        eprintln!("loss improved: {first:.4} -> {tail:.4}");
     }
     Ok(())
 }

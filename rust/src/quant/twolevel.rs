@@ -43,6 +43,24 @@ pub(crate) fn two_level_scales(
     micro: usize,
     fmt: &Fp8Format,
 ) -> (f32, Vec<i8>) {
+    two_level_scales_with_global(xs, rows, cols, micro, fmt, None)
+}
+
+/// [`two_level_scales`] with an optional externally supplied level-1
+/// global scale — the hook automatic scaling (paper §3.2) plugs into:
+/// the strategy *predicts* `max|W|/448` instead of reducing for it, and
+/// the prediction replaces the data-derived global scale here. Subscale
+/// exponents are still ceil-rounded per group, so a prediction that
+/// over- or under-shoots the true per-group scale never clips a payload
+/// (ratios above 1 encode as positive E8M0 exponents).
+pub(crate) fn two_level_scales_with_global(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    micro: usize,
+    fmt: &Fp8Format,
+    global: Option<f32>,
+) -> (f32, Vec<i8>) {
     assert_eq!(xs.len(), rows * cols);
     assert_eq!(cols % micro, 0, "cols {cols} % micro {micro} != 0");
     let g = cols / micro;
@@ -58,7 +76,10 @@ pub(crate) fn two_level_scales(
         }
     }
     // Stage 2 (Eq. 3): global scale + E8M0 subscales.
-    let scale = s_i.iter().fold(0f32, |a, &x| a.max(x));
+    let scale = match global {
+        Some(s) => s.max(SCALE_EPS),
+        None => s_i.iter().fold(0f32, |a, &x| a.max(x)),
+    };
     let ss_exp: Vec<i8> = s_i.iter().map(|&si| e8m0::encode_ceil(si / scale)).collect();
     (scale, ss_exp)
 }

@@ -23,15 +23,29 @@ pub struct AutoScaler {
 
 impl AutoScaler {
     pub fn new(interval: u64) -> Self {
-        AutoScaler { interval: interval.max(1), anchor_scales: None, lr_sum: 0.0, stats: ScalingStats::default() }
+        AutoScaler {
+            interval: interval.max(1),
+            anchor_scales: None,
+            lr_sum: 0.0,
+            stats: ScalingStats::default(),
+        }
     }
 
     /// The predicted scales without paying for any reduction (Eq. 10).
     pub fn predict(&self) -> Option<Vec<f32>> {
-        let drift = self.lr_sum / crate::E4M3_MAX;
+        let drift = self.drift();
         self.anchor_scales
             .as_ref()
             .map(|s| s.iter().map(|&s0| s0 + drift).collect())
+    }
+
+    /// The accumulated Eq.-10 drift term since the last anchor,
+    /// `(sum of learning rates) / 448` — the exact margin the predicted
+    /// scales sit above the anchor, and the Theorem-2 bound on how far
+    /// they may sit above the true JIT scales (tested end-to-end by the
+    /// host-backend parity suite).
+    pub fn drift(&self) -> f32 {
+        self.lr_sum / crate::E4M3_MAX
     }
 }
 
@@ -94,6 +108,8 @@ mod tests {
         assert!((s2[0] - (1.0 + 0.5 / 448.0)).abs() < 1e-6);
         let s3 = s.scales(3, 0.5, &mut src).unwrap();
         assert!((s3[0] - (1.0 + 1.0 / 448.0)).abs() < 1e-6);
+        // drift() exposes the accumulated lr_sum/448 margin
+        assert!((s.drift() - 1.5 / 448.0).abs() < 1e-9);
     }
 
     #[test]
