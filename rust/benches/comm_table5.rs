@@ -1,8 +1,10 @@
 //! Bench: Table 5 — memory & communication simulation, plus wall-clock
-//! of the real in-process ring all-reduce (f32 and FP8 wire).
+//! and measured bytes/element of the real in-process ring all-reduce
+//! across every wire encoding (f32, per-tensor FP8, packed microscaled
+//! FP8 groups).
 
 use moss::bench_util::{black_box, Bencher};
-use moss::distsim::allreduce::{ring_allreduce, Wire};
+use moss::distsim::allreduce::{ring_allreduce, ring_allreduce_stats, Wire};
 use moss::report::comm::table5;
 use moss::util::rng::Rng;
 
@@ -17,11 +19,18 @@ fn main() {
     let inputs: Vec<Vec<f32>> =
         (0..world).map(|_| (0..n).map(|_| rng.normal_f32()).collect()).collect();
     let b = Bencher::quick();
-    for wire in [Wire::F32, Wire::Fp8] {
-        let r = b.run(&format!("ring_allreduce_8x1MiB_{wire:?}"), || {
+    for wire in [Wire::F32, Wire::Fp8, Wire::PackedFp8Group { group: 32 }] {
+        let (_, stats) = ring_allreduce_stats(inputs.clone(), wire);
+        let r = b.run(&format!("ring_allreduce_8x1MiB_{}", wire.name()), || {
             black_box(ring_allreduce(inputs.clone(), wire));
         });
-        println!("{}", r.report_line());
+        println!(
+            "{}  [{:.3} B/elem, {} frames, {} bytes on wire]",
+            r.report_line(),
+            stats.bytes_per_elem(),
+            stats.frames,
+            stats.bytes_on_wire
+        );
     }
     println!("comm_table5 bench OK");
 }

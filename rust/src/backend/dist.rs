@@ -1,0 +1,457 @@
+//! Simulated data-parallel training of the host backend (paper §4.4):
+//! the PR-2 train step sharded across N in-process workers, with
+//! gradients reduced over `distsim::ring_allreduce`'s byte-level wire.
+//!
+//! One optimizer step:
+//!
+//! 1. **Scales + pack** — the driver asks the configured
+//!    [`ScalingStrategy`] for this step's level-1 weight scales and
+//!    packs every weight slot into the *shared* step-scoped
+//!    [`PackedWeightCache`] once (both operand layouts). Workers only
+//!    read the cache — one quantization event per weight per step, for
+//!    any worker count.
+//! 2. **Shard** — the global microbatch set (`host.microbatches`, a
+//!    multiple of `workers`) is dealt to workers. Under
+//!    [`ShardMode::Scatter`] the driver draws every microbatch from
+//!    one global stream in order and scatters contiguous slices, so
+//!    the union of worker data is bit-identical to the single-worker
+//!    stream. Under [`ShardMode::Streams`] each worker owns an
+//!    independent stream seeded `stream_seed(seed, rank)`.
+//! 3. **Compute** — scoped worker threads run packed FP8
+//!    forward/backward over their shard against the shared model
+//!    replica, accumulating local f32 gradients (embedding + every
+//!    linear) and per-microbatch losses.
+//! 4. **Reduce** — each worker's gradients flatten into one vector and
+//!    meet in [`ring_allreduce_stats`] under the configured
+//!    [`Wire`]: `Wire::PackedFp8Group` ships real u8 payloads + i8
+//!    E8M0 group exponents + one f32 scale per chunk (~1.04 B/elem),
+//!    `Wire::F32` is the 4 B/elem lossless reference. Measured bytes
+//!    and wall-clock accumulate into [`CommStats`].
+//! 5. **Update + broadcast** — the driver (rank 0 in a real cluster)
+//!    applies grad-clip + AdamW to the master weights and invalidates
+//!    the packed cache; workers see the new weights next step. This
+//!    models post-reduce rank-0 AdamW with a weight broadcast — in
+//!    process, the broadcast is the shared replica itself.
+//!
+//! ## Determinism & parity invariants (tests/dist_train_e2e.rs)
+//!
+//! * `workers = 1` is **bit-identical** to [`HostTrainer`]: same data
+//!   stream, same pack bits, same accumulation order, world-1
+//!   allreduce is a passthrough.
+//! * `workers = 2, microbatches = 2, Wire::F32` is **bit-identical**
+//!   to the single-worker trajectory: each worker holds one
+//!   microbatch, and a 2-rank ring sums every chunk as `x0 + x1` —
+//!   commutativity only, no reassociation.
+//! * `workers >= 3` reassociates chunk sums (a ring reduces chunk `c`
+//!   in rank order `c, c+1, ..`), so `Wire::F32` trajectories agree
+//!   with single-worker to f32-reassociation tolerance rather than
+//!   bitwise; every run is still bit-reproducible against itself.
+
+use anyhow::{bail, Result};
+
+use crate::config::{BackendKind, ShardMode, TrainConfig};
+use crate::coordinator::StepOutcome;
+use crate::data::BatchSource;
+use crate::distsim::{ring_allreduce_stats, Wire};
+use crate::kernels::{GemmConfig, PackedWeightCache};
+use crate::metrics::{CommStats, Throughput, TrainHistory};
+use crate::optim::{AdamW, AdamWParams};
+use crate::scaling::{absmax_to_scales, ScaleTrajectory, ScalingStrategy};
+use crate::util::rng::stream_seed;
+
+use super::host::{
+    apply_update, average_and_clip, backward, check_data_vocab, data_base_seed, forward,
+    make_batch_source, make_scaler, softmax_xent, split_tokens, Grads, HostModel, SharedWeights,
+};
+
+/// One worker's microbatch shard: `(inputs, targets)` token matrices
+/// in global microbatch order.
+type Shard = Vec<(Vec<i32>, Vec<i32>)>;
+
+/// Flatten one worker's gradients into the allreduce vector — every
+/// linear in slot order, then the embedding (the same order the grad
+/// norm iterates, so clip semantics match the single-worker loop).
+fn flatten_grads(g: &Grads) -> Vec<f32> {
+    let total = g.w.iter().map(|w| w.len()).sum::<usize>() + g.embed.len();
+    let mut out = Vec::with_capacity(total);
+    for w in &g.w {
+        out.extend_from_slice(w);
+    }
+    out.extend_from_slice(&g.embed);
+    out
+}
+
+/// Inverse of [`flatten_grads`] against the model's shapes.
+fn unflatten_grads(flat: &[f32], model: &HostModel) -> Grads {
+    let mut g = Grads::zeros(model);
+    let mut off = 0usize;
+    for w in g.w.iter_mut() {
+        w.copy_from_slice(&flat[off..off + w.len()]);
+        off += w.len();
+    }
+    g.embed.copy_from_slice(&flat[off..off + g.embed.len()]);
+    assert_eq!(off + g.embed.len(), flat.len(), "gradient vector length drifted");
+    g
+}
+
+/// Data-parallel host-backend trainer: N workers over the distsim ring.
+pub struct DistTrainer {
+    pub cfg: TrainConfig,
+    /// Master model replica (the rank-0 copy every worker reads).
+    pub model: HostModel,
+    /// Shared step-scoped packed-weight cache (driver packs, workers read).
+    pub cache: PackedWeightCache,
+    pub history: TrainHistory,
+    pub throughput: Throughput,
+    pub trajectory: ScaleTrajectory,
+    /// Cumulative gradient-allreduce wire accounting.
+    pub comm: CommStats,
+    /// Completed optimizer steps (1-based inside `step`).
+    pub steps_done: u64,
+    wire: Wire,
+    opt_w: Vec<AdamW>,
+    opt_embed: AdamW,
+    scaler: Box<dyn ScalingStrategy>,
+    /// One source under `Scatter`, one per worker under `Streams`.
+    sources: Vec<Box<dyn BatchSource>>,
+    last_scales: Vec<f32>,
+}
+
+impl DistTrainer {
+    pub fn new(cfg: TrainConfig) -> Result<DistTrainer> {
+        if cfg.backend != BackendKind::Host {
+            bail!("DistTrainer requires backend=host (got {})", cfg.backend.name());
+        }
+        cfg.host.validate()?;
+        cfg.dist.validate(cfg.host.microbatches)?;
+        let spec = cfg.host;
+        check_data_vocab(cfg.data, spec.vocab)?;
+        if !spec.cache_weights {
+            // Workers must all consume the same packed bits, so the
+            // pack-per-GEMM differential baseline has no data-parallel
+            // analog — reject instead of silently ignoring the flag.
+            bail!("--no-weight-cache has no data-parallel analog (workers share one \
+                   step-scoped packed-weight cache); run it with --workers 1");
+        }
+        let scaler = make_scaler(cfg.scaling);
+        let sources = Self::make_sources(&cfg);
+        let model = HostModel::init(spec, cfg.seed);
+        let opt_w = model
+            .weights
+            .iter()
+            .map(|w| AdamW::new(w.len(), AdamWParams::default()))
+            .collect();
+        let opt_embed = AdamW::new(model.embed.len(), AdamWParams::default());
+        let mut cache = PackedWeightCache::new(spec.n_linears());
+        cache.enabled = true;
+        let wire = cfg.dist.wire.to_wire(spec.micro);
+        Ok(DistTrainer {
+            cfg,
+            model,
+            cache,
+            history: TrainHistory::default(),
+            throughput: Throughput::new(),
+            trajectory: ScaleTrajectory::new(),
+            comm: CommStats::default(),
+            steps_done: 0,
+            wire,
+            opt_w,
+            opt_embed,
+            scaler,
+            sources,
+            last_scales: Vec::new(),
+        })
+    }
+
+    fn make_sources(cfg: &TrainConfig) -> Vec<Box<dyn BatchSource>> {
+        // Scatter: the exact seed the single-worker HostTrainer uses, so
+        // the global token stream is bit-identical. Streams: one
+        // decorrelated stream per rank.
+        let vocab = cfg.host.vocab;
+        let base = data_base_seed(cfg.data, cfg.seed);
+        match cfg.dist.shard {
+            ShardMode::Scatter => vec![make_batch_source(cfg.data, vocab, base)],
+            ShardMode::Streams => (0..cfg.dist.workers)
+                .map(|r| make_batch_source(cfg.data, vocab, stream_seed(base, r as u64)))
+                .collect(),
+        }
+    }
+
+    /// Draw this step's microbatches and deal them to workers:
+    /// `shards[rank]` holds that worker's `(inputs, targets)` list in
+    /// global microbatch order.
+    fn draw_shards(&mut self) -> Vec<Shard> {
+        let spec = self.cfg.host;
+        let workers = self.cfg.dist.workers;
+        let per = spec.microbatches / workers;
+        let (b, s) = (spec.batch, spec.seq);
+        let mut shards: Vec<Shard> = (0..workers).map(|_| Vec::with_capacity(per)).collect();
+        match self.cfg.dist.shard {
+            ShardMode::Scatter => {
+                for mb in 0..spec.microbatches {
+                    let batch = self.sources[0].next_batch(b, s + 1);
+                    shards[mb / per].push(split_tokens(&batch.tokens, b, s));
+                }
+            }
+            ShardMode::Streams => {
+                for (rank, shard) in shards.iter_mut().enumerate() {
+                    for _ in 0..per {
+                        let batch = self.sources[rank].next_batch(b, s + 1);
+                        shard.push(split_tokens(&batch.tokens, b, s));
+                    }
+                }
+            }
+        }
+        shards
+    }
+
+    /// Execute one optimizer step: pack, shard, parallel fwd/bwd, ring
+    /// allreduce, rank-0 AdamW + broadcast.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        let spec = self.cfg.host;
+        let step_1b = self.steps_done + 1;
+        let lr = self.cfg.lr.at(self.steps_done) as f32;
+
+        // --- weight scales from the scaling strategy -----------------
+        let scales = {
+            let model = &self.model;
+            let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
+            self.scaler.scales(step_1b, lr, &mut src)?
+        };
+        self.last_scales.clone_from(&scales);
+
+        // --- pack every weight once into the shared cache ------------
+        for i in 0..self.model.slots.len() {
+            self.model.ensure_packed(&mut self.cache, i, &scales);
+        }
+
+        // --- shard the global microbatch set -------------------------
+        let shards = self.draw_shards();
+
+        // --- parallel packed fwd/bwd over worker shards --------------
+        // N workers run concurrently, so cap each worker's GEMM thread
+        // count: the step still saturates the machine without N-fold
+        // oversubscription skewing the measured step times (thread
+        // count never changes output bits — see kernels::gemm).
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let gemm = GemmConfig {
+            threads: (cores / self.cfg.dist.workers).max(1),
+            ..GemmConfig::default()
+        };
+        let model = &self.model;
+        let cache = &self.cache;
+        let vocab = spec.vocab;
+        let results: Vec<(Grads, Vec<f64>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    scope.spawn(move || {
+                        let mut grads = Grads::zeros(model);
+                        let mut losses = Vec::with_capacity(shard.len());
+                        let mut ops = SharedWeights(cache);
+                        for (inputs, targets) in &shard {
+                            let trace = forward(model, &mut ops, inputs, gemm);
+                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab);
+                            losses.push(loss);
+                            backward(model, &mut ops, &trace, &dlogits, inputs, &mut grads, gemm);
+                        }
+                        (grads, losses)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("dist worker panicked")).collect()
+        });
+
+        // --- loss: gather per-microbatch losses, sum in global order -
+        let mut loss_sum = 0f64;
+        for (_, losses) in &results {
+            for l in losses {
+                loss_sum += *l;
+            }
+        }
+
+        // --- gradient ring allreduce over the configured wire --------
+        let flat: Vec<Vec<f32>> = results.iter().map(|(g, _)| flatten_grads(g)).collect();
+        let n_elems = flat[0].len() as u64;
+        let (reduced, ar) = ring_allreduce_stats(flat, self.wire);
+        self.comm.record(ar.bytes_on_wire, ar.elems_shipped, n_elems, ar.wall_secs);
+        let mut grads = unflatten_grads(&reduced[0], &self.model);
+
+        // --- average over microbatches, clip the global norm ---------
+        // (the shared helper: identical arithmetic to HostTrainer)
+        let gnorm = average_and_clip(&mut grads, spec.microbatches);
+
+        // --- rank-0 AdamW + broadcast (the shared master replica) ----
+        apply_update(&mut self.model, &mut self.opt_w, &mut self.opt_embed, &grads, lr);
+        self.cache.invalidate();
+        self.steps_done = step_1b;
+
+        let loss = loss_sum / spec.microbatches as f64;
+        self.throughput.step((spec.batch * spec.seq * spec.microbatches) as u64);
+        self.history.record_loss(step_1b, loss, gnorm);
+
+        // --- instrumentation (same Fig-4 sampling as the host path) --
+        if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
+            let jit = self.exact_scales();
+            self.trajectory.record(step_1b, scales[0] + lr / crate::E4M3_MAX, jit[0]);
+        }
+
+        Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
+    }
+
+    /// Run `n` steps, logging per `cfg.log_every`.
+    pub fn run(&mut self, n: u64) -> Result<()> {
+        for _ in 0..n {
+            let out = self.step()?;
+            if self.cfg.log_every > 0 && out.step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[dist x{}] step {:>6} loss {:.4} gnorm {:.3} lr {:.2e} tok/s {:.0} \
+                     wire {} {:.2} B/elem",
+                    self.cfg.dist.workers,
+                    out.step,
+                    out.loss,
+                    out.grad_norm,
+                    out.lr,
+                    self.throughput.tokens_per_sec(),
+                    self.wire.name(),
+                    self.comm.bytes_per_elem(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Scales the strategy produced for the most recent step.
+    pub fn last_scales(&self) -> &[f32] {
+        &self.last_scales
+    }
+
+    /// Exact per-step scales (what `JitScaler` would produce now).
+    pub fn exact_scales(&self) -> Vec<f32> {
+        absmax_to_scales(&self.model.weight_absmax())
+    }
+
+    pub fn scaling_stats(&self) -> crate::scaling::ScalingStats {
+        self.scaler.stats()
+    }
+
+    pub fn scaler_name(&self) -> &'static str {
+        self.scaler.name()
+    }
+
+    /// The wire the gradient allreduce runs over.
+    pub fn wire(&self) -> Wire {
+        self.wire
+    }
+}
+
+/// Route a host-backend config to the right trainer: the plain
+/// `HostTrainer` for one worker, [`DistTrainer`] beyond.
+pub fn is_dist(cfg: &TrainConfig) -> bool {
+    cfg.dist.workers > 1
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{DistSpec, HostSpec, LrSchedule, WireKind};
+
+    use super::*;
+
+    fn tiny_cfg(steps: u64, workers: usize, wire: WireKind) -> TrainConfig {
+        TrainConfig {
+            backend: BackendKind::Host,
+            host: HostSpec {
+                vocab: 64,
+                dim: 32,
+                ffn: 64,
+                layers: 2,
+                seq: 16,
+                batch: 2,
+                micro: 32,
+                microbatches: workers.max(1),
+                cache_weights: true,
+            },
+            dist: DistSpec { workers, wire, shard: ShardMode::Scatter },
+            steps,
+            lr: LrSchedule { peak: 5e-3, warmup_steps: 3, total_steps: steps, final_ratio: 0.1 },
+            log_every: 0,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut cfg = tiny_cfg(1, 2, WireKind::F32);
+        cfg.backend = BackendKind::Aot;
+        assert!(DistTrainer::new(cfg).is_err());
+        let mut cfg = tiny_cfg(1, 2, WireKind::F32);
+        cfg.host.microbatches = 3; // not divisible by 2 workers
+        assert!(DistTrainer::new(cfg).is_err());
+        // the pack-per-GEMM baseline has no data-parallel analog: the
+        // flag must be rejected, never silently ignored
+        let mut cfg = tiny_cfg(1, 2, WireKind::F32);
+        cfg.host.cache_weights = false;
+        assert!(DistTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn packs_once_per_step_for_any_worker_count() {
+        for workers in [1usize, 4] {
+            let steps = 3u64;
+            let mut t = DistTrainer::new(tiny_cfg(steps, workers, WireKind::F32)).unwrap();
+            t.run(steps).unwrap();
+            let stats = t.cache.stats();
+            let slots = t.cfg.host.n_linears() as u64;
+            assert_eq!(stats.packs, steps * slots, "workers {workers}");
+            assert_eq!(stats.invalidations, steps);
+        }
+    }
+
+    #[test]
+    fn comm_stats_accumulate() {
+        let steps = 2u64;
+        let mut t = DistTrainer::new(tiny_cfg(steps, 2, WireKind::PackedFp8Group)).unwrap();
+        t.run(steps).unwrap();
+        assert_eq!(t.comm.steps, steps);
+        assert!(t.comm.bytes_on_wire > 0);
+        assert_eq!(t.comm.grad_elems as usize, t.cfg.host.param_count());
+        let per_elem = t.comm.bytes_per_elem();
+        assert!(per_elem > 0.9 && per_elem <= 1.1, "packed wire {per_elem} B/elem");
+    }
+
+    #[test]
+    fn single_worker_has_empty_wire() {
+        let mut t = DistTrainer::new(tiny_cfg(1, 1, WireKind::PackedFp8Group)).unwrap();
+        t.run(1).unwrap();
+        assert_eq!(t.comm.bytes_on_wire, 0);
+        assert_eq!(t.comm.steps, 1);
+    }
+
+    #[test]
+    fn flatten_roundtrip_is_lossless() {
+        let model = HostModel::init(tiny_cfg(1, 1, WireKind::F32).host, 7);
+        let mut g = Grads::zeros(&model);
+        let mut i = 0u32;
+        let mut next = || {
+            i += 1;
+            ((i % 997) as f32 - 498.0) * 0.0625
+        };
+        for w in g.w.iter_mut() {
+            for x in w.iter_mut() {
+                *x = next();
+            }
+        }
+        for x in g.embed.iter_mut() {
+            *x = next();
+        }
+        let flat = flatten_grads(&g);
+        assert_eq!(flat.len(), model.spec.param_count());
+        let back = unflatten_grads(&flat, &model);
+        for (a, b) in g.w.iter().flatten().zip(back.w.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in g.embed.iter().zip(&back.embed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -34,7 +34,10 @@ use crate::config::{BackendKind, DataKind, HostSpec, ScalingKind, TrainConfig};
 use crate::coordinator::StepOutcome;
 use crate::data::synth::CorpusSpec;
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
-use crate::kernels::{linear_backward_prepacked, linear_forward_prepacked, PackedWeightCache};
+use crate::kernels::{
+    linear_backward_prepacked_with, linear_forward_prepacked_with, GemmConfig, PackedFp8Tensor,
+    PackedWeightCache,
+};
 use crate::metrics::{Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
 use crate::scaling::{
@@ -44,6 +47,44 @@ use crate::util::rng::Rng;
 
 /// Global gradient-norm clip (paper §4.1 recipe).
 pub const GRAD_CLIP: f64 = 1.0;
+
+/// Build the configured scaling strategy — the single definition both
+/// [`HostTrainer`] and the data-parallel `DistTrainer` call, so the two
+/// paths cannot drift apart (the workers=1 bit-identity contract).
+pub(crate) fn make_scaler(kind: ScalingKind) -> Box<dyn ScalingStrategy> {
+    match kind {
+        ScalingKind::Auto { interval } => Box::new(AutoScaler::new(interval)),
+        ScalingKind::Jit => Box::new(JitScaler::new()),
+        ScalingKind::Delayed { window, refresh } => {
+            Box::new(DelayedScaler::new(window, refresh, 1.25))
+        }
+    }
+}
+
+/// Seed salt of the training data stream — shared by both trainers for
+/// the same reason as [`make_scaler`].
+pub(crate) fn data_base_seed(data: DataKind, seed: u64) -> u64 {
+    match data {
+        DataKind::Synthetic => seed ^ 0xC0FFEE,
+        DataKind::MathTasks => seed ^ 0x7A5C,
+    }
+}
+
+/// Construct a batch source of `data` flavour from an explicit seed.
+pub(crate) fn make_batch_source(data: DataKind, vocab: usize, seed: u64) -> Box<dyn BatchSource> {
+    match data {
+        DataKind::Synthetic => Box::new(SyntheticCorpus::new(CorpusSpec::pretrain(vocab, seed))),
+        DataKind::MathTasks => Box::new(TaskMixSource::new(seed)),
+    }
+}
+
+/// Reject configs whose data source cannot fit the model's vocab.
+pub(crate) fn check_data_vocab(data: DataKind, vocab: usize) -> Result<()> {
+    if data == DataKind::MathTasks && vocab < 32 {
+        bail!("math tasks use a 32-token alphabet; host vocab {vocab} is too small");
+    }
+    Ok(())
+}
 
 /// One quantized linear's shape: `Y[.., n] = X[.., k] @ W[k, n]`.
 #[derive(Debug, Clone)]
@@ -104,33 +145,127 @@ impl HostModel {
 
     /// Pack weight `i` into `cache` (both layouts) under the strategy's
     /// scale if stale; count a hit otherwise.
-    fn ensure_packed(&self, cache: &mut PackedWeightCache, i: usize, scales: &[f32]) {
+    pub(crate) fn ensure_packed(&self, cache: &mut PackedWeightCache, i: usize, scales: &[f32]) {
         let s = &self.slots[i];
         cache.ensure(i, &self.weights[i], s.k, s.n, self.spec.micro, Some(scales[i]));
     }
 }
 
+/// Source of packed weight operands for one microbatch's GEMMs.
+///
+/// Two implementations: [`EnsuredWeights`] (the single-process path —
+/// lazily packs each slot into the step-scoped cache on first touch,
+/// exactly the PR-2 `ensure`-then-use sequence) and
+/// [`SharedWeights`] (the data-parallel path — a read-only view of a
+/// cache the driver pre-packed once per step, shared by every worker
+/// thread).
+pub(crate) trait WeightOperands {
+    /// Forward operand (`[N,K]` grouped along K) of weight slot `i`.
+    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor;
+    /// Backward-dX operand (`[K,N]` grouped along N) of weight slot `i`.
+    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor;
+}
+
+/// Lazily-packing operand source over the step-scoped cache.
+pub(crate) struct EnsuredWeights<'a> {
+    pub model: &'a HostModel,
+    pub cache: &'a mut PackedWeightCache,
+    pub scales: &'a [f32],
+}
+
+impl WeightOperands for EnsuredWeights<'_> {
+    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor {
+        self.model.ensure_packed(self.cache, i, self.scales);
+        self.cache.fwd(i)
+    }
+
+    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor {
+        self.model.ensure_packed(self.cache, i, self.scales);
+        self.cache.bwd(i)
+    }
+}
+
+/// Read-only operand source over a cache that was fully packed for this
+/// step already (panics on a stale slot — the dist driver's contract).
+pub(crate) struct SharedWeights<'a>(pub &'a PackedWeightCache);
+
+impl WeightOperands for SharedWeights<'_> {
+    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor {
+        self.0.fwd(i)
+    }
+
+    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor {
+        self.0.bwd(i)
+    }
+}
+
 /// Saved forward activations of one microbatch.
-struct Trace {
+pub(crate) struct Trace {
     /// Layer-block inputs; `xs[layers]` is the final hidden state.
-    xs: Vec<Vec<f32>>,
+    pub(crate) xs: Vec<Vec<f32>>,
     /// `relu(u)` per layer — also carries the backward ReLU mask
     /// (`act > 0` iff `u > 0`), so pre-activations need not be saved.
-    acts: Vec<Vec<f32>>,
-    logits: Vec<f32>,
+    pub(crate) acts: Vec<Vec<f32>>,
+    pub(crate) logits: Vec<f32>,
 }
 
-/// Accumulated gradients of one optimizer step.
-struct Grads {
-    w: Vec<Vec<f32>>,
-    embed: Vec<f32>,
+/// Accumulated gradients of one optimizer step (or of one worker's
+/// microbatch shard, before the gradient allreduce).
+pub(crate) struct Grads {
+    pub(crate) w: Vec<Vec<f32>>,
+    pub(crate) embed: Vec<f32>,
 }
 
-fn forward(
+impl Grads {
+    pub(crate) fn zeros(model: &HostModel) -> Grads {
+        Grads {
+            w: model.weights.iter().map(|w| vec![0f32; w.len()]).collect(),
+            embed: vec![0f32; model.embed.len()],
+        }
+    }
+}
+
+/// Average accumulated gradients over `microbatches` and clip the
+/// global norm in place (paper §4.1); returns the gradient norm. The
+/// single definition both trainers call — this arithmetic is part of
+/// the workers=1 bit-identity contract and must not fork.
+pub(crate) fn average_and_clip(grads: &mut Grads, microbatches: usize) -> f64 {
+    let inv = 1.0 / microbatches as f64;
+    let mut sq = 0f64;
+    for g in grads.w.iter().flat_map(|g| g.iter()).chain(grads.embed.iter()) {
+        sq += (*g as f64) * (*g as f64);
+    }
+    let gnorm = sq.sqrt() * inv;
+    let factor = (inv * if gnorm > GRAD_CLIP { GRAD_CLIP / gnorm } else { 1.0 }) as f32;
+    for g in grads.w.iter_mut().flat_map(|g| g.iter_mut()).chain(grads.embed.iter_mut()) {
+        *g *= factor;
+    }
+    gnorm
+}
+
+/// Apply the AdamW update (paper Eq. 1) to every weight and the
+/// embedding from already-averaged-and-clipped gradients. Shared by
+/// both trainers for the same reason as [`average_and_clip`].
+pub(crate) fn apply_update(
+    model: &mut HostModel,
+    opt_w: &mut [AdamW],
+    opt_embed: &mut AdamW,
+    grads: &Grads,
+    lr: f32,
+) {
+    for (i, w) in model.weights.iter_mut().enumerate() {
+        opt_w[i].step(w, &grads.w[i], lr);
+    }
+    opt_embed.step(&mut model.embed, &grads.embed, lr);
+}
+
+/// `gemm` controls the per-GEMM tiling/threading (bit-neutral; the
+/// dist backend caps threads so N workers don't oversubscribe cores).
+pub(crate) fn forward<W: WeightOperands>(
     model: &HostModel,
-    cache: &mut PackedWeightCache,
-    scales: &[f32],
+    ops: &mut W,
     inputs: &[i32],
+    gemm: GemmConfig,
 ) -> Trace {
     let spec = &model.spec;
     let (dim, rows) = (spec.dim, inputs.len());
@@ -143,23 +278,20 @@ fn forward(
     let mut acts = Vec::with_capacity(spec.layers);
     for l in 0..spec.layers {
         let (iu, id) = (2 * l, 2 * l + 1);
-        model.ensure_packed(cache, iu, scales);
-        let u = linear_forward_prepacked(&xs[l], rows, cache.fwd(iu));
+        let u = linear_forward_prepacked_with(&xs[l], rows, ops.fwd(iu), gemm);
         let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
-        model.ensure_packed(cache, id, scales);
-        let h = linear_forward_prepacked(&a, rows, cache.fwd(id));
+        let h = linear_forward_prepacked_with(&a, rows, ops.fwd(id), gemm);
         let xnext: Vec<f32> = xs[l].iter().zip(&h).map(|(x, y)| x + y).collect();
         acts.push(a);
         xs.push(xnext);
     }
     let iout = 2 * spec.layers;
-    model.ensure_packed(cache, iout, scales);
-    let logits = linear_forward_prepacked(&xs[spec.layers], rows, cache.fwd(iout));
+    let logits = linear_forward_prepacked_with(&xs[spec.layers], rows, ops.fwd(iout), gemm);
     Trace { xs, acts, logits }
 }
 
 /// Mean softmax cross-entropy over rows + gradient w.r.t. the logits.
-fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, Vec<f32>) {
+pub(crate) fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, Vec<f32>) {
     let rows = targets.len();
     assert_eq!(logits.len(), rows * vocab);
     let inv = 1.0 / rows as f32;
@@ -183,14 +315,14 @@ fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, Vec<f32>
     (loss / rows as f64, d)
 }
 
-fn backward(
+pub(crate) fn backward<W: WeightOperands>(
     model: &HostModel,
-    cache: &mut PackedWeightCache,
-    scales: &[f32],
+    ops: &mut W,
     trace: &Trace,
     dlogits: &[f32],
     inputs: &[i32],
     grads: &mut Grads,
+    gemm: GemmConfig,
 ) {
     fn accum(dst: &mut [f32], src: &[f32]) {
         for (d, s) in dst.iter_mut().zip(src) {
@@ -200,22 +332,21 @@ fn backward(
     let spec = &model.spec;
     let rows = inputs.len();
     let iout = 2 * spec.layers;
-    model.ensure_packed(cache, iout, scales);
     let (mut dx, dw_out) =
-        linear_backward_prepacked(&trace.xs[spec.layers], cache.bwd(iout), dlogits, rows);
+        linear_backward_prepacked_with(&trace.xs[spec.layers], ops.bwd(iout), dlogits, rows, gemm);
     accum(&mut grads.w[iout], &dw_out);
     for l in (0..spec.layers).rev() {
         let (iu, id) = (2 * l, 2 * l + 1);
-        model.ensure_packed(cache, id, scales);
-        let (da, dw_down) = linear_backward_prepacked(&trace.acts[l], cache.bwd(id), &dx, rows);
+        let (da, dw_down) =
+            linear_backward_prepacked_with(&trace.acts[l], ops.bwd(id), &dx, rows, gemm);
         accum(&mut grads.w[id], &dw_down);
         let du: Vec<f32> = da
             .iter()
             .zip(&trace.acts[l])
             .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
             .collect();
-        model.ensure_packed(cache, iu, scales);
-        let (dxb, dw_up) = linear_backward_prepacked(&trace.xs[l], cache.bwd(iu), &du, rows);
+        let (dxb, dw_up) =
+            linear_backward_prepacked_with(&trace.xs[l], ops.bwd(iu), &du, rows, gemm);
         accum(&mut grads.w[iu], &dw_up);
         // residual: grads from the identity path and the MLP branch add
         accum(&mut dx, &dxb);
@@ -228,7 +359,7 @@ fn backward(
 }
 
 /// Split a [batch, seq+1] token matrix into inputs and shifted targets.
-fn split_tokens(tokens: &[i32], b: usize, s: usize) -> (Vec<i32>, Vec<i32>) {
+pub(crate) fn split_tokens(tokens: &[i32], b: usize, s: usize) -> (Vec<i32>, Vec<i32>) {
     let mut inputs = Vec::with_capacity(b * s);
     let mut targets = Vec::with_capacity(b * s);
     for r in 0..b {
@@ -265,23 +396,9 @@ impl HostTrainer {
         }
         cfg.host.validate()?;
         let spec = cfg.host;
-        if cfg.data == DataKind::MathTasks && spec.vocab < 32 {
-            bail!("math tasks use a 32-token alphabet; host vocab {} is too small", spec.vocab);
-        }
-        let scaler: Box<dyn ScalingStrategy> = match cfg.scaling {
-            ScalingKind::Auto { interval } => Box::new(AutoScaler::new(interval)),
-            ScalingKind::Jit => Box::new(JitScaler::new()),
-            ScalingKind::Delayed { window, refresh } => {
-                Box::new(DelayedScaler::new(window, refresh, 1.25))
-            }
-        };
-        let data: Box<dyn BatchSource> = match cfg.data {
-            DataKind::Synthetic => Box::new(SyntheticCorpus::new(CorpusSpec::pretrain(
-                spec.vocab,
-                cfg.seed ^ 0xC0FFEE,
-            ))),
-            DataKind::MathTasks => Box::new(TaskMixSource::new(cfg.seed ^ 0x7A5C)),
-        };
+        check_data_vocab(cfg.data, spec.vocab)?;
+        let scaler = make_scaler(cfg.scaling);
+        let data = make_batch_source(cfg.data, spec.vocab, data_base_seed(cfg.data, cfg.seed));
         let model = HostModel::init(spec, cfg.seed);
         let opt_w = model
             .weights
@@ -323,45 +440,25 @@ impl HostTrainer {
 
         // --- microbatch loop: weights pack once, reuse thereafter ----
         let (b, s) = (spec.batch, spec.seq);
-        let mut grads = Grads {
-            w: self.model.weights.iter().map(|w| vec![0f32; w.len()]).collect(),
-            embed: vec![0f32; self.model.embed.len()],
-        };
+        let gemm = GemmConfig::default();
+        let mut grads = Grads::zeros(&self.model);
         let mut loss_sum = 0f64;
         for _ in 0..spec.microbatches {
             let batch = self.data.next_batch(b, s + 1);
             let (inputs, targets) = split_tokens(&batch.tokens, b, s);
-            let trace = forward(&self.model, &mut self.cache, &scales, &inputs);
+            let mut ops =
+                EnsuredWeights { model: &self.model, cache: &mut self.cache, scales: &scales };
+            let trace = forward(&self.model, &mut ops, &inputs, gemm);
             let (loss, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
             loss_sum += loss;
-            backward(
-                &self.model,
-                &mut self.cache,
-                &scales,
-                &trace,
-                &dlogits,
-                &inputs,
-                &mut grads,
-            );
+            backward(&self.model, &mut ops, &trace, &dlogits, &inputs, &mut grads, gemm);
         }
 
         // --- average over microbatches, clip the global norm ---------
-        let inv = 1.0 / spec.microbatches as f64;
-        let mut sq = 0f64;
-        for g in grads.w.iter().flat_map(|g| g.iter()).chain(grads.embed.iter()) {
-            sq += (*g as f64) * (*g as f64);
-        }
-        let gnorm = sq.sqrt() * inv;
-        let factor = (inv * if gnorm > GRAD_CLIP { GRAD_CLIP / gnorm } else { 1.0 }) as f32;
-        for g in grads.w.iter_mut().flat_map(|g| g.iter_mut()).chain(grads.embed.iter_mut()) {
-            *g *= factor;
-        }
+        let gnorm = average_and_clip(&mut grads, spec.microbatches);
 
         // --- AdamW update, then the packings are stale ---------------
-        for (i, w) in self.model.weights.iter_mut().enumerate() {
-            self.opt_w[i].step(w, &grads.w[i], lr);
-        }
-        self.opt_embed.step(&mut self.model.embed, &grads.embed, lr);
+        apply_update(&mut self.model, &mut self.opt_w, &mut self.opt_embed, &grads, lr);
         self.cache.invalidate();
         self.steps_done = step_1b;
 

@@ -6,7 +6,15 @@
 //! forward, loss, backward, AdamW — from `kernels::linear` and runs
 //! end-to-end with **zero artifacts**. Selection is
 //! `config::BackendKind` (`repro train --backend host|aot`).
+//!
+//! [`dist`] scales the host path out: `--workers N` runs the same train
+//! step data-parallel across N in-process workers, reducing gradients
+//! over `distsim::ring_allreduce`'s byte-level wire (packed u8 FP8
+//! payloads by default) — the simulated-cluster substrate for the
+//! paper's §4.4 communication claims.
 
+pub mod dist;
 pub mod host;
 
+pub use dist::{is_dist, DistTrainer};
 pub use host::{HostModel, HostTrainer};

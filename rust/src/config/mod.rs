@@ -156,6 +156,129 @@ impl HostSpec {
     }
 }
 
+/// Gradient-allreduce wire encoding of the data-parallel host backend
+/// (maps onto `distsim::allreduce::Wire`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireKind {
+    /// 4 B/elem little-endian floats (lossless reference).
+    F32,
+    /// Per-chunk per-tensor FP8: 1 B/elem + one f32 scale.
+    Fp8,
+    /// MOSS microscaled wire: 1 B/elem + i8 E8M0 exponent per micro
+    /// group + one f32 scale per chunk (~1.04 B/elem at group 32).
+    PackedFp8Group,
+}
+
+impl WireKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => WireKind::F32,
+            "fp8" => WireKind::Fp8,
+            "packed" | "packed-fp8-group" => WireKind::PackedFp8Group,
+            _ => bail!("unknown wire {s:?} (f32|fp8|packed)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireKind::F32 => "f32",
+            WireKind::Fp8 => "fp8",
+            WireKind::PackedFp8Group => "packed-fp8-group",
+        }
+    }
+
+    /// Materialize as the distsim wire, with `group` as the micro-group
+    /// size of the packed encoding.
+    pub fn to_wire(self, group: usize) -> crate::distsim::Wire {
+        match self {
+            WireKind::F32 => crate::distsim::Wire::F32,
+            WireKind::Fp8 => crate::distsim::Wire::Fp8,
+            WireKind::PackedFp8Group => crate::distsim::Wire::PackedFp8Group { group },
+        }
+    }
+}
+
+/// How training batches reach the data-parallel workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardMode {
+    /// One global batch stream, drawn by the driver in microbatch order
+    /// and scattered to workers — `--workers N` consumes *exactly* the
+    /// same token stream as a single-worker run (the strong-scaling
+    /// setup the bit-identity invariants are stated over).
+    Scatter,
+    /// Each worker owns an independent stream seeded by
+    /// `util::rng::stream_seed(seed, rank)` — no driver bottleneck
+    /// (weak-scaling flavour; reproducible, but the data differs from
+    /// the single-worker stream by construction).
+    Streams,
+}
+
+impl ShardMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "scatter" => ShardMode::Scatter,
+            "streams" => ShardMode::Streams,
+            _ => bail!("unknown shard mode {s:?} (scatter|streams)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardMode::Scatter => "scatter",
+            ShardMode::Streams => "streams",
+        }
+    }
+}
+
+/// Simulated data-parallel execution of the host backend: N in-process
+/// workers, each owning a microbatch shard, gradients reduced over the
+/// distsim ring with the selected wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistSpec {
+    /// In-process data-parallel workers (1 = the plain host loop).
+    pub workers: usize,
+    pub wire: WireKind,
+    pub shard: ShardMode,
+}
+
+impl Default for DistSpec {
+    fn default() -> Self {
+        DistSpec { workers: 1, wire: WireKind::PackedFp8Group, shard: ShardMode::Scatter }
+    }
+}
+
+impl DistSpec {
+    pub fn apply_args(mut self, a: &Args) -> Result<Self> {
+        self.workers = a.get_usize("workers", self.workers)?;
+        if self.workers == 0 {
+            bail!("--workers must be >= 1 (got 0)");
+        }
+        if let Some(w) = a.get("wire") {
+            self.wire = WireKind::parse(w)?;
+        }
+        if let Some(s) = a.get("shard") {
+            self.shard = ShardMode::parse(s)?;
+        }
+        Ok(self)
+    }
+
+    /// The global microbatch count must shard evenly across workers
+    /// (CLI runs get it rounded up by `TrainConfig::apply_args`).
+    pub fn validate(&self, microbatches: usize) -> Result<()> {
+        if self.workers == 0 || self.workers > 256 {
+            bail!("dist spec needs 1 <= workers <= 256 (got {})", self.workers);
+        }
+        if microbatches % self.workers != 0 {
+            bail!(
+                "microbatches {} must be divisible by workers {}",
+                microbatches,
+                self.workers
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Weight-scaling strategy selection (paper §3.2 / Appendix E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalingKind {
@@ -219,6 +342,8 @@ pub struct TrainConfig {
     /// Model shape of the host backend (ignored by the AOT path, which
     /// reads dims from the artifact manifest).
     pub host: HostSpec,
+    /// Data-parallel execution of the host backend (`--workers N`).
+    pub dist: DistSpec,
     pub mode: QuantMode,
     pub scaling: ScalingKind,
     pub steps: u64,
@@ -241,6 +366,7 @@ impl Default for TrainConfig {
             artifacts_root: PathBuf::from("artifacts"),
             backend: BackendKind::Aot,
             host: HostSpec::default(),
+            dist: DistSpec::default(),
             mode: QuantMode::Moss,
             scaling: ScalingKind::Auto { interval: 500 },
             steps: 50,
@@ -266,6 +392,14 @@ impl TrainConfig {
             self.backend = BackendKind::parse(b)?;
         }
         self.host = self.host.apply_args(a)?;
+        self.dist = self.dist.apply_args(a)?;
+        if self.dist.workers > 1 {
+            // each worker processes the same number of microbatches, so
+            // round the global count up to a workers multiple (default
+            // microbatches=1 with --workers 4 becomes one per worker)
+            let w = self.dist.workers;
+            self.host.microbatches = self.host.microbatches.div_ceil(w) * w;
+        }
         if let Some(m) = a.get("mode") {
             self.mode = QuantMode::parse(m)?;
         }
@@ -382,6 +516,54 @@ mod tests {
         assert!(bad.validate().is_err());
         assert!(BackendKind::parse("cuda").is_err());
         assert_eq!(BackendKind::parse("host").unwrap().name(), "host");
+    }
+
+    #[test]
+    fn dist_spec_parses_and_rounds_microbatches() {
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--workers", "4", "--wire", "packed"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.dist.workers, 4);
+        assert_eq!(c.dist.wire, WireKind::PackedFp8Group);
+        assert_eq!(c.dist.shard, ShardMode::Scatter);
+        // default microbatches=1 rounds up to one per worker
+        assert_eq!(c.host.microbatches, 4);
+        assert!(c.dist.validate(c.host.microbatches).is_ok());
+        // microbatches round to the next workers multiple, never down
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--workers", "4", "--microbatches", "6"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.host.microbatches, 8);
+        // parse failures
+        assert!(WireKind::parse("bf16").is_err());
+        assert!(ShardMode::parse("broadcast").is_err());
+        let args = crate::cli::Args::parse(
+            ["train", "--workers", "0"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert!(TrainConfig::default().apply_args(&args).is_err(), "--workers 0 must error");
+        assert!(DistSpec { workers: 3, ..DistSpec::default() }.validate(4).is_err());
+        assert!(DistSpec { workers: 0, ..DistSpec::default() }.validate(4).is_err());
+        // wire kinds materialize onto the distsim wire
+        assert_eq!(WireKind::parse("f32").unwrap().to_wire(32), crate::distsim::Wire::F32);
+        assert_eq!(
+            WireKind::PackedFp8Group.to_wire(32),
+            crate::distsim::Wire::PackedFp8Group { group: 32 }
+        );
+        for w in ["f32", "fp8", "packed-fp8-group"] {
+            assert_eq!(WireKind::parse(w).unwrap().name(), w);
+        }
+        for s in ["scatter", "streams"] {
+            assert_eq!(ShardMode::parse(s).unwrap().name(), s);
+        }
     }
 
     #[test]

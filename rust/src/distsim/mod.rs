@@ -1,14 +1,17 @@
 //! Distributed-training simulation (paper §4.4, Table 5): activation-
 //! memory accounting per precision scheme, a *real* multi-threaded ring
-//! all-reduce with quantized payloads, an NVLink alpha-beta network
-//! model, and a compute/communication overlap timeline.
+//! all-reduce with typed byte-level wire frames (the gradient path of
+//! `backend::dist`), an NVLink alpha-beta network model, and a
+//! compute/communication overlap timeline.
 
 pub mod allreduce;
 pub mod memory;
 pub mod netmodel;
 pub mod overlap;
 
-pub use allreduce::ring_allreduce;
+pub use allreduce::{
+    ring_allreduce, ring_allreduce_stats, AllreduceStats, Wire, WireChunk, WireMeta,
+};
 pub use memory::{activation_memory_gb, MemoryScheme, ModelShape};
 pub use netmodel::NetModel;
 pub use overlap::{overlap_ratio, OverlapConfig};

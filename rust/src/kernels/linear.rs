@@ -21,7 +21,7 @@
 
 use crate::formats::fp8::{E4M3, E5M2};
 
-use super::gemm::packed_gemm;
+use super::gemm::{packed_gemm_with, GemmConfig};
 use super::packed::PackedFp8Tensor;
 
 /// Transpose tile edge: 32x32 f32 tiles (8 KiB working set) keep both
@@ -89,10 +89,23 @@ pub fn pack_weight_bwd(
 /// Forward against a prepacked weight (`wfwd` from [`pack_weight_fwd`]):
 /// `Y[M,N] = X[M,K] @ W[K,N]`, activation quantized E4M3 per call.
 pub fn linear_forward_prepacked(x: &[f32], m: usize, wfwd: &PackedFp8Tensor) -> Vec<f32> {
+    linear_forward_prepacked_with(x, m, wfwd, GemmConfig::default())
+}
+
+/// [`linear_forward_prepacked`] with explicit GEMM tiling/threading —
+/// callers that already run on several threads (the data-parallel
+/// backend) cap the per-GEMM thread count to avoid oversubscription.
+/// Thread count never changes output bits (see `kernels::gemm`).
+pub fn linear_forward_prepacked_with(
+    x: &[f32],
+    m: usize,
+    wfwd: &PackedFp8Tensor,
+    cfg: GemmConfig,
+) -> Vec<f32> {
     let k = wfwd.cols;
     assert_eq!(x.len(), m * k, "activation is {} elems, want [{m}, {k}]", x.len());
     let xa = PackedFp8Tensor::quantize(x, m, k, wfwd.micro, &E4M3);
-    packed_gemm(&xa, wfwd)
+    packed_gemm_with(&xa, wfwd, cfg)
 }
 
 /// Backward against a prepacked weight (`wbwd` from [`pack_weight_bwd`]):
@@ -107,19 +120,31 @@ pub fn linear_backward_prepacked(
     dy: &[f32],
     m: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    linear_backward_prepacked_with(x, wbwd, dy, m, GemmConfig::default())
+}
+
+/// [`linear_backward_prepacked`] with explicit GEMM tiling/threading
+/// (same bit-identity guarantee as the forward variant).
+pub fn linear_backward_prepacked_with(
+    x: &[f32],
+    wbwd: &PackedFp8Tensor,
+    dy: &[f32],
+    m: usize,
+    cfg: GemmConfig,
+) -> (Vec<f32>, Vec<f32>) {
     let (k, n, micro) = (wbwd.rows, wbwd.cols, wbwd.micro);
     assert_eq!(x.len(), m * k, "x is {} elems, want [{m}, {k}]", x.len());
     assert_eq!(dy.len(), m * n, "dy is {} elems, want [{m}, {n}]", dy.len());
     // dX: dY is [M, N] grouped along N; wbwd is already [K, N] row-major,
     // i.e. exactly the transposed-operand layout the GEMM consumes.
     let dya = PackedFp8Tensor::quantize(dy, m, n, micro, &E5M2);
-    let dx = packed_gemm(&dya, wbwd);
+    let dx = packed_gemm_with(&dya, wbwd, cfg);
     // dW: X^T is [K, M] grouped along M; dY^T is [N, M] likewise.
     let xt = transpose(x, m, k);
     let xa = PackedFp8Tensor::quantize(&xt, k, m, micro, &E4M3);
     let dyt = transpose(dy, m, n);
     let dyb = PackedFp8Tensor::quantize(&dyt, n, m, micro, &E5M2);
-    let dw = packed_gemm(&xa, &dyb);
+    let dw = packed_gemm_with(&xa, &dyb, cfg);
     (dx, dw)
 }
 

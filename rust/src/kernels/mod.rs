@@ -37,9 +37,12 @@ pub mod linear;
 pub mod packed;
 
 pub use cache::{CacheStats, PackedWeightCache};
-pub use gemm::{dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid};
+pub use gemm::{
+    dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid, GemmConfig,
+};
 pub use linear::{
-    linear_backward_packed, linear_backward_prepacked, linear_forward_packed,
-    linear_forward_prepacked, pack_weight_bwd, pack_weight_fwd,
+    linear_backward_packed, linear_backward_prepacked, linear_backward_prepacked_with,
+    linear_forward_packed, linear_forward_prepacked, linear_forward_prepacked_with,
+    pack_weight_bwd, pack_weight_fwd,
 };
 pub use packed::PackedFp8Tensor;

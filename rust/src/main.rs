@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
-use moss::backend::HostTrainer;
+use moss::backend::{DistTrainer, HostTrainer};
 use moss::cli::{usage, Args};
 use moss::config::{BackendKind, TrainConfig};
 use moss::coordinator::Trainer;
@@ -28,7 +28,11 @@ fn main() {
 }
 
 const COMMANDS: &[(&str, &str)] = &[
-    ("train", "pretrain on the synthetic corpus (--backend host|aot, --mode, --steps, --scaling)"),
+    (
+        "train",
+        "pretrain on the synthetic corpus (--backend host|aot, --workers N, \
+         --wire f32|fp8|packed, --mode, --steps, --scaling)",
+    ),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
     ("snr", "Table-7 SNR study across quantization schemes"),
@@ -63,6 +67,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::default().apply_args(args)?;
     if cfg.backend == BackendKind::Host {
         return cmd_train_host(args, cfg);
+    }
+    // the data-parallel machinery only exists on the host backend:
+    // reject its flags rather than silently training single-worker
+    for flag in ["workers", "wire", "shard"] {
+        if args.get(flag).is_some() || args.has(flag) {
+            bail!("--{flag} requires --backend host (the AOT path has no simulated workers)");
+        }
     }
     let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
     eprintln!(
@@ -134,6 +145,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// `train --backend host`: the artifact-free packed-FP8 train loop.
 /// `--assert-improved` turns "the loss went down and stayed finite"
 /// into the exit code — the contract the `e2e-host-train` CI job gates.
+/// With `--workers N` (N > 1) the step runs data-parallel across N
+/// simulated workers with a real packed-FP8 gradient allreduce.
 fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
     let spec = cfg.host;
     if cfg.mode != moss::config::QuantMode::Moss {
@@ -141,6 +154,9 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
             "note: the host backend always runs the MOSS recipe; --mode {} is ignored",
             cfg.mode.name()
         );
+    }
+    if moss::backend::is_dist(&cfg) {
+        return cmd_train_dist(args, cfg);
     }
     eprintln!(
         "host backend: vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} microbatches",
@@ -181,6 +197,68 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
         }
         if tail >= first {
             bail!("loss did not decrease: first {first:.4} -> final {tail:.4}");
+        }
+        eprintln!("loss improved: {first:.4} -> {tail:.4}");
+    }
+    Ok(())
+}
+
+/// `train --backend host --workers N`: the data-parallel host loop over
+/// the distsim ring (packed u8 FP8 gradient payloads by default).
+fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
+    let spec = cfg.host;
+    eprintln!(
+        "dist host backend: {} workers ({} shard, wire {}), vocab {} dim {} ffn {} layers {} \
+         ({} params), {} steps x {} microbatches",
+        cfg.dist.workers,
+        cfg.dist.shard.name(),
+        cfg.dist.wire.name(),
+        spec.vocab,
+        spec.dim,
+        spec.ffn,
+        spec.layers,
+        spec.param_count(),
+        cfg.steps,
+        spec.microbatches
+    );
+    let steps = cfg.steps;
+    let mut trainer = DistTrainer::new(cfg)?;
+    trainer.run(steps)?;
+    let first = trainer.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
+    let tail = trainer.history.tail_loss(10);
+    let comm = trainer.comm;
+    println!(
+        "done: {} steps, first loss {:.4}, final loss {:.4}, {:.0} tokens/s \
+         (scaling {}: {} absmax calls)",
+        trainer.steps_done,
+        first,
+        tail,
+        trainer.throughput.tokens_per_sec(),
+        trainer.scaler_name(),
+        trainer.scaling_stats().absmax_calls,
+    );
+    println!(
+        "wire {}: {:.2} B/elem, {:.0} bytes/step over {} grad elems, allreduce {:.2} ms/step",
+        trainer.wire().name(),
+        comm.bytes_per_elem(),
+        comm.bytes_per_step(),
+        comm.grad_elems,
+        comm.allreduce_ms_per_step(),
+    );
+    if let Some(out) = &trainer.cfg.out_dir {
+        std::fs::create_dir_all(out)?;
+        std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
+        eprintln!("wrote {}/losses.csv", out.display());
+    }
+    if args.has("assert-improved") {
+        if !first.is_finite() || !tail.is_finite() {
+            bail!("non-finite loss: first {first}, final {tail}");
+        }
+        if tail >= first {
+            bail!("loss did not decrease: first {first:.4} -> final {tail:.4}");
+        }
+        if comm.bytes_on_wire == 0 {
+            bail!("no gradient bytes crossed the wire in a {}-worker run", trainer.cfg.dist.workers);
         }
         eprintln!("loss improved: {first:.4} -> {tail:.4}");
     }

@@ -95,9 +95,76 @@ impl TrainHistory {
     }
 }
 
+/// Cumulative gradient-allreduce wire accounting of a data-parallel
+/// run (fed by `backend::dist`, surfaced in the CLI summary, the
+/// Table-5 measured report, and `BENCH_host.json`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Optimizer steps that ran an allreduce.
+    pub steps: u64,
+    /// Total frame bytes moved (payload + metadata), all ranks.
+    pub bytes_on_wire: u64,
+    /// Total gradient elements shipped across all frames.
+    pub elems_shipped: u64,
+    /// Gradient elements reduced per step (the problem size).
+    pub grad_elems: u64,
+    /// Wall-clock spent inside the collective, seconds.
+    pub allreduce_secs: f64,
+}
+
+impl CommStats {
+    /// Fold in one step's allreduce accounting.
+    pub fn record(&mut self, bytes: u64, elems_shipped: u64, grad_elems: u64, secs: f64) {
+        self.steps += 1;
+        self.bytes_on_wire += bytes;
+        self.elems_shipped += elems_shipped;
+        self.grad_elems = grad_elems;
+        self.allreduce_secs += secs;
+    }
+
+    /// Average bytes per gradient element on the wire (4.0 for the f32
+    /// wire, ~1.04 for the packed group-32 wire). 0 before any traffic.
+    pub fn bytes_per_elem(&self) -> f64 {
+        if self.elems_shipped == 0 {
+            return 0.0;
+        }
+        self.bytes_on_wire as f64 / self.elems_shipped as f64
+    }
+
+    /// Average wire bytes per optimizer step.
+    pub fn bytes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.bytes_on_wire as f64 / self.steps as f64
+    }
+
+    /// Average allreduce wall-clock per step, milliseconds.
+    pub fn allreduce_ms_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.allreduce_secs * 1e3 / self.steps as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn comm_stats_averages() {
+        let mut c = CommStats::default();
+        assert_eq!(c.bytes_per_elem(), 0.0);
+        assert_eq!(c.bytes_per_step(), 0.0);
+        c.record(1040, 1000, 500, 0.002);
+        c.record(1040, 1000, 500, 0.004);
+        assert_eq!(c.steps, 2);
+        assert_eq!(c.grad_elems, 500);
+        assert!((c.bytes_per_elem() - 1.04).abs() < 1e-9);
+        assert!((c.bytes_per_step() - 1040.0).abs() < 1e-9);
+        assert!((c.allreduce_ms_per_step() - 3.0).abs() < 1e-9);
+    }
 
     #[test]
     fn throughput_counts() {

@@ -92,6 +92,16 @@ impl Rng {
     }
 }
 
+/// Derive data-parallel worker `rank`'s independent stream seed from
+/// the run seed: a splitmix64 mix of `seed ^ rank` (the same mixer the
+/// RNG core uses), so shard streams are decorrelated across ranks but
+/// fully determined by `(seed, rank)` — two runs of the same config are
+/// bit-identical.
+pub fn stream_seed(seed: u64, rank: u64) -> u64 {
+    let mut r = Rng::new(seed ^ rank.wrapping_mul(0xA24BAED4963EE407));
+    r.next_u64()
+}
+
 /// Precomputed Zipf CDF (vocabulary-scale tables are built once).
 pub struct ZipfTable {
     cdf: Vec<f64>,
@@ -168,6 +178,22 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn stream_seeds_are_deterministic_and_distinct() {
+        let a: Vec<u64> = (0..8).map(|r| stream_seed(42, r)).collect();
+        let b: Vec<u64> = (0..8).map(|r| stream_seed(42, r)).collect();
+        assert_eq!(a, b, "stream seeds must be reproducible");
+        for i in 0..8 {
+            for j in 0..i {
+                assert_ne!(a[i], a[j], "ranks {i} and {j} collided");
+            }
+            assert_ne!(a[i], 42, "stream seed must not echo the run seed");
+        }
+        // and a different run seed moves every stream
+        let c: Vec<u64> = (0..8).map(|r| stream_seed(43, r)).collect();
+        assert!(a.iter().zip(&c).all(|(x, y)| x != y));
     }
 
     #[test]
