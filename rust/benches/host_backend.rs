@@ -1,7 +1,8 @@
-//! Bench: host-backend end-to-end step throughput plus the packed-GEMM
-//! speedup, emitted as machine-readable `BENCH_host.json` so CI can
-//! upload the per-PR perf trajectory as an artifact instead of losing
-//! it in logs. The >=2x GEMM gate lives in `quant_hotpath`; the one
+//! Bench: host-backend end-to-end step throughput (overall and per
+//! numerics mode, so the FP8-vs-bf16 host speedup is tracked per PR)
+//! plus the packed-GEMM speedup, emitted as machine-readable
+//! `BENCH_host.json` so CI can upload the per-PR perf trajectory as an
+//! artifact instead of losing it in logs. The >=2x GEMM gate lives in `quant_hotpath`; the one
 //! hard assert here is byte accounting, not wall-clock: the packed
 //! gradient wire must move <= 1.1 B/elem (vs 4 B/elem f32) — the
 //! Table-5 compression claim, checked on real frames every run.
@@ -11,7 +12,7 @@ use std::time::Instant;
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::bench_util::{black_box, Bencher};
 use moss::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, QuantMode, ShardMode, TrainConfig, WireKind,
 };
 use moss::formats::fp8::E4M3;
 use moss::kernels::{dequant_then_naive_gemm, packed_gemm, PackedFp8Tensor};
@@ -82,6 +83,46 @@ fn main() {
         cache.packs, cache.hits
     );
 
+    // --- per-mode host throughput (FP8-vs-bf16 speedup record) -------
+    // All four numerics modes run the same step count on the same spec
+    // so the per-PR BENCH_host.json tracks how the FP8 recipes compare
+    // against the bf16 reference kernel in tokens/sec.
+    let mode_steps = 8u64;
+    let modes = [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss];
+    let mut mode_tps = [0f64; 4];
+    for (i, mode) in modes.into_iter().enumerate() {
+        let cfg = TrainConfig {
+            backend: BackendKind::Host,
+            host: HostSpec::default(),
+            mode,
+            steps: mode_steps,
+            lr: LrSchedule {
+                peak: 5e-3,
+                warmup_steps: 2,
+                total_steps: mode_steps,
+                final_ratio: 0.1,
+            },
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        let spec = cfg.host;
+        let mut trainer = HostTrainer::new(cfg).expect("mode trainer");
+        let t0 = Instant::now();
+        trainer.run(mode_steps).expect("mode steps");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens = (spec.batch * spec.seq * spec.microbatches) as u64 * mode_steps;
+        mode_tps[i] = tokens as f64 / wall.max(1e-9);
+        println!(
+            "host mode {:<9} {mode_steps} steps in {wall:.2}s -> {:.0} tokens/s \
+             (final loss {:.4})",
+            mode.name(),
+            mode_tps[i],
+            trainer.history.tail_loss(3)
+        );
+    }
+    let moss_vs_bf16 = mode_tps[3] / mode_tps[0].max(1e-9);
+    println!("host moss vs bf16 throughput: {moss_vs_bf16:.2}x");
+
     // --- data-parallel wire traffic (4 workers, 10 steps each) -------
     let workers = 4usize;
     let dist_steps = 10u64;
@@ -129,6 +170,9 @@ fn main() {
             "  \"host_final_loss\": {:.6},\n",
             "  \"host_weight_packs\": {},\n",
             "  \"host_cache_hits\": {},\n",
+            "  \"mode_tokens_per_sec\": {{\"bf16\": {:.1}, \"pertensor\": {:.1}, ",
+            "\"coat\": {:.1}, \"moss\": {:.1}}},\n",
+            "  \"moss_vs_bf16_host_speedup\": {:.3},\n",
             "  \"dist_workers\": {},\n",
             "  \"dist_steps_measured\": {},\n",
             "  \"wire_f32_bytes_per_elem\": {:.4},\n",
@@ -150,6 +194,11 @@ fn main() {
         final_loss,
         cache.packs,
         cache.hits,
+        mode_tps[0],
+        mode_tps[1],
+        mode_tps[2],
+        mode_tps[3],
+        moss_vs_bf16,
         workers,
         dist_steps,
         comm_f32.bytes_per_elem(),

@@ -1,6 +1,10 @@
 //! Simulated data-parallel training of the host backend (paper §4.4):
 //! the PR-2 train step sharded across N in-process workers, with
 //! gradients reduced over `distsim::ring_allreduce`'s byte-level wire.
+//! Workers inherit the driver's [`LinearNumerics`] policy, so every
+//! `QuantMode` trains data-parallel; the microscaled
+//! `Wire::PackedFp8Group` is MOSS-only (rejected at parse time and
+//! here).
 //!
 //! One optimizer step:
 //!
@@ -49,11 +53,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{BackendKind, ShardMode, TrainConfig};
+use crate::config::{BackendKind, QuantMode, ShardMode, TrainConfig, WireKind};
 use crate::coordinator::StepOutcome;
 use crate::data::BatchSource;
 use crate::distsim::{ring_allreduce_stats, Wire};
-use crate::kernels::{GemmConfig, PackedWeightCache};
+use crate::kernels::{GemmConfig, LinearNumerics, PackedWeightCache};
 use crate::metrics::{CommStats, Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
 use crate::scaling::{absmax_to_scales, ScaleTrajectory, ScalingStrategy};
@@ -108,6 +112,8 @@ pub struct DistTrainer {
     pub comm: CommStats,
     /// Completed optimizer steps (1-based inside `step`).
     pub steps_done: u64,
+    /// Numerics policy every worker inherits from the driver.
+    pub numerics: LinearNumerics,
     wire: Wire,
     opt_w: Vec<AdamW>,
     opt_embed: AdamW,
@@ -133,6 +139,16 @@ impl DistTrainer {
             bail!("--no-weight-cache has no data-parallel analog (workers share one \
                    step-scoped packed-weight cache); run it with --workers 1");
         }
+        if cfg.dist.wire == WireKind::PackedFp8Group && cfg.mode != QuantMode::Moss {
+            // The CLI rejects/downgrades this at parse time; direct
+            // constructions get the same guard.
+            bail!(
+                "wire {} is MOSS-only (its E8M0-grouped payload is the MOSS recipe); \
+                 use --wire f32|fp8 with --mode {}",
+                cfg.dist.wire.name(),
+                cfg.mode.name()
+            );
+        }
         let scaler = make_scaler(cfg.scaling);
         let sources = Self::make_sources(&cfg);
         let model = HostModel::init(spec, cfg.seed);
@@ -145,10 +161,12 @@ impl DistTrainer {
         let mut cache = PackedWeightCache::new(spec.n_linears());
         cache.enabled = true;
         let wire = cfg.dist.wire.to_wire(spec.micro);
+        let numerics = LinearNumerics::new(cfg.mode, spec.micro);
         Ok(DistTrainer {
             cfg,
             model,
             cache,
+            numerics,
             history: TrainHistory::default(),
             throughput: Throughput::new(),
             trajectory: ScaleTrajectory::new(),
@@ -213,16 +231,20 @@ impl DistTrainer {
         let lr = self.cfg.lr.at(self.steps_done) as f32;
 
         // --- weight scales from the scaling strategy -----------------
-        let scales = {
+        // (same level-1 gating as HostTrainer — the workers=1
+        // bit-identity contract keeps the two step bodies in lockstep)
+        let scales = if self.numerics.uses_level1_scale() {
             let model = &self.model;
             let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
             self.scaler.scales(step_1b, lr, &mut src)?
+        } else {
+            Vec::new()
         };
         self.last_scales.clone_from(&scales);
 
         // --- pack every weight once into the shared cache ------------
         for i in 0..self.model.slots.len() {
-            self.model.ensure_packed(&mut self.cache, i, &scales);
+            self.model.ensure_packed(&mut self.cache, &self.numerics, i, &scales);
         }
 
         // --- shard the global microbatch set -------------------------
@@ -240,6 +262,7 @@ impl DistTrainer {
         };
         let model = &self.model;
         let cache = &self.cache;
+        let num = self.numerics;
         let vocab = spec.vocab;
         let results: Vec<(Grads, Vec<f64>)> = std::thread::scope(|scope| {
             let handles: Vec<_> = shards
@@ -248,7 +271,7 @@ impl DistTrainer {
                     scope.spawn(move || {
                         let mut grads = Grads::zeros(model);
                         let mut losses = Vec::with_capacity(shard.len());
-                        let mut ops = SharedWeights(cache);
+                        let mut ops = SharedWeights { cache, num };
                         for (inputs, targets) in &shard {
                             let trace = forward(model, &mut ops, inputs, gemm);
                             let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab);
@@ -292,8 +315,10 @@ impl DistTrainer {
 
         // --- instrumentation (same Fig-4 sampling as the host path) --
         if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
-            let jit = self.exact_scales();
-            self.trajectory.record(step_1b, scales[0] + lr / crate::E4M3_MAX, jit[0]);
+            if let Some(&s0) = scales.first() {
+                let jit = self.exact_scales();
+                self.trajectory.record(step_1b, s0 + lr / crate::E4M3_MAX, jit[0]);
+            }
         }
 
         Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
@@ -392,6 +417,11 @@ mod tests {
         let mut cfg = tiny_cfg(1, 2, WireKind::F32);
         cfg.host.cache_weights = false;
         assert!(DistTrainer::new(cfg).is_err());
+        // the microscaled gradient wire is the MOSS recipe's companion
+        let mut cfg = tiny_cfg(1, 2, WireKind::PackedFp8Group);
+        cfg.mode = QuantMode::PerTensor;
+        let err = DistTrainer::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("MOSS-only"), "{err}");
     }
 
     #[test]

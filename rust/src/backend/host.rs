@@ -1,11 +1,12 @@
-//! Host-native FP8 training backend: the full train step built from the
+//! Host-native training backend: the full train step built from the
 //! packed kernels, with no AOT artifacts anywhere on the path.
 //!
 //! The model is a token-embedding + residual MLP stack + output head —
-//! every matmul a quantized linear routed through `kernels::linear`
-//! (E4M3 activations/weights, E5M2 gradients, paper §2.1's three GEMMs
-//! per linear), the loss a host softmax cross-entropy, the update the
-//! host AdamW (`optim::adamw`, paper Eq. 1):
+//! every matmul routed through the configured
+//! [`LinearNumerics`] policy (`--mode bf16|pertensor|coat|moss`; the
+//! MOSS recipe is E4M3 activations/weights, E5M2 gradients, paper
+//! §2.1's three GEMMs per linear), the loss a host softmax
+//! cross-entropy, the update the host AdamW (`optim::adamw`, Eq. 1):
 //!
 //! ```text
 //! x0 = embed[tokens]                          [rows, dim]
@@ -34,10 +35,7 @@ use crate::config::{BackendKind, DataKind, HostSpec, ScalingKind, TrainConfig};
 use crate::coordinator::StepOutcome;
 use crate::data::synth::CorpusSpec;
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
-use crate::kernels::{
-    linear_backward_prepacked_with, linear_forward_prepacked_with, GemmConfig, PackedFp8Tensor,
-    PackedWeightCache,
-};
+use crate::kernels::{GemmConfig, LinearNumerics, PackedWeight, PackedWeightCache};
 use crate::metrics::{Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
 use crate::scaling::{
@@ -143,15 +141,24 @@ impl HostModel {
             .collect()
     }
 
-    /// Pack weight `i` into `cache` (both layouts) under the strategy's
-    /// scale if stale; count a hit otherwise.
-    pub(crate) fn ensure_packed(&self, cache: &mut PackedWeightCache, i: usize, scales: &[f32]) {
+    /// Pack weight `i` into `cache` (both layouts) under `num`'s mode
+    /// and the strategy's scale if stale; count a hit otherwise.
+    /// `scales` is empty for modes without the level-1 hook (bf16 /
+    /// coat) — the quantizer then derives its own scales from the data.
+    pub(crate) fn ensure_packed(
+        &self,
+        cache: &mut PackedWeightCache,
+        num: &LinearNumerics,
+        i: usize,
+        scales: &[f32],
+    ) {
         let s = &self.slots[i];
-        cache.ensure(i, &self.weights[i], s.k, s.n, self.spec.micro, Some(scales[i]));
+        cache.ensure(num, i, &self.weights[i], s.k, s.n, scales.get(i).copied());
     }
 }
 
-/// Source of packed weight operands for one microbatch's GEMMs.
+/// Source of packed weight operands for one microbatch's GEMMs, plus
+/// the numerics policy they were packed under.
 ///
 /// Two implementations: [`EnsuredWeights`] (the single-process path —
 /// lazily packs each slot into the step-scoped cache on first touch,
@@ -160,10 +167,10 @@ impl HostModel {
 /// cache the driver pre-packed once per step, shared by every worker
 /// thread).
 pub(crate) trait WeightOperands {
-    /// Forward operand (`[N,K]` grouped along K) of weight slot `i`.
-    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor;
-    /// Backward-dX operand (`[K,N]` grouped along N) of weight slot `i`.
-    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor;
+    /// The numerics policy the operands are packed under (cheap copy).
+    fn numerics(&self) -> LinearNumerics;
+    /// Both operand layouts of weight slot `i` for this step.
+    fn weight(&mut self, i: usize) -> &PackedWeight;
 }
 
 /// Lazily-packing operand source over the step-scoped cache.
@@ -171,31 +178,34 @@ pub(crate) struct EnsuredWeights<'a> {
     pub model: &'a HostModel,
     pub cache: &'a mut PackedWeightCache,
     pub scales: &'a [f32],
+    pub num: LinearNumerics,
 }
 
 impl WeightOperands for EnsuredWeights<'_> {
-    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor {
-        self.model.ensure_packed(self.cache, i, self.scales);
-        self.cache.fwd(i)
+    fn numerics(&self) -> LinearNumerics {
+        self.num
     }
 
-    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor {
-        self.model.ensure_packed(self.cache, i, self.scales);
-        self.cache.bwd(i)
+    fn weight(&mut self, i: usize) -> &PackedWeight {
+        self.model.ensure_packed(self.cache, &self.num, i, self.scales);
+        self.cache.weight(i)
     }
 }
 
 /// Read-only operand source over a cache that was fully packed for this
 /// step already (panics on a stale slot — the dist driver's contract).
-pub(crate) struct SharedWeights<'a>(pub &'a PackedWeightCache);
+pub(crate) struct SharedWeights<'a> {
+    pub cache: &'a PackedWeightCache,
+    pub num: LinearNumerics,
+}
 
 impl WeightOperands for SharedWeights<'_> {
-    fn fwd(&mut self, i: usize) -> &PackedFp8Tensor {
-        self.0.fwd(i)
+    fn numerics(&self) -> LinearNumerics {
+        self.num
     }
 
-    fn bwd(&mut self, i: usize) -> &PackedFp8Tensor {
-        self.0.bwd(i)
+    fn weight(&mut self, i: usize) -> &PackedWeight {
+        self.cache.weight(i)
     }
 }
 
@@ -261,6 +271,8 @@ pub(crate) fn apply_update(
 
 /// `gemm` controls the per-GEMM tiling/threading (bit-neutral; the
 /// dist backend caps threads so N workers don't oversubscribe cores).
+/// Every linear routes through the operand source's [`LinearNumerics`],
+/// so one implementation serves all four `QuantMode`s.
 pub(crate) fn forward<W: WeightOperands>(
     model: &HostModel,
     ops: &mut W,
@@ -268,6 +280,7 @@ pub(crate) fn forward<W: WeightOperands>(
     gemm: GemmConfig,
 ) -> Trace {
     let spec = &model.spec;
+    let num = ops.numerics();
     let (dim, rows) = (spec.dim, inputs.len());
     let mut x0 = vec![0f32; rows * dim];
     for (r, &t) in inputs.iter().enumerate() {
@@ -278,15 +291,15 @@ pub(crate) fn forward<W: WeightOperands>(
     let mut acts = Vec::with_capacity(spec.layers);
     for l in 0..spec.layers {
         let (iu, id) = (2 * l, 2 * l + 1);
-        let u = linear_forward_prepacked_with(&xs[l], rows, ops.fwd(iu), gemm);
+        let u = num.forward(&xs[l], rows, ops.weight(iu), gemm);
         let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
-        let h = linear_forward_prepacked_with(&a, rows, ops.fwd(id), gemm);
+        let h = num.forward(&a, rows, ops.weight(id), gemm);
         let xnext: Vec<f32> = xs[l].iter().zip(&h).map(|(x, y)| x + y).collect();
         acts.push(a);
         xs.push(xnext);
     }
     let iout = 2 * spec.layers;
-    let logits = linear_forward_prepacked_with(&xs[spec.layers], rows, ops.fwd(iout), gemm);
+    let logits = num.forward(&xs[spec.layers], rows, ops.weight(iout), gemm);
     Trace { xs, acts, logits }
 }
 
@@ -330,23 +343,22 @@ pub(crate) fn backward<W: WeightOperands>(
         }
     }
     let spec = &model.spec;
+    let num = ops.numerics();
     let rows = inputs.len();
     let iout = 2 * spec.layers;
     let (mut dx, dw_out) =
-        linear_backward_prepacked_with(&trace.xs[spec.layers], ops.bwd(iout), dlogits, rows, gemm);
+        num.backward(&trace.xs[spec.layers], ops.weight(iout), dlogits, rows, gemm);
     accum(&mut grads.w[iout], &dw_out);
     for l in (0..spec.layers).rev() {
         let (iu, id) = (2 * l, 2 * l + 1);
-        let (da, dw_down) =
-            linear_backward_prepacked_with(&trace.acts[l], ops.bwd(id), &dx, rows, gemm);
+        let (da, dw_down) = num.backward(&trace.acts[l], ops.weight(id), &dx, rows, gemm);
         accum(&mut grads.w[id], &dw_down);
         let du: Vec<f32> = da
             .iter()
             .zip(&trace.acts[l])
             .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
             .collect();
-        let (dxb, dw_up) =
-            linear_backward_prepacked_with(&trace.xs[l], ops.bwd(iu), &du, rows, gemm);
+        let (dxb, dw_up) = num.backward(&trace.xs[l], ops.weight(iu), &du, rows, gemm);
         accum(&mut grads.w[iu], &dw_up);
         // residual: grads from the identity path and the MLP branch add
         accum(&mut dx, &dxb);
@@ -377,6 +389,9 @@ pub struct HostTrainer {
     pub cfg: TrainConfig,
     pub model: HostModel,
     pub cache: PackedWeightCache,
+    /// Numerics policy of every linear (from `cfg.mode`): bf16
+    /// reference, per-tensor FP8, COAT per-group, or MOSS two-level.
+    pub numerics: LinearNumerics,
     pub history: TrainHistory,
     pub throughput: Throughput,
     pub trajectory: ScaleTrajectory,
@@ -408,10 +423,12 @@ impl HostTrainer {
         let opt_embed = AdamW::new(model.embed.len(), AdamWParams::default());
         let mut cache = PackedWeightCache::new(spec.n_linears());
         cache.enabled = spec.cache_weights;
+        let numerics = LinearNumerics::new(cfg.mode, spec.micro);
         Ok(HostTrainer {
             cfg,
             model,
             cache,
+            numerics,
             history: TrainHistory::default(),
             throughput: Throughput::new(),
             trajectory: ScaleTrajectory::new(),
@@ -431,10 +448,16 @@ impl HostTrainer {
         let lr = self.cfg.lr.at(self.steps_done) as f32;
 
         // --- weight scales from the scaling strategy -----------------
-        let scales = {
+        // Only the modes with a level-1 scale hook (moss, pertensor)
+        // consult the strategy; bf16/coat quantize without it, so the
+        // absmax machinery is skipped entirely (and its call accounting
+        // stays honest).
+        let scales = if self.numerics.uses_level1_scale() {
             let model = &self.model;
             let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
             self.scaler.scales(step_1b, lr, &mut src)?
+        } else {
+            Vec::new()
         };
         self.last_scales.clone_from(&scales);
 
@@ -446,8 +469,12 @@ impl HostTrainer {
         for _ in 0..spec.microbatches {
             let batch = self.data.next_batch(b, s + 1);
             let (inputs, targets) = split_tokens(&batch.tokens, b, s);
-            let mut ops =
-                EnsuredWeights { model: &self.model, cache: &mut self.cache, scales: &scales };
+            let mut ops = EnsuredWeights {
+                model: &self.model,
+                cache: &mut self.cache,
+                scales: &scales,
+                num: self.numerics,
+            };
             let trace = forward(&self.model, &mut ops, &inputs, gemm);
             let (loss, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
             loss_sum += loss;
@@ -466,10 +493,13 @@ impl HostTrainer {
         self.throughput.step((b * s * spec.microbatches) as u64);
         self.history.record_loss(step_1b, loss, gnorm);
 
-        // --- instrumentation (same Fig-4 sampling as the AOT path) ---
+        // --- instrumentation (same Fig-4 sampling as the AOT path;
+        //     meaningless without a predicted level-1 scale) ----------
         if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
-            let jit = self.exact_scales();
-            self.trajectory.record(step_1b, scales[0] + lr / crate::E4M3_MAX, jit[0]);
+            if let Some(&s0) = scales.first() {
+                let jit = self.exact_scales();
+                self.trajectory.record(step_1b, s0 + lr / crate::E4M3_MAX, jit[0]);
+            }
         }
 
         Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
@@ -579,6 +609,25 @@ mod tests {
         let mut cfg = tiny_cfg(1);
         cfg.host.dim = 33;
         assert!(HostTrainer::new(cfg).is_err());
+    }
+
+    #[test]
+    fn every_mode_trains_a_step_with_finite_loss() {
+        use crate::config::QuantMode;
+        for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+            let mut cfg = tiny_cfg(2);
+            cfg.mode = mode;
+            let mut t = HostTrainer::new(cfg).unwrap();
+            assert_eq!(t.numerics.mode(), mode);
+            for _ in 0..2 {
+                let out = t.step().unwrap();
+                assert!(out.loss.is_finite(), "{} loss {}", mode.name(), out.loss);
+                assert!(out.grad_norm.is_finite() && out.grad_norm > 0.0, "{}", mode.name());
+            }
+            // one pack event per weight per step in every mode (bf16
+            // "packs" are the rounded layouts, still once per step)
+            assert_eq!(t.cache.stats().packs, 2 * t.cfg.host.n_linears() as u64);
+        }
     }
 
     #[test]

@@ -403,6 +403,22 @@ impl TrainConfig {
         if let Some(m) = a.get("mode") {
             self.mode = QuantMode::parse(m)?;
         }
+        // The microscaled gradient wire is the MOSS recipe's companion:
+        // its per-group E8M0 payload has no meaning under the other
+        // numerics modes. An explicit request is an error naming the
+        // valid combinations; the default quietly falls back to the
+        // lossless f32 wire.
+        if self.mode != QuantMode::Moss && self.dist.wire == WireKind::PackedFp8Group {
+            if a.get("wire").is_some() {
+                bail!(
+                    "--wire {} requires --mode moss; valid combinations: --mode moss \
+                     with --wire f32|fp8|packed, or --mode bf16|pertensor|coat with \
+                     --wire f32|fp8",
+                    self.dist.wire.name()
+                );
+            }
+            self.dist.wire = WireKind::F32;
+        }
         self.steps = a.get_u64("steps", self.steps)?;
         if self.backend == BackendKind::Host {
             // The tiny host model trains with a hotter recipe than the
@@ -563,6 +579,52 @@ mod tests {
         }
         for s in ["scatter", "streams"] {
             assert_eq!(ShardMode::parse(s).unwrap().name(), s);
+        }
+    }
+
+    #[test]
+    fn packed_wire_is_moss_only_at_parse_time() {
+        // explicit --wire packed with a non-moss mode: parse error
+        // naming the valid combinations
+        let args = crate::cli::Args::parse(
+            [
+                "train", "--backend", "host", "--mode", "pertensor", "--wire", "packed",
+                "--workers", "2",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let err = TrainConfig::default().apply_args(&args).unwrap_err().to_string();
+        assert!(err.contains("requires --mode moss"), "{err}");
+        assert!(err.contains("valid combinations"), "{err}");
+        // default (unspecified) wire downgrades to the lossless f32
+        // wire for non-moss modes instead of erroring
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--mode", "bf16", "--workers", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.mode, QuantMode::Bf16);
+        assert_eq!(c.dist.wire, WireKind::F32);
+        // moss keeps the packed default
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--workers", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.dist.wire, WireKind::PackedFp8Group);
+        // and every explicit moss combination still parses
+        for wire in ["f32", "fp8", "packed"] {
+            let args = crate::cli::Args::parse(
+                ["train", "--backend", "host", "--mode", "moss", "--wire", wire]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+            assert!(TrainConfig::default().apply_args(&args).is_ok(), "moss + {wire}");
         }
     }
 

@@ -1,13 +1,21 @@
 //! Step-scoped packed-weight cache.
 //!
-//! `PackedFp8Tensor` weights are immutable between optimizer steps, so
-//! quantizing them per GEMM (what `linear_forward_packed` /
-//! `linear_backward_packed` do) repeats the same transpose + two-level
-//! quantization for every microbatch. This cache packs each weight
-//! **once per optimizer step** — both operand layouts in one event:
-//! forward `[N,K]` grouped along K and backward `[K,N]` grouped along N
+//! Weights are immutable between optimizer steps, so laying them out
+//! per GEMM (what `linear_forward_packed` / `linear_backward_packed`
+//! do) repeats the same transpose + quantization for every microbatch.
+//! This cache packs each weight **once per optimizer step** — both
+//! operand layouts in one event (forward `[N,K]` and backward `[K,N]`)
 //! — and hands out references until [`PackedWeightCache::invalidate`]
 //! is called after the optimizer update.
+//!
+//! Since the numerics-policy refactor the cache is polymorphic over
+//! `QuantMode`: each slot stores the [`PackedWeight`] its
+//! [`LinearNumerics`] produced and is **keyed by the mode** it was
+//! packed under, so a slot packed for one mode never serves another
+//! (bf16 slots hold rounded f32 layouts and bypass FP8 packing
+//! entirely). The FP8-only accessors [`PackedWeightCache::fwd`] /
+//! [`PackedWeightCache::bwd`] keep serving the AOT host-execution
+//! path, which is always two-level MOSS.
 //!
 //! Counting contract (asserted by `tests/host_train_e2e.rs`): with the
 //! cache enabled, `stats().packs` equals *optimizer steps x weights*,
@@ -16,7 +24,10 @@
 //! pack-every-call baseline (each `ensure` repacks) — the differential
 //! path that would expose a stale cache surviving an optimizer update.
 
+use crate::config::QuantMode;
+
 use super::linear::{pack_weight_bwd, pack_weight_fwd};
+use super::numerics::{LinearNumerics, PackedWeight};
 use super::packed::PackedFp8Tensor;
 
 /// Cache cost accounting.
@@ -33,10 +44,11 @@ pub struct CacheStats {
 struct Slot {
     /// Cache generation this slot was packed in.
     version: u64,
-    /// `[N,K]` E4M3 grouped along K — the forward GEMM operand.
-    fwd: PackedFp8Tensor,
-    /// `[K,N]` E4M3 grouped along N — the backward-dX GEMM operand.
-    bwd: PackedFp8Tensor,
+    /// Numerics mode the slot was packed under (the cache key's second
+    /// half: a fresh-generation slot of another mode is still stale).
+    mode: QuantMode,
+    /// Both operand layouts under that mode.
+    weight: PackedWeight,
 }
 
 /// Per-step cache of packed weight operands, indexed by weight slot.
@@ -72,29 +84,36 @@ impl PackedWeightCache {
         self.slots[i].as_ref().is_some_and(|s| s.version == self.version)
     }
 
-    /// Make slot `i` hold current packings of `w` (`[K,N]` row-major,
-    /// level-1 scale optionally predicted by a scaling strategy).
-    /// Packs only when the slot is stale or the cache is disabled;
-    /// returns `true` when a pack actually happened.
+    /// Whether slot `i` holds current-generation packings of `mode`.
+    fn is_fresh_for(&self, i: usize, mode: QuantMode) -> bool {
+        self.slots[i].as_ref().is_some_and(|s| s.version == self.version && s.mode == mode)
+    }
+
+    /// Make slot `i` hold current packings of `w` (`[K,N]` row-major)
+    /// under `num`'s mode. `scale` is the strategy-predicted level-1
+    /// scale (ignored by modes without that hook). Packs only when the
+    /// slot is stale — wrong generation *or* wrong mode — or the cache
+    /// is disabled; returns `true` when a pack actually happened.
     pub fn ensure(
         &mut self,
+        num: &LinearNumerics,
         i: usize,
         w: &[f32],
         k: usize,
         n: usize,
-        micro: usize,
         scale: Option<f32>,
     ) -> bool {
-        if self.enabled && self.is_fresh(i) {
+        if self.enabled && self.is_fresh_for(i, num.mode()) {
             self.stats.hits += 1;
             return false;
         }
-        self.pack_slot(i, w, k, n, micro, scale);
+        self.store(i, num.mode(), num.pack_weight(w, k, n, scale));
         true
     }
 
-    /// Like [`Self::ensure`], but fetches the weight lazily — the fetch
-    /// (e.g. a device->host parameter download) is only paid on a miss.
+    /// MOSS-layout `ensure` with a lazy weight fetch — the fetch (e.g.
+    /// a device->host parameter download on the AOT path) is only paid
+    /// on a miss. Always packs the two-level micro-`micro` layouts.
     pub fn ensure_with<E, F>(
         &mut self,
         i: usize,
@@ -105,44 +124,42 @@ impl PackedWeightCache {
     where
         F: FnOnce() -> Result<(Vec<f32>, usize, usize), E>,
     {
-        if self.enabled && self.is_fresh(i) {
+        if self.enabled && self.is_fresh_for(i, QuantMode::Moss) {
             self.stats.hits += 1;
             return Ok(false);
         }
         let (w, k, n) = fetch()?;
-        self.pack_slot(i, &w, k, n, micro, scale);
+        let weight = PackedWeight::Fp8 {
+            fwd: pack_weight_fwd(&w, k, n, micro, scale),
+            bwd: pack_weight_bwd(&w, k, n, micro, scale),
+        };
+        self.store(i, QuantMode::Moss, weight);
         Ok(true)
     }
 
-    fn pack_slot(
-        &mut self,
-        i: usize,
-        w: &[f32],
-        k: usize,
-        n: usize,
-        micro: usize,
-        scale: Option<f32>,
-    ) {
-        self.slots[i] = Some(Slot {
-            version: self.version,
-            fwd: pack_weight_fwd(w, k, n, micro, scale),
-            bwd: pack_weight_bwd(w, k, n, micro, scale),
-        });
+    fn store(&mut self, i: usize, mode: QuantMode, weight: PackedWeight) {
+        self.slots[i] = Some(Slot { version: self.version, mode, weight });
         self.stats.packs += 1;
     }
 
-    /// Forward operand (`[N,K]` grouped along K) of slot `i`.
-    /// Panics if the slot was not packed this generation — call
+    /// Both operand layouts of slot `i` under the mode it was packed
+    /// for. Panics if the slot was not packed this generation — call
     /// [`Self::ensure`] first.
-    pub fn fwd(&self, i: usize) -> &PackedFp8Tensor {
+    pub fn weight(&self, i: usize) -> &PackedWeight {
         assert!(self.is_fresh(i), "weight slot {i} not packed this step");
-        &self.slots[i].as_ref().unwrap().fwd
+        &self.slots[i].as_ref().unwrap().weight
     }
 
-    /// Backward operand (`[K,N]` grouped along N) of slot `i`.
+    /// Forward FP8 operand (`[N,K]` grouped along K) of slot `i`.
+    /// Panics on a stale slot or a bf16 slot.
+    pub fn fwd(&self, i: usize) -> &PackedFp8Tensor {
+        self.weight(i).fwd_fp8()
+    }
+
+    /// Backward FP8 operand (`[K,N]` grouped along N) of slot `i`.
+    /// Panics on a stale slot or a bf16 slot.
     pub fn bwd(&self, i: usize) -> &PackedFp8Tensor {
-        assert!(self.is_fresh(i), "weight slot {i} not packed this step");
-        &self.slots[i].as_ref().unwrap().bwd
+        self.weight(i).bwd_fp8()
     }
 
     /// Drop every packing: called after the optimizer update mutates
@@ -168,18 +185,23 @@ mod tests {
         (0..k * n).map(|_| rng.normal_f32() * 0.1).collect()
     }
 
+    fn moss() -> LinearNumerics {
+        LinearNumerics::new(QuantMode::Moss, 32)
+    }
+
     #[test]
     fn packs_once_until_invalidated() {
         let w = weights(1, 64, 32);
+        let num = moss();
         let mut c = PackedWeightCache::new(1);
-        assert!(c.ensure(0, &w, 64, 32, 32, None));
+        assert!(c.ensure(&num, 0, &w, 64, 32, None));
         for _ in 0..5 {
-            assert!(!c.ensure(0, &w, 64, 32, 32, None));
+            assert!(!c.ensure(&num, 0, &w, 64, 32, None));
         }
         assert_eq!(c.stats(), CacheStats { packs: 1, hits: 5, invalidations: 0 });
         c.invalidate();
         assert!(!c.is_fresh(0));
-        assert!(c.ensure(0, &w, 64, 32, 32, None));
+        assert!(c.ensure(&num, 0, &w, 64, 32, None));
         assert_eq!(c.stats().packs, 2);
     }
 
@@ -188,14 +210,15 @@ mod tests {
         // The exact bug the cache must not have: an optimizer update
         // mutates W, and a stale packing would keep serving old bytes.
         let mut w = weights(2, 64, 32);
+        let num = moss();
         let mut c = PackedWeightCache::new(1);
-        c.ensure(0, &w, 64, 32, 32, None);
+        c.ensure(&num, 0, &w, 64, 32, None);
         let before = c.fwd(0).data.clone();
         for v in w.iter_mut() {
             *v += 0.05;
         }
         c.invalidate();
-        c.ensure(0, &w, 64, 32, 32, None);
+        c.ensure(&num, 0, &w, 64, 32, None);
         assert_ne!(before, c.fwd(0).data);
         // and the refreshed packing equals a from-scratch pack, bitwise
         let fresh = pack_weight_fwd(&w, 64, 32, 32, None);
@@ -207,12 +230,54 @@ mod tests {
     #[test]
     fn disabled_cache_repacks_every_call() {
         let w = weights(3, 32, 32);
+        let num = moss();
         let mut c = PackedWeightCache::new(1);
         c.enabled = false;
         for _ in 0..4 {
-            assert!(c.ensure(0, &w, 32, 32, 32, None));
+            assert!(c.ensure(&num, 0, &w, 32, 32, None));
         }
         assert_eq!(c.stats(), CacheStats { packs: 4, hits: 0, invalidations: 0 });
+    }
+
+    #[test]
+    fn mode_is_part_of_the_cache_key() {
+        // A fresh-generation slot of another mode must repack, never be
+        // served across modes.
+        let w = weights(7, 64, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure(&moss(), 0, &w, 64, 32, None);
+        let coat = LinearNumerics::new(QuantMode::Coat, 32);
+        assert!(c.ensure(&coat, 0, &w, 64, 32, None), "coat must not reuse the moss packing");
+        assert_eq!(c.stats().packs, 2);
+        assert_eq!(c.stats().hits, 0);
+        // same mode again within the generation: a hit
+        assert!(!c.ensure(&coat, 0, &w, 64, 32, None));
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn bf16_slots_bypass_fp8_packing() {
+        let w = weights(8, 32, 32);
+        let bf = LinearNumerics::new(QuantMode::Bf16, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure(&bf, 0, &w, 32, 32, Some(0.5));
+        match c.weight(0) {
+            PackedWeight::Bf16 { wt, w: wr, k, n } => {
+                assert_eq!((wt.len(), wr.len()), (32 * 32, 32 * 32));
+                assert_eq!((*k, *n), (32, 32));
+            }
+            PackedWeight::Fp8 { .. } => panic!("bf16 slot must not hold FP8 packings"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no FP8 packing")]
+    fn fp8_accessor_rejects_bf16_slots() {
+        let w = weights(9, 32, 32);
+        let bf = LinearNumerics::new(QuantMode::Bf16, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure(&bf, 0, &w, 32, 32, None);
+        c.fwd(0);
     }
 
     #[test]
@@ -231,11 +296,25 @@ mod tests {
     }
 
     #[test]
+    fn lazy_fetch_is_keyed_as_moss() {
+        // ensure_with packs the two-level MOSS layout; a moss `ensure`
+        // in the same generation is then a hit, a coat one is not.
+        let w = weights(5, 32, 32);
+        let mut c = PackedWeightCache::new(1);
+        c.ensure_with(0, 32, None, || -> Result<(Vec<f32>, usize, usize), ()> {
+            Ok((w.clone(), 32, 32))
+        })
+        .unwrap();
+        assert!(!c.ensure(&moss(), 0, &w, 32, 32, None));
+        assert!(c.ensure(&LinearNumerics::new(QuantMode::Coat, 32), 0, &w, 32, 32, None));
+    }
+
+    #[test]
     #[should_panic(expected = "not packed this step")]
     fn stale_access_panics() {
         let w = weights(5, 32, 32);
         let mut c = PackedWeightCache::new(1);
-        c.ensure(0, &w, 32, 32, 32, None);
+        c.ensure(&moss(), 0, &w, 32, 32, None);
         c.invalidate();
         c.bwd(0);
     }

@@ -206,6 +206,59 @@ fn gemm_band(
     }
 }
 
+/// Tiled, multi-threaded plain-f32 GEMM — the bf16-reference execution
+/// path of `kernels::numerics` (operands are bf16-rounded f32 values;
+/// there is nothing to dequantize). `a` is row-major `[M, K]`, `bt` is
+/// `[N, K]` (B transposed, the same operand layout as [`packed_gemm`]);
+/// returns row-major `C[M, N]`.
+///
+/// Per output element the reduction is the engine's fixed 4-lane
+/// interleaved dot over the whole K row ([`group_dot_grid`] with one
+/// group spanning K), so — exactly like the packed GEMM — neither
+/// tiling nor threading changes output bits.
+pub fn f32_gemm_with(
+    a: &[f32],
+    m: usize,
+    bt: &[f32],
+    n: usize,
+    k: usize,
+    cfg: GemmConfig,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A is {} elems, want [{m}, {k}]", a.len());
+    assert_eq!(bt.len(), n * k, "Bt is {} elems, want [{n}, {k}]", bt.len());
+    let nb = cfg.nb.max(1);
+    let mut c = vec![0f32; m * n];
+    let threads = cfg.threads.clamp(1, m.max(1));
+    let band = m.div_ceil(threads).max(1);
+    std::thread::scope(|scope| {
+        for (t, chunk) in c.chunks_mut(band * n.max(1)).enumerate() {
+            scope.spawn(move || {
+                f32_gemm_band(a, bt, chunk, t * band, n, k, nb);
+            });
+        }
+    });
+    c
+}
+
+/// One thread's row band of [`f32_gemm_with`] (same blocking scheme as
+/// [`gemm_band`], minus payload decode and scale staging).
+fn f32_gemm_band(a: &[f32], bt: &[f32], out: &mut [f32], i0: usize, n: usize, k: usize, nb: usize) {
+    if n == 0 {
+        return;
+    }
+    let rows_here = out.len() / n;
+    for jb in (0..n).step_by(nb) {
+        let je = (jb + nb).min(n);
+        for ii in 0..rows_here {
+            let i = i0 + ii;
+            let a_row = &a[i * k..(i + 1) * k];
+            for j in jb..je {
+                out[ii * n + j] = group_dot_grid(a_row, &bt[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
 /// Naive (untiled, single-threaded) microscaled GEMM over the f32-grid
 /// representation — the reference oracle the packed engine must match
 /// bit-for-bit. `a` is [M, K], `bt` is [N, K], both `TwoLevelQuant`.
@@ -345,6 +398,30 @@ mod tests {
         let scale = baseline.iter().fold(0f32, |acc, v| acc.max(v.abs()));
         for (x, y) in packed.iter().zip(&baseline) {
             assert!((x - y).abs() <= 1e-4 * scale + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn f32_gemm_is_bitwise_stable_and_tracks_f64() {
+        let (m, n, k) = (19, 23, 36);
+        let mut rng = Rng::new(41);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
+        let base = f32_gemm_with(&a, m, &bt, n, k, GemmConfig { nb: 1, threads: 1 });
+        for (nb, threads) in [(2usize, 3usize), (7, 5), (64, 8)] {
+            let c = f32_gemm_with(&a, m, &bt, n, k, GemmConfig { nb, threads });
+            for (x, y) in c.iter().zip(&base) {
+                assert_eq!(x.to_bits(), y.to_bits(), "nb={nb} threads={threads}");
+            }
+        }
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..k {
+                    acc += a[i * k + t] as f64 * bt[j * k + t] as f64;
+                }
+                assert!((base[i * n + j] as f64 - acc).abs() <= 1e-4 * acc.abs().max(1.0));
+            }
         }
     }
 

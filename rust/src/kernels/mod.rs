@@ -21,7 +21,14 @@
 //! * [`cache`] — [`PackedWeightCache`]: step-scoped reuse of weight
 //!   packings. Weights are immutable between optimizer steps, so both
 //!   operand layouts are quantized once per step and shared across all
-//!   microbatch forwards/backwards, then invalidated on update.
+//!   microbatch forwards/backwards, then invalidated on update. Slots
+//!   are keyed by numerics mode.
+//! * [`numerics`] — [`LinearNumerics`]: the mode-polymorphic policy
+//!   (`bf16` / `pertensor` / `coat` / `moss`) deciding how each linear
+//!   quantizes, packs, and multiplies. The host backend is generic
+//!   over it, so the paper's baselines run through one train step
+//!   (MOSS = the bit-exact two-level path below; bf16 = rounded
+//!   operands through the plain-f32 GEMM).
 //!
 //! Numerics contract (locked down by `tests/packed_gemm_differential.rs`):
 //! the packed path is **bit-identical** to the f32-grid oracle — LUT
@@ -34,12 +41,15 @@
 pub mod cache;
 pub mod gemm;
 pub mod linear;
+pub mod numerics;
 pub mod packed;
 
 pub use cache::{CacheStats, PackedWeightCache};
 pub use gemm::{
-    dequant_then_naive_gemm, packed_gemm, packed_gemm_with, reference_gemm_grid, GemmConfig,
+    dequant_then_naive_gemm, f32_gemm_with, packed_gemm, packed_gemm_with, reference_gemm_grid,
+    GemmConfig,
 };
+pub use numerics::{LinearNumerics, PackedWeight};
 pub use linear::{
     linear_backward_packed, linear_backward_prepacked, linear_backward_prepacked_with,
     linear_forward_packed, linear_forward_prepacked, linear_forward_prepacked_with,

@@ -1,0 +1,414 @@
+//! Mode-polymorphic linear-layer numerics — the policy that makes the
+//! host train step generic over `config::QuantMode`.
+//!
+//! Every quantized linear in the host backend performs the same three
+//! GEMMs (paper §2.1); what differs between the paper's recipes is how
+//! each operand is quantized and which scales exist. [`LinearNumerics`]
+//! owns that choice per mode:
+//!
+//! * [`QuantMode::Moss`] — two-level microscaling (micro-32 E8M0 groups
+//!   along the contraction dim) with the level-1 weight scale supplied
+//!   by the scaling strategy (§3.2). Bit-for-bit the pre-policy host
+//!   path: the Moss arm delegates to the exact `kernels::linear` calls
+//!   the trainer used to make directly (pinned by
+//!   `tests/mode_parity_golden.rs`).
+//! * [`QuantMode::Coat`] — per-group JIT scales: the same micro-32
+//!   grouping, but the level-1 scale is always re-derived from the data
+//!   (COAT / DeepSeek-V3 style); the strategy's prediction is ignored.
+//! * [`QuantMode::PerTensor`] — degenerate grouping: one micro-group
+//!   spans each operand row's whole contraction dim, so the E8M0
+//!   subscales collapse to one exponent per row and the quantization is
+//!   per-tensor-grained (Transformer-Engine style). Equals
+//!   `TwoLevelQuant` with `micro = cols` by construction (property
+//!   tests below).
+//! * [`QuantMode::Bf16`] — the reference: no FP8 packing at all.
+//!   Operands round to the bf16 grid and multiply on the f32 grid
+//!   through [`f32_gemm_with`], the baseline every FP8 mode is
+//!   measured against (paper Fig. 5 / Table 2).
+//!
+//! The policy is `Copy` and threaded through `PackedWeightCache` (cache
+//! slots are keyed by mode; bf16 slots bypass FP8 packing and hold
+//! rounded f32 layouts instead) and both host trainers, so one train
+//! step serves all four recipes without forking.
+
+use crate::config::QuantMode;
+use crate::formats::bf16;
+use crate::formats::fp8::{E4M3, E5M2};
+
+use super::gemm::{f32_gemm_with, packed_gemm_with, GemmConfig};
+use super::linear::{
+    linear_backward_prepacked_with, linear_forward_prepacked_with, pack_weight_bwd,
+    pack_weight_fwd, transpose,
+};
+use super::packed::PackedFp8Tensor;
+
+/// One weight's step-scoped operand layouts under some numerics mode.
+#[derive(Debug, Clone)]
+pub enum PackedWeight {
+    /// FP8 modes: forward `[N,K]` operand (grouped along K) + backward
+    /// `[K,N]` operand (grouped along N), both E4M3.
+    Fp8 {
+        fwd: PackedFp8Tensor,
+        bwd: PackedFp8Tensor,
+    },
+    /// bf16 reference: no FP8 packing — the bf16-rounded weight in both
+    /// layouts (`wt` is the `[N,K]` transpose the forward GEMM consumes,
+    /// `w` the `[K,N]` row-major the backward-dX GEMM consumes).
+    Bf16 {
+        wt: Vec<f32>,
+        w: Vec<f32>,
+        k: usize,
+        n: usize,
+    },
+}
+
+impl PackedWeight {
+    /// Forward FP8 operand; panics on a bf16 slot (the AOT host
+    /// execution path is FP8-only).
+    pub fn fwd_fp8(&self) -> &PackedFp8Tensor {
+        match self {
+            PackedWeight::Fp8 { fwd, .. } => fwd,
+            PackedWeight::Bf16 { .. } => panic!("bf16 weight slot has no FP8 packing"),
+        }
+    }
+
+    /// Backward FP8 operand; panics on a bf16 slot.
+    pub fn bwd_fp8(&self) -> &PackedFp8Tensor {
+        match self {
+            PackedWeight::Fp8 { bwd, .. } => bwd,
+            PackedWeight::Bf16 { .. } => panic!("bf16 weight slot has no FP8 packing"),
+        }
+    }
+}
+
+/// Round a slice onto the bf16 grid (RNE), as a new vector.
+fn bf16_vec(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| bf16::round_to_bf16(x)).collect()
+}
+
+/// The numerics policy of one training run: how every linear
+/// quantizes, packs, and multiplies under the configured `QuantMode`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinearNumerics {
+    mode: QuantMode,
+    /// Micro-group size of the microscaled modes (OCP MX: 32).
+    micro: usize,
+}
+
+impl LinearNumerics {
+    pub fn new(mode: QuantMode, micro: usize) -> Self {
+        LinearNumerics { mode, micro }
+    }
+
+    pub fn mode(&self) -> QuantMode {
+        self.mode
+    }
+
+    /// Whether this mode quantizes to FP8 payloads at all.
+    pub fn is_fp8(&self) -> bool {
+        self.mode != QuantMode::Bf16
+    }
+
+    /// Whether the level-1 global weight scale comes from the scaling
+    /// strategy (§3.2). COAT re-derives per-group JIT scales from the
+    /// data on every pack; bf16 has no scales at all.
+    pub fn uses_level1_scale(&self) -> bool {
+        matches!(self.mode, QuantMode::Moss | QuantMode::PerTensor)
+    }
+
+    /// Quantize/lay out weight `w` (`[K,N]` row-major) for this step.
+    /// `scale` is the strategy-predicted level-1 scale; modes that do
+    /// not take an external scale ignore it.
+    pub fn pack_weight(&self, w: &[f32], k: usize, n: usize, scale: Option<f32>) -> PackedWeight {
+        match self.mode {
+            QuantMode::Moss => PackedWeight::Fp8 {
+                fwd: pack_weight_fwd(w, k, n, self.micro, scale),
+                bwd: pack_weight_bwd(w, k, n, self.micro, scale),
+            },
+            QuantMode::Coat => PackedWeight::Fp8 {
+                fwd: pack_weight_fwd(w, k, n, self.micro, None),
+                bwd: pack_weight_bwd(w, k, n, self.micro, None),
+            },
+            QuantMode::PerTensor => PackedWeight::Fp8 {
+                // Degenerate grouping: one group spans each operand
+                // row's whole contraction dim, so the E8M0 subscales
+                // collapse to one exponent per row.
+                fwd: pack_weight_fwd(w, k, n, k, scale),
+                bwd: pack_weight_bwd(w, k, n, n, scale),
+            },
+            QuantMode::Bf16 => {
+                let wr = bf16_vec(w);
+                PackedWeight::Bf16 { wt: transpose(&wr, k, n), w: wr, k, n }
+            }
+        }
+    }
+
+    /// Forward `Y[M,N] = X[M,K] @ W[K,N]` under this mode's numerics.
+    pub fn forward(&self, x: &[f32], m: usize, w: &PackedWeight, cfg: GemmConfig) -> Vec<f32> {
+        match w {
+            // The activation inherits the weight operand's grouping
+            // (`wfwd.micro`), so the degenerate per-tensor layout flows
+            // through the same entry point as the microscaled modes.
+            PackedWeight::Fp8 { fwd, .. } => linear_forward_prepacked_with(x, m, fwd, cfg),
+            PackedWeight::Bf16 { wt, k, n, .. } => {
+                let xr = bf16_vec(x);
+                assert_eq!(xr.len(), m * k, "activation is {} elems, want [{m}, {k}]", xr.len());
+                f32_gemm_with(&xr, m, wt, *n, *k, cfg)
+            }
+        }
+    }
+
+    /// Backward: given `dY[M,N]`, produce `dX[M,K] = dY @ W^T` and
+    /// `dW[K,N] = X^T @ dY` under this mode's numerics.
+    pub fn backward(
+        &self,
+        x: &[f32],
+        w: &PackedWeight,
+        dy: &[f32],
+        m: usize,
+        cfg: GemmConfig,
+    ) -> (Vec<f32>, Vec<f32>) {
+        match w {
+            PackedWeight::Fp8 { bwd, .. } => {
+                if self.mode == QuantMode::PerTensor {
+                    pertensor_backward(x, bwd, dy, m, cfg)
+                } else {
+                    linear_backward_prepacked_with(x, bwd, dy, m, cfg)
+                }
+            }
+            PackedWeight::Bf16 { w, k, n, .. } => {
+                let (k, n) = (*k, *n);
+                let xr = bf16_vec(x);
+                let dyr = bf16_vec(dy);
+                assert_eq!(xr.len(), m * k, "x is {} elems, want [{m}, {k}]", xr.len());
+                assert_eq!(dyr.len(), m * n, "dy is {} elems, want [{m}, {n}]", dyr.len());
+                // dX[M,K] = dY @ W^T: W's natural [K,N] layout is the
+                // transposed-operand form the GEMM consumes.
+                let dx = f32_gemm_with(&dyr, m, w, k, n, cfg);
+                // dW[K,N] = X^T @ dY, contraction over rows M.
+                let xt = transpose(&xr, m, k);
+                let dyt = transpose(&dyr, m, n);
+                let dw = f32_gemm_with(&xt, k, &dyt, n, m, cfg);
+                (dx, dw)
+            }
+        }
+    }
+}
+
+/// The per-tensor backward: `linear_backward_prepacked_with` with each
+/// operand's micro-group spanning its own contraction dim (dY and W
+/// group along N, the transposed activation/gradient along M) instead
+/// of one shared micro-32 size — the degenerate layouts the micro-32
+/// entry point cannot express when `M != N`.
+fn pertensor_backward(
+    x: &[f32],
+    wbwd: &PackedFp8Tensor,
+    dy: &[f32],
+    m: usize,
+    cfg: GemmConfig,
+) -> (Vec<f32>, Vec<f32>) {
+    let (k, n) = (wbwd.rows, wbwd.cols);
+    assert_eq!(wbwd.micro, n, "per-tensor backward operand must group over its whole row");
+    assert_eq!(x.len(), m * k, "x is {} elems, want [{m}, {k}]", x.len());
+    assert_eq!(dy.len(), m * n, "dy is {} elems, want [{m}, {n}]", dy.len());
+    let dya = PackedFp8Tensor::quantize(dy, m, n, n, &E5M2);
+    let dx = packed_gemm_with(&dya, wbwd, cfg);
+    let xt = transpose(x, m, k);
+    let xa = PackedFp8Tensor::quantize(&xt, k, m, m, &E4M3);
+    let dyt = transpose(dy, m, n);
+    let dyb = PackedFp8Tensor::quantize(&dyt, n, m, m, &E5M2);
+    let dw = packed_gemm_with(&xa, &dyb, cfg);
+    (dx, dw)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::kernels::{linear_backward_prepacked, linear_forward_prepacked, reference_gemm_grid};
+    use crate::quant::TwoLevelQuant;
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    fn sample(n: usize, seed: u64, sd: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32() * sd).collect()
+    }
+
+    /// The engine's fixed intra-group reduction, transcribed
+    /// independently: 4-lane interleaved, combined `(p0+p1)+(p2+p3)`.
+    fn lane4_dot(a: &[f32], b: &[f32]) -> f32 {
+        if a.len() % 4 != 0 {
+            return a.iter().zip(b).map(|(x, y)| x * y).sum();
+        }
+        let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);
+        let mut t = 0;
+        while t < a.len() {
+            p0 += a[t] * b[t];
+            p1 += a[t + 1] * b[t + 1];
+            p2 += a[t + 2] * b[t + 2];
+            p3 += a[t + 3] * b[t + 3];
+            t += 4;
+        }
+        (p0 + p1) + (p2 + p3)
+    }
+
+    #[test]
+    fn moss_policy_is_the_prepacked_kernel_path_bitwise() {
+        // The Moss arm must be the exact pre-policy call sequence.
+        let (m, k, n) = (32, 64, 32);
+        let x = Rng::new(1).activation_like(m, k, 1.0);
+        let w = sample(k * n, 2, 0.05);
+        let dy = sample(m * n, 3, 1.0);
+        let num = LinearNumerics::new(QuantMode::Moss, 32);
+        let scale = Some(0.01f32);
+        let pw = num.pack_weight(&w, k, n, scale);
+        let wfwd = pack_weight_fwd(&w, k, n, 32, scale);
+        let wbwd = pack_weight_bwd(&w, k, n, 32, scale);
+        assert_eq!(pw.fwd_fp8().data, wfwd.data);
+        assert_eq!(pw.bwd_fp8().data, wbwd.data);
+        let y = num.forward(&x, m, &pw, GemmConfig::default());
+        let y0 = linear_forward_prepacked(&x, m, &wfwd);
+        for (a, b) in y.iter().zip(&y0) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (dx, dw) = num.backward(&x, &pw, &dy, m, GemmConfig::default());
+        let (dx0, dw0) = linear_backward_prepacked(&x, &wbwd, &dy, m);
+        for (a, b) in dx.iter().zip(&dx0).chain(dw.iter().zip(&dw0)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pertensor_equals_twolevel_with_one_group_per_row() {
+        // Property (across shapes/seeds): the per-tensor policy's
+        // operands are exactly `TwoLevelQuant` with `micro = cols`, and
+        // its forward output is the grid oracle over those degenerate
+        // quantizations.
+        let shapes = [(8usize, 28usize, 20usize, 5u64), (16, 64, 32, 6), (4, 96, 12, 7)];
+        for (m, k, n, seed) in shapes {
+            let x = Rng::new(seed).activation_like(m, k, 1.5);
+            let w = sample(k * n, seed + 100, 0.05);
+            let num = LinearNumerics::new(QuantMode::PerTensor, 32);
+            let pw = num.pack_weight(&w, k, n, None);
+            let wt = transpose(&w, k, n);
+            let grid_w = TwoLevelQuant::quantize(&wt, n, k, k, &E4M3);
+            let fwd = pw.fwd_fp8();
+            assert_eq!(fwd.groups_per_row(), 1, "one E8M0 exponent per row");
+            assert_eq!(fwd.scale.to_bits(), grid_w.scale.to_bits(), "{m}x{k}x{n}");
+            assert_eq!(fwd.ss_exp, grid_w.ss_exp);
+            for (a, b) in fwd.grid_values().iter().zip(&grid_w.q) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let y = num.forward(&x, m, &pw, GemmConfig::default());
+            let grid_x = TwoLevelQuant::quantize(&x, m, k, k, &E4M3);
+            let oracle = reference_gemm_grid(&grid_x, &grid_w);
+            for (i, (a, b)) in y.iter().zip(&oracle).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{m}x{k}x{n} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pertensor_backward_tracks_exact_gradients() {
+        let (m, k, n) = (24, 40, 56);
+        let x = Rng::new(11).activation_like(m, k, 1.0);
+        let w = sample(k * n, 12, 0.05);
+        let dy = sample(m * n, 13, 1.0);
+        let num = LinearNumerics::new(QuantMode::PerTensor, 32);
+        let pw = num.pack_weight(&w, k, n, None);
+        let (dx, dw) = num.backward(&x, &pw, &dy, m, GemmConfig::default());
+        assert_eq!(dx.len(), m * k);
+        assert_eq!(dw.len(), k * n);
+        // f64 ground truth; per-tensor noise is coarser than micro-32
+        // but must stay within quantization tolerance.
+        let wt = transpose(&w, k, n);
+        for i in 0..m {
+            for j in 0..k {
+                let mut acc = 0f64;
+                for t in 0..n {
+                    acc += dy[i * n + t] as f64 * wt[t * k + j] as f64;
+                }
+                let scale = acc.abs().max(1.0);
+                assert!((dx[i * k + j] as f64 - acc).abs() <= 0.25 * scale);
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_policy_matches_the_f32_grid_oracle() {
+        // Property (across shapes/seeds): bf16 forward/backward equal a
+        // naive matmul over bf16-rounded operands with the engine's
+        // fixed 4-lane reduction — no packing anywhere.
+        let shapes = [(8usize, 32usize, 24usize, 21u64), (13, 40, 17, 22), (5, 64, 9, 23)];
+        for (m, k, n, seed) in shapes {
+            let x = Rng::new(seed).activation_like(m, k, 1.0);
+            let w = sample(k * n, seed + 50, 0.05);
+            let dy = sample(m * n, seed + 90, 1.0);
+            let num = LinearNumerics::new(QuantMode::Bf16, 32);
+            let pw = num.pack_weight(&w, k, n, Some(0.123));
+            let (xr, wr) = (bf16_vec(&x), bf16_vec(&w));
+            let dyr = bf16_vec(&dy);
+            let y = num.forward(&x, m, &pw, GemmConfig::default());
+            let wrt = transpose(&wr, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = lane4_dot(&xr[i * k..(i + 1) * k], &wrt[j * k..(j + 1) * k]);
+                    assert_eq!(y[i * n + j].to_bits(), want.to_bits(), "y[{i},{j}] seed {seed}");
+                }
+            }
+            let (dx, dw) = num.backward(&x, &pw, &dy, m, GemmConfig::default());
+            for i in 0..m {
+                for j in 0..k {
+                    let want = lane4_dot(&dyr[i * n..(i + 1) * n], &wr[j * n..(j + 1) * n]);
+                    assert_eq!(dx[i * k + j].to_bits(), want.to_bits(), "dx[{i},{j}]");
+                }
+            }
+            let xt = transpose(&xr, m, k);
+            let dyt = transpose(&dyr, m, n);
+            for i in 0..k {
+                for j in 0..n {
+                    let want = lane4_dot(&xt[i * m..(i + 1) * m], &dyt[j * m..(j + 1) * m]);
+                    assert_eq!(dw[i * n + j].to_bits(), want.to_bits(), "dw[{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coat_ignores_the_predicted_scale() {
+        // COAT quantizes per-group JIT: an injected level-1 prediction
+        // must not change a single packed bit.
+        let (k, n) = (64, 32);
+        let w = sample(k * n, 31, 0.05);
+        let num = LinearNumerics::new(QuantMode::Coat, 32);
+        let a = num.pack_weight(&w, k, n, Some(123.0));
+        let b = num.pack_weight(&w, k, n, None);
+        assert_eq!(a.fwd_fp8().data, b.fwd_fp8().data);
+        assert_eq!(a.fwd_fp8().scale.to_bits(), b.fwd_fp8().scale.to_bits());
+        assert_eq!(a.bwd_fp8().data, b.bwd_fp8().data);
+        // ... and it equals the data-derived (JIT) moss packing
+        let moss = LinearNumerics::new(QuantMode::Moss, 32).pack_weight(&w, k, n, None);
+        assert_eq!(a.fwd_fp8().data, moss.fwd_fp8().data);
+        assert_eq!(a.fwd_fp8().ss_exp, moss.fwd_fp8().ss_exp);
+    }
+
+    #[test]
+    fn mode_flags_expose_the_policy_surface() {
+        let moss = LinearNumerics::new(QuantMode::Moss, 32);
+        let coat = LinearNumerics::new(QuantMode::Coat, 32);
+        let pt = LinearNumerics::new(QuantMode::PerTensor, 32);
+        let bf = LinearNumerics::new(QuantMode::Bf16, 32);
+        assert!(moss.is_fp8() && coat.is_fp8() && pt.is_fp8() && !bf.is_fp8());
+        assert!(moss.uses_level1_scale() && pt.uses_level1_scale());
+        assert!(!coat.uses_level1_scale() && !bf.uses_level1_scale());
+        assert_eq!(moss.mode(), QuantMode::Moss);
+    }
+
+    #[test]
+    #[should_panic(expected = "no FP8 packing")]
+    fn bf16_slot_has_no_fp8_operands() {
+        let w = sample(32 * 32, 41, 0.05);
+        let pw = LinearNumerics::new(QuantMode::Bf16, 32).pack_weight(&w, 32, 32, None);
+        pw.fwd_fp8();
+    }
+}

@@ -2,6 +2,9 @@
 //!
 //! Subcommands map to the paper's workflows:
 //!   train       pretrain on the synthetic corpus (Fig. 5 / Table 2)
+//!   ablate      run all four numerics modes on the host backend and
+//!               print the final-loss table (Fig. 5 / Table 2 in one
+//!               command, zero artifacts)
 //!   finetune    fine-tune on arithmetic-reasoning tasks (Fig. 6 / Table 3)
 //!   eval        perplexity of a checkpoint over the three eval splits
 //!   snr         Table-7 SNR study on random or probed activations
@@ -31,7 +34,12 @@ const COMMANDS: &[(&str, &str)] = &[
     (
         "train",
         "pretrain on the synthetic corpus (--backend host|aot, --workers N, \
-         --wire f32|fp8|packed, --mode, --steps, --scaling)",
+         --wire f32|fp8|packed, --mode bf16|pertensor|coat|moss, --steps, --scaling)",
+    ),
+    (
+        "ablate",
+        "train all four --mode numerics on the host backend over one shared \
+         seed/corpus and print the final-loss table (zero artifacts)",
     ),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
@@ -51,6 +59,7 @@ fn run() -> Result<()> {
     }
     match args.subcommand.as_deref().unwrap() {
         "train" => cmd_train(&args),
+        "ablate" => moss::report::training::run_ablate_cli(&args),
         "finetune" => cmd_finetune(&args),
         "eval" => cmd_eval(&args),
         "snr" => moss::report::snr::run_cli(&args),
@@ -142,34 +151,33 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `train --backend host`: the artifact-free packed-FP8 train loop.
-/// `--assert-improved` turns "the loss went down and stayed finite"
-/// into the exit code — the contract the `e2e-host-train` CI job gates.
-/// With `--workers N` (N > 1) the step runs data-parallel across N
-/// simulated workers with a real packed-FP8 gradient allreduce.
+/// `train --backend host`: the artifact-free host train loop under the
+/// selected `--mode` numerics (bf16 reference, per-tensor FP8, COAT
+/// per-group, or the MOSS two-level default). `--assert-improved`
+/// turns "the loss went down and stayed finite" into the exit code —
+/// the contract the `e2e-host-train` CI job gates per mode. With
+/// `--workers N` (N > 1) the step runs data-parallel across N
+/// simulated workers with a real gradient allreduce.
 fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
     let spec = cfg.host;
-    if cfg.mode != moss::config::QuantMode::Moss {
-        eprintln!(
-            "note: the host backend always runs the MOSS recipe; --mode {} is ignored",
-            cfg.mode.name()
-        );
-    }
     if moss::backend::is_dist(&cfg) {
         return cmd_train_dist(args, cfg);
     }
+    let steps = cfg.steps;
+    let mut trainer = HostTrainer::new(cfg)?;
     eprintln!(
-        "host backend: vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} microbatches",
+        "host backend: mode {} ({}), vocab {} dim {} ffn {} layers {} ({} params), \
+         {} steps x {} microbatches",
+        trainer.cfg.mode.name(),
+        if trainer.numerics.is_fp8() { "fp8" } else { "bf16 reference" },
         spec.vocab,
         spec.dim,
         spec.ffn,
         spec.layers,
         spec.param_count(),
-        cfg.steps,
+        steps,
         spec.microbatches
     );
-    let steps = cfg.steps;
-    let mut trainer = HostTrainer::new(cfg)?;
     trainer.run(steps)?;
     let first = trainer.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
     let tail = trainer.history.tail_loss(10);
@@ -208,8 +216,9 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
 fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     let spec = cfg.host;
     eprintln!(
-        "dist host backend: {} workers ({} shard, wire {}), vocab {} dim {} ffn {} layers {} \
-         ({} params), {} steps x {} microbatches",
+        "dist host backend: mode {}, {} workers ({} shard, wire {}), vocab {} dim {} ffn {} \
+         layers {} ({} params), {} steps x {} microbatches",
+        cfg.mode.name(),
         cfg.dist.workers,
         cfg.dist.shard.name(),
         cfg.dist.wire.name(),

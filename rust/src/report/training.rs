@@ -1,22 +1,29 @@
-//! Training-dependent reports: Fig 5 (pretraining loss curves per mode),
-//! Table 2 (measured throughput + PPL), Fig 6/Table 3 (fine-tuning),
-//! Table 4 (accuracy parity across sizes), Fig 7 (long-run stability),
-//! Table 7-from-probes. These run *real* training through the PJRT
-//! runtime — durations scale with --steps / --config.
+//! Training-dependent reports: Fig 5 (pretraining loss curves per
+//! numerics mode) + Table 2 (measured throughput), both driven by
+//! *live host-backend loops* — zero AOT artifacts — plus the
+//! `repro ablate` final-loss table over all four `QuantMode`s.
+//! Fig 6/Table 3 (fine-tuning), Table 4 (accuracy parity across
+//! sizes), Fig 7 (long-run stability) and Table 7-from-probes still
+//! run through the PJRT runtime and need `make artifacts`.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::backend::HostTrainer;
 use crate::cli::Args;
-use crate::config::{DataKind, QuantMode, ScalingKind, TrainConfig};
+use crate::config::{BackendKind, DataKind, LrSchedule, QuantMode, ScalingKind, TrainConfig};
 use crate::coordinator::Trainer;
 use crate::data::TaskKind;
-use crate::eval::perplexity::eval_three_splits;
 use crate::quant::snr::Metric;
 use crate::runtime::Runtime;
 use crate::util::plot::multi_line_plot;
 use crate::util::table::{f, Table};
+
+/// The four numerics modes in baseline-first order (bf16 anchors the
+/// comparisons, moss is the paper's recipe).
+const ABLATION_MODES: [QuantMode; 4] =
+    [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss];
 
 fn base_cfg(args: &Args, steps_default: u64) -> Result<TrainConfig> {
     let mut cfg = TrainConfig::default();
@@ -30,7 +37,8 @@ fn base_cfg(args: &Args, steps_default: u64) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-/// Train one mode to completion and return the trainer.
+/// Train one mode to completion on the AOT runtime and return the
+/// trainer (the artifact-backed fine-tuning/parity reports).
 fn train_mode(rt: &Arc<Runtime>, cfg: &TrainConfig, mode: QuantMode) -> Result<Trainer> {
     let mut c = cfg.clone();
     c.mode = mode;
@@ -44,52 +52,159 @@ fn train_mode(rt: &Arc<Runtime>, cfg: &TrainConfig, mode: QuantMode) -> Result<T
     Ok(tr)
 }
 
-/// Fig 5 + Table 2: pretraining loss curves and throughput/PPL table.
+/// Host-backend base config of the mode-comparison flows (`repro
+/// report --fig5` and `repro ablate`): shape/step/seed flags applied
+/// on top of the default host spec, with the host loop's hot recipe.
+fn host_base_cfg(args: &Args, steps_default: u64) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig { backend: BackendKind::Host, ..TrainConfig::default() };
+    cfg.host = cfg.host.apply_args(args)?;
+    cfg.host.validate()?;
+    cfg.steps = args.get_u64("steps", steps_default)?;
+    cfg.seed = args.get_u64("seed", 0)?;
+    cfg.log_every = args.get_u64("log-every", 0)?;
+    cfg.lr = LrSchedule {
+        peak: args.get_f64("lr", 5e-3)?,
+        warmup_steps: (cfg.steps / 10).clamp(1, 20),
+        total_steps: cfg.steps.max(1),
+        final_ratio: 0.1,
+    };
+    Ok(cfg)
+}
+
+/// Train one numerics mode to completion on the host backend (shared
+/// seed/corpus across modes: only `cfg.mode` changes).
+pub(crate) fn train_host_mode(cfg: &TrainConfig, mode: QuantMode) -> Result<HostTrainer> {
+    let mut c = cfg.clone();
+    c.mode = mode;
+    let mut tr = HostTrainer::new(c)?;
+    tr.run(cfg.steps)?;
+    Ok(tr)
+}
+
+/// Fig 5 + Table 2 (host analog): pretraining loss curves and measured
+/// throughput per numerics mode, from live host-backend training —
+/// zero AOT artifacts anywhere on the path.
 pub fn run_pretrain_report(args: &Args) -> Result<()> {
-    let cfg = base_cfg(args, 120)?;
-    let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
-    let modes = [QuantMode::Bf16, QuantMode::Coat, QuantMode::Moss];
+    let cfg = host_base_cfg(args, 120)?;
     let mut curves: Vec<(&str, Vec<f64>)> = Vec::new();
     let mut t2 = Table::new(
-        "Table 2 (measured, scaled-down) — pretraining on synthetic corpus",
-        &["mode", "tokens/s (CPU)", "vs BF16", "final loss", "wikitext PPL", "c4 PPL", "pile PPL"],
+        "Table 2 (measured, host backend) — pretraining on synthetic corpus",
+        &["mode", "tokens/s (CPU)", "vs bf16", "final loss", "gap vs bf16"],
     );
     let mut bf16_tps = 0f64;
-    for mode in modes {
-        let tr = train_mode(&rt, &cfg, mode)?;
+    let mut bf16_loss = f64::NAN;
+    for mode in ABLATION_MODES {
+        let tr = train_host_mode(&cfg, mode)?;
         let tps = tr.throughput.tokens_per_sec();
+        let final_loss = tr.history.tail_loss(10);
         if mode == QuantMode::Bf16 {
             bf16_tps = tps;
+            bf16_loss = final_loss;
         }
-        let ppls = eval_three_splits(&rt, &tr.state, 4)?;
         t2.row(vec![
             mode.name().into(),
             f(tps, 0),
             format!("{:+.1}%", (tps / bf16_tps - 1.0) * 100.0),
-            f(tr.history.tail_loss(20), 4),
-            f(ppls[0].1, 2),
-            f(ppls[1].1, 2),
-            f(ppls[2].1, 2),
+            f(final_loss, 4),
+            format!("{:+.4}", final_loss - bf16_loss),
         ]);
         curves.push((mode.name(), tr.history.loss_series()));
     }
     let series: Vec<(&str, &[f64])> =
         curves.iter().map(|(n, v)| (*n, v.as_slice())).collect();
-    let plot = multi_line_plot("Figure 5 — pretraining loss (scaled-down)", &series, 72, 16);
+    let plot = multi_line_plot("Figure 5 — pretraining loss (host backend)", &series, 72, 16);
     super::emit_text(args, "fig5_pretrain_loss", &plot)?;
-    // csv of the curves
-    let mut csv = String::from("step,bf16,coat,moss\n");
-    for i in 0..curves[0].1.len() {
-        csv.push_str(&format!(
-            "{},{},{},{}\n",
-            i + 1,
-            curves[0].1[i],
-            curves[1].1.get(i).copied().unwrap_or(f64::NAN),
-            curves[2].1.get(i).copied().unwrap_or(f64::NAN)
-        ));
-    }
-    std::fs::write(super::results_dir(args).join("fig5_pretrain_loss.csv"), csv)?;
+    std::fs::write(super::results_dir(args).join("fig5_pretrain_loss.csv"), curves_csv(&curves))?;
     super::emit(args, "table2_measured", &t2)?;
+    Ok(())
+}
+
+/// CSV of per-mode loss curves: `step,<mode>,<mode>,...` rows from the
+/// live trajectories (ragged tails pad with NaN).
+fn curves_csv(curves: &[(&str, Vec<f64>)]) -> String {
+    let mut csv = String::from("step");
+    for (name, _) in curves {
+        csv.push(',');
+        csv.push_str(name);
+    }
+    csv.push('\n');
+    let steps = curves.iter().map(|(_, c)| c.len()).max().unwrap_or(0);
+    for i in 0..steps {
+        csv.push_str(&format!("{}", i + 1));
+        for (_, c) in curves {
+            csv.push_str(&format!(",{}", c.get(i).copied().unwrap_or(f64::NAN)));
+        }
+        csv.push('\n');
+    }
+    csv
+}
+
+/// `repro ablate`: train all four numerics modes on the host backend
+/// over one shared seed/corpus and print the final-loss table — the
+/// paper's central Fig. 5 / Table 2 comparison in one command, with
+/// zero AOT artifacts.
+pub fn run_ablate_cli(args: &Args) -> Result<()> {
+    let cfg = host_base_cfg(args, 80)?;
+    let spec = cfg.host;
+    eprintln!(
+        "mode ablation: vocab {} dim {} ffn {} layers {} seq {} batch {} x{} microbatches, \
+         {} steps, seed {}",
+        spec.vocab,
+        spec.dim,
+        spec.ffn,
+        spec.layers,
+        spec.seq,
+        spec.batch,
+        spec.microbatches,
+        cfg.steps,
+        cfg.seed
+    );
+    let mut t = Table::new(
+        "Mode ablation (host backend, shared seed/corpus)",
+        &["mode", "first loss", "final loss", "gap vs bf16", "tokens/s"],
+    );
+    let mut curves: Vec<(&str, Vec<f64>)> = Vec::new();
+    let mut bf16_final = f64::NAN;
+    let mut fp8_finals: Vec<(QuantMode, f64)> = Vec::new();
+    for mode in ABLATION_MODES {
+        let tr = train_host_mode(&cfg, mode)?;
+        let first = tr.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
+        let final_loss = tr.history.tail_loss(5);
+        if mode == QuantMode::Bf16 {
+            bf16_final = final_loss;
+        } else {
+            fp8_finals.push((mode, final_loss));
+        }
+        t.row(vec![
+            mode.name().into(),
+            f(first, 4),
+            f(final_loss, 4),
+            format!("{:+.4}", final_loss - bf16_final),
+            f(tr.throughput.tokens_per_sec(), 0),
+        ]);
+        curves.push((mode.name(), tr.history.loss_series()));
+    }
+    print!("{}", t.render());
+    let closest = fp8_finals
+        .iter()
+        .min_by(|a, b| {
+            // total_cmp: a diverged (NaN-loss) mode sorts last instead
+            // of panicking the report right after the table prints
+            let (da, db) = ((a.1 - bf16_final).abs(), (b.1 - bf16_final).abs());
+            da.total_cmp(&db)
+        })
+        .expect("three FP8 modes ran");
+    println!(
+        "closest FP8 mode to bf16: {} (|gap| {:.4})",
+        closest.0.name(),
+        (closest.1 - bf16_final).abs()
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out)?;
+        let path = std::path::Path::new(out).join("ablate_losses.csv");
+        std::fs::write(&path, curves_csv(&curves))?;
+        eprintln!("wrote {}", path.display());
+    }
     Ok(())
 }
 

@@ -16,7 +16,7 @@
 
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, QuantMode, ShardMode, TrainConfig, WireKind,
 };
 
 fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
@@ -192,6 +192,108 @@ fn stream_sharding_is_reproducible() {
     let oc = c.step().unwrap();
     let oa1 = mk(7).step().unwrap();
     assert_ne!(oa1.loss.to_bits(), oc.loss.to_bits());
+}
+
+/// Satellite: `--workers 1` stays bit-identical to the single-worker
+/// host loop in **every** numerics mode — the workers inherit the
+/// driver's `LinearNumerics` policy, so the parity ladder's first rung
+/// holds for bf16 / pertensor / coat exactly as it does for moss.
+#[test]
+fn one_worker_matches_host_trainer_in_every_mode() {
+    let steps = 3u64;
+    for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+        let mut hcfg = base_cfg(steps, 2);
+        hcfg.mode = mode;
+        let mut dcfg = dist_cfg(steps, 2, 1, WireKind::F32);
+        dcfg.mode = mode;
+        let mut host = HostTrainer::new(hcfg).unwrap();
+        let mut dist = DistTrainer::new(dcfg).unwrap();
+        for step in 1..=steps {
+            let oh = host.step().unwrap();
+            let od = dist.step().unwrap();
+            assert_eq!(
+                oh.loss.to_bits(),
+                od.loss.to_bits(),
+                "{} loss diverged at step {step}",
+                mode.name()
+            );
+            assert_eq!(
+                oh.grad_norm.to_bits(),
+                od.grad_norm.to_bits(),
+                "{} grad norm diverged at step {step}",
+                mode.name()
+            );
+        }
+        for (wh, wd) in host.model.weights.iter().zip(&dist.model.weights) {
+            for (a, b) in wh.iter().zip(wd) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", mode.name());
+            }
+        }
+    }
+}
+
+/// Satellite: `--mode bf16 --workers 2` trains data-parallel over the
+/// f32 wire — decreasing finite loss, 4 B/elem on the wire, and (the
+/// 2-rank ring being pure commutativity) bit-identical to the
+/// single-worker bf16 trajectory.
+#[test]
+fn bf16_two_workers_f32_wire_trains_and_matches_single_worker() {
+    let steps = 10u64;
+    let mk = |workers: usize| {
+        let mut cfg = dist_cfg(steps, 2, workers, WireKind::F32);
+        cfg.mode = QuantMode::Bf16;
+        DistTrainer::new(cfg).unwrap()
+    };
+    let (mut solo, mut duo) = (mk(1), mk(2));
+    for step in 1..=steps {
+        let os = solo.step().unwrap();
+        let od = duo.step().unwrap();
+        assert_eq!(os.loss.to_bits(), od.loss.to_bits(), "loss diverged at step {step}");
+    }
+    let losses: Vec<f64> = duo.history.losses.iter().map(|&(_, l)| l).collect();
+    assert!(losses.iter().all(|l| l.is_finite()), "non-finite bf16 loss");
+    let tail = duo.history.tail_loss(3);
+    assert!(tail < losses[0], "bf16 dist loss did not decrease: {} -> {tail}", losses[0]);
+    assert!(duo.comm.bytes_on_wire > 0);
+    assert!((duo.comm.bytes_per_elem() - 4.0).abs() < 1e-9, "bf16 wire must be f32");
+}
+
+/// Satellite: the microscaled packed wire is MOSS-only — rejected at
+/// parse time (with the valid combinations named) and by the trainer
+/// constructor; the unspecified default downgrades to the f32 wire.
+#[test]
+fn packed_wire_is_rejected_for_non_moss_modes() {
+    // constructor guard
+    for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat] {
+        let mut cfg = dist_cfg(2, 2, 2, WireKind::PackedFp8Group);
+        cfg.mode = mode;
+        let err = DistTrainer::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("MOSS-only"), "{}: {err}", mode.name());
+        assert!(err.contains("f32|fp8"), "{}: {err}", mode.name());
+    }
+    // parse-time guard, message naming the valid combinations
+    let args = moss::cli::Args::parse(
+        [
+            "train", "--backend", "host", "--mode", "pertensor", "--wire", "packed",
+            "--workers", "2",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+    .unwrap();
+    let err = TrainConfig::default().apply_args(&args).unwrap_err().to_string();
+    assert!(err.contains("requires --mode moss"), "{err}");
+    assert!(err.contains("valid combinations"), "{err}");
+    // default wire (not explicitly requested) downgrades to f32
+    let args = moss::cli::Args::parse(
+        ["train", "--backend", "host", "--mode", "bf16", "--workers", "2"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    let cfg = TrainConfig::default().apply_args(&args).unwrap();
+    assert_eq!(cfg.dist.wire, WireKind::F32);
+    assert!(DistTrainer::new(cfg).is_ok());
 }
 
 /// Lossy wires vs lossless: same data, same model — per-step losses
