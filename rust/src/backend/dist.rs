@@ -37,35 +37,69 @@
 //!    models post-reduce rank-0 AdamW with a weight broadcast — in
 //!    process, the broadcast is the shared replica itself.
 //!
-//! ## Determinism & parity invariants (tests/dist_train_e2e.rs)
+//! ## The bucketed overlapped pipeline (`--overlap` / `--zero`)
+//!
+//! The serial step above is the default; the pipeline restructures it
+//! into the Table-5 execution schedule:
+//!
+//! * Gradients accumulate into **bucket-aligned** contiguous buffers
+//!   ([`kernels::cache::BucketLayout`](crate::kernels::BucketLayout),
+//!   `--bucket-mb` coalescing) instead of per-tensor `Grads`;
+//!   `backward` *emits* each tensor through the `GradSink` trait in
+//!   reverse-layer order, and a completed bucket's buffer **moves** to
+//!   a communication thread — no monolithic flatten, no copy.
+//! * The comm thread (one simulated NIC, FIFO) runs each bucket's
+//!   [`RingSession::reduce_scatter`] as soon as every worker emitted
+//!   it — with `--overlap` that happens *while backward is still
+//!   computing*, and the step records measured hidden vs exposed
+//!   communication time ([`OverlapStats`], the live analog of the
+//!   `distsim::overlap` FIFO model).
+//! * With `--zero` (ZeRO-1) each rank finishes reduce-scatter owning
+//!   one chunk per bucket, applies grad-clip + AdamW **only to that
+//!   shard** (per-rank optimizer state is 1/N, `AdamW::step_range`),
+//!   and the updated parameters all-gather back over the lossless f32
+//!   wire. Without `--zero` the comm thread also all-gathers the
+//!   reduced gradients and the replicated rank-0 AdamW applies.
+//!
+//! ## Determinism & parity invariants (tests/dist_train_e2e.rs and
+//! tests/dist_overlap_e2e.rs)
 //!
 //! * `workers = 1` is **bit-identical** to [`HostTrainer`]: same data
 //!   stream, same pack bits, same accumulation order, world-1
-//!   allreduce is a passthrough.
+//!   allreduce is a passthrough. This holds with the pipeline on, in
+//!   every mode: a world-1 reduce-scatter is a passthrough, a single
+//!   ZeRO shard is the whole vector.
 //! * `workers = 2, microbatches = 2, Wire::F32` is **bit-identical**
 //!   to the single-worker trajectory: each worker holds one
 //!   microbatch, and a 2-rank ring sums every chunk as `x0 + x1` —
-//!   commutativity only, no reassociation.
+//!   commutativity only, no reassociation. The pipeline preserves
+//!   this: per-bucket 2-rank reduce-scatter sums the same pairs, the
+//!   ZeRO clip accumulates the same f64 sum in canonical slot order,
+//!   and sharded AdamW is elementwise.
 //! * `workers >= 3` reassociates chunk sums (a ring reduces chunk `c`
 //!   in rank order `c, c+1, ..`), so `Wire::F32` trajectories agree
 //!   with single-worker to f32-reassociation tolerance rather than
 //!   bitwise; every run is still bit-reproducible against itself.
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::config::{BackendKind, QuantMode, ShardMode, TrainConfig, WireKind};
 use crate::coordinator::StepOutcome;
 use crate::data::BatchSource;
-use crate::distsim::{ring_allreduce_stats, Wire};
-use crate::kernels::{GemmConfig, LinearNumerics, PackedWeightCache};
-use crate::metrics::{CommStats, Throughput, TrainHistory};
+use crate::distsim::{ring_allreduce_stats, AllreduceStats, ReduceScattered, RingSession, Wire};
+use crate::kernels::{BucketLayout, GemmConfig, LinearNumerics, PackedWeightCache};
+use crate::metrics::{CommStats, OverlapStats, Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
 use crate::scaling::{absmax_to_scales, ScaleTrajectory, ScalingStrategy};
 use crate::util::rng::stream_seed;
 
 use super::host::{
-    apply_update, average_and_clip, backward, check_data_vocab, data_base_seed, forward,
-    make_batch_source, make_scaler, softmax_xent, split_tokens, Grads, HostModel, SharedWeights,
+    apply_update, average_and_clip, backward, check_data_vocab, clip_factor, data_base_seed,
+    emission_order, forward, make_batch_source, make_scaler, softmax_xent, split_tokens, GradSink,
+    GradSlot, Grads, HostModel, SharedWeights,
 };
 
 /// One worker's microbatch shard: `(inputs, targets)` token matrices
@@ -98,6 +132,243 @@ fn unflatten_grads(flat: &[f32], model: &HostModel) -> Grads {
     g
 }
 
+/// The backward emission order materialized against a concrete model:
+/// slot identities, element counts, and the inverse map from a
+/// [`GradSlot`] to its emission index.
+pub(crate) struct EmissionMap {
+    /// Emission-ordered slots (head, layers reversed, embedding).
+    pub(crate) order: Vec<GradSlot>,
+    /// Element count per emission index.
+    pub(crate) lens: Vec<usize>,
+    of_linear: Vec<usize>,
+    of_embed: usize,
+}
+
+impl EmissionMap {
+    fn new(model: &HostModel) -> EmissionMap {
+        let order = emission_order(model.spec.layers);
+        let mut of_linear = vec![usize::MAX; model.weights.len()];
+        let mut of_embed = usize::MAX;
+        let mut lens = Vec::with_capacity(order.len());
+        for (e, slot) in order.iter().enumerate() {
+            match *slot {
+                GradSlot::Linear(i) => {
+                    of_linear[i] = e;
+                    lens.push(model.weights[i].len());
+                }
+                GradSlot::Embed => {
+                    of_embed = e;
+                    lens.push(model.embed.len());
+                }
+            }
+        }
+        EmissionMap { order, lens, of_linear, of_embed }
+    }
+
+    fn index_of(&self, slot: GradSlot) -> usize {
+        match slot {
+            GradSlot::Linear(i) => self.of_linear[i],
+            GradSlot::Embed => self.of_embed,
+        }
+    }
+}
+
+/// One emitted bucket: `(rank, bucket, buffer, emitted_at)`. The buffer
+/// is the exact allocation backward accumulated into — ownership moves
+/// to the communication thread, nothing is copied or re-flattened.
+type BucketMsg = (usize, usize, Vec<f32>, Instant);
+
+/// Bucket-aligned gradient sink of one worker: accumulation writes
+/// straight into per-bucket contiguous buffers, and — once armed for
+/// the final microbatch — each completed bucket is moved to the
+/// communication thread the moment its last tensor finalizes, while
+/// the rest of the backward pass is still computing.
+struct BucketGrads {
+    layout: Arc<BucketLayout>,
+    emis: Arc<EmissionMap>,
+    bufs: Vec<Vec<f32>>,
+    done: Vec<usize>,
+    armed: Option<(usize, mpsc::Sender<BucketMsg>)>,
+}
+
+impl BucketGrads {
+    fn zeros(layout: Arc<BucketLayout>, emis: Arc<EmissionMap>) -> BucketGrads {
+        let bufs = (0..layout.n_buckets()).map(|b| vec![0f32; layout.bucket_elems(b)]).collect();
+        let done = vec![0usize; layout.n_buckets()];
+        BucketGrads { layout, emis, bufs, done, armed: None }
+    }
+
+    /// Arm emission for the final microbatch's backward pass.
+    fn arm(&mut self, rank: usize, tx: mpsc::Sender<BucketMsg>) {
+        self.armed = Some((rank, tx));
+    }
+}
+
+impl GradSink for BucketGrads {
+    fn slot_mut(&mut self, slot: GradSlot) -> &mut [f32] {
+        let (b, off, len) = self.layout.span(self.emis.index_of(slot));
+        &mut self.bufs[b][off..off + len]
+    }
+
+    fn slot_done(&mut self, slot: GradSlot) {
+        let Some((rank, tx)) = &self.armed else { return };
+        let (b, ..) = self.layout.span(self.emis.index_of(slot));
+        self.done[b] += 1;
+        if self.done[b] == self.layout.bucket_slots(b) {
+            let buf = std::mem::take(&mut self.bufs[b]);
+            // a dropped receiver only happens when the step is already
+            // unwinding from a panic elsewhere — nothing to do here
+            let _ = tx.send((*rank, b, buf, Instant::now()));
+        }
+    }
+}
+
+/// Per-bucket timeline of one step, seconds relative to step start.
+struct BucketTiming {
+    ready: f64,
+    start: f64,
+    end: f64,
+}
+
+/// What the communication thread hands back once every bucket drained.
+struct CommOut {
+    /// Per bucket: reduce-scattered per-rank vectors (ZeRO-1 path).
+    reduced: Vec<Option<ReduceScattered>>,
+    /// Per bucket: fully gathered reduced gradients (replicated path).
+    gathered: Vec<Option<Vec<f32>>>,
+    timings: Vec<Option<BucketTiming>>,
+    /// Per-bucket gradient wire accounting.
+    stats: Vec<AllreduceStats>,
+}
+
+/// The pipeline's simulated NIC: drain bucket emissions and run each
+/// bucket's reduce-scatter (plus the all-gather back to full gradients
+/// when the optimizer is replicated) FIFO in completion order. With
+/// `overlap` a bucket is processed the moment all ranks emitted it —
+/// concurrent with the remaining backward compute; otherwise processing
+/// waits until every worker finished (the channel closed), so the
+/// communication is strictly exposed.
+fn comm_loop(
+    rx: mpsc::Receiver<BucketMsg>,
+    session: RingSession,
+    layout: &BucketLayout,
+    overlap: bool,
+    gather_grads: bool,
+    t0: Instant,
+) -> CommOut {
+    let nb = layout.n_buckets();
+    let world = session.world;
+    let mut pending: Vec<Vec<Option<Vec<f32>>>> = (0..nb).map(|_| vec![None; world]).collect();
+    let mut count = vec![0usize; nb];
+    let mut ready_at: Vec<Option<Instant>> = vec![None; nb];
+    let mut out = CommOut {
+        reduced: (0..nb).map(|_| None).collect(),
+        gathered: (0..nb).map(|_| None).collect(),
+        timings: (0..nb).map(|_| None).collect(),
+        stats: vec![AllreduceStats::default(); nb],
+    };
+    let mut queue: Vec<usize> = Vec::new();
+    let mut processed = 0usize;
+    while processed < nb {
+        let Ok((rank, b, buf, sent)) = rx.recv() else { break };
+        debug_assert!(pending[b][rank].is_none(), "bucket {b} emitted twice by rank {rank}");
+        pending[b][rank] = Some(buf);
+        count[b] += 1;
+        ready_at[b] = Some(ready_at[b].map_or(sent, |p| p.max(sent)));
+        if count[b] == world {
+            if overlap {
+                let ready = ready_at[b].unwrap();
+                process_bucket(b, &mut pending[b], ready, session, gather_grads, t0, &mut out);
+                processed += 1;
+            } else {
+                queue.push(b);
+            }
+        }
+    }
+    for b in queue {
+        let ready = ready_at[b].unwrap();
+        process_bucket(b, &mut pending[b], ready, session, gather_grads, t0, &mut out);
+    }
+    out
+}
+
+/// Run one complete bucket through the ring and record its timeline.
+fn process_bucket(
+    b: usize,
+    parts: &mut [Option<Vec<f32>>],
+    ready: Instant,
+    session: RingSession,
+    gather_grads: bool,
+    t0: Instant,
+    out: &mut CommOut,
+) {
+    let inputs: Vec<Vec<f32>> =
+        parts.iter_mut().map(|p| p.take().expect("missing bucket part")).collect();
+    let start = Instant::now();
+    let stats;
+    if gather_grads {
+        // replicated optimizer needs the full reduced gradients: run
+        // the fused one-shot collective (single thread round)
+        let (full, st) = session.allreduce(inputs);
+        stats = st;
+        out.gathered[b] = Some(full.into_iter().next().expect("gather returned no ranks"));
+    } else {
+        // ZeRO-1 stops at reduce-scatter: each rank keeps its shard
+        let rs = session.reduce_scatter(inputs);
+        stats = rs.stats;
+        out.reduced[b] = Some(rs);
+    }
+    let end = Instant::now();
+    out.stats[b] = stats;
+    out.timings[b] = Some(BucketTiming {
+        ready: (ready - t0).as_secs_f64(),
+        start: (start - t0).as_secs_f64(),
+        end: (end - t0).as_secs_f64(),
+    });
+}
+
+/// Per-bucket aggregates over a pipelined run: measured frame sizes,
+/// wire bytes, emission (ready) times, and ring occupancy — the inputs
+/// `repro comm-table` replays through the analytic FIFO schedule, and
+/// the measured per-bucket frame sizes a multi-node latency model can
+/// consume next.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BucketAgg {
+    /// Gradient elements in this bucket.
+    pub elems: usize,
+    /// Pipelined steps recorded.
+    pub steps: u64,
+    /// Total gradient wire bytes this bucket moved.
+    pub bytes: u64,
+    /// Total ring occupancy, seconds.
+    pub comm_secs: f64,
+    /// Total emission time (last rank's emit, relative to step start).
+    pub ready_secs: f64,
+}
+
+impl BucketAgg {
+    pub fn mean_ready_secs(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.ready_secs / self.steps as f64
+    }
+
+    pub fn mean_comm_secs(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.comm_secs / self.steps as f64
+    }
+
+    pub fn bytes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.steps as f64
+    }
+}
+
 /// Data-parallel host-backend trainer: N workers over the distsim ring.
 pub struct DistTrainer {
     pub cfg: TrainConfig,
@@ -110,13 +381,26 @@ pub struct DistTrainer {
     pub trajectory: ScaleTrajectory,
     /// Cumulative gradient-allreduce wire accounting.
     pub comm: CommStats,
+    /// Measured hidden/exposed communication of the bucketed pipeline
+    /// (all zeros on the serial path).
+    pub overlap: OverlapStats,
+    /// Per-bucket aggregates of the pipelined runs.
+    pub buckets: Vec<BucketAgg>,
+    /// Monolithic `flatten_grads` allocations performed — stays 0 on
+    /// the bucketed pipeline (buffers move, nothing re-flattens).
+    pub flatten_calls: u64,
     /// Completed optimizer steps (1-based inside `step`).
     pub steps_done: u64,
     /// Numerics policy every worker inherits from the driver.
     pub numerics: LinearNumerics,
     wire: Wire,
+    /// Bucket-aligned gradient layout (emission order x `--bucket-mb`).
+    layout: Arc<BucketLayout>,
+    emis: Arc<EmissionMap>,
     opt_w: Vec<AdamW>,
     opt_embed: AdamW,
+    /// ZeRO-1 per-rank optimizer shards (empty unless `--zero`).
+    zero_opt: Vec<AdamW>,
     scaler: Box<dyn ScalingStrategy>,
     /// One source under `Scatter`, one per worker under `Streams`.
     sources: Vec<Box<dyn BatchSource>>,
@@ -152,16 +436,47 @@ impl DistTrainer {
         let scaler = make_scaler(cfg.scaling);
         let sources = Self::make_sources(&cfg);
         let model = HostModel::init(spec, cfg.seed);
-        let opt_w = model
-            .weights
-            .iter()
-            .map(|w| AdamW::new(w.len(), AdamWParams::default()))
-            .collect();
-        let opt_embed = AdamW::new(model.embed.len(), AdamWParams::default());
+        let emis = Arc::new(EmissionMap::new(&model));
+        let layout = Arc::new(BucketLayout::new(&emis.lens, cfg.dist.bucket_bytes));
+        let wire = cfg.dist.wire.to_wire(spec.micro);
+        // ZeRO-1 shards replace the replicated per-tensor state: each
+        // rank's AdamW covers exactly the elements it owns after
+        // reduce-scatter (1/N of the model, up to chunk rounding).
+        let session = RingSession::new(cfg.dist.workers, wire);
+        let zero_opt: Vec<AdamW> = if cfg.dist.zero {
+            (0..cfg.dist.workers)
+                .map(|rank| {
+                    let owned: usize = (0..layout.n_buckets())
+                        .map(|b| {
+                            let (lo, hi) = session.owned_range(layout.bucket_elems(b), rank);
+                            hi - lo
+                        })
+                        .sum();
+                    AdamW::new(owned, AdamWParams::default())
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let (opt_w, opt_embed) = if cfg.dist.zero {
+            // the replicated state is never touched under ZeRO-1; keep
+            // it empty so the per-rank footprint claim is real
+            (Vec::new(), AdamW::new(0, AdamWParams::default()))
+        } else {
+            let opt_w = model
+                .weights
+                .iter()
+                .map(|w| AdamW::new(w.len(), AdamWParams::default()))
+                .collect();
+            (opt_w, AdamW::new(model.embed.len(), AdamWParams::default()))
+        };
         let mut cache = PackedWeightCache::new(spec.n_linears());
         cache.enabled = true;
-        let wire = cfg.dist.wire.to_wire(spec.micro);
         let numerics = LinearNumerics::new(cfg.mode, spec.micro);
+        let mut buckets = vec![BucketAgg::default(); layout.n_buckets()];
+        for (b, agg) in buckets.iter_mut().enumerate() {
+            agg.elems = layout.bucket_elems(b);
+        }
         Ok(DistTrainer {
             cfg,
             model,
@@ -171,10 +486,16 @@ impl DistTrainer {
             throughput: Throughput::new(),
             trajectory: ScaleTrajectory::new(),
             comm: CommStats::default(),
+            overlap: OverlapStats::default(),
+            buckets,
+            flatten_calls: 0,
             steps_done: 0,
             wire,
+            layout,
+            emis,
             opt_w,
             opt_embed,
+            zero_opt,
             scaler,
             sources,
             last_scales: Vec::new(),
@@ -223,16 +544,16 @@ impl DistTrainer {
         shards
     }
 
-    /// Execute one optimizer step: pack, shard, parallel fwd/bwd, ring
-    /// allreduce, rank-0 AdamW + broadcast.
-    pub fn step(&mut self) -> Result<StepOutcome> {
-        let spec = self.cfg.host;
-        let step_1b = self.steps_done + 1;
-        let lr = self.cfg.lr.at(self.steps_done) as f32;
-
-        // --- weight scales from the scaling strategy -----------------
-        // (same level-1 gating as HostTrainer — the workers=1
-        // bit-identity contract keeps the two step bodies in lockstep)
+    /// Shared step prologue of both schedules: strategy scales (with
+    /// the same level-1 gating as `HostTrainer`), one pack per weight
+    /// into the shared cache, the microbatch shards, and the per-worker
+    /// GEMM thread cap (N workers run concurrently, so each gets
+    /// `cores / N` threads — the step still saturates the machine
+    /// without oversubscription skewing measured step times; thread
+    /// count never changes output bits, see `kernels::gemm`). One
+    /// definition for both step bodies: the serial-vs-pipelined bitwise
+    /// parity contract forbids this code from forking.
+    fn step_prologue(&mut self, step_1b: u64, lr: f32) -> Result<(Vec<Shard>, GemmConfig)> {
         let scales = if self.numerics.uses_level1_scale() {
             let model = &self.model;
             let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
@@ -241,25 +562,52 @@ impl DistTrainer {
             Vec::new()
         };
         self.last_scales.clone_from(&scales);
-
-        // --- pack every weight once into the shared cache ------------
         for i in 0..self.model.slots.len() {
             self.model.ensure_packed(&mut self.cache, &self.numerics, i, &scales);
         }
-
-        // --- shard the global microbatch set -------------------------
         let shards = self.draw_shards();
-
-        // --- parallel packed fwd/bwd over worker shards --------------
-        // N workers run concurrently, so cap each worker's GEMM thread
-        // count: the step still saturates the machine without N-fold
-        // oversubscription skewing the measured step times (thread
-        // count never changes output bits — see kernels::gemm).
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let gemm = GemmConfig {
             threads: (cores / self.cfg.dist.workers).max(1),
             ..GemmConfig::default()
         };
+        Ok((shards, gemm))
+    }
+
+    /// Shared step epilogue: invalidate the packings, advance the step
+    /// counter, record loss/throughput/history, and sample the Fig-4
+    /// scale trajectory — the exact tail both step bodies must share
+    /// for the same reason as [`Self::step_prologue`].
+    fn step_epilogue(&mut self, step_1b: u64, loss_sum: f64, gnorm: f64, lr: f32) -> StepOutcome {
+        let spec = self.cfg.host;
+        self.cache.invalidate();
+        self.steps_done = step_1b;
+        let loss = loss_sum / spec.microbatches as f64;
+        self.throughput.step((spec.batch * spec.seq * spec.microbatches) as u64);
+        self.history.record_loss(step_1b, loss, gnorm);
+        if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
+            if let Some(&s0) = self.last_scales.first() {
+                let jit = self.exact_scales();
+                self.trajectory.record(step_1b, s0 + lr / crate::E4M3_MAX, jit[0]);
+            }
+        }
+        StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 }
+    }
+
+    /// Execute one optimizer step. Defaults run the serial PR-3 path
+    /// (pack, shard, parallel fwd/bwd, one monolithic ring allreduce,
+    /// rank-0 AdamW + broadcast) byte-for-byte unchanged; `--overlap` /
+    /// `--zero` route to the bucketed pipeline.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.cfg.dist.pipelined() {
+            return self.step_pipelined();
+        }
+        let spec = self.cfg.host;
+        let step_1b = self.steps_done + 1;
+        let lr = self.cfg.lr.at(self.steps_done) as f32;
+        let (shards, gemm) = self.step_prologue(step_1b, lr)?;
+
+        // --- parallel packed fwd/bwd over worker shards --------------
         let model = &self.model;
         let cache = &self.cache;
         let num = self.numerics;
@@ -295,6 +643,7 @@ impl DistTrainer {
 
         // --- gradient ring allreduce over the configured wire --------
         let flat: Vec<Vec<f32>> = results.iter().map(|(g, _)| flatten_grads(g)).collect();
+        self.flatten_calls += flat.len() as u64;
         let n_elems = flat[0].len() as u64;
         let (reduced, ar) = ring_allreduce_stats(flat, self.wire);
         self.comm.record(ar.bytes_on_wire, ar.elems_shipped, n_elems, ar.wall_secs);
@@ -306,22 +655,282 @@ impl DistTrainer {
 
         // --- rank-0 AdamW + broadcast (the shared master replica) ----
         apply_update(&mut self.model, &mut self.opt_w, &mut self.opt_embed, &grads, lr);
-        self.cache.invalidate();
-        self.steps_done = step_1b;
+        Ok(self.step_epilogue(step_1b, loss_sum, gnorm, lr))
+    }
 
-        let loss = loss_sum / spec.microbatches as f64;
-        self.throughput.step((spec.batch * spec.seq * spec.microbatches) as u64);
-        self.history.record_loss(step_1b, loss, gnorm);
+    /// The bucketed pipeline step: gradients accumulate into
+    /// bucket-aligned buffers, completed buckets move to a comm thread
+    /// whose reduce-scatter overlaps the remaining backward compute
+    /// (`--overlap`), and the optimizer applies either replicated
+    /// (gathered gradients) or ZeRO-1 sharded (`--zero`).
+    fn step_pipelined(&mut self) -> Result<StepOutcome> {
+        let spec = self.cfg.host;
+        let step_1b = self.steps_done + 1;
+        let lr = self.cfg.lr.at(self.steps_done) as f32;
+        let workers = self.cfg.dist.workers;
+        // scales + pack + shard + GEMM cap: the shared prologue — the
+        // pipeline only changes what happens *after* compute starts
+        let (shards, gemm) = self.step_prologue(step_1b, lr)?;
 
-        // --- instrumentation (same Fig-4 sampling as the host path) --
-        if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
-            if let Some(&s0) = scales.first() {
-                let jit = self.exact_scales();
-                self.trajectory.record(step_1b, s0 + lr / crate::E4M3_MAX, jit[0]);
+        // --- workers + the NIC thread --------------------------------
+        let model = &self.model;
+        let cache = &self.cache;
+        let num = self.numerics;
+        let vocab = spec.vocab;
+        let layout = &self.layout;
+        let emis = &self.emis;
+        let session = RingSession::new(workers, self.wire);
+        let overlap = self.cfg.dist.overlap;
+        let zero = self.cfg.dist.zero;
+        let (btx, brx) = mpsc::channel::<BucketMsg>();
+        let t0 = Instant::now();
+        let (worker_out, comm_out) = std::thread::scope(|scope| {
+            let comm = scope.spawn(move || comm_loop(brx, session, layout, overlap, !zero, t0));
+            let handles: Vec<_> = shards
+                .into_iter()
+                .enumerate()
+                .map(|(rank, shard)| {
+                    let mut btx = Some(btx.clone());
+                    scope.spawn(move || {
+                        let mut grads = BucketGrads::zeros(Arc::clone(layout), Arc::clone(emis));
+                        let mut losses = Vec::with_capacity(shard.len());
+                        let mut ops = SharedWeights { cache, num };
+                        let last = shard.len() - 1;
+                        for (mi, (inputs, targets)) in shard.iter().enumerate() {
+                            let trace = forward(model, &mut ops, inputs, gemm);
+                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab);
+                            losses.push(loss);
+                            if mi == last {
+                                // the final microbatch finalizes every
+                                // tensor: emit buckets as they complete
+                                grads.arm(rank, btx.take().expect("armed twice"));
+                            }
+                            backward(model, &mut ops, &trace, &dlogits, inputs, &mut grads, gemm);
+                        }
+                        (losses, Instant::now())
+                    })
+                })
+                .collect();
+            drop(btx);
+            let wout: Vec<(Vec<f64>, Instant)> =
+                handles.into_iter().map(|h| h.join().expect("dist worker panicked")).collect();
+            let cout = comm.join().expect("comm thread panicked");
+            (wout, cout)
+        });
+
+        // --- loss + measured schedule --------------------------------
+        let mut loss_sum = 0f64;
+        for (losses, _) in &worker_out {
+            for l in losses {
+                loss_sum += *l;
+            }
+        }
+        let bwd_secs =
+            worker_out.iter().map(|(_, fin)| (*fin - t0).as_secs_f64()).fold(0f64, f64::max);
+        let mut step_stats = AllreduceStats::default();
+        let (mut hidden, mut exposed) = (0f64, 0f64);
+        for b in 0..self.layout.n_buckets() {
+            let st = comm_out.stats[b];
+            step_stats.absorb(&st);
+            let Some(tm) = &comm_out.timings[b] else { continue };
+            let h = (tm.end.min(bwd_secs) - tm.start.min(bwd_secs)).max(0.0);
+            hidden += h;
+            exposed += (tm.end - tm.start) - h;
+            let agg = &mut self.buckets[b];
+            agg.steps += 1;
+            agg.bytes += st.bytes_on_wire;
+            agg.comm_secs += tm.end - tm.start;
+            agg.ready_secs += tm.ready;
+        }
+        self.overlap.record(hidden, exposed, bwd_secs);
+        let n_elems = self.layout.total_elems() as u64;
+        self.comm.record(
+            step_stats.bytes_on_wire,
+            step_stats.elems_shipped,
+            n_elems,
+            step_stats.wall_secs,
+        );
+
+        // --- optimizer: replicated tail or ZeRO-1 sharded ------------
+        let gnorm = if zero {
+            self.apply_zero1(comm_out, session, lr, spec.microbatches)
+        } else {
+            // assemble full reduced grads from the gathered buckets,
+            // then the exact serial tail (shared helpers)
+            let mut grads = Grads::zeros(&self.model);
+            for (e, slot) in self.emis.order.iter().enumerate() {
+                let (b, off, len) = self.layout.span(e);
+                let src = comm_out.gathered[b].as_ref().expect("bucket never gathered");
+                grads.slot_mut(*slot).copy_from_slice(&src[off..off + len]);
+            }
+            let gnorm = average_and_clip(&mut grads, spec.microbatches);
+            apply_update(&mut self.model, &mut self.opt_w, &mut self.opt_embed, &grads, lr);
+            gnorm
+        };
+        Ok(self.step_epilogue(step_1b, loss_sum, gnorm, lr))
+    }
+
+    /// ZeRO-1 optimizer tail: one global clip factor from the reduced
+    /// shards (sequential f64 accumulation in canonical slot order —
+    /// bit-identical arithmetic to `average_and_clip`), then each rank
+    /// scales and AdamW-applies **only the shard it owns** against its
+    /// 1/N state, then the updated parameters all-gather back over the
+    /// lossless f32 wire. Returns the gradient norm.
+    fn apply_zero1(
+        &mut self,
+        comm: CommOut,
+        session: RingSession,
+        lr: f32,
+        microbatches: usize,
+    ) -> f64 {
+        let mut reduced: Vec<ReduceScattered> =
+            comm.reduced.into_iter().map(|r| r.expect("bucket never reduced")).collect();
+
+        // global grad-norm: canonical slot order (linears ascending,
+        // then the embedding), each element read from its owner
+        let mut sq = 0f64;
+        for i in 0..self.model.weights.len() {
+            sq += self.shard_sq(&reduced, session, GradSlot::Linear(i));
+        }
+        sq += self.shard_sq(&reduced, session, GradSlot::Embed);
+        let (gnorm, factor) = clip_factor(sq, microbatches);
+
+        // each rank updates only its owned shard; state offsets advance
+        // in fixed bucket-emission order so m/v stay aligned per step
+        for rank in 0..session.world {
+            self.zero_opt[rank].begin_step();
+            let mut state_off = 0usize;
+            for b in 0..self.layout.n_buckets() {
+                let n = self.layout.bucket_elems(b);
+                let (lo, hi) = session.owned_range(n, rank);
+                if hi == lo {
+                    continue;
+                }
+                let data = &mut reduced[b].data[rank];
+                for e in self.layout.bucket_members(b) {
+                    let (_, off, len) = self.layout.span(e);
+                    let (plo, phi) = (lo.max(off), hi.min(off + len));
+                    if phi <= plo {
+                        continue;
+                    }
+                    let g = &mut data[plo..phi];
+                    for x in g.iter_mut() {
+                        *x *= factor;
+                    }
+                    let (wlo, whi) = (plo - off, phi - off);
+                    let w = match self.emis.order[e] {
+                        GradSlot::Linear(i) => &mut self.model.weights[i][wlo..whi],
+                        GradSlot::Embed => &mut self.model.embed[wlo..whi],
+                    };
+                    self.zero_opt[rank].step_range(w, g, lr, state_off);
+                    state_off += phi - plo;
+                }
             }
         }
 
-        Ok(StepOutcome { step: step_1b, loss, grad_norm: gnorm, lr: lr as f64 })
+        // all-gather updated parameters: each rank contributes its
+        // owned chunk of the new master weights; the wire is always
+        // f32 (master weights ship lossless, like FP8-LM's ZeRO)
+        let pg = RingSession::new(session.world, Wire::F32);
+        let mut pg_bytes = 0u64;
+        // sum the collectives' own wall-clock so the reported gather
+        // time excludes scratch construction and the bitwise check
+        let mut pg_secs = 0f64;
+        for b in 0..self.layout.n_buckets() {
+            let n = self.layout.bucket_elems(b);
+            if n == 0 {
+                continue;
+            }
+            let mut per_rank: Vec<Vec<f32>> = vec![vec![0f32; n]; pg.world];
+            for (rank, v) in per_rank.iter_mut().enumerate() {
+                let (lo, hi) = pg.owned_range(n, rank);
+                self.copy_params_into(b, lo, hi, v);
+            }
+            let (gathered, st) = pg.all_gather(per_rank);
+            pg_bytes += st.bytes_on_wire;
+            pg_secs += st.wall_secs;
+            // in-process the master replica is already updated; debug
+            // builds check the modeled broadcast reproduces it exactly
+            // (f32 frames roundtrip bitwise) — release keeps the hot
+            // path clean, and the e2e parity tests pin the same
+            // invariant end to end
+            #[cfg(debug_assertions)]
+            self.assert_gather_matches(b, &gathered[0]);
+            let _ = gathered;
+        }
+        self.comm.record_param_gather(pg_bytes, pg_secs);
+        gnorm
+    }
+
+    /// Sum of squares of one slot's reduced gradient, read owner-shard
+    /// by owner-shard in ascending element order (f64 accumulation —
+    /// the exact order `average_and_clip` uses).
+    fn shard_sq(&self, reduced: &[ReduceScattered], session: RingSession, slot: GradSlot) -> f64 {
+        let (b, off, len) = self.layout.span(self.emis.index_of(slot));
+        let n = self.layout.bucket_elems(b);
+        let mut sq = 0f64;
+        for c in 0..session.world {
+            let (c0, c1) = session.chunk_range(n, c);
+            let (lo, hi) = (c0.max(off), c1.min(off + len));
+            if hi <= lo {
+                continue;
+            }
+            let owner = session.chunk_owner(c);
+            for &g in &reduced[b].data[owner][lo..hi] {
+                sq += (g as f64) * (g as f64);
+            }
+        }
+        sq
+    }
+
+    /// Copy master-parameter values of bucket `b`'s range `[lo, hi)`
+    /// into `v` (bucket coordinates).
+    fn copy_params_into(&self, b: usize, lo: usize, hi: usize, v: &mut [f32]) {
+        for e in self.layout.bucket_members(b) {
+            let (_, off, len) = self.layout.span(e);
+            let (plo, phi) = (lo.max(off), hi.min(off + len));
+            if phi <= plo {
+                continue;
+            }
+            let src = match self.emis.order[e] {
+                GradSlot::Linear(i) => &self.model.weights[i][plo - off..phi - off],
+                GradSlot::Embed => &self.model.embed[plo - off..phi - off],
+            };
+            v[plo..phi].copy_from_slice(src);
+        }
+    }
+
+    /// The gathered parameter bucket must equal the master replica bit
+    /// for bit (the f32 broadcast is lossless by construction).
+    /// Debug-build check only — release keeps the step hot path clean.
+    #[cfg(debug_assertions)]
+    fn assert_gather_matches(&self, b: usize, gathered: &[f32]) {
+        for e in self.layout.bucket_members(b) {
+            let (_, off, len) = self.layout.span(e);
+            let src = match self.emis.order[e] {
+                GradSlot::Linear(i) => &self.model.weights[i][..],
+                GradSlot::Embed => &self.model.embed[..],
+            };
+            for j in 0..len {
+                assert_eq!(
+                    gathered[off + j].to_bits(),
+                    src[j].to_bits(),
+                    "param all-gather diverged from the master replica"
+                );
+            }
+        }
+    }
+
+    /// ZeRO-1 optimizer-state bytes of the largest rank shard (0 when
+    /// the optimizer is replicated).
+    pub fn zero1_state_bytes_per_rank(&self) -> u64 {
+        self.zero_opt.iter().map(|o| o.state_bytes()).max().unwrap_or(0)
+    }
+
+    /// Optimizer-state bytes a replicated (non-ZeRO) rank would hold
+    /// for this model (`m` + `v`, f32 each).
+    pub fn replicated_state_bytes(&self) -> u64 {
+        (self.cfg.host.param_count() * 2 * std::mem::size_of::<f32>()) as u64
     }
 
     /// Run `n` steps, logging per `cfg.log_every`.
@@ -371,9 +980,11 @@ impl DistTrainer {
 }
 
 /// Route a host-backend config to the right trainer: the plain
-/// `HostTrainer` for one worker, [`DistTrainer`] beyond.
+/// `HostTrainer` for one worker, [`DistTrainer`] beyond — or whenever
+/// the bucketed pipeline was requested (`--overlap`/`--zero` are
+/// honored even at `--workers 1`, where they must be bit-identical).
 pub fn is_dist(cfg: &TrainConfig) -> bool {
-    cfg.dist.workers > 1
+    cfg.dist.workers > 1 || cfg.dist.pipelined()
 }
 
 #[cfg(test)]
@@ -396,7 +1007,7 @@ mod tests {
                 microbatches: workers.max(1),
                 cache_weights: true,
             },
-            dist: DistSpec { workers, wire, shard: ShardMode::Scatter },
+            dist: DistSpec { workers, wire, shard: ShardMode::Scatter, ..DistSpec::default() },
             steps,
             lr: LrSchedule { peak: 5e-3, warmup_steps: 3, total_steps: steps, final_ratio: 0.1 },
             log_every: 0,
@@ -455,6 +1066,111 @@ mod tests {
         t.run(1).unwrap();
         assert_eq!(t.comm.bytes_on_wire, 0);
         assert_eq!(t.comm.steps, 1);
+    }
+
+    /// Satellite: the bucketed path is copy-free — emitted bucket
+    /// buffers are the exact allocations backward accumulated into
+    /// (ownership moves through the channel; pointer-identical), and
+    /// no monolithic flatten ever happens.
+    #[test]
+    fn bucket_emission_moves_buffers_without_copying() {
+        let model = HostModel::init(tiny_cfg(1, 1, WireKind::F32).host, 11);
+        let emis = Arc::new(EmissionMap::new(&model));
+        let layout = Arc::new(BucketLayout::new(&emis.lens, 0));
+        let mut bg = BucketGrads::zeros(Arc::clone(&layout), Arc::clone(&emis));
+        // record each bucket buffer's allocation before arming
+        let ptrs: Vec<*const f32> = bg.bufs.iter().map(|b| b.as_ptr()).collect();
+        for (e, slot) in emis.order.iter().enumerate() {
+            let buf = bg.slot_mut(*slot);
+            assert_eq!(buf.len(), emis.lens[e]);
+            buf[0] = 1.0 + e as f32;
+        }
+        let (tx, rx) = mpsc::channel::<BucketMsg>();
+        bg.arm(0, tx);
+        for slot in &emis.order {
+            bg.slot_done(*slot);
+        }
+        drop(bg);
+        let mut seen = vec![false; layout.n_buckets()];
+        while let Ok((rank, b, buf, _)) = rx.recv() {
+            assert_eq!(rank, 0);
+            assert!(!seen[b], "bucket {b} emitted twice");
+            seen[b] = true;
+            assert_eq!(buf.len(), layout.bucket_elems(b));
+            assert_eq!(buf.as_ptr(), ptrs[b], "bucket {b} was copied, not moved");
+        }
+        assert!(seen.iter().all(|&s| s), "every bucket must emit exactly once");
+    }
+
+    /// Satellite: zero extra allocations per step on the pipelined
+    /// path — the monolithic `flatten_grads` is never called (the
+    /// serial path calls it once per worker per step).
+    #[test]
+    fn pipelined_path_never_flattens() {
+        let steps = 2u64;
+        let mut cfg = tiny_cfg(steps, 2, WireKind::F32);
+        cfg.host.microbatches = 2;
+        cfg.dist.overlap = true;
+        cfg.dist.zero = true;
+        let mut t = DistTrainer::new(cfg).unwrap();
+        t.run(steps).unwrap();
+        assert_eq!(t.flatten_calls, 0, "bucketed pipeline must not flatten");
+        let mut cfg = tiny_cfg(steps, 2, WireKind::F32);
+        cfg.host.microbatches = 2;
+        let mut s = DistTrainer::new(cfg).unwrap();
+        s.run(steps).unwrap();
+        assert_eq!(s.flatten_calls, steps * 2, "serial path flattens once per worker per step");
+    }
+
+    /// ZeRO-1 state really is sharded: per-rank shards partition the
+    /// parameter vector exactly (their sizes sum to the replicated
+    /// total), and the replicated state is not allocated.
+    #[test]
+    fn zero1_state_partitions_the_parameters() {
+        let mut cfg = tiny_cfg(1, 4, WireKind::F32);
+        cfg.dist.zero = true;
+        let t = DistTrainer::new(cfg).unwrap();
+        let total: u64 = t.zero_opt.iter().map(|o| o.state_bytes()).sum();
+        assert_eq!(total, t.replicated_state_bytes());
+        assert_eq!(t.opt_w.len(), 0, "replicated per-tensor state must not be allocated");
+        assert_eq!(t.opt_embed.state_bytes(), 0);
+        let per_rank = t.zero1_state_bytes_per_rank();
+        let even = t.replicated_state_bytes() as f64 / 4.0;
+        assert!(
+            (per_rank as f64) <= even * 1.05,
+            "largest shard {per_rank} B exceeds 1/N + 5% ({even} B even share)"
+        );
+    }
+
+    /// The comm thread reduces buckets correctly in both schedules
+    /// (overlapped and deferred) — full gather path, f32 wire.
+    #[test]
+    fn comm_loop_reduces_every_bucket() {
+        let layout = BucketLayout::new(&[6, 10, 3], 0);
+        let world = 3usize;
+        let session = RingSession::new(world, Wire::F32);
+        for overlap in [false, true] {
+            let (tx, rx) = mpsc::channel::<BucketMsg>();
+            let t0 = Instant::now();
+            for rank in 0..world {
+                for b in 0..layout.n_buckets() {
+                    let val = |i: usize| (rank * 100 + b * 10 + i) as f32;
+                    let v: Vec<f32> = (0..layout.bucket_elems(b)).map(val).collect();
+                    tx.send((rank, b, v, Instant::now())).unwrap();
+                }
+            }
+            drop(tx);
+            let out = comm_loop(rx, session, &layout, overlap, true, t0);
+            for b in 0..layout.n_buckets() {
+                let got = out.gathered[b].as_ref().expect("bucket not gathered");
+                for (i, g) in got.iter().enumerate() {
+                    let want: f32 = (0..world).map(|r| (r * 100 + b * 10 + i) as f32).sum();
+                    assert_eq!(g.to_bits(), want.to_bits(), "overlap {overlap} bucket {b}");
+                }
+                assert!(out.timings[b].is_some());
+                assert!(out.stats[b].bytes_on_wire > 0);
+            }
+        }
     }
 
     #[test]

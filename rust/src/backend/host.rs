@@ -219,6 +219,49 @@ pub(crate) struct Trace {
     pub(crate) logits: Vec<f32>,
 }
 
+/// One gradient tensor's identity: a quantized linear by slot index, or
+/// the token embedding. The unit [`backward`] emits through a
+/// [`GradSink`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum GradSlot {
+    Linear(usize),
+    Embed,
+}
+
+/// Where [`backward`] accumulates gradients — and how it announces, in
+/// reverse-layer emission order, that a tensor's accumulation for this
+/// pass is complete.
+///
+/// The emission order is fixed by the backward schedule: the output
+/// head first, then each layer's `w_down`/`w_up` from the last layer
+/// to the first, and the embedding last. The serial path implements
+/// this with [`Grads`] (a no-op `slot_done` — byte-for-byte the
+/// pre-refactor accumulation); the bucketed data-parallel pipeline
+/// implements it with bucket-aligned buffers whose completed buckets
+/// are handed to the communication thread mid-backward, which is what
+/// lets the gradient reduce-scatter overlap the remaining compute.
+pub(crate) trait GradSink {
+    /// Mutable accumulation buffer of `slot` (zeroed at step start).
+    fn slot_mut(&mut self, slot: GradSlot) -> &mut [f32];
+    /// `slot`'s accumulation for this backward pass is complete.
+    fn slot_done(&mut self, _slot: GradSlot) {}
+}
+
+/// The fixed emission order of [`backward`]: output head, then each
+/// layer's `w_down` / `w_up` from the last layer to the first, then the
+/// embedding — the order gradient tensors *finalize* in, which is the
+/// order the bucketed pipeline lays its buckets out in.
+pub(crate) fn emission_order(layers: usize) -> Vec<GradSlot> {
+    let mut order = Vec::with_capacity(2 * layers + 2);
+    order.push(GradSlot::Linear(2 * layers));
+    for l in (0..layers).rev() {
+        order.push(GradSlot::Linear(2 * l + 1));
+        order.push(GradSlot::Linear(2 * l));
+    }
+    order.push(GradSlot::Embed);
+    order
+}
+
 /// Accumulated gradients of one optimizer step (or of one worker's
 /// microbatch shard, before the gradient allreduce).
 pub(crate) struct Grads {
@@ -235,18 +278,39 @@ impl Grads {
     }
 }
 
+impl GradSink for Grads {
+    fn slot_mut(&mut self, slot: GradSlot) -> &mut [f32] {
+        match slot {
+            GradSlot::Linear(i) => &mut self.w[i],
+            GradSlot::Embed => &mut self.embed,
+        }
+    }
+}
+
+/// Gradient norm and the combined average+clip multiplier from the
+/// sequentially accumulated sum of squares of the *raw* (unaveraged)
+/// gradients. Extracted from [`average_and_clip`] so the ZeRO-1 path —
+/// which walks the reduced gradients shard by shard instead of through
+/// a `Grads` — applies bit-identical arithmetic: callers must feed a
+/// `sq` accumulated in canonical slot order (`w` slots ascending, then
+/// the embedding) for the f64 sum to match.
+pub(crate) fn clip_factor(sq: f64, microbatches: usize) -> (f64, f32) {
+    let inv = 1.0 / microbatches as f64;
+    let gnorm = sq.sqrt() * inv;
+    let factor = (inv * if gnorm > GRAD_CLIP { GRAD_CLIP / gnorm } else { 1.0 }) as f32;
+    (gnorm, factor)
+}
+
 /// Average accumulated gradients over `microbatches` and clip the
 /// global norm in place (paper §4.1); returns the gradient norm. The
 /// single definition both trainers call — this arithmetic is part of
 /// the workers=1 bit-identity contract and must not fork.
 pub(crate) fn average_and_clip(grads: &mut Grads, microbatches: usize) -> f64 {
-    let inv = 1.0 / microbatches as f64;
     let mut sq = 0f64;
     for g in grads.w.iter().flat_map(|g| g.iter()).chain(grads.embed.iter()) {
         sq += (*g as f64) * (*g as f64);
     }
-    let gnorm = sq.sqrt() * inv;
-    let factor = (inv * if gnorm > GRAD_CLIP { GRAD_CLIP / gnorm } else { 1.0 }) as f32;
+    let (gnorm, factor) = clip_factor(sq, microbatches);
     for g in grads.w.iter_mut().flat_map(|g| g.iter_mut()).chain(grads.embed.iter_mut()) {
         *g *= factor;
     }
@@ -328,13 +392,20 @@ pub(crate) fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f6
     (loss / rows as f64, d)
 }
 
-pub(crate) fn backward<W: WeightOperands>(
+/// Backward pass of one microbatch, accumulating into `grads` and
+/// *emitting* each gradient tensor through [`GradSink::slot_done`] the
+/// moment its accumulation completes — output head first, layers in
+/// reverse, embedding last. The serial `Grads` sink ignores the
+/// notifications, so its arithmetic is byte-for-byte the pre-emission
+/// loop; the bucketed pipeline uses them to start per-bucket gradient
+/// communication while the rest of backward is still computing.
+pub(crate) fn backward<W: WeightOperands, S: GradSink>(
     model: &HostModel,
     ops: &mut W,
     trace: &Trace,
     dlogits: &[f32],
     inputs: &[i32],
-    grads: &mut Grads,
+    grads: &mut S,
     gemm: GemmConfig,
 ) {
     fn accum(dst: &mut [f32], src: &[f32]) {
@@ -348,26 +419,31 @@ pub(crate) fn backward<W: WeightOperands>(
     let iout = 2 * spec.layers;
     let (mut dx, dw_out) =
         num.backward(&trace.xs[spec.layers], ops.weight(iout), dlogits, rows, gemm);
-    accum(&mut grads.w[iout], &dw_out);
+    accum(grads.slot_mut(GradSlot::Linear(iout)), &dw_out);
+    grads.slot_done(GradSlot::Linear(iout));
     for l in (0..spec.layers).rev() {
         let (iu, id) = (2 * l, 2 * l + 1);
         let (da, dw_down) = num.backward(&trace.acts[l], ops.weight(id), &dx, rows, gemm);
-        accum(&mut grads.w[id], &dw_down);
+        accum(grads.slot_mut(GradSlot::Linear(id)), &dw_down);
+        grads.slot_done(GradSlot::Linear(id));
         let du: Vec<f32> = da
             .iter()
             .zip(&trace.acts[l])
             .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
             .collect();
         let (dxb, dw_up) = num.backward(&trace.xs[l], ops.weight(iu), &du, rows, gemm);
-        accum(&mut grads.w[iu], &dw_up);
+        accum(grads.slot_mut(GradSlot::Linear(iu)), &dw_up);
+        grads.slot_done(GradSlot::Linear(iu));
         // residual: grads from the identity path and the MLP branch add
         accum(&mut dx, &dxb);
     }
     let dim = spec.dim;
+    let embed_g = grads.slot_mut(GradSlot::Embed);
     for (r, &t) in inputs.iter().enumerate() {
         let t = t as usize;
-        accum(&mut grads.embed[t * dim..(t + 1) * dim], &dx[r * dim..(r + 1) * dim]);
+        accum(&mut embed_g[t * dim..(t + 1) * dim], &dx[r * dim..(r + 1) * dim]);
     }
+    grads.slot_done(GradSlot::Embed);
 }
 
 /// Split a [batch, seq+1] token matrix into inputs and shifted targets.
@@ -628,6 +704,73 @@ mod tests {
             // "packs" are the rounded layouts, still once per step)
             assert_eq!(t.cache.stats().packs, 2 * t.cfg.host.n_linears() as u64);
         }
+    }
+
+    /// The backward pass must emit `slot_done` in exactly the order
+    /// `emission_order` declares — the bucketed pipeline's bucket
+    /// layout and the overlap schedule both rest on this contract.
+    #[test]
+    fn backward_emits_slots_in_declared_order() {
+        struct Recording {
+            grads: Grads,
+            seen: Vec<GradSlot>,
+        }
+        impl GradSink for Recording {
+            fn slot_mut(&mut self, slot: GradSlot) -> &mut [f32] {
+                self.grads.slot_mut(slot)
+            }
+            fn slot_done(&mut self, slot: GradSlot) {
+                self.seen.push(slot);
+            }
+        }
+        let cfg = tiny_cfg(1);
+        let mut t = HostTrainer::new(cfg).unwrap();
+        let spec = t.cfg.host;
+        let batch = t.data.next_batch(spec.batch, spec.seq + 1);
+        let (inputs, targets) = split_tokens(&batch.tokens, spec.batch, spec.seq);
+        let mut ops = EnsuredWeights {
+            model: &t.model,
+            cache: &mut t.cache,
+            scales: &[],
+            num: t.numerics,
+        };
+        let gemm = GemmConfig::default();
+        let trace = forward(&t.model, &mut ops, &inputs, gemm);
+        let (_, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
+        let mut sink = Recording { grads: Grads::zeros(&t.model), seen: Vec::new() };
+        backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut sink, gemm);
+        assert_eq!(sink.seen, emission_order(spec.layers));
+        // ... and the recording sink's accumulation equals the plain one
+        let mut plain = Grads::zeros(&t.model);
+        backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut plain, gemm);
+        for (a, b) in sink.grads.w.iter().flatten().zip(plain.w.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in sink.grads.embed.iter().zip(&plain.embed) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn clip_factor_matches_average_and_clip() {
+        // the extracted helper must reproduce average_and_clip exactly
+        let spec = tiny_cfg(1).host;
+        let model = HostModel::init(spec, 3);
+        let mut g = Grads::zeros(&model);
+        let mut x = 0.37f32;
+        for v in g.w.iter_mut().flatten().chain(g.embed.iter_mut()) {
+            x = (x * 1.7).fract() - 0.5;
+            *v = x;
+        }
+        let mut sq = 0f64;
+        for v in g.w.iter().flatten().chain(g.embed.iter()) {
+            sq += (*v as f64) * (*v as f64);
+        }
+        let (gnorm, factor) = clip_factor(sq, 3);
+        let want = average_and_clip(&mut g, 3);
+        assert_eq!(gnorm.to_bits(), want.to_bits());
+        assert!(gnorm > GRAD_CLIP, "test data should engage the clip");
+        assert!(factor > 0.0 && factor < 1.0);
     }
 
     #[test]

@@ -16,5 +16,5 @@
 pub mod dist;
 pub mod host;
 
-pub use dist::{is_dist, DistTrainer};
+pub use dist::{is_dist, BucketAgg, DistTrainer};
 pub use host::{HostModel, HostTrainer};

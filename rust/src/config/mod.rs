@@ -239,11 +239,32 @@ pub struct DistSpec {
     pub workers: usize,
     pub wire: WireKind,
     pub shard: ShardMode,
+    /// Overlap per-bucket gradient reduce-scatter with backward compute
+    /// (`--overlap`): buckets are handed to a communication thread the
+    /// moment every worker has emitted them, instead of after the full
+    /// backward pass.
+    pub overlap: bool,
+    /// ZeRO-1 sharded optimizer (`--zero`): each rank applies AdamW
+    /// only to the gradient shard it owns after reduce-scatter (state
+    /// is 1/N per rank) and updated parameters are all-gathered back
+    /// over a lossless f32 wire.
+    pub zero: bool,
+    /// Gradient-bucket coalescing threshold in bytes (`--bucket-mb`);
+    /// 0 = one bucket per emitted gradient tensor. Only meaningful on
+    /// the bucketed pipeline (`overlap` or `zero`).
+    pub bucket_bytes: usize,
 }
 
 impl Default for DistSpec {
     fn default() -> Self {
-        DistSpec { workers: 1, wire: WireKind::PackedFp8Group, shard: ShardMode::Scatter }
+        DistSpec {
+            workers: 1,
+            wire: WireKind::PackedFp8Group,
+            shard: ShardMode::Scatter,
+            overlap: false,
+            zero: false,
+            bucket_bytes: 0,
+        }
     }
 }
 
@@ -259,7 +280,33 @@ impl DistSpec {
         if let Some(s) = a.get("shard") {
             self.shard = ShardMode::parse(s)?;
         }
+        if a.has("overlap") {
+            self.overlap = true;
+        }
+        if a.has("zero") {
+            self.zero = true;
+        }
+        if let Some(mb) = a.get("bucket-mb") {
+            let mb: f64 = mb
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--bucket-mb expects a number, got {mb:?}"))?;
+            if !(0.0..=4096.0).contains(&mb) {
+                bail!("--bucket-mb must be in [0, 4096] MB (got {mb})");
+            }
+            self.bucket_bytes = (mb * 1e6) as usize;
+            if !self.pipelined() {
+                // also caught by validate(); failing at parse time stops
+                // the serial path from silently ignoring the flag
+                bail!("--bucket-mb requires --overlap or --zero (the serial step has no buckets)");
+            }
+        }
         Ok(self)
+    }
+
+    /// The bucketed gradient pipeline is engaged (defaults keep the
+    /// serial PR-3 step byte-for-byte unchanged).
+    pub fn pipelined(&self) -> bool {
+        self.overlap || self.zero
     }
 
     /// The global microbatch count must shard evenly across workers
@@ -274,6 +321,11 @@ impl DistSpec {
                 microbatches,
                 self.workers
             );
+        }
+        if self.bucket_bytes > 0 && !self.pipelined() {
+            // never silently ignore a flag: bucket sizing only shapes
+            // the bucketed pipeline
+            bail!("--bucket-mb requires --overlap or --zero (the serial step has no buckets)");
         }
         Ok(())
     }
@@ -580,6 +632,45 @@ mod tests {
         for s in ["scatter", "streams"] {
             assert_eq!(ShardMode::parse(s).unwrap().name(), s);
         }
+    }
+
+    #[test]
+    fn pipeline_flags_parse_and_guard() {
+        // defaults: serial step, no buckets
+        let d = DistSpec::default();
+        assert!(!d.overlap && !d.zero && d.bucket_bytes == 0);
+        assert!(!d.pipelined());
+        assert!(d.validate(4).is_ok());
+        // switches + bucket sizing
+        let args = crate::cli::Args::parse(
+            [
+                "train", "--backend", "host", "--workers", "4", "--overlap", "--zero",
+                "--bucket-mb", "0.5",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert!(c.dist.overlap && c.dist.zero);
+        assert!(c.dist.pipelined());
+        assert_eq!(c.dist.bucket_bytes, 500_000);
+        assert!(c.dist.validate(c.host.microbatches).is_ok());
+        // --bucket-mb without the pipeline is rejected, not ignored
+        let lone = DistSpec { bucket_bytes: 1000, ..DistSpec::default() };
+        let err = lone.validate(4).unwrap_err().to_string();
+        assert!(err.contains("--overlap or --zero"), "{err}");
+        // bad bucket sizes are parse errors
+        for bad in ["-1", "9999", "huge"] {
+            let args = crate::cli::Args::parse(
+                ["train", "--overlap", "--bucket-mb", bad].iter().map(|s| s.to_string()),
+            )
+            .unwrap();
+            assert!(TrainConfig::default().apply_args(&args).is_err(), "--bucket-mb {bad}");
+        }
+        // either flag alone engages the pipeline
+        assert!(DistSpec { overlap: true, ..DistSpec::default() }.pipelined());
+        assert!(DistSpec { zero: true, ..DistSpec::default() }.pipelined());
     }
 
     #[test]

@@ -25,6 +25,17 @@
 //! (bytes on the wire, no re-rounding per hop), so all ranks finish
 //! with bit-identical results under every wire.
 //!
+//! The two halves are independently reusable through [`RingSession`]:
+//! `reduce_scatter` leaves each rank *owning* the fully reduced values
+//! of one chunk (the ZeRO-1 substrate — the owner applies the optimizer
+//! to its shard), `all_gather` broadcasts per-rank owned chunks back
+//! out, and [`ring_allreduce`] is exactly their composition — the same
+//! per-chunk operation sequence as the old one-shot loop, so composing
+//! the halves is **bit-identical** to the monolithic collective under
+//! every wire. Zero-length chunks (fewer elements than ranks, or empty
+//! gradients) ship no frame at all, so metadata-only frames can never
+//! skew the per-element byte accounting.
+//!
 //! Determinism note: f32 addition is commutative but not associative.
 //! A ring reduces chunk `c` in rank order `c, c+1, ..., c-1`, so for
 //! world sizes 1 and 2 every chunk sum is bit-identical to a sequential
@@ -201,12 +212,26 @@ pub struct AllreduceStats {
 impl AllreduceStats {
     /// Average bytes per gradient element actually on the wire — the
     /// honest compression number (4.0 for F32, ~1.04 for the packed
-    /// group-32 wire).
+    /// group-32 wire). Guarded against zero-element collectives (empty
+    /// gradients ship no frames, so this is 0/0 there, never NaN/inf):
+    /// returns 0.0 before any element moved.
     pub fn bytes_per_elem(&self) -> f64 {
         if self.elems_shipped == 0 {
             return 0.0;
         }
         self.bytes_on_wire as f64 / self.elems_shipped as f64
+    }
+
+    /// Fold another collective's accounting into this one — used to sum
+    /// per-bucket stats and to compose the reduce-scatter / all-gather
+    /// halves (the gather half reports `elems_reduced = 0`: it moves
+    /// elements but reduces none).
+    pub fn absorb(&mut self, other: &AllreduceStats) {
+        self.bytes_on_wire += other.bytes_on_wire;
+        self.frames += other.frames;
+        self.elems_shipped += other.elems_shipped;
+        self.elems_reduced += other.elems_reduced;
+        self.wall_secs += other.wall_secs;
     }
 }
 
@@ -219,50 +244,149 @@ pub fn ring_allreduce(inputs: Vec<Vec<f32>>, wire: Wire) -> Vec<Vec<f32>> {
 
 /// [`ring_allreduce`] plus wire accounting and wall-clock.
 pub fn ring_allreduce_stats(inputs: Vec<Vec<f32>>, wire: Wire) -> (Vec<Vec<f32>>, AllreduceStats) {
-    let world = inputs.len();
-    assert!(world > 0);
-    let n = inputs[0].len();
-    assert!(inputs.iter().all(|v| v.len() == n), "mismatched lengths");
-    let t0 = Instant::now();
-    if world == 1 {
-        let stats = AllreduceStats {
-            elems_reduced: n as u64,
-            wall_secs: t0.elapsed().as_secs_f64(),
-            ..Default::default()
-        };
-        return (inputs, stats);
+    RingSession::new(inputs.len(), wire).allreduce(inputs)
+}
+
+/// Result of the reduce-scatter half: every rank's working vector, of
+/// which only that rank's *owned* chunk (see [`RingSession::owned_range`])
+/// holds the fully reduced sum — the remaining regions are the partial
+/// sums a real ring leaves behind and must not be read.
+pub struct ReduceScattered {
+    /// Rank-indexed working vectors.
+    pub data: Vec<Vec<f32>>,
+    pub stats: AllreduceStats,
+}
+
+/// A reusable ring collective over `world` in-process ranks: the two
+/// halves of [`ring_allreduce`] exposed separately so callers can
+/// schedule them independently (per-bucket overlap, ZeRO-1 sharded
+/// updates between the halves). Composing the halves is bit-identical
+/// to the one-shot collective on every wire — the per-chunk operation
+/// sequence is unchanged, only the thread lifetimes differ.
+#[derive(Debug, Clone, Copy)]
+pub struct RingSession {
+    pub world: usize,
+    pub wire: Wire,
+}
+
+impl RingSession {
+    pub fn new(world: usize, wire: Wire) -> RingSession {
+        assert!(world > 0, "ring needs at least one rank");
+        RingSession { world, wire }
     }
 
-    let mut senders = Vec::with_capacity(world);
-    let mut receivers = Vec::with_capacity(world);
-    for _ in 0..world {
-        let (tx, rx) = mpsc::channel::<WireChunk>();
-        senders.push(tx);
-        receivers.push(rx);
+    /// Chunk index rank `rank` owns (holds fully reduced) after
+    /// reduce-scatter: the last chunk it received, `(rank + 1) % world`.
+    pub fn owned_chunk(&self, rank: usize) -> usize {
+        (rank + 1) % self.world
     }
-    let mut handles = Vec::with_capacity(world);
-    let mut rx_iter = receivers.into_iter();
-    for (rank, mut data) in inputs.into_iter().enumerate() {
-        let rx = rx_iter.next().unwrap();
-        let tx = senders[(rank + 1) % world].clone();
-        handles.push(thread::spawn(move || {
-            let sent = worker(rank, world, &mut data, rx, tx, wire);
-            (data, sent)
-        }));
+
+    /// Rank that owns chunk `c` after reduce-scatter (inverse of
+    /// [`Self::owned_chunk`]).
+    pub fn chunk_owner(&self, c: usize) -> usize {
+        (c + self.world - 1) % self.world
     }
-    drop(senders);
-    let mut out = Vec::with_capacity(world);
-    let mut stats = AllreduceStats { elems_reduced: n as u64, ..Default::default() };
-    for h in handles {
-        let (data, (bytes, frames, elems)) = h.join().expect("worker panicked");
-        stats.bytes_on_wire += bytes;
-        stats.frames += frames;
-        stats.elems_shipped += elems;
-        out.push(data);
+
+    /// Element range of chunk `c` in an `n`-element vector.
+    pub fn chunk_range(&self, n: usize, c: usize) -> (usize, usize) {
+        chunk_bounds(n, self.world, c)
     }
-    stats.wall_secs = t0.elapsed().as_secs_f64();
-    (out, stats)
+
+    /// Element range rank `rank` owns in an `n`-element vector.
+    pub fn owned_range(&self, n: usize, rank: usize) -> (usize, usize) {
+        self.chunk_range(n, self.owned_chunk(rank))
+    }
+
+    /// Reduce-scatter: world-1 phases of decode + f32 accumulate +
+    /// re-quantize. Each rank finishes owning one fully reduced chunk.
+    pub fn reduce_scatter(&self, inputs: Vec<Vec<f32>>) -> ReduceScattered {
+        let n = inputs.first().map_or(0, |v| v.len());
+        let (data, mut stats) = self.run_half(inputs, reduce_scatter_worker);
+        stats.elems_reduced = n as u64;
+        ReduceScattered { data, stats }
+    }
+
+    /// All-gather: each rank broadcasts its owned chunk (quantized
+    /// once, then forwarded verbatim), overwriting every non-owned
+    /// region — the inputs' non-owned regions are never read, so a
+    /// rank may pass a vector that is only valid in its owned range.
+    /// The returned stats report `elems_reduced = 0` (a gather moves
+    /// elements but reduces none).
+    pub fn all_gather(&self, data: Vec<Vec<f32>>) -> (Vec<Vec<f32>>, AllreduceStats) {
+        self.run_half(data, all_gather_worker)
+    }
+
+    /// The composed collective: reduce-scatter, then all-gather — run
+    /// fused on **one** set of ring threads (each rank executes both
+    /// halves back to back over the same channels, exactly the classic
+    /// 2(world-1)-phase ring), so the one-shot path pays a single
+    /// spawn/join per rank. Bit-identical to composing
+    /// [`Self::reduce_scatter`] + [`Self::all_gather`] explicitly: the
+    /// per-chunk operation sequence is the same, and per-channel FIFO
+    /// keeps a fast rank's first gather frame behind its last
+    /// reduce-scatter frame.
+    pub fn allreduce(&self, inputs: Vec<Vec<f32>>) -> (Vec<Vec<f32>>, AllreduceStats) {
+        let n = inputs.first().map_or(0, |v| v.len());
+        let (out, mut stats) = self.run_half(inputs, fused_allreduce_worker);
+        stats.elems_reduced = n as u64;
+        (out, stats)
+    }
+
+    /// Spawn one thread per rank running `half`, wire them into a ring,
+    /// and sum the per-rank send accounting.
+    fn run_half(&self, inputs: Vec<Vec<f32>>, half: RingHalf) -> (Vec<Vec<f32>>, AllreduceStats) {
+        let world = self.world;
+        assert_eq!(inputs.len(), world, "inputs must be rank-indexed");
+        let n = inputs.first().map_or(0, |v| v.len());
+        assert!(inputs.iter().all(|v| v.len() == n), "mismatched lengths");
+        let t0 = Instant::now();
+        if world == 1 {
+            let stats =
+                AllreduceStats { wall_secs: t0.elapsed().as_secs_f64(), ..Default::default() };
+            return (inputs, stats);
+        }
+        let wire = self.wire;
+        let mut senders = Vec::with_capacity(world);
+        let mut receivers = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = mpsc::channel::<WireChunk>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let mut handles = Vec::with_capacity(world);
+        let mut rx_iter = receivers.into_iter();
+        for (rank, mut data) in inputs.into_iter().enumerate() {
+            let rx = rx_iter.next().unwrap();
+            let tx = senders[(rank + 1) % world].clone();
+            handles.push(thread::spawn(move || {
+                let sent = half(rank, world, &mut data, &rx, &tx, wire);
+                (data, sent)
+            }));
+        }
+        drop(senders);
+        let mut out = Vec::with_capacity(world);
+        let mut stats = AllreduceStats::default();
+        for h in handles {
+            let (data, (bytes, frames, elems)) = h.join().expect("ring worker panicked");
+            stats.bytes_on_wire += bytes;
+            stats.frames += frames;
+            stats.elems_shipped += elems;
+            out.push(data);
+        }
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        (out, stats)
+    }
 }
+
+/// One ring half's per-rank body; returns `(bytes, frames, elems)` sent.
+type RingHalf = fn(
+    usize,
+    usize,
+    &mut [f32],
+    &mpsc::Receiver<WireChunk>,
+    &mpsc::Sender<WireChunk>,
+    Wire,
+) -> (u64, u64, u64);
 
 fn chunk_bounds(n: usize, world: usize, c: usize) -> (usize, usize) {
     let base = n / world;
@@ -272,65 +396,108 @@ fn chunk_bounds(n: usize, world: usize, c: usize) -> (usize, usize) {
     (start, start + len)
 }
 
-/// Classic 2(world-1)-phase ring: world-1 reduce-scatter steps, then
-/// world-1 all-gather steps. Worker `rank` sends chunk
-/// `(rank - phase) mod world` in reduce-scatter. Returns this rank's
-/// send accounting `(bytes, frames, elems)`.
-fn worker(
+/// Both halves back to back on one thread (the one-shot allreduce
+/// body): reduce-scatter, then all-gather over the same channels.
+fn fused_allreduce_worker(
     rank: usize,
     world: usize,
     data: &mut [f32],
-    rx: mpsc::Receiver<WireChunk>,
-    tx: mpsc::Sender<WireChunk>,
+    rx: &mpsc::Receiver<WireChunk>,
+    tx: &mpsc::Sender<WireChunk>,
+    wire: Wire,
+) -> (u64, u64, u64) {
+    let (b1, f1, e1) = reduce_scatter_worker(rank, world, data, rx, tx, wire);
+    let (b2, f2, e2) = all_gather_worker(rank, world, data, rx, tx, wire);
+    (b1 + b2, f1 + f2, e1 + e2)
+}
+
+/// Reduce-scatter half of the classic ring: world-1 phases; worker
+/// `rank` sends chunk `(rank - phase) mod world` and accumulates the
+/// chunk it receives in f32. Zero-length chunks ship no frame (both
+/// ends compute the same bounds, so the skip stays in lockstep).
+/// Returns this rank's send accounting `(bytes, frames, elems)`.
+fn reduce_scatter_worker(
+    rank: usize,
+    world: usize,
+    data: &mut [f32],
+    rx: &mpsc::Receiver<WireChunk>,
+    tx: &mpsc::Sender<WireChunk>,
     wire: Wire,
 ) -> (u64, u64, u64) {
     let n = data.len();
     let mut bytes = 0u64;
     let mut frames = 0u64;
     let mut elems = 0u64;
-    // --- reduce-scatter: decode, accumulate in f32, re-quantize ------
     for phase in 0..world - 1 {
         let send_c = (rank + world - phase) % world;
         let recv_c = (rank + world - phase - 1) % world;
         let (s0, s1) = chunk_bounds(n, world, send_c);
-        let frame = encode(&data[s0..s1], wire);
-        bytes += frame.wire_bytes() as u64;
-        frames += 1;
-        elems += frame.num_elems() as u64;
-        tx.send(frame).expect("ring send");
-        let incoming = decode(&rx.recv().expect("ring recv"));
+        if s1 > s0 {
+            let frame = encode(&data[s0..s1], wire);
+            bytes += frame.wire_bytes() as u64;
+            frames += 1;
+            elems += frame.num_elems() as u64;
+            tx.send(frame).expect("ring send");
+        }
         let (r0, r1) = chunk_bounds(n, world, recv_c);
-        for (d, x) in data[r0..r1].iter_mut().zip(&incoming) {
-            *d += x;
+        if r1 > r0 {
+            let incoming = decode(&rx.recv().expect("ring recv"));
+            for (d, x) in data[r0..r1].iter_mut().zip(&incoming) {
+                *d += x;
+            }
         }
     }
-    // --- all-gather: quantize each reduced chunk once, then forward
-    // the received frame verbatim (ships bytes; no re-rounding) --------
+    (bytes, frames, elems)
+}
+
+/// All-gather half: each reduced chunk is quantized **once** by its
+/// owner and then forwarded verbatim (bytes on the wire, no re-rounding
+/// per hop), so all ranks finish bit-identical under every wire. A
+/// skipped (empty) receive clears the carry; the matching next send is
+/// the same empty chunk and is skipped too.
+fn all_gather_worker(
+    rank: usize,
+    world: usize,
+    data: &mut [f32],
+    rx: &mpsc::Receiver<WireChunk>,
+    tx: &mpsc::Sender<WireChunk>,
+    wire: Wire,
+) -> (u64, u64, u64) {
+    let n = data.len();
+    let mut bytes = 0u64;
+    let mut frames = 0u64;
+    let mut elems = 0u64;
     let mut carry: Option<WireChunk> = None;
     for phase in 0..world - 1 {
         let send_c = (rank + 1 + world - phase) % world;
         let recv_c = (rank + world - phase) % world;
-        let frame = match carry.take() {
-            Some(f) => f,
-            None => {
-                let (s0, s1) = chunk_bounds(n, world, send_c);
-                let f = encode(&data[s0..s1], wire);
-                // the owner adopts its own broadcast bits so every rank
-                // finishes identical even under lossy wires
-                let vals = decode(&f);
-                data[s0..s1].copy_from_slice(&vals);
-                f
-            }
-        };
-        bytes += frame.wire_bytes() as u64;
-        frames += 1;
-        elems += frame.num_elems() as u64;
-        tx.send(frame).expect("ring send");
-        let incoming = rx.recv().expect("ring recv");
-        let vals = decode(&incoming);
+        let (s0, s1) = chunk_bounds(n, world, send_c);
+        if s1 > s0 {
+            let frame = match carry.take() {
+                Some(f) => f,
+                None => {
+                    let f = encode(&data[s0..s1], wire);
+                    // the owner adopts its own broadcast bits so every
+                    // rank finishes identical even under lossy wires
+                    let vals = decode(&f);
+                    data[s0..s1].copy_from_slice(&vals);
+                    f
+                }
+            };
+            bytes += frame.wire_bytes() as u64;
+            frames += 1;
+            elems += frame.num_elems() as u64;
+            tx.send(frame).expect("ring send");
+        }
         let (r0, r1) = chunk_bounds(n, world, recv_c);
-        data[r0..r1].copy_from_slice(&vals);
-        carry = Some(incoming);
+        if r1 > r0 {
+            let incoming = rx.recv().expect("ring recv");
+            let vals = decode(&incoming);
+            data[r0..r1].copy_from_slice(&vals);
+            carry = Some(incoming);
+        } else {
+            carry = None;
+        }
     }
     (bytes, frames, elems)
 }
@@ -584,6 +751,165 @@ mod tests {
         let per_elem = packed.bytes_per_elem();
         assert!(per_elem <= 1.1, "packed wire {per_elem} B/elem");
         assert!(per_elem >= 1.0, "payload cannot be below 1 B/elem, got {per_elem}");
+    }
+
+    /// The ownership helpers partition `[0, n)` disjointly: every
+    /// element has exactly one owning rank, and `chunk_owner` inverts
+    /// `owned_chunk`.
+    #[test]
+    fn owned_ranges_partition_the_vector() {
+        for world in [1usize, 2, 3, 7] {
+            for n in [0usize, 5, 97, 256] {
+                let s = RingSession::new(world, Wire::F32);
+                let mut covered = vec![0u32; n];
+                for rank in 0..world {
+                    assert_eq!(s.chunk_owner(s.owned_chunk(rank)), rank);
+                    let (lo, hi) = s.owned_range(n, rank);
+                    for c in covered[lo..hi].iter_mut() {
+                        *c += 1;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "world {world} n {n}");
+            }
+        }
+    }
+
+    /// Satellite: after reduce-scatter each rank's owned chunk holds
+    /// the full sum — bitwise for world 2 (pure commutativity), to f32
+    /// tolerance for larger worlds — across non-divisible lengths.
+    #[test]
+    fn reduce_scatter_owned_chunks_hold_the_sum() {
+        for world in [2usize, 3, 7] {
+            for n in [5usize, 97, 1000] {
+                let (inputs, want) = make_inputs(world, n, (7 * world + n) as u64);
+                let s = RingSession::new(world, Wire::F32);
+                let rs = s.reduce_scatter(inputs);
+                assert_eq!(rs.stats.elems_reduced, n as u64);
+                for rank in 0..world {
+                    let (lo, hi) = s.owned_range(n, rank);
+                    for i in lo..hi {
+                        let got = rs.data[rank][i];
+                        if world == 2 {
+                            assert_eq!(got.to_bits(), want[i].to_bits(), "world 2 elem {i}");
+                        } else {
+                            let err = (got - want[i]).abs();
+                            assert!(err <= 1e-4 * want[i].abs().max(1.0), "world {world} n {n}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Satellite: composing the halves through `RingSession` is
+    /// bit-identical to the one-shot `ring_allreduce` under every wire.
+    #[test]
+    fn composed_halves_match_one_shot_bitwise() {
+        for wire in [Wire::F32, Wire::Fp8, Wire::PackedFp8Group { group: 32 }] {
+            for world in [2usize, 3, 7] {
+                let (inputs, _) = make_inputs(world, 301, 13);
+                let one_shot = ring_allreduce(inputs.clone(), wire);
+                let s = RingSession::new(world, wire);
+                let rs = s.reduce_scatter(inputs);
+                let (composed, _) = s.all_gather(rs.data);
+                for rank in 0..world {
+                    for (a, b) in composed[rank].iter().zip(&one_shot[rank]) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{} world {world}", wire.name());
+                    }
+                }
+            }
+        }
+    }
+
+    /// All-gather reads only each rank's owned chunk: vectors that are
+    /// garbage outside the owned range still gather to the full vector
+    /// on every rank (the ZeRO-1 parameter broadcast pattern), bitwise
+    /// on the f32 wire.
+    #[test]
+    fn all_gather_broadcasts_owned_chunks_only() {
+        let world = 4usize;
+        let n = 41usize;
+        let mut rng = Rng::new(19);
+        let truth: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let s = RingSession::new(world, Wire::F32);
+        let data: Vec<Vec<f32>> = (0..world)
+            .map(|rank| {
+                let (lo, hi) = s.owned_range(n, rank);
+                let mut v = vec![f32::NAN; n];
+                v[lo..hi].copy_from_slice(&truth[lo..hi]);
+                v
+            })
+            .collect();
+        let (out, stats) = s.all_gather(data);
+        for rank in 0..world {
+            for (a, b) in out[rank].iter().zip(&truth) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank}");
+            }
+        }
+        assert_eq!(stats.elems_reduced, 0);
+        assert!(stats.bytes_on_wire > 0);
+    }
+
+    /// Satellite bound: a 2-rank reduce-scatter quantizes the incoming
+    /// chunk exactly once, so the owned shard's error under the packed
+    /// wire obeys the same 2x per-group quantization bound the encode
+    /// test pins (|err| <= 2 * (|x|/16 + s * 2^-10) with `s` the exact
+    /// per-group scale of the *sent* chunk).
+    #[test]
+    fn packed_reduce_scatter_shard_error_bounded() {
+        let group = 32usize;
+        let n = 128usize; // chunks of 64 -> group-aligned
+        let world = 2usize;
+        let a = Rng::new(37).activation_like(1, n, 2.0);
+        let b = Rng::new(38).activation_like(1, n, 2.0);
+        let s = RingSession::new(world, Wire::PackedFp8Group { group });
+        let rs = s.reduce_scatter(vec![a.clone(), b.clone()]);
+        for rank in 0..world {
+            let (lo, hi) = s.owned_range(n, rank);
+            // the incoming (quantized-once) values came from the other rank
+            let sent = if rank == 0 { &b } else { &a };
+            let chunk = &sent[lo..hi];
+            let pg = PerGroupQuant::quantize(chunk, 1, chunk.len(), group, &E4M3);
+            for (j, i) in (lo..hi).enumerate() {
+                let exact = a[i] + b[i];
+                let err = (rs.data[rank][i] - exact).abs();
+                let scale = pg.scales[j / group];
+                // 2x per-group quantization bound + half-ulp slack for
+                // the f32 accumulation itself
+                let bound = 2.0 * (chunk[j].abs() / 16.0 + scale * 2f32.powi(-10))
+                    + exact.abs().max(1.0) * f32::EPSILON;
+                assert!(err <= bound, "rank {rank} elem {i}: err {err} > bound {bound}");
+            }
+        }
+    }
+
+    /// Satellite regression: zero-element chunks ship no frame at all —
+    /// empty gradients and `n < world` leftovers produce finite stats
+    /// (no metadata-only frames, so `bytes_per_elem` can never go
+    /// NaN/inf from a 0-element denominator).
+    #[test]
+    fn zero_element_frames_are_guarded() {
+        for wire in [Wire::F32, Wire::Fp8, Wire::PackedFp8Group { group: 32 }] {
+            // fully empty collective: nothing on the wire
+            let (out, stats) = ring_allreduce_stats(vec![Vec::new(); 3], wire);
+            assert!(out.iter().all(|v| v.is_empty()));
+            assert_eq!(stats.bytes_on_wire, 0, "{}", wire.name());
+            assert_eq!(stats.frames, 0, "{}", wire.name());
+            assert_eq!(stats.elems_shipped, 0, "{}", wire.name());
+            assert_eq!(stats.bytes_per_elem(), 0.0, "{}", wire.name());
+            assert!(stats.bytes_per_elem().is_finite(), "{}", wire.name());
+            // n < world: the empty tail chunks are skipped, the short
+            // ones still reduce correctly with finite accounting
+            let (inputs, want) = make_inputs(7, 3, 23);
+            let (out, stats) = ring_allreduce_stats(inputs, wire);
+            assert!(stats.bytes_per_elem().is_finite());
+            assert!(stats.elems_shipped > 0);
+            if wire == Wire::F32 {
+                for (a, b) in out[0].iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-5);
+                }
+            }
+        }
     }
 
     /// With two ranks every chunk reduces as `x0 + x1` (commutativity

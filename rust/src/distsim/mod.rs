@@ -10,8 +10,9 @@ pub mod netmodel;
 pub mod overlap;
 
 pub use allreduce::{
-    ring_allreduce, ring_allreduce_stats, AllreduceStats, Wire, WireChunk, WireMeta,
+    ring_allreduce, ring_allreduce_stats, AllreduceStats, ReduceScattered, RingSession, Wire,
+    WireChunk, WireMeta,
 };
 pub use memory::{activation_memory_gb, MemoryScheme, ModelShape};
 pub use netmodel::NetModel;
-pub use overlap::{overlap_ratio, OverlapConfig};
+pub use overlap::{overlap_ratio, schedule_overlap, OverlapConfig};

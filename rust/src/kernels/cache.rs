@@ -30,6 +30,90 @@ use super::linear::{pack_weight_bwd, pack_weight_fwd};
 use super::numerics::{LinearNumerics, PackedWeight};
 use super::packed::PackedFp8Tensor;
 
+/// Bucket-aligned gradient layout: the backward pass finalizes gradient
+/// tensors in a fixed emission order (head first, layers in reverse,
+/// embedding last), and this layout coalesces consecutive emitted
+/// tensors into contiguous f32 *buckets* — the unit the data-parallel
+/// pipeline reduce-scatters. Each emitted tensor maps to one contiguous
+/// `(bucket, offset, len)` span, so gradient accumulation writes
+/// straight into the bucket buffer and a completed bucket is handed to
+/// the communication thread by moving the buffer — no monolithic
+/// flatten, no copy.
+#[derive(Debug, Clone)]
+pub struct BucketLayout {
+    /// Per emission-index tensor: its contiguous span.
+    spans: Vec<(usize, usize, usize)>,
+    /// Elements per bucket.
+    elems: Vec<usize>,
+    /// Emitted tensors per bucket (completion counting).
+    slots: Vec<usize>,
+}
+
+impl BucketLayout {
+    /// Lay out tensors of `slot_elems` elements (in emission order)
+    /// into buckets of at least `bucket_bytes` bytes (f32 elements, 4 B
+    /// each). A bucket closes as soon as it reaches the threshold, so
+    /// `bucket_bytes = 0` gives one bucket per emitted tensor — the
+    /// finest (most overlappable) granularity.
+    pub fn new(slot_elems: &[usize], bucket_bytes: usize) -> BucketLayout {
+        let mut spans = Vec::with_capacity(slot_elems.len());
+        let mut elems: Vec<usize> = Vec::new();
+        let mut slots: Vec<usize> = Vec::new();
+        let mut open = false;
+        for &n in slot_elems {
+            if !open {
+                elems.push(0);
+                slots.push(0);
+                open = true;
+            }
+            let b = elems.len() - 1;
+            spans.push((b, elems[b], n));
+            elems[b] += n;
+            slots[b] += 1;
+            // bucket_bytes = 0 closes on every tensor boundary (even a
+            // zero-length one), keeping the one-bucket-per-tensor
+            // contract; otherwise close once the byte threshold is met
+            if bucket_bytes == 0 || elems[b] * 4 >= bucket_bytes {
+                open = false;
+            }
+        }
+        BucketLayout { spans, elems, slots }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.elems.len()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Elements in bucket `b`.
+    pub fn bucket_elems(&self, b: usize) -> usize {
+        self.elems[b]
+    }
+
+    /// Emitted tensors composing bucket `b`.
+    pub fn bucket_slots(&self, b: usize) -> usize {
+        self.slots[b]
+    }
+
+    /// `(bucket, offset, len)` of emission-index `e`'s tensor.
+    pub fn span(&self, e: usize) -> (usize, usize, usize) {
+        self.spans[e]
+    }
+
+    /// Total elements across all buckets.
+    pub fn total_elems(&self) -> usize {
+        self.elems.iter().sum()
+    }
+
+    /// Emission indices whose span lies in bucket `b`, in offset order.
+    pub fn bucket_members(&self, b: usize) -> impl Iterator<Item = usize> + '_ {
+        self.spans.iter().enumerate().filter(move |(_, s)| s.0 == b).map(|(e, _)| e)
+    }
+}
+
 /// Cache cost accounting.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
@@ -307,6 +391,59 @@ mod tests {
         .unwrap();
         assert!(!c.ensure(&moss(), 0, &w, 32, 32, None));
         assert!(c.ensure(&LinearNumerics::new(QuantMode::Coat, 32), 0, &w, 32, 32, None));
+    }
+
+    #[test]
+    fn bucket_layout_per_slot_and_coalesced() {
+        let sizes = [16384usize, 8192, 8192, 8192, 8192, 16384];
+        // bucket_bytes = 0: one bucket per emitted tensor
+        let fine = BucketLayout::new(&sizes, 0);
+        assert_eq!(fine.n_buckets(), sizes.len());
+        assert_eq!(fine.n_slots(), sizes.len());
+        for (e, &n) in sizes.iter().enumerate() {
+            assert_eq!(fine.span(e), (e, 0, n));
+            assert_eq!(fine.bucket_elems(e), n);
+            assert_eq!(fine.bucket_slots(e), 1);
+        }
+        assert_eq!(fine.total_elems(), sizes.iter().sum::<usize>());
+        // ... including zero-length tensors: still one bucket each
+        let with_empty = BucketLayout::new(&[0, 5], 0);
+        assert_eq!(with_empty.n_buckets(), 2);
+        assert_eq!(with_empty.span(0), (0, 0, 0));
+        assert_eq!(with_empty.span(1), (1, 0, 5));
+        // 64 KiB threshold coalesces pairs of 8192-elem (32 KiB) tensors
+        let mb = BucketLayout::new(&sizes, 64 * 1024);
+        assert_eq!(mb.n_buckets(), 4);
+        assert_eq!(mb.span(0), (0, 0, 16384));
+        assert_eq!(mb.span(1), (1, 0, 8192));
+        assert_eq!(mb.span(2), (1, 8192, 8192));
+        assert_eq!(mb.span(3), (2, 0, 8192));
+        assert_eq!(mb.bucket_slots(1), 2);
+        assert_eq!(mb.total_elems(), fine.total_elems());
+        assert_eq!(mb.bucket_members(1).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn bucket_layout_spans_are_contiguous_and_disjoint() {
+        // sizes with a zero-length tensor and an oversized threshold
+        let sizes = [5usize, 0, 7, 3, 11];
+        for bytes in [0usize, 16, 40, 1 << 20] {
+            let l = BucketLayout::new(&sizes, bytes);
+            let mut next = vec![0usize; l.n_buckets()];
+            for e in 0..l.n_slots() {
+                let (b, off, len) = l.span(e);
+                assert_eq!(off, next[b], "bytes {bytes}: span {e} not contiguous");
+                next[b] += len;
+            }
+            for (b, &n) in next.iter().enumerate() {
+                assert_eq!(n, l.bucket_elems(b), "bytes {bytes}: bucket {b}");
+            }
+            assert_eq!(l.total_elems(), sizes.iter().sum::<usize>());
+        }
+        // one giant threshold: everything lands in a single bucket
+        let one = BucketLayout::new(&sizes, 1 << 20);
+        assert_eq!(one.n_buckets(), 1);
+        assert_eq!(one.bucket_slots(0), sizes.len());
     }
 
     #[test]

@@ -22,7 +22,9 @@
 //!   packings. Weights are immutable between optimizer steps, so both
 //!   operand layouts are quantized once per step and shared across all
 //!   microbatch forwards/backwards, then invalidated on update. Slots
-//!   are keyed by numerics mode.
+//!   are keyed by numerics mode. Also home to [`BucketLayout`], the
+//!   bucket-aligned gradient layout the data-parallel pipeline
+//!   accumulates into and reduce-scatters bucket by bucket.
 //! * [`numerics`] — [`LinearNumerics`]: the mode-polymorphic policy
 //!   (`bf16` / `pertensor` / `coat` / `moss`) deciding how each linear
 //!   quantizes, packs, and multiplies. The host backend is generic
@@ -44,7 +46,7 @@ pub mod linear;
 pub mod numerics;
 pub mod packed;
 
-pub use cache::{CacheStats, PackedWeightCache};
+pub use cache::{BucketLayout, CacheStats, PackedWeightCache};
 pub use gemm::{
     dequant_then_naive_gemm, f32_gemm_with, packed_gemm, packed_gemm_with, reference_gemm_grid,
     GemmConfig,

@@ -34,7 +34,8 @@ const COMMANDS: &[(&str, &str)] = &[
     (
         "train",
         "pretrain on the synthetic corpus (--backend host|aot, --workers N, \
-         --wire f32|fp8|packed, --mode bf16|pertensor|coat|moss, --steps, --scaling)",
+         --wire f32|fp8|packed, --overlap, --zero, --bucket-mb MB, \
+         --mode bf16|pertensor|coat|moss, --steps, --scaling)",
     ),
     (
         "ablate",
@@ -79,7 +80,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     // the data-parallel machinery only exists on the host backend:
     // reject its flags rather than silently training single-worker
-    for flag in ["workers", "wire", "shard"] {
+    for flag in ["workers", "wire", "shard", "overlap", "zero", "bucket-mb"] {
         if args.get(flag).is_some() || args.has(flag) {
             bail!("--{flag} requires --backend host (the AOT path has no simulated workers)");
         }
@@ -215,9 +216,15 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
 /// the distsim ring (packed u8 FP8 gradient payloads by default).
 fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     let spec = cfg.host;
+    let schedule = match (cfg.dist.overlap, cfg.dist.zero) {
+        (false, false) => "serial",
+        (true, false) => "overlapped buckets",
+        (false, true) => "bucketed + zero-1",
+        (true, true) => "overlapped buckets + zero-1",
+    };
     eprintln!(
-        "dist host backend: mode {}, {} workers ({} shard, wire {}), vocab {} dim {} ffn {} \
-         layers {} ({} params), {} steps x {} microbatches",
+        "dist host backend: mode {}, {} workers ({} shard, wire {}, {schedule}), vocab {} dim {} \
+         ffn {} layers {} ({} params), {} steps x {} microbatches",
         cfg.mode.name(),
         cfg.dist.workers,
         cfg.dist.shard.name(),
@@ -254,6 +261,26 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
         comm.grad_elems,
         comm.allreduce_ms_per_step(),
     );
+    if trainer.cfg.dist.overlap {
+        println!(
+            "overlap: {:.1}% of gradient comm hidden behind backward \
+             ({:.2} ms hidden, {:.2} ms exposed per step, {} buckets)",
+            trainer.overlap.overlap_ratio() * 100.0,
+            trainer.overlap.hidden_ms_per_step(),
+            trainer.overlap.exposed_ms_per_step(),
+            trainer.buckets.len(),
+        );
+    }
+    if trainer.cfg.dist.zero {
+        println!(
+            "zero-1: optimizer state {:.1} KB/rank (replicated would be {:.1} KB), \
+             param all-gather {:.0} bytes/step ({:.2} ms/step)",
+            trainer.zero1_state_bytes_per_rank() as f64 / 1e3,
+            trainer.replicated_state_bytes() as f64 / 1e3,
+            comm.param_bytes_per_step(),
+            comm.param_gather_ms_per_step(),
+        );
+    }
     if let Some(out) = &trainer.cfg.out_dir {
         std::fs::create_dir_all(out)?;
         std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
@@ -266,8 +293,19 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
         if tail >= first {
             bail!("loss did not decrease: first {first:.4} -> final {tail:.4}");
         }
-        if comm.bytes_on_wire == 0 {
-            bail!("no gradient bytes crossed the wire in a {}-worker run", trainer.cfg.dist.workers);
+        if trainer.cfg.dist.workers > 1 && comm.bytes_on_wire == 0 {
+            let w = trainer.cfg.dist.workers;
+            bail!("no gradient bytes crossed the wire in a {w}-worker run");
+        }
+        if trainer.cfg.dist.overlap
+            && trainer.cfg.dist.workers > 1
+            && trainer.overlap.hidden_secs <= 0.0
+        {
+            bail!(
+                "--overlap hid zero communication ({:.2} ms exposed/step): the bucketed \
+                 pipeline never ran concurrently with backward",
+                trainer.overlap.exposed_ms_per_step()
+            );
         }
         eprintln!("loss improved: {first:.4} -> {tail:.4}");
     }

@@ -110,6 +110,11 @@ pub struct CommStats {
     pub grad_elems: u64,
     /// Wall-clock spent inside the collective, seconds.
     pub allreduce_secs: f64,
+    /// ZeRO-1 parameter all-gather bytes (updated master weights ship
+    /// over the lossless f32 wire, accounted apart from gradients).
+    pub param_bytes: u64,
+    /// Wall-clock spent inside the parameter all-gather, seconds.
+    pub param_gather_secs: f64,
 }
 
 impl CommStats {
@@ -120,6 +125,12 @@ impl CommStats {
         self.elems_shipped += elems_shipped;
         self.grad_elems = grad_elems;
         self.allreduce_secs += secs;
+    }
+
+    /// Fold in one step's ZeRO-1 parameter all-gather accounting.
+    pub fn record_param_gather(&mut self, bytes: u64, secs: f64) {
+        self.param_bytes += bytes;
+        self.param_gather_secs += secs;
     }
 
     /// Average bytes per gradient element on the wire (4.0 for the f32
@@ -146,6 +157,82 @@ impl CommStats {
         }
         self.allreduce_secs * 1e3 / self.steps as f64
     }
+
+    /// Average ZeRO-1 parameter all-gather bytes per step.
+    pub fn param_bytes_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.param_bytes as f64 / self.steps as f64
+    }
+
+    /// Average ZeRO-1 parameter all-gather wall-clock per step, ms.
+    pub fn param_gather_ms_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.param_gather_secs * 1e3 / self.steps as f64
+    }
+}
+
+/// Measured compute/communication overlap of the bucketed gradient
+/// pipeline (`backend::dist` with `--overlap`): per step, communication
+/// time spent while backward compute was still running is *hidden*; the
+/// tail after the last worker finished is *exposed*. The live analog of
+/// the `distsim::overlap` FIFO-NIC model — `repro comm-table` prints
+/// the two side by side.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverlapStats {
+    /// Steps that ran the bucketed pipeline.
+    pub steps: u64,
+    /// Gradient-communication seconds overlapped with backward compute.
+    pub hidden_secs: f64,
+    /// Gradient-communication seconds past the end of backward compute.
+    pub exposed_secs: f64,
+    /// Backward-compute window seconds (last worker finish per step).
+    pub backward_secs: f64,
+}
+
+impl OverlapStats {
+    /// Fold in one step's measured schedule.
+    pub fn record(&mut self, hidden: f64, exposed: f64, backward: f64) {
+        self.steps += 1;
+        self.hidden_secs += hidden;
+        self.exposed_secs += exposed;
+        self.backward_secs += backward;
+    }
+
+    /// Hidden fraction of total gradient-communication time (the
+    /// Table-5 "Overlap Ratio" analog). 0 before any pipelined step.
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.hidden_secs + self.exposed_secs;
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.hidden_secs / total
+    }
+
+    pub fn hidden_ms_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.hidden_secs * 1e3 / self.steps as f64
+    }
+
+    pub fn exposed_ms_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.exposed_secs * 1e3 / self.steps as f64
+    }
+
+    /// Mean backward-compute window per step, seconds.
+    pub fn backward_secs_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.backward_secs / self.steps as f64
+    }
 }
 
 #[cfg(test)]
@@ -164,6 +251,31 @@ mod tests {
         assert!((c.bytes_per_elem() - 1.04).abs() < 1e-9);
         assert!((c.bytes_per_step() - 1040.0).abs() < 1e-9);
         assert!((c.allreduce_ms_per_step() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overlap_stats_ratio_and_guards() {
+        let mut o = OverlapStats::default();
+        assert_eq!(o.overlap_ratio(), 0.0);
+        assert_eq!(o.hidden_ms_per_step(), 0.0);
+        o.record(0.003, 0.001, 0.010);
+        o.record(0.001, 0.003, 0.010);
+        assert_eq!(o.steps, 2);
+        assert!((o.overlap_ratio() - 0.5).abs() < 1e-12);
+        assert!((o.hidden_ms_per_step() - 2.0).abs() < 1e-9);
+        assert!((o.exposed_ms_per_step() - 2.0).abs() < 1e-9);
+        assert!((o.backward_secs_per_step() - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_gather_accounting() {
+        let mut c = CommStats::default();
+        assert_eq!(c.param_bytes_per_step(), 0.0);
+        c.record(100, 50, 25, 0.001);
+        c.record_param_gather(4000, 0.002);
+        assert_eq!(c.param_bytes, 4000);
+        assert!((c.param_bytes_per_step() - 4000.0).abs() < 1e-9);
+        assert!((c.param_gather_ms_per_step() - 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -33,22 +33,50 @@ impl AdamW {
     /// In-place update of `w` with gradient `g` at learning rate `lr`
     /// (paper Eq. 1, decoupled weight decay).
     pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
-        assert_eq!(w.len(), g.len());
         assert_eq!(w.len(), self.m.len());
+        self.begin_step();
+        self.step_range(w, g, lr, 0);
+    }
+
+    /// Advance the shared step counter (the bias-correction clock).
+    /// Call exactly once per optimizer step before any
+    /// [`Self::step_range`] call of that step — the ZeRO-1 path applies
+    /// one `begin_step` and then several subrange applies against the
+    /// same state.
+    pub fn begin_step(&mut self) {
         self.t += 1;
+    }
+
+    /// Subrange AdamW apply: update `w` from `g` using state entries
+    /// `[off, off + g.len())`. Elementwise bit-identical to
+    /// [`Self::step`] over the same elements — the update is local per
+    /// element, so a sharded optimizer (each rank owning a slice of the
+    /// flat parameter vector) reproduces the replicated trajectory bit
+    /// for bit. Requires a prior [`Self::begin_step`] this step.
+    pub fn step_range(&mut self, w: &mut [f32], g: &[f32], lr: f32, off: usize) {
+        assert_eq!(w.len(), g.len());
+        assert!(off + g.len() <= self.m.len(), "state subrange out of bounds");
+        assert!(self.t > 0, "step_range requires begin_step first");
         let t = self.t as f64;
         let bc1 = 1.0 - (self.hp.beta1 as f64).powf(t);
         let bc2 = 1.0 - (self.hp.beta2 as f64).powf(t);
         let (b1, b2) = (self.hp.beta1, self.hp.beta2);
         for i in 0..w.len() {
-            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g[i];
-            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g[i] * g[i];
-            let mhat = self.m[i] as f64 / bc1;
-            let vhat = self.v[i] as f64 / bc2;
+            let j = off + i;
+            self.m[j] = b1 * self.m[j] + (1.0 - b1) * g[i];
+            self.v[j] = b2 * self.v[j] + (1.0 - b2) * g[i] * g[i];
+            let mhat = self.m[j] as f64 / bc1;
+            let vhat = self.v[j] as f64 / bc2;
             let upd = mhat / (vhat.sqrt() + self.hp.eps as f64)
                 + self.hp.weight_decay as f64 * w[i] as f64;
             w[i] -= (lr as f64 * upd) as f32;
         }
+    }
+
+    /// Optimizer-state bytes this instance holds (`m` + `v`, f32 each)
+    /// — what the ZeRO-1 per-rank footprint gate measures.
+    pub fn state_bytes(&self) -> u64 {
+        ((self.m.len() + self.v.len()) * std::mem::size_of::<f32>()) as u64
     }
 }
 
@@ -91,6 +119,68 @@ mod tests {
                         "t={t} delta={delta} bound={bound}");
             }
         }
+    }
+
+    /// Sharded application (one `begin_step`, several `step_range`
+    /// pieces at arbitrary split points) is bit-identical to the
+    /// monolithic `step` over multiple optimizer steps — the ZeRO-1
+    /// correctness core.
+    #[test]
+    fn step_range_shards_are_bitwise_identical_to_step() {
+        let n = 23usize;
+        let mut rng = Rng::new(41);
+        let mut w_mono = vec![0.3f32; n];
+        let mut w_shard = w_mono.clone();
+        let mut mono = AdamW::new(n, AdamWParams::default());
+        let mut shard = AdamW::new(n, AdamWParams::default());
+        for step in 0..5 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            mono.step(&mut w_mono, &g, 2e-3);
+            shard.begin_step();
+            // uneven split points, including a zero-length piece
+            let cuts = [0usize, 7, 7, 16, n];
+            for p in 0..cuts.len() - 1 {
+                let (lo, hi) = (cuts[p], cuts[p + 1]);
+                shard.step_range(&mut w_shard[lo..hi], &g[lo..hi], 2e-3, lo);
+            }
+            for i in 0..n {
+                assert_eq!(w_mono[i].to_bits(), w_shard[i].to_bits(), "step {step} elem {i}");
+                assert_eq!(mono.m[i].to_bits(), shard.m[i].to_bits());
+                assert_eq!(mono.v[i].to_bits(), shard.v[i].to_bits());
+            }
+            assert_eq!(mono.t, shard.t);
+        }
+    }
+
+    /// A fresh state whose length equals only its shard behaves exactly
+    /// like the same slice of a full-length replicated state (the 1/N
+    /// memory claim costs no fidelity).
+    #[test]
+    fn shard_local_state_matches_replicated_slice() {
+        let n = 12usize;
+        let (lo, hi) = (5usize, 11usize);
+        let mut rng = Rng::new(43);
+        let mut w_full = vec![0.1f32; n];
+        let mut w_shard: Vec<f32> = w_full[lo..hi].to_vec();
+        let mut full = AdamW::new(n, AdamWParams::default());
+        let mut local = AdamW::new(hi - lo, AdamWParams::default());
+        for _ in 0..4 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            full.step(&mut w_full, &g, 1e-3);
+            local.step(&mut w_shard, &g[lo..hi], 1e-3);
+        }
+        for (a, b) in w_full[lo..hi].iter().zip(&w_shard) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(local.state_bytes(), 2 * 4 * (hi - lo) as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_step")]
+    fn step_range_requires_begin_step() {
+        let mut opt = AdamW::new(4, AdamWParams::default());
+        let mut w = vec![0f32; 4];
+        opt.step_range(&mut w, &[1.0, 1.0, 1.0, 1.0], 1e-3, 0);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! `repro comm-table`: Table 5 — memory footprint and communication
 //! efficiency across BF16 / COAT / MOSS, from the distsim models — plus
-//! a *measured* companion table: the same wire formats driven by a live
-//! data-parallel host-backend training loop (`backend::dist`), so the
-//! analytic bytes/element claims are checked against frames that
-//! actually crossed the in-process ring.
+//! two *measured* companions driven by live data-parallel host-backend
+//! training loops (`backend::dist`): the wire-format byte accounting
+//! (Table 5b) and the compute/communication overlap schedule (Table
+//! 5c), where the measured hidden/exposed split of the bucketed
+//! pipeline is printed next to what the `distsim::overlap` FIFO model
+//! predicts from the same measured per-bucket inputs.
 
 use anyhow::{bail, Result};
 
@@ -14,7 +16,7 @@ use crate::config::{
 };
 use crate::distsim::memory::{activation_memory_gb, MemoryScheme, ModelShape};
 use crate::distsim::netmodel::{grad_bytes_per_step, NetModel};
-use crate::distsim::overlap::table5_overlap;
+use crate::distsim::overlap::{schedule_overlap, table5_overlap};
 use crate::util::table::{f, Table};
 
 const LLAMA7B_PARAMS: f64 = 6.74e9;
@@ -52,6 +54,31 @@ pub fn table5() -> Table {
     t
 }
 
+/// The one tiny host model every live measurement in this file trains:
+/// Table 5b (wire traffic) and Table 5c (bucket overlap) must be
+/// measured on the *same* spec, so their numbers describe one model.
+fn measured_cfg(workers: usize, steps: u64, dist: DistSpec) -> TrainConfig {
+    TrainConfig {
+        backend: BackendKind::Host,
+        host: HostSpec {
+            vocab: 64,
+            dim: 32,
+            ffn: 64,
+            layers: 2,
+            seq: 16,
+            batch: 2,
+            micro: 32,
+            microbatches: workers,
+            cache_weights: true,
+        },
+        dist,
+        steps,
+        lr: LrSchedule { peak: 5e-3, warmup_steps: 1, total_steps: steps, final_ratio: 0.1 },
+        log_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
 /// Live measurement: train a tiny host model data-parallel under each
 /// wire and report the bytes that actually crossed the ring. The
 /// `B/elem` column is the executable check on the Table-5 compression
@@ -66,26 +93,8 @@ pub fn measured_wire_table(workers: usize, steps: u64) -> Result<Table> {
     );
     let mut f32_bytes_per_step = 0f64;
     for wire in [WireKind::F32, WireKind::Fp8, WireKind::PackedFp8Group] {
-        let cfg = TrainConfig {
-            backend: BackendKind::Host,
-            host: HostSpec {
-                vocab: 64,
-                dim: 32,
-                ffn: 64,
-                layers: 1,
-                seq: 16,
-                batch: 2,
-                micro: 32,
-                microbatches: workers,
-                cache_weights: true,
-            },
-            dist: DistSpec { workers, wire, shard: ShardMode::Scatter },
-            steps,
-            lr: LrSchedule { peak: 5e-3, warmup_steps: 1, total_steps: steps, final_ratio: 0.1 },
-            log_every: 0,
-            ..TrainConfig::default()
-        };
-        let mut trainer = DistTrainer::new(cfg)?;
+        let dist = DistSpec { workers, wire, shard: ShardMode::Scatter, ..DistSpec::default() };
+        let mut trainer = DistTrainer::new(measured_cfg(workers, steps, dist))?;
         trainer.run(steps)?;
         let comm = trainer.comm;
         if wire == WireKind::F32 {
@@ -108,6 +117,68 @@ pub fn measured_wire_table(workers: usize, steps: u64) -> Result<Table> {
     Ok(t)
 }
 
+/// Live overlap measurement (Table 5c): train the bucketed pipeline
+/// (`--overlap --zero`, packed wire) and report each bucket's measured
+/// emission time, ring occupancy, and wire bytes — then the measured
+/// hidden/exposed split next to the `distsim::overlap` FIFO schedule
+/// replayed on those same measured per-bucket inputs. The analytic
+/// model and the live loop now describe the *same* execution schedule,
+/// so the two overlap ratios are directly comparable.
+pub fn measured_overlap_table(workers: usize, steps: u64) -> Result<Table> {
+    if workers < 2 {
+        bail!("need >= 2 workers to overlap communication (got {workers})");
+    }
+    let dist = DistSpec {
+        workers,
+        wire: WireKind::PackedFp8Group,
+        shard: ShardMode::Scatter,
+        overlap: true,
+        zero: true,
+        bucket_bytes: 0,
+    };
+    let mut trainer = DistTrainer::new(measured_cfg(workers, steps, dist))?;
+    trainer.run(steps)?;
+    let mut t = Table::new(
+        &format!(
+            "Table 5c — measured bucket overlap ({workers}-worker host backend, packed wire, \
+             overlap + zero-1, {steps} steps)"
+        ),
+        &["bucket", "elems", "bytes/step", "ready ms", "ring ms", "overlap %"],
+    );
+    let ready: Vec<f64> = trainer.buckets.iter().map(|b| b.mean_ready_secs()).collect();
+    let comm: Vec<f64> = trainer.buckets.iter().map(|b| b.mean_comm_secs()).collect();
+    for (b, agg) in trainer.buckets.iter().enumerate() {
+        t.row(vec![
+            format!("{b}"),
+            format!("{}", agg.elems),
+            f(agg.bytes_per_step(), 0),
+            f(agg.mean_ready_secs() * 1e3, 3),
+            f(agg.mean_comm_secs() * 1e3, 3),
+            String::new(),
+        ]);
+    }
+    let measured = trainer.overlap.overlap_ratio();
+    let (predicted, ..) =
+        schedule_overlap(&ready, &comm, trainer.overlap.backward_secs_per_step());
+    t.row(vec![
+        "measured (hidden | exposed)".into(),
+        String::new(),
+        String::new(),
+        f(trainer.overlap.hidden_ms_per_step(), 3),
+        f(trainer.overlap.exposed_ms_per_step(), 3),
+        f(measured * 100.0, 1),
+    ]);
+    t.row(vec![
+        "fifo model (measured inputs)".into(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        f(predicted * 100.0, 1),
+    ]);
+    Ok(t)
+}
+
 pub fn run_cli(args: &Args) -> Result<()> {
     super::emit(args, "table5_memory_comm", &table5())?;
     let workers = args.get_usize("dist-workers", 4)?;
@@ -117,5 +188,11 @@ pub fn run_cli(args: &Args) -> Result<()> {
         // the measured table would be all zeros — refuse to pretend
         bail!("--dist-workers must be >= 2 to measure wire traffic (got {workers})");
     }
-    super::emit(args, "table5_measured_wire", &measured_wire_table(workers, steps)?)
+    super::emit(args, "table5_measured_wire", &measured_wire_table(workers, steps)?)?;
+    let overlap_steps = args.get_u64("overlap-steps", steps.max(8))?;
+    super::emit(
+        args,
+        "table5_measured_overlap",
+        &measured_overlap_table(workers, overlap_steps)?,
+    )
 }

@@ -43,7 +43,7 @@ fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
 
 fn dist_cfg(steps: u64, microbatches: usize, workers: usize, wire: WireKind) -> TrainConfig {
     let mut cfg = base_cfg(steps, microbatches);
-    cfg.dist = DistSpec { workers, wire, shard: ShardMode::Scatter };
+    cfg.dist = DistSpec { workers, wire, shard: ShardMode::Scatter, ..DistSpec::default() };
     cfg
 }
 
