@@ -16,7 +16,8 @@ use std::time::Instant;
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::bench_util::{black_box, Bencher};
 use moss::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, QuantMode, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, ModelKind, QuantMode, ShardMode, TrainConfig,
+    WireKind,
 };
 use moss::formats::fp8::E4M3;
 use moss::kernels::{dequant_then_naive_gemm, packed_gemm, PackedFp8Tensor};
@@ -99,6 +100,53 @@ fn main() {
         "host step: {steps} steps in {wall:.2}s -> {tok_per_sec:.0} tokens/s \
          (final loss {final_loss:.4}, packs {}, hits {})",
         cache.packs, cache.hits
+    );
+
+    // --- attention-shaped GEMM: packed vs dequantize-then-f32 --------
+    // The QK^T operand shape the transformer runs per head: [seq, hd] x
+    // [seq, hd]^T with the head-dim contraction — small K, many rows,
+    // the shape where tiled FP8 has the least slack.
+    let (aseq, ahd) = (256usize, 64usize);
+    let q = rng.activation_like(aseq, ahd, 1.0);
+    let k = rng.activation_like(aseq, ahd, 1.0);
+    let qp = PackedFp8Tensor::quantize(&q, aseq, ahd, 32, &E4M3);
+    let kp = PackedFp8Tensor::quantize(&k, aseq, ahd, 32, &E4M3);
+    let attn_packed = bench.run("packed_attn_gemm_qkt", || {
+        black_box(packed_gemm(black_box(&qp), black_box(&kp)));
+    });
+    let attn_baseline = bench.run("dequant_attn_gemm_qkt", || {
+        black_box(dequant_then_naive_gemm(black_box(&qp), black_box(&kp)));
+    });
+    let attn_speedup = attn_baseline.summary.p50 / attn_packed.summary.p50;
+    println!("{}", attn_packed.report_line());
+    println!("{}", attn_baseline.report_line());
+    println!("packed vs dequantize-then-f32 at QK^T [{aseq}x{ahd}]: {attn_speedup:.2}x (p50)");
+
+    // --- transformer train-step throughput (moss mode) ---------------
+    // The tentpole path: multi-head causal attention with every matmul
+    // (QKV/out projections, QK^T, PV) through the packed kernels.
+    let tf_steps = 10u64;
+    let tf_cfg = TrainConfig {
+        backend: BackendKind::Host,
+        host: HostSpec { model: ModelKind::Transformer, ..HostSpec::default() },
+        mode: QuantMode::Moss,
+        steps: tf_steps,
+        lr: LrSchedule { peak: 5e-3, warmup_steps: 2, total_steps: tf_steps, final_ratio: 0.1 },
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    let tf_spec = tf_cfg.host;
+    let mut tf_trainer = HostTrainer::new(tf_cfg).expect("transformer trainer");
+    let t0 = Instant::now();
+    tf_trainer.run(tf_steps).expect("transformer steps");
+    let tf_wall = t0.elapsed().as_secs_f64();
+    let tf_tokens = (tf_spec.batch * tf_spec.seq * tf_spec.microbatches) as u64 * tf_steps;
+    let transformer_tok_per_sec = tf_tokens as f64 / tf_wall.max(1e-9);
+    println!(
+        "transformer step ({} heads, moss): {tf_steps} steps in {tf_wall:.2}s -> \
+         {transformer_tok_per_sec:.0} tokens/s (final loss {:.4})",
+        tf_spec.heads,
+        tf_trainer.history.tail_loss(3)
     );
 
     // --- per-mode host throughput (FP8-vs-bf16 speedup record) -------
@@ -238,6 +286,11 @@ fn main() {
             "  \"zero1_state_bytes_per_rank\": {},\n",
             "  \"replicated_state_bytes\": {},\n",
             "  \"param_gather_bytes_per_step\": {:.1},\n",
+            "  \"transformer_tokens_per_sec\": {:.1},\n",
+            "  \"transformer_heads\": {},\n",
+            "  \"attn_gemm_speedup_qkt_p50\": {:.3},\n",
+            "  \"attn_gemm_packed_p50_ms\": {:.3},\n",
+            "  \"attn_gemm_dequant_p50_ms\": {:.3},\n",
             "  \"host_model\": {{\"vocab\": {}, \"dim\": {}, \"ffn\": {}, ",
             "\"layers\": {}, \"batch\": {}, \"seq\": {}}}\n",
             "}}\n"
@@ -271,6 +324,11 @@ fn main() {
         zero1_bytes,
         replicated_bytes,
         param_gather_bytes,
+        transformer_tok_per_sec,
+        tf_spec.heads,
+        attn_speedup,
+        attn_packed.summary.p50 * 1e3,
+        attn_baseline.summary.p50 * 1e3,
         spec.vocab,
         spec.dim,
         spec.ffn,

@@ -146,7 +146,7 @@ pub(crate) struct EmissionMap {
 
 impl EmissionMap {
     fn new(model: &HostModel) -> EmissionMap {
-        let order = emission_order(model.spec.layers);
+        let order = emission_order(model.spec.model, model.spec.layers);
         let mut of_linear = vec![usize::MAX; model.weights.len()];
         let mut of_embed = usize::MAX;
         let mut lens = Vec::with_capacity(order.len());
@@ -612,26 +612,27 @@ impl DistTrainer {
         let cache = &self.cache;
         let num = self.numerics;
         let vocab = spec.vocab;
-        let results: Vec<(Grads, Vec<f64>)> = std::thread::scope(|scope| {
+        let results: Vec<Result<(Grads, Vec<f64>)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = shards
                 .into_iter()
                 .map(|shard| {
-                    scope.spawn(move || {
+                    scope.spawn(move || -> Result<(Grads, Vec<f64>)> {
                         let mut grads = Grads::zeros(model);
                         let mut losses = Vec::with_capacity(shard.len());
                         let mut ops = SharedWeights { cache, num };
                         for (inputs, targets) in &shard {
                             let trace = forward(model, &mut ops, inputs, gemm);
-                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab);
+                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab)?;
                             losses.push(loss);
                             backward(model, &mut ops, &trace, &dlogits, inputs, &mut grads, gemm);
                         }
-                        (grads, losses)
+                        Ok((grads, losses))
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("dist worker panicked")).collect()
         });
+        let results: Vec<(Grads, Vec<f64>)> = results.into_iter().collect::<Result<_>>()?;
 
         // --- loss: gather per-microbatch losses, sum in global order -
         let mut loss_sum = 0f64;
@@ -691,14 +692,14 @@ impl DistTrainer {
                 .enumerate()
                 .map(|(rank, shard)| {
                     let mut btx = Some(btx.clone());
-                    scope.spawn(move || {
+                    scope.spawn(move || -> Result<(Vec<f64>, Instant)> {
                         let mut grads = BucketGrads::zeros(Arc::clone(layout), Arc::clone(emis));
                         let mut losses = Vec::with_capacity(shard.len());
                         let mut ops = SharedWeights { cache, num };
                         let last = shard.len() - 1;
                         for (mi, (inputs, targets)) in shard.iter().enumerate() {
                             let trace = forward(model, &mut ops, inputs, gemm);
-                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab);
+                            let (loss, dlogits) = softmax_xent(&trace.logits, targets, vocab)?;
                             losses.push(loss);
                             if mi == last {
                                 // the final microbatch finalizes every
@@ -707,16 +708,20 @@ impl DistTrainer {
                             }
                             backward(model, &mut ops, &trace, &dlogits, inputs, &mut grads, gemm);
                         }
-                        (losses, Instant::now())
+                        Ok((losses, Instant::now()))
                     })
                 })
                 .collect();
             drop(btx);
-            let wout: Vec<(Vec<f64>, Instant)> =
+            let wout: Vec<Result<(Vec<f64>, Instant)>> =
                 handles.into_iter().map(|h| h.join().expect("dist worker panicked")).collect();
             let cout = comm.join().expect("comm thread panicked");
             (wout, cout)
         });
+        // A failed worker dropped its bucket sender, so `comm_out` may
+        // be partial — propagate the error before reading any bucket.
+        let worker_out: Vec<(Vec<f64>, Instant)> =
+            worker_out.into_iter().collect::<Result<_>>()?;
 
         // --- loss + measured schedule --------------------------------
         let mut loss_sum = 0f64;
@@ -989,7 +994,7 @@ pub fn is_dist(cfg: &TrainConfig) -> bool {
 
 #[cfg(test)]
 mod tests {
-    use crate::config::{DistSpec, HostSpec, LrSchedule, WireKind};
+    use crate::config::{DistSpec, HostSpec, LrSchedule, ModelKind, WireKind};
 
     use super::*;
 
@@ -1006,6 +1011,8 @@ mod tests {
                 micro: 32,
                 microbatches: workers.max(1),
                 cache_weights: true,
+                model: ModelKind::Mlp,
+                heads: 2,
             },
             dist: DistSpec { workers, wire, shard: ShardMode::Scatter, ..DistSpec::default() },
             steps,
@@ -1046,6 +1053,31 @@ mod tests {
             assert_eq!(stats.packs, steps * slots, "workers {workers}");
             assert_eq!(stats.invalidations, steps);
         }
+    }
+
+    /// The transformer's 4-slots-per-layer emission order flows through
+    /// the bucket machinery untouched: data-parallel transformer steps
+    /// train, pack once per slot per step, and the EmissionMap covers
+    /// every slot exactly once.
+    #[test]
+    fn transformer_trains_data_parallel() {
+        let steps = 2u64;
+        let mut cfg = tiny_cfg(steps, 2, WireKind::F32);
+        cfg.host.model = ModelKind::Transformer;
+        cfg.host.dim = 64;
+        cfg.host.ffn = 128;
+        cfg.host.seq = 32;
+        cfg.host.microbatches = 2;
+        let mut t = DistTrainer::new(cfg).unwrap();
+        assert_eq!(t.emis.order.len(), t.cfg.host.n_linears() + 1);
+        assert_eq!(
+            t.emis.lens.iter().sum::<usize>(),
+            t.cfg.host.param_count(),
+            "emission map must cover every transformer parameter exactly once"
+        );
+        t.run(steps).unwrap();
+        assert!(t.history.losses.iter().all(|&(_, l)| l.is_finite()));
+        assert_eq!(t.cache.stats().packs, steps * t.cfg.host.n_linears() as u64);
     }
 
     #[test]

@@ -1,18 +1,31 @@
 //! Host-native training backend: the full train step built from the
 //! packed kernels, with no AOT artifacts anywhere on the path.
 //!
-//! The model is a token-embedding + residual MLP stack + output head —
-//! every matmul routed through the configured
-//! [`LinearNumerics`] policy (`--mode bf16|pertensor|coat|moss`; the
-//! MOSS recipe is E4M3 activations/weights, E5M2 gradients, paper
-//! §2.1's three GEMMs per linear), the loss a host softmax
-//! cross-entropy, the update the host AdamW (`optim::adamw`, Eq. 1):
+//! Two architectures share the step (`--model mlp|transformer`), every
+//! matmul routed through the configured [`LinearNumerics`] policy
+//! (`--mode bf16|pertensor|coat|moss`; the MOSS recipe is E4M3
+//! activations/weights, E5M2 gradients, paper §2.1's three GEMMs per
+//! linear), the loss a host softmax cross-entropy, the update the host
+//! AdamW (`optim::adamw`, Eq. 1):
 //!
 //! ```text
 //! x0 = embed[tokens]                          [rows, dim]
-//! for each layer:  x = x + W_down·relu(W_up·x)    (residual MLP block)
+//! mlp:          x = x + W_down·relu(W_up·x)       (residual MLP block)
+//! transformer:  y = x + W_attn_out·attn(W_qkv·x)  (multi-head causal
+//!               x = y + W_down·relu(W_up·y)        self-attention)
 //! logits = W_out·x                            [rows, vocab]
 //! ```
+//!
+//! The transformer block is the path the paper's recipe is motivated
+//! by (§3.1: attention inputs are the sensitive activations): the fused
+//! QKV and output projections are ordinary [`LinearSlot`]s, and the
+//! per-head `QK^T` / `PV` batched matmuls go through the same packed
+//! microscaled GEMM via [`LinearNumerics::attn_matmul`] — activations
+//! E4M3, incoming gradients E5M2, scores scaled by `1/sqrt(hd)` *after*
+//! the GEMM so quantization sees the raw operands. The causal softmax
+//! subtracts the row max and normalizes in f64
+//! ([`causal_softmax`] / [`causal_softmax_backward`], both
+//! finite-difference-checked).
 //!
 //! Two paper mechanisms drive the step:
 //!
@@ -31,10 +44,11 @@
 
 use anyhow::{bail, Result};
 
-use crate::config::{BackendKind, DataKind, HostSpec, ScalingKind, TrainConfig};
+use crate::config::{BackendKind, DataKind, HostSpec, ModelKind, ScalingKind, TrainConfig};
 use crate::coordinator::StepOutcome;
 use crate::data::synth::CorpusSpec;
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
+use crate::kernels::linear::transpose;
 use crate::kernels::{GemmConfig, LinearNumerics, PackedWeight, PackedWeightCache};
 use crate::metrics::{Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
@@ -99,8 +113,10 @@ pub struct HostModel {
     /// not a GEMM) — matches the AOT models keeping embeddings bf16.
     pub embed: Vec<f32>,
     /// Quantized linear weights, row-major [k, n] per [`LinearSlot`].
-    /// Order: per layer `w_up` [dim,ffn], `w_down` [ffn,dim]; then
-    /// `w_out` [dim,vocab].
+    /// MLP order: per layer `w_up` [dim,ffn], `w_down` [ffn,dim]; then
+    /// `w_out` [dim,vocab]. Transformer order: per layer `w_qkv`
+    /// [dim,3*dim] (columns `[q | k | v]`), `w_attn_out` [dim,dim],
+    /// `w_up`, `w_down`; then `w_out`.
     pub weights: Vec<Vec<f32>>,
     pub slots: Vec<LinearSlot>,
 }
@@ -111,6 +127,18 @@ impl HostModel {
         let root = Rng::new(seed ^ 0x4057_AB1E);
         let mut slots = Vec::with_capacity(spec.n_linears());
         for l in 0..spec.layers {
+            if spec.model == ModelKind::Transformer {
+                slots.push(LinearSlot {
+                    name: format!("l{l}.w_qkv"),
+                    k: spec.dim,
+                    n: 3 * spec.dim,
+                });
+                slots.push(LinearSlot {
+                    name: format!("l{l}.w_attn_out"),
+                    k: spec.dim,
+                    n: spec.dim,
+                });
+            }
             slots.push(LinearSlot { name: format!("l{l}.w_up"), k: spec.dim, n: spec.ffn });
             slots.push(LinearSlot { name: format!("l{l}.w_down"), k: spec.ffn, n: spec.dim });
         }
@@ -209,6 +237,23 @@ impl WeightOperands for SharedWeights<'_> {
     }
 }
 
+/// Saved attention tensors of one transformer layer, kept from forward
+/// for the exact backward.
+pub(crate) struct AttnTrace {
+    /// Fused QKV projection output, [rows, 3*dim], columns `[q | k | v]`
+    /// with head `h`'s slice at `h*hd..(h+1)*hd` of each third.
+    pub(crate) qkv: Vec<f32>,
+    /// Causal-softmax probabilities, one [seq, seq] matrix per
+    /// (batch row, head), indexed `b * heads + h`.
+    pub(crate) probs: Vec<Vec<f32>>,
+    /// Concatenated per-head context [rows, dim] — the `w_attn_out`
+    /// GEMM input.
+    pub(crate) ctx: Vec<f32>,
+    /// Post-attention residual output [rows, dim] — the MLP half's
+    /// input.
+    pub(crate) y: Vec<f32>,
+}
+
 /// Saved forward activations of one microbatch.
 pub(crate) struct Trace {
     /// Layer-block inputs; `xs[layers]` is the final hidden state.
@@ -216,6 +261,8 @@ pub(crate) struct Trace {
     /// `relu(u)` per layer — also carries the backward ReLU mask
     /// (`act > 0` iff `u > 0`), so pre-activations need not be saved.
     pub(crate) acts: Vec<Vec<f32>>,
+    /// Per-layer attention tensors; empty for the MLP model.
+    pub(crate) attn: Vec<AttnTrace>,
     pub(crate) logits: Vec<f32>,
 }
 
@@ -248,15 +295,22 @@ pub(crate) trait GradSink {
 }
 
 /// The fixed emission order of [`backward`]: output head, then each
-/// layer's `w_down` / `w_up` from the last layer to the first, then the
-/// embedding — the order gradient tensors *finalize* in, which is the
-/// order the bucketed pipeline lays its buckets out in.
-pub(crate) fn emission_order(layers: usize) -> Vec<GradSlot> {
-    let mut order = Vec::with_capacity(2 * layers + 2);
-    order.push(GradSlot::Linear(2 * layers));
+/// layer's slots from the last layer to the first in reverse
+/// within-layer order (`w_down`, `w_up` for the MLP; `w_down`, `w_up`,
+/// `w_attn_out`, `w_qkv` for the transformer), then the embedding — the
+/// order gradient tensors *finalize* in, which is the order the
+/// bucketed pipeline lays its buckets out in.
+pub(crate) fn emission_order(model: ModelKind, layers: usize) -> Vec<GradSlot> {
+    let per = match model {
+        ModelKind::Mlp => 2,
+        ModelKind::Transformer => 4,
+    };
+    let mut order = Vec::with_capacity(per * layers + 2);
+    order.push(GradSlot::Linear(per * layers));
     for l in (0..layers).rev() {
-        order.push(GradSlot::Linear(2 * l + 1));
-        order.push(GradSlot::Linear(2 * l));
+        for j in (0..per).rev() {
+            order.push(GradSlot::Linear(per * l + j));
+        }
     }
     order.push(GradSlot::Embed);
     order
@@ -336,8 +390,32 @@ pub(crate) fn apply_update(
 /// `gemm` controls the per-GEMM tiling/threading (bit-neutral; the
 /// dist backend caps threads so N workers don't oversubscribe cores).
 /// Every linear routes through the operand source's [`LinearNumerics`],
-/// so one implementation serves all four `QuantMode`s.
+/// so one implementation serves all four `QuantMode`s. Dispatches on
+/// `spec.model`; the MLP arm is byte-for-byte the pre-transformer loop.
 pub(crate) fn forward<W: WeightOperands>(
+    model: &HostModel,
+    ops: &mut W,
+    inputs: &[i32],
+    gemm: GemmConfig,
+) -> Trace {
+    match model.spec.model {
+        ModelKind::Mlp => forward_mlp(model, ops, inputs, gemm),
+        ModelKind::Transformer => forward_transformer(model, ops, inputs, gemm),
+    }
+}
+
+/// Token lookup: `x0[r] = embed[inputs[r]]`, [rows, dim].
+fn embed_lookup(model: &HostModel, inputs: &[i32]) -> Vec<f32> {
+    let dim = model.spec.dim;
+    let mut x0 = vec![0f32; inputs.len() * dim];
+    for (r, &t) in inputs.iter().enumerate() {
+        let t = t as usize;
+        x0[r * dim..(r + 1) * dim].copy_from_slice(&model.embed[t * dim..(t + 1) * dim]);
+    }
+    x0
+}
+
+fn forward_mlp<W: WeightOperands>(
     model: &HostModel,
     ops: &mut W,
     inputs: &[i32],
@@ -345,13 +423,8 @@ pub(crate) fn forward<W: WeightOperands>(
 ) -> Trace {
     let spec = &model.spec;
     let num = ops.numerics();
-    let (dim, rows) = (spec.dim, inputs.len());
-    let mut x0 = vec![0f32; rows * dim];
-    for (r, &t) in inputs.iter().enumerate() {
-        let t = t as usize;
-        x0[r * dim..(r + 1) * dim].copy_from_slice(&model.embed[t * dim..(t + 1) * dim]);
-    }
-    let mut xs = vec![x0];
+    let rows = inputs.len();
+    let mut xs = vec![embed_lookup(model, inputs)];
     let mut acts = Vec::with_capacity(spec.layers);
     for l in 0..spec.layers {
         let (iu, id) = (2 * l, 2 * l + 1);
@@ -364,17 +437,194 @@ pub(crate) fn forward<W: WeightOperands>(
     }
     let iout = 2 * spec.layers;
     let logits = num.forward(&xs[spec.layers], rows, ops.weight(iout), gemm);
-    Trace { xs, acts, logits }
+    Trace { xs, acts, attn: Vec::new(), logits }
 }
 
-/// Mean softmax cross-entropy over rows + gradient w.r.t. the logits.
-pub(crate) fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f64, Vec<f32>) {
+/// Copy the `[seq, hd]` block at `(row0.., col0..)` out of a
+/// `[rows, width]` row-major matrix — one head's Q/K/V/context slice.
+fn gather_block(
+    src: &[f32],
+    width: usize,
+    row0: usize,
+    seq: usize,
+    col0: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(seq * hd);
+    for t in 0..seq {
+        let base = (row0 + t) * width + col0;
+        out.extend_from_slice(&src[base..base + hd]);
+    }
+    out
+}
+
+/// Inverse of [`gather_block`]: write a `[seq, hd]` block back into a
+/// `[rows, width]` matrix at `(row0.., col0..)`.
+fn scatter_block(
+    dst: &mut [f32],
+    width: usize,
+    row0: usize,
+    seq: usize,
+    col0: usize,
+    hd: usize,
+    block: &[f32],
+) {
+    for t in 0..seq {
+        let base = (row0 + t) * width + col0;
+        dst[base..base + hd].copy_from_slice(&block[t * hd..(t + 1) * hd]);
+    }
+}
+
+/// Numerically-stable causal-mask softmax over a `[seq, seq]` score
+/// matrix: row `r` attends to columns `0..=r`; masked entries are
+/// exactly zero. The row max is subtracted before exponentiation and
+/// the normalizer accumulates in f64 (same discipline as
+/// [`softmax_xent`]).
+pub(crate) fn causal_softmax(scores: &[f32], seq: usize) -> Vec<f32> {
+    assert_eq!(scores.len(), seq * seq);
+    let mut p = vec![0f32; seq * seq];
+    for r in 0..seq {
+        let row = &scores[r * seq..r * seq + r + 1];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+        let mut sum = 0f64;
+        for &v in row {
+            sum += ((v - max) as f64).exp();
+        }
+        let out = &mut p[r * seq..r * seq + r + 1];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o = (((v - max) as f64).exp() / sum) as f32;
+        }
+    }
+    p
+}
+
+/// Exact backward of [`causal_softmax`]: per row,
+/// `ds_j = p_j * (dp_j - Σ_i dp_i * p_i)` with the row dot in f64.
+/// Masked positions stay zero — they never influenced the output.
+pub(crate) fn causal_softmax_backward(p: &[f32], dp: &[f32], seq: usize) -> Vec<f32> {
+    assert_eq!(p.len(), seq * seq);
+    assert_eq!(dp.len(), seq * seq);
+    let mut ds = vec![0f32; seq * seq];
+    for r in 0..seq {
+        let pr = &p[r * seq..r * seq + r + 1];
+        let dpr = &dp[r * seq..r * seq + r + 1];
+        let mut dot = 0f64;
+        for (x, g) in pr.iter().zip(dpr) {
+            dot += *x as f64 * *g as f64;
+        }
+        let out = &mut ds[r * seq..r * seq + r + 1];
+        for ((o, &x), &g) in out.iter_mut().zip(pr).zip(dpr) {
+            *o = (x as f64 * (g as f64 - dot)) as f32;
+        }
+    }
+    ds
+}
+
+/// Multi-head causal self-attention forward of one layer over the
+/// already-projected `qkv` [rows, 3*dim]: per (batch row, head) the
+/// `QK^T` and `PV` matmuls run through the packed microscaled GEMM
+/// (both operands quantized JIT, E4M3), with the `1/sqrt(hd)` score
+/// scale applied after the GEMM. Returns the concatenated context
+/// [rows, dim] and the per-head probability matrices for backward.
+fn attention_forward(
+    spec: &HostSpec,
+    num: &LinearNumerics,
+    qkv: &[f32],
+    rows: usize,
+    gemm: GemmConfig,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let (dim, seq) = (spec.dim, spec.seq);
+    let (heads, hd) = (spec.heads, spec.dim / spec.heads);
+    let nb = rows / seq;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; rows * dim];
+    let mut probs = Vec::with_capacity(nb * heads);
+    for b in 0..nb {
+        let row0 = b * seq;
+        for h in 0..heads {
+            let q = gather_block(qkv, 3 * dim, row0, seq, h * hd, hd);
+            let k = gather_block(qkv, 3 * dim, row0, seq, dim + h * hd, hd);
+            let v = gather_block(qkv, 3 * dim, row0, seq, 2 * dim + h * hd, hd);
+            // scores[seq,seq] = Q @ K^T / sqrt(hd): K's natural [seq,hd]
+            // layout is already the transposed operand the GEMM wants
+            let mut scores = num.attn_matmul(&q, seq, &k, seq, hd, false, false, gemm);
+            for s in scores.iter_mut() {
+                *s *= inv_sqrt;
+            }
+            let p = causal_softmax(&scores, seq);
+            // ctx_h[seq,hd] = P @ V, contraction over seq
+            let vt = transpose(&v, seq, hd);
+            let c = num.attn_matmul(&p, seq, &vt, hd, seq, false, false, gemm);
+            scatter_block(&mut ctx, dim, row0, seq, h * hd, hd, &c);
+            probs.push(p);
+        }
+    }
+    (ctx, probs)
+}
+
+fn forward_transformer<W: WeightOperands>(
+    model: &HostModel,
+    ops: &mut W,
+    inputs: &[i32],
+    gemm: GemmConfig,
+) -> Trace {
+    let spec = &model.spec;
+    let num = ops.numerics();
+    let rows = inputs.len();
+    assert_eq!(rows % spec.seq, 0, "transformer rows {rows} must batch into seq {}", spec.seq);
+    let mut xs = vec![embed_lookup(model, inputs)];
+    let mut acts = Vec::with_capacity(spec.layers);
+    let mut attn = Vec::with_capacity(spec.layers);
+    for l in 0..spec.layers {
+        let (iq, io, iu, id) = (4 * l, 4 * l + 1, 4 * l + 2, 4 * l + 3);
+        let qkv = num.forward(&xs[l], rows, ops.weight(iq), gemm);
+        let (ctx, probs) = attention_forward(spec, &num, &qkv, rows, gemm);
+        let att = num.forward(&ctx, rows, ops.weight(io), gemm);
+        let y: Vec<f32> = xs[l].iter().zip(&att).map(|(x, a)| x + a).collect();
+        let u = num.forward(&y, rows, ops.weight(iu), gemm);
+        let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+        let h = num.forward(&a, rows, ops.weight(id), gemm);
+        let xnext: Vec<f32> = y.iter().zip(&h).map(|(x, m)| x + m).collect();
+        attn.push(AttnTrace { qkv, probs, ctx, y });
+        acts.push(a);
+        xs.push(xnext);
+    }
+    let iout = 4 * spec.layers;
+    let logits = num.forward(&xs[spec.layers], rows, ops.weight(iout), gemm);
+    Trace { xs, acts, attn, logits }
+}
+
+/// Ignore-index of [`softmax_xent`]: rows whose target is `-1` (padding
+/// in the task-finetune batches) contribute neither loss nor gradient.
+pub const IGNORE_INDEX: i32 = -1;
+
+/// Mean softmax cross-entropy over the non-ignored rows + gradient
+/// w.r.t. the logits. Targets of [`IGNORE_INDEX`] are skipped (their
+/// gradient rows stay zero); any other out-of-range target is an error
+/// rather than the unchecked index it used to be. With no ignored rows
+/// the arithmetic is bit-identical to the pre-hardening version (the
+/// divisor is the valid-row count, which is then exactly `rows`).
+pub(crate) fn softmax_xent(
+    logits: &[f32],
+    targets: &[i32],
+    vocab: usize,
+) -> Result<(f64, Vec<f32>)> {
     let rows = targets.len();
     assert_eq!(logits.len(), rows * vocab);
-    let inv = 1.0 / rows as f32;
+    let n_valid = targets.iter().filter(|&&t| t != IGNORE_INDEX).count();
+    if n_valid == 0 {
+        bail!("softmax_xent: every target is the ignore index ({IGNORE_INDEX})");
+    }
+    let inv = 1.0 / n_valid as f32;
     let mut d = vec![0f32; logits.len()];
     let mut loss = 0f64;
     for (r, &t) in targets.iter().enumerate() {
+        if t == IGNORE_INDEX {
+            continue;
+        }
+        if t < 0 || t as usize >= vocab {
+            bail!("softmax_xent: target {t} at row {r} is out of range for vocab {vocab}");
+        }
         let row = &logits[r * vocab..(r + 1) * vocab];
         let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
         let mut sum = 0f64;
@@ -389,7 +639,7 @@ pub(crate) fn softmax_xent(logits: &[f32], targets: &[i32], vocab: usize) -> (f6
         }
         dr[t] -= inv;
     }
-    (loss / rows as f64, d)
+    Ok((loss / n_valid as f64, d))
 }
 
 /// Backward pass of one microbatch, accumulating into `grads` and
@@ -408,11 +658,39 @@ pub(crate) fn backward<W: WeightOperands, S: GradSink>(
     grads: &mut S,
     gemm: GemmConfig,
 ) {
-    fn accum(dst: &mut [f32], src: &[f32]) {
-        for (d, s) in dst.iter_mut().zip(src) {
-            *d += s;
+    match model.spec.model {
+        ModelKind::Mlp => backward_mlp(model, ops, trace, dlogits, inputs, grads, gemm),
+        ModelKind::Transformer => {
+            backward_transformer(model, ops, trace, dlogits, inputs, grads, gemm)
         }
     }
+}
+
+fn accum(dst: &mut [f32], src: &[f32]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Scatter-accumulate `dx` rows into the embedding gradient and emit it.
+fn embed_backward<S: GradSink>(dim: usize, inputs: &[i32], dx: &[f32], grads: &mut S) {
+    let embed_g = grads.slot_mut(GradSlot::Embed);
+    for (r, &t) in inputs.iter().enumerate() {
+        let t = t as usize;
+        accum(&mut embed_g[t * dim..(t + 1) * dim], &dx[r * dim..(r + 1) * dim]);
+    }
+    grads.slot_done(GradSlot::Embed);
+}
+
+fn backward_mlp<W: WeightOperands, S: GradSink>(
+    model: &HostModel,
+    ops: &mut W,
+    trace: &Trace,
+    dlogits: &[f32],
+    inputs: &[i32],
+    grads: &mut S,
+    gemm: GemmConfig,
+) {
     let spec = &model.spec;
     let num = ops.numerics();
     let rows = inputs.len();
@@ -437,13 +715,111 @@ pub(crate) fn backward<W: WeightOperands, S: GradSink>(
         // residual: grads from the identity path and the MLP branch add
         accum(&mut dx, &dxb);
     }
-    let dim = spec.dim;
-    let embed_g = grads.slot_mut(GradSlot::Embed);
-    for (r, &t) in inputs.iter().enumerate() {
-        let t = t as usize;
-        accum(&mut embed_g[t * dim..(t + 1) * dim], &dx[r * dim..(r + 1) * dim]);
+    embed_backward(spec.dim, inputs, &dx, grads);
+}
+
+/// Backward of one layer's attention over the saved [`AttnTrace`]:
+/// given `dctx` [rows, dim], produce `dqkv` [rows, 3*dim]. Per head:
+/// `dP = dCtx @ V^T`, `dS = softmax_bwd(P, dP) / sqrt(hd)`,
+/// `dQ = dS @ K`, `dK = dS^T @ Q`, `dV = P^T @ dCtx` — gradient-side
+/// operands quantize E5M2, saved activations E4M3, every matmul through
+/// the packed GEMM.
+fn attention_backward(
+    spec: &HostSpec,
+    num: &LinearNumerics,
+    at: &AttnTrace,
+    dctx: &[f32],
+    rows: usize,
+    gemm: GemmConfig,
+) -> Vec<f32> {
+    let (dim, seq) = (spec.dim, spec.seq);
+    let (heads, hd) = (spec.heads, spec.dim / spec.heads);
+    let nb = rows / seq;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = vec![0f32; rows * 3 * dim];
+    for b in 0..nb {
+        let row0 = b * seq;
+        for h in 0..heads {
+            let q = gather_block(&at.qkv, 3 * dim, row0, seq, h * hd, hd);
+            let k = gather_block(&at.qkv, 3 * dim, row0, seq, dim + h * hd, hd);
+            let v = gather_block(&at.qkv, 3 * dim, row0, seq, 2 * dim + h * hd, hd);
+            let p = &at.probs[b * heads + h];
+            let dc = gather_block(dctx, dim, row0, seq, h * hd, hd);
+            // dP[seq,seq] = dCtx @ V^T: V's natural [seq,hd] is the
+            // transposed operand; dCtx is the gradient side (E5M2)
+            let dp = num.attn_matmul(&dc, seq, &v, seq, hd, true, false, gemm);
+            let mut ds = causal_softmax_backward(p, &dp, seq);
+            for g in ds.iter_mut() {
+                *g *= inv_sqrt;
+            }
+            // dQ[seq,hd] = dS @ K, contraction over seq
+            let kt = transpose(&k, seq, hd);
+            let dq = num.attn_matmul(&ds, seq, &kt, hd, seq, true, false, gemm);
+            // dK[seq,hd] = dS^T @ Q
+            let dst = transpose(&ds, seq, seq);
+            let qt = transpose(&q, seq, hd);
+            let dk = num.attn_matmul(&dst, seq, &qt, hd, seq, true, false, gemm);
+            // dV[seq,hd] = P^T @ dCtx: P is a saved activation (E4M3),
+            // dCtx the gradient operand (E5M2)
+            let pt = transpose(p, seq, seq);
+            let dct = transpose(&dc, seq, hd);
+            let dv = num.attn_matmul(&pt, seq, &dct, hd, seq, false, true, gemm);
+            scatter_block(&mut dqkv, 3 * dim, row0, seq, h * hd, hd, &dq);
+            scatter_block(&mut dqkv, 3 * dim, row0, seq, dim + h * hd, hd, &dk);
+            scatter_block(&mut dqkv, 3 * dim, row0, seq, 2 * dim + h * hd, hd, &dv);
+        }
     }
-    grads.slot_done(GradSlot::Embed);
+    dqkv
+}
+
+fn backward_transformer<W: WeightOperands, S: GradSink>(
+    model: &HostModel,
+    ops: &mut W,
+    trace: &Trace,
+    dlogits: &[f32],
+    inputs: &[i32],
+    grads: &mut S,
+    gemm: GemmConfig,
+) {
+    let spec = &model.spec;
+    let num = ops.numerics();
+    let rows = inputs.len();
+    let iout = 4 * spec.layers;
+    let (mut dx, dw_out) =
+        num.backward(&trace.xs[spec.layers], ops.weight(iout), dlogits, rows, gemm);
+    accum(grads.slot_mut(GradSlot::Linear(iout)), &dw_out);
+    grads.slot_done(GradSlot::Linear(iout));
+    for l in (0..spec.layers).rev() {
+        let (iq, io, iu, id) = (4 * l, 4 * l + 1, 4 * l + 2, 4 * l + 3);
+        let at = &trace.attn[l];
+        // MLP half: x_next = y + W_down·relu(W_up·y)
+        let (da, dw_down) = num.backward(&trace.acts[l], ops.weight(id), &dx, rows, gemm);
+        accum(grads.slot_mut(GradSlot::Linear(id)), &dw_down);
+        grads.slot_done(GradSlot::Linear(id));
+        let du: Vec<f32> = da
+            .iter()
+            .zip(&trace.acts[l])
+            .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
+            .collect();
+        let (dyb, dw_up) = num.backward(&at.y, ops.weight(iu), &du, rows, gemm);
+        accum(grads.slot_mut(GradSlot::Linear(iu)), &dw_up);
+        grads.slot_done(GradSlot::Linear(iu));
+        // residual: dy = dx (identity) + MLP branch
+        let mut dy = dx;
+        accum(&mut dy, &dyb);
+        // attention half: y = x + W_attn_out·attn(W_qkv·x)
+        let (dctx, dw_o) = num.backward(&at.ctx, ops.weight(io), &dy, rows, gemm);
+        accum(grads.slot_mut(GradSlot::Linear(io)), &dw_o);
+        grads.slot_done(GradSlot::Linear(io));
+        let dqkv = attention_backward(spec, &num, at, &dctx, rows, gemm);
+        let (dxa, dw_qkv) = num.backward(&trace.xs[l], ops.weight(iq), &dqkv, rows, gemm);
+        accum(grads.slot_mut(GradSlot::Linear(iq)), &dw_qkv);
+        grads.slot_done(GradSlot::Linear(iq));
+        // residual into the block input: identity + attention branch
+        dx = dy;
+        accum(&mut dx, &dxa);
+    }
+    embed_backward(spec.dim, inputs, &dx, grads);
 }
 
 /// Split a [batch, seq+1] token matrix into inputs and shifted targets.
@@ -552,7 +928,7 @@ impl HostTrainer {
                 num: self.numerics,
             };
             let trace = forward(&self.model, &mut ops, &inputs, gemm);
-            let (loss, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
+            let (loss, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab)?;
             loss_sum += loss;
             backward(&self.model, &mut ops, &trace, &dlogits, &inputs, &mut grads, gemm);
         }
@@ -599,6 +975,41 @@ impl HostTrainer {
         Ok(())
     }
 
+    /// Inference: logits (`[inputs.len(), vocab]` row-major) of `inputs`
+    /// under the current weights — the eval entry point of the
+    /// task-accuracy harness (`examples/finetune_math`). Weights
+    /// quantize under the training numerics policy with exact (JIT)
+    /// level-1 scales; the step-scoped cache is invalidated afterwards
+    /// so the next train step re-packs under the strategy's scales. For
+    /// the transformer, `inputs.len()` must be a multiple of `seq`.
+    pub fn forward_logits(&mut self, inputs: &[i32]) -> Result<Vec<f32>> {
+        let spec = self.cfg.host;
+        if inputs.is_empty() {
+            bail!("forward_logits: empty input");
+        }
+        if spec.model == ModelKind::Transformer && inputs.len() % spec.seq != 0 {
+            bail!(
+                "forward_logits: transformer input length {} must be a multiple of seq {}",
+                inputs.len(),
+                spec.seq
+            );
+        }
+        if let Some(&t) = inputs.iter().find(|&&t| t < 0 || t as usize >= spec.vocab) {
+            bail!("forward_logits: token {t} out of range for vocab {}", spec.vocab);
+        }
+        let scales =
+            if self.numerics.uses_level1_scale() { self.exact_scales() } else { Vec::new() };
+        let mut ops = EnsuredWeights {
+            model: &self.model,
+            cache: &mut self.cache,
+            scales: &scales,
+            num: self.numerics,
+        };
+        let trace = forward(&self.model, &mut ops, inputs, GemmConfig::default());
+        self.cache.invalidate();
+        Ok(trace.logits)
+    }
+
     /// Scales the strategy produced for the most recent step (the ones
     /// the weight packings were quantized under).
     pub fn last_scales(&self) -> &[f32] {
@@ -640,12 +1051,26 @@ mod tests {
                 micro: 32,
                 microbatches: 1,
                 cache_weights: true,
+                model: ModelKind::Mlp,
+                heads: 2,
             },
             steps,
             lr: LrSchedule { peak: 5e-3, warmup_steps: 3, total_steps: steps, final_ratio: 0.1 },
             log_every: 0,
             ..TrainConfig::default()
         }
+    }
+
+    /// Transformer twin of [`tiny_cfg`]: seq 32 (the PV contraction runs
+    /// over seq, which must stay micro-divisible), dim 64 / heads 2 so
+    /// the head dim is exactly one micro group.
+    fn tiny_transformer_cfg(steps: u64) -> TrainConfig {
+        let mut cfg = tiny_cfg(steps);
+        cfg.host.model = ModelKind::Transformer;
+        cfg.host.dim = 64;
+        cfg.host.heads = 2;
+        cfg.host.seq = 32;
+        cfg
     }
 
     #[test]
@@ -663,15 +1088,15 @@ mod tests {
         let mut rng = Rng::new(31);
         let logits: Vec<f32> = (0..2 * vocab).map(|_| rng.normal_f32()).collect();
         let targets = vec![3i32, 5];
-        let (_, d) = softmax_xent(&logits, &targets, vocab);
+        let (_, d) = softmax_xent(&logits, &targets, vocab).unwrap();
         let eps = 1e-3f32;
         for i in 0..logits.len() {
             let mut lp = logits.clone();
             lp[i] += eps;
-            let (up, _) = softmax_xent(&lp, &targets, vocab);
+            let (up, _) = softmax_xent(&lp, &targets, vocab).unwrap();
             let mut lm = logits.clone();
             lm[i] -= eps;
-            let (um, _) = softmax_xent(&lm, &targets, vocab);
+            let (um, _) = softmax_xent(&lm, &targets, vocab).unwrap();
             let fd = ((up - um) / (2.0 * eps as f64)) as f32;
             assert!((d[i] - fd).abs() < 1e-3, "elem {i}: {} vs {fd}", d[i]);
         }
@@ -723,31 +1148,32 @@ mod tests {
                 self.seen.push(slot);
             }
         }
-        let cfg = tiny_cfg(1);
-        let mut t = HostTrainer::new(cfg).unwrap();
-        let spec = t.cfg.host;
-        let batch = t.data.next_batch(spec.batch, spec.seq + 1);
-        let (inputs, targets) = split_tokens(&batch.tokens, spec.batch, spec.seq);
-        let mut ops = EnsuredWeights {
-            model: &t.model,
-            cache: &mut t.cache,
-            scales: &[],
-            num: t.numerics,
-        };
-        let gemm = GemmConfig::default();
-        let trace = forward(&t.model, &mut ops, &inputs, gemm);
-        let (_, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab);
-        let mut sink = Recording { grads: Grads::zeros(&t.model), seen: Vec::new() };
-        backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut sink, gemm);
-        assert_eq!(sink.seen, emission_order(spec.layers));
-        // ... and the recording sink's accumulation equals the plain one
-        let mut plain = Grads::zeros(&t.model);
-        backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut plain, gemm);
-        for (a, b) in sink.grads.w.iter().flatten().zip(plain.w.iter().flatten()) {
-            assert_eq!(a.to_bits(), b.to_bits());
-        }
-        for (a, b) in sink.grads.embed.iter().zip(&plain.embed) {
-            assert_eq!(a.to_bits(), b.to_bits());
+        for cfg in [tiny_cfg(1), tiny_transformer_cfg(1)] {
+            let mut t = HostTrainer::new(cfg).unwrap();
+            let spec = t.cfg.host;
+            let batch = t.data.next_batch(spec.batch, spec.seq + 1);
+            let (inputs, targets) = split_tokens(&batch.tokens, spec.batch, spec.seq);
+            let mut ops = EnsuredWeights {
+                model: &t.model,
+                cache: &mut t.cache,
+                scales: &[],
+                num: t.numerics,
+            };
+            let gemm = GemmConfig::default();
+            let trace = forward(&t.model, &mut ops, &inputs, gemm);
+            let (_, dlogits) = softmax_xent(&trace.logits, &targets, spec.vocab).unwrap();
+            let mut sink = Recording { grads: Grads::zeros(&t.model), seen: Vec::new() };
+            backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut sink, gemm);
+            assert_eq!(sink.seen, emission_order(spec.model, spec.layers));
+            // ... and the recording sink's accumulation equals the plain one
+            let mut plain = Grads::zeros(&t.model);
+            backward(&t.model, &mut ops, &trace, &dlogits, &inputs, &mut plain, gemm);
+            for (a, b) in sink.grads.w.iter().flatten().zip(plain.w.iter().flatten()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in sink.grads.embed.iter().zip(&plain.embed) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 
@@ -782,5 +1208,204 @@ mod tests {
             assert_eq!(oa.loss.to_bits(), ob.loss.to_bits());
             assert_eq!(oa.grad_norm.to_bits(), ob.grad_norm.to_bits());
         }
+    }
+
+    #[test]
+    fn softmax_xent_ignores_padding_and_rejects_bad_targets() {
+        let vocab = 8;
+        let mut rng = Rng::new(47);
+        let logits: Vec<f32> = (0..3 * vocab).map(|_| rng.normal_f32()).collect();
+        // row 1 is padding: loss/grad must equal the two-row computation
+        // over rows 0 and 2 alone
+        let (loss, d) = softmax_xent(&logits, &[3, IGNORE_INDEX, 5], vocab).unwrap();
+        let mut two = Vec::new();
+        two.extend_from_slice(&logits[..vocab]);
+        two.extend_from_slice(&logits[2 * vocab..]);
+        let (loss2, d2) = softmax_xent(&two, &[3, 5], vocab).unwrap();
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        assert!(d[vocab..2 * vocab].iter().all(|&g| g == 0.0), "padding row must not flow");
+        for (a, b) in d[..vocab].iter().zip(&d2[..vocab]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in d[2 * vocab..].iter().zip(&d2[vocab..]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // out-of-range targets are errors, not the old unchecked index
+        let err = softmax_xent(&logits, &[3, 8, 5], vocab).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let err = softmax_xent(&logits, &[-2, 0, 0], vocab).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // an all-padding batch is an error, not a 0/0
+        assert!(softmax_xent(&logits, &[-1, -1, -1], vocab).is_err());
+    }
+
+    /// Mirrors `softmax_xent_gradient_matches_finite_differences` for
+    /// the attention softmax: FD of `L = Σ G ⊙ causal_softmax(S)`
+    /// against the exact backward, and masked positions must have
+    /// exactly zero gradient *and* zero FD influence.
+    #[test]
+    fn causal_softmax_gradient_matches_finite_differences() {
+        let seq = 8;
+        let mut rng = Rng::new(77);
+        let scores: Vec<f32> = (0..seq * seq).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..seq * seq).map(|_| rng.normal_f32()).collect();
+        let obj = |s: &[f32]| -> f64 {
+            causal_softmax(s, seq).iter().zip(&g).map(|(p, w)| *p as f64 * *w as f64).sum()
+        };
+        let p = causal_softmax(&scores, seq);
+        let ds = causal_softmax_backward(&p, &g, seq);
+        // rows sum to 1 over the causal prefix; masked entries are 0
+        for r in 0..seq {
+            let row = &p[r * seq..(r + 1) * seq];
+            let sum: f64 = row[..=r].iter().map(|&x| x as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "row {r} sums to {sum}");
+            assert!(row[r + 1..].iter().all(|&x| x == 0.0), "row {r} leaks the future");
+        }
+        let eps = 1e-3f32;
+        for i in 0..scores.len() {
+            let (r, c) = (i / seq, i % seq);
+            let mut sp = scores.clone();
+            sp[i] += eps;
+            let mut sm = scores.clone();
+            sm[i] -= eps;
+            let fd = ((obj(&sp) - obj(&sm)) / (2.0 * eps as f64)) as f32;
+            if c > r {
+                assert_eq!(ds[i], 0.0, "masked ds[{r},{c}] must be zero");
+                assert!(fd.abs() < 1e-6, "masked score [{r},{c}] influenced the output");
+            } else {
+                assert!((ds[i] - fd).abs() < 1e-3, "ds[{r},{c}]: {} vs fd {fd}", ds[i]);
+            }
+        }
+    }
+
+    /// FD check of the full per-head backward chain (QK^T scaling,
+    /// causal softmax, PV) in quantization-free f32 — the same formulas
+    /// `attention_backward` routes through the packed GEMM.
+    #[test]
+    fn attention_head_backward_matches_finite_differences() {
+        let (seq, hd) = (6usize, 4usize);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let mut rng = Rng::new(93);
+        let q: Vec<f32> = (0..seq * hd).map(|_| rng.normal_f32() * 0.5).collect();
+        let k: Vec<f32> = (0..seq * hd).map(|_| rng.normal_f32() * 0.5).collect();
+        let v: Vec<f32> = (0..seq * hd).map(|_| rng.normal_f32() * 0.5).collect();
+        let g: Vec<f32> = (0..seq * hd).map(|_| rng.normal_f32()).collect();
+        // plain-f32 matmul: C[m,n] = A[m,k] @ B^T with bt as [n,k]
+        let matmul = |a: &[f32], m: usize, bt: &[f32], n: usize, kk: usize| -> Vec<f32> {
+            let mut c = vec![0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for t in 0..kk {
+                        acc += a[i * kk + t] as f64 * bt[j * kk + t] as f64;
+                    }
+                    c[i * n + j] = acc as f32;
+                }
+            }
+            c
+        };
+        let objective = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let mut s = matmul(q, seq, k, seq, hd);
+            for x in s.iter_mut() {
+                *x *= inv_sqrt;
+            }
+            let p = causal_softmax(&s, seq);
+            let c = matmul(&p, seq, &transpose(v, seq, hd), hd, seq);
+            c.iter().zip(&g).map(|(x, w)| *x as f64 * *w as f64).sum()
+        };
+        // analytic gradients, the exact chain attention_backward uses
+        let mut s = matmul(&q, seq, &k, seq, hd);
+        for x in s.iter_mut() {
+            *x *= inv_sqrt;
+        }
+        let p = causal_softmax(&s, seq);
+        let dp = matmul(&g, seq, &v, seq, hd);
+        let mut ds = causal_softmax_backward(&p, &dp, seq);
+        for x in ds.iter_mut() {
+            *x *= inv_sqrt;
+        }
+        let dq = matmul(&ds, seq, &transpose(&k, seq, hd), hd, seq);
+        let dk = matmul(&transpose(&ds, seq, seq), seq, &transpose(&q, seq, hd), hd, seq);
+        let dv = matmul(&transpose(&p, seq, seq), seq, &transpose(&g, seq, hd), hd, seq);
+        let eps = 1e-2f32;
+        let fd_check = |base: &[f32], grad: &[f32], which: usize, tag: &str| {
+            for i in 0..base.len() {
+                let mut bp = base.to_vec();
+                bp[i] += eps;
+                let mut bm = base.to_vec();
+                bm[i] -= eps;
+                let (lp, lm) = match which {
+                    0 => (objective(&bp, &k, &v), objective(&bm, &k, &v)),
+                    1 => (objective(&q, &bp, &v), objective(&q, &bm, &v)),
+                    _ => (objective(&q, &k, &bp), objective(&q, &k, &bm)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (grad[i] - fd).abs() <= 2e-3 + 0.02 * fd.abs(),
+                    "{tag}[{i}]: {} vs fd {fd}",
+                    grad[i]
+                );
+            }
+        };
+        fd_check(&q, &dq, 0, "dq");
+        fd_check(&k, &dk, 1, "dk");
+        fd_check(&v, &dv, 2, "dv");
+    }
+
+    #[test]
+    fn transformer_trains_a_step_in_every_mode() {
+        use crate::config::QuantMode;
+        for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+            let mut cfg = tiny_transformer_cfg(2);
+            cfg.mode = mode;
+            let mut t = HostTrainer::new(cfg).unwrap();
+            assert_eq!(t.model.slots.len(), 4 * t.cfg.host.layers + 1);
+            assert_eq!(t.model.slots[0].name, "l0.w_qkv");
+            assert_eq!(t.model.slots[1].name, "l0.w_attn_out");
+            for _ in 0..2 {
+                let out = t.step().unwrap();
+                assert!(out.loss.is_finite(), "{} loss {}", mode.name(), out.loss);
+                assert!(out.grad_norm.is_finite() && out.grad_norm > 0.0, "{}", mode.name());
+            }
+            // one pack event per weight per step, transformer slot count
+            assert_eq!(t.cache.stats().packs, 2 * t.cfg.host.n_linears() as u64);
+        }
+    }
+
+    #[test]
+    fn transformer_rejects_bad_shapes_and_mlp_defaults_hold() {
+        // heads that do not divide dim fail at the trainer constructor
+        let mut cfg = tiny_transformer_cfg(1);
+        cfg.host.heads = 3;
+        assert!(HostTrainer::new(cfg).is_err());
+        // transformer seq must be micro-divisible
+        let mut cfg = tiny_transformer_cfg(1);
+        cfg.host.seq = 16;
+        assert!(HostTrainer::new(cfg).is_err());
+        // the default model stays the MLP with its slot layout
+        let t = HostTrainer::new(tiny_cfg(1)).unwrap();
+        assert_eq!(t.cfg.host.model, ModelKind::Mlp);
+        assert_eq!(t.model.slots.len(), 2 * t.cfg.host.layers + 1);
+        assert_eq!(t.model.slots[0].name, "l0.w_up");
+    }
+
+    #[test]
+    fn forward_logits_evaluates_and_guards() {
+        let mut t = HostTrainer::new(tiny_transformer_cfg(1)).unwrap();
+        t.step().unwrap();
+        let seq = t.cfg.host.seq;
+        let inputs: Vec<i32> = (0..seq as i32).map(|i| i % 7).collect();
+        let logits = t.forward_logits(&inputs).unwrap();
+        assert_eq!(logits.len(), seq * t.cfg.host.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // determinism across calls (cache invalidation leaves no residue)
+        let again = t.forward_logits(&inputs).unwrap();
+        for (a, b) in logits.iter().zip(&again) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // guards: ragged length, out-of-vocab token, empty input
+        assert!(t.forward_logits(&inputs[..seq - 1]).is_err());
+        assert!(t.forward_logits(&vec![9999; seq]).is_err());
+        assert!(t.forward_logits(&[]).is_err());
     }
 }

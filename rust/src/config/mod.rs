@@ -73,11 +73,40 @@ impl BackendKind {
     }
 }
 
+/// Architecture of the host-native backend (`--model`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Embedding + residual MLP blocks + head (the PR-2 model).
+    Mlp,
+    /// Embedding + pre-head decoder blocks with multi-head causal
+    /// self-attention, every matmul on the packed FP8 kernels.
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mlp" => ModelKind::Mlp,
+            "transformer" => ModelKind::Transformer,
+            _ => bail!("unknown model {s:?} (mlp|transformer)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Transformer => "transformer",
+        }
+    }
+}
+
 /// Model shape of the host-native backend. The AOT path reads its dims
 /// from the artifact manifest; the host path has no manifest, so the
 /// shape lives here. Every contraction the packed GEMM performs must be
 /// micro-divisible: `dim`, `ffn`, `vocab` (forward/backward K and N)
-/// and `batch * seq` (the dW contraction over rows).
+/// and `batch * seq` (the dW contraction over rows). The transformer
+/// additionally contracts over `dim / heads` (QK^T) and `seq` (PV and
+/// the attention backward), so those must be micro-divisible too.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HostSpec {
     pub vocab: usize,
@@ -93,6 +122,11 @@ pub struct HostSpec {
     /// Step-scoped packed-weight cache (false = re-pack every GEMM,
     /// the differential baseline).
     pub cache_weights: bool,
+    /// Architecture (`--model mlp|transformer`).
+    pub model: ModelKind,
+    /// Attention heads of the transformer (`--heads`); ignored by the
+    /// MLP model.
+    pub heads: usize,
 }
 
 impl Default for HostSpec {
@@ -107,6 +141,8 @@ impl Default for HostSpec {
             micro: 32,
             microbatches: 1,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         }
     }
 }
@@ -123,6 +159,10 @@ impl HostSpec {
         if a.has("no-weight-cache") {
             self.cache_weights = false;
         }
+        if let Some(m) = a.get("model") {
+            self.model = ModelKind::parse(m)?;
+        }
+        self.heads = a.get_usize("heads", self.heads)?;
         Ok(self)
     }
 
@@ -141,18 +181,55 @@ impl HostSpec {
                 bail!("host spec: {name}={v} must be a nonzero multiple of micro={}", self.micro);
             }
         }
+        if self.model == ModelKind::Transformer {
+            if self.heads == 0 || self.dim % self.heads != 0 {
+                bail!(
+                    "host spec: dim={} must divide evenly into heads={}",
+                    self.dim,
+                    self.heads
+                );
+            }
+            let hd = self.dim / self.heads;
+            if hd % self.micro != 0 {
+                bail!(
+                    "host spec: head dim {hd} (dim {} / heads {}) must be a multiple of \
+                     micro={}",
+                    self.dim,
+                    self.heads,
+                    self.micro
+                );
+            }
+            if self.seq % self.micro != 0 {
+                bail!(
+                    "host spec: transformer seq={} must be a multiple of micro={} (the PV \
+                     and attention-backward contractions run over seq)",
+                    self.seq,
+                    self.micro
+                );
+            }
+        }
         Ok(())
     }
 
-    /// Quantized linears in the model: per layer `w_up` and `w_down`,
-    /// plus the output head.
+    /// Quantized linears in the model: per layer `w_up` and `w_down`
+    /// (plus `w_qkv` and `w_attn_out` for the transformer), plus the
+    /// output head.
     pub fn n_linears(&self) -> usize {
-        2 * self.layers + 1
+        match self.model {
+            ModelKind::Mlp => 2 * self.layers + 1,
+            ModelKind::Transformer => 4 * self.layers + 1,
+        }
     }
 
     /// Trainable parameters (embedding + quantized linears).
     pub fn param_count(&self) -> usize {
-        self.vocab * self.dim + self.layers * 2 * (self.dim * self.ffn) + self.dim * self.vocab
+        let per_layer = match self.model {
+            ModelKind::Mlp => 2 * self.dim * self.ffn,
+            ModelKind::Transformer => {
+                self.dim * 3 * self.dim + self.dim * self.dim + 2 * self.dim * self.ffn
+            }
+        };
+        self.vocab * self.dim + self.layers * per_layer + self.dim * self.vocab
     }
 }
 
@@ -725,5 +802,54 @@ mod tests {
             assert_eq!(QuantMode::parse(m).unwrap().name(), m);
         }
         assert!(QuantMode::parse("fp4").is_err());
+    }
+
+    #[test]
+    fn model_kind_roundtrip_and_cli() {
+        for m in ["mlp", "transformer"] {
+            assert_eq!(ModelKind::parse(m).unwrap().name(), m);
+        }
+        assert!(ModelKind::parse("rnn").is_err());
+        // default is the MLP — the pre-transformer harnesses see no change
+        assert_eq!(HostSpec::default().model, ModelKind::Mlp);
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--model", "transformer", "--heads", "4", "--dim",
+             "128"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.host.model, ModelKind::Transformer);
+        assert_eq!(c.host.heads, 4);
+        assert!(c.host.validate().is_ok());
+    }
+
+    #[test]
+    fn transformer_spec_validates_head_and_seq_shapes() {
+        let t = HostSpec { model: ModelKind::Transformer, ..HostSpec::default() };
+        assert!(t.validate().is_ok(), "default shape must be transformer-valid");
+        assert_eq!(t.n_linears(), 4 * t.layers + 1);
+        assert_eq!(
+            t.param_count(),
+            t.vocab * t.dim
+                + t.layers * (3 * t.dim * t.dim + t.dim * t.dim + 2 * t.dim * t.ffn)
+                + t.dim * t.vocab
+        );
+        // the same shape as an MLP has fewer linears and parameters
+        let m = HostSpec { model: ModelKind::Mlp, ..t };
+        assert_eq!(m.n_linears(), 2 * m.layers + 1);
+        assert!(m.param_count() < t.param_count());
+        // dim % heads
+        assert!(HostSpec { heads: 3, ..t }.validate().is_err());
+        assert!(HostSpec { heads: 0, ..t }.validate().is_err());
+        // head dim must stay micro-divisible (64/2 = 32 ok; 64/2=32 but
+        // micro 64 -> head dim 32 fails)
+        assert!(HostSpec { micro: 64, ffn: 192, ..t }.validate().is_err());
+        // transformer seq must be micro-divisible (16 fails at micro 32);
+        // the same shape is fine for the MLP provided batch*seq divides
+        let short = HostSpec { seq: 16, batch: 2, ..t };
+        assert!(short.validate().is_err());
+        assert!(HostSpec { model: ModelKind::Mlp, ..short }.validate().is_ok());
     }
 }

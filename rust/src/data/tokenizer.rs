@@ -7,6 +7,8 @@
 
 use std::collections::HashMap;
 
+use anyhow::{bail, Result};
+
 /// Byte-level tokenizer + greedy BPE.
 #[derive(Debug, Clone)]
 pub struct ByteTokenizer {
@@ -25,7 +27,16 @@ impl ByteTokenizer {
     }
 
     /// Train `n_merges` BPE merges on `corpus` (greedy most-frequent-pair).
-    pub fn train(corpus: &[u8], n_merges: usize) -> Self {
+    /// A corpus too small to contain even one pair cannot support any
+    /// merge — that is a configuration error, not a silent no-op.
+    pub fn train(corpus: &[u8], n_merges: usize) -> Result<Self> {
+        if n_merges > 0 && corpus.len() < 2 {
+            bail!(
+                "corpus of {} byte(s) cannot support BPE merges (need at least one \
+                 adjacent pair); use n_merges = 0 for plain byte-level tokenization",
+                corpus.len()
+            );
+        }
         let mut tok = ByteTokenizer::new();
         let mut seq: Vec<u32> = corpus.iter().map(|&b| b as u32 + BYTE_BASE).collect();
         for _ in 0..n_merges {
@@ -45,7 +56,7 @@ impl ByteTokenizer {
             tok.merges.push(pair);
             seq = merge_pass(&seq, pair, id);
         }
-        tok
+        Ok(tok)
     }
 
     pub fn vocab_size(&self) -> usize {
@@ -65,26 +76,31 @@ impl ByteTokenizer {
         seq
     }
 
-    /// Decode token ids back to bytes.
-    pub fn decode(&self, toks: &[u32]) -> Vec<u8> {
+    /// Decode token ids back to bytes. A token outside the learned
+    /// vocabulary is a caller error (a corrupt sample or a model/
+    /// tokenizer vocab mismatch), surfaced as a `Result` rather than an
+    /// out-of-bounds panic mid-pipeline.
+    pub fn decode(&self, toks: &[u32]) -> Result<Vec<u8>> {
         let mut out = Vec::new();
         for &t in toks {
-            self.decode_one(t, &mut out);
+            self.decode_one(t, &mut out)?;
         }
-        out
+        Ok(out)
     }
 
-    fn decode_one(&self, t: u32, out: &mut Vec<u8>) {
+    fn decode_one(&self, t: u32, out: &mut Vec<u8>) -> Result<()> {
         if t == PAD {
-            return;
+            return Ok(());
         }
         if t < FIRST_MERGE {
             out.push((t - BYTE_BASE) as u8);
-            return;
+            return Ok(());
         }
-        let (l, r) = self.merges[(t - FIRST_MERGE) as usize];
-        self.decode_one(l, out);
-        self.decode_one(r, out);
+        let Some(&(l, r)) = self.merges.get((t - FIRST_MERGE) as usize) else {
+            bail!("token {t} out of vocabulary (size {})", self.vocab_size());
+        };
+        self.decode_one(l, out)?;
+        self.decode_one(r, out)
     }
 }
 
@@ -117,32 +133,47 @@ mod tests {
     fn bytes_roundtrip_without_merges() {
         let t = ByteTokenizer::new();
         let text = b"hello, world! \xf0\x9f\x99\x82";
-        assert_eq!(t.decode(&t.encode(text)), text.to_vec());
+        assert_eq!(t.decode(&t.encode(text)).unwrap(), text.to_vec());
     }
 
     #[test]
     fn bpe_learns_frequent_pairs_and_roundtrips() {
         let corpus = b"the cat sat on the mat the cat sat on the mat".repeat(10);
-        let t = ByteTokenizer::train(&corpus, 20);
+        let t = ByteTokenizer::train(&corpus, 20).unwrap();
         // may stop early once no pair repeats; must learn most merges
         assert!(t.vocab_size() > 257 + 10 && t.vocab_size() <= 257 + 20);
         let enc = t.encode(&corpus);
         assert!(enc.len() < corpus.len(), "compression expected");
-        assert_eq!(t.decode(&enc), corpus);
+        assert_eq!(t.decode(&enc).unwrap(), corpus);
     }
 
     #[test]
     fn merge_determinism() {
         let corpus = b"abababab".to_vec();
-        let a = ByteTokenizer::train(&corpus, 4);
-        let b = ByteTokenizer::train(&corpus, 4);
+        let a = ByteTokenizer::train(&corpus, 4).unwrap();
+        let b = ByteTokenizer::train(&corpus, 4).unwrap();
         assert_eq!(a.encode(b"abab"), b.encode(b"abab"));
     }
 
     #[test]
     fn empty_input() {
-        let t = ByteTokenizer::train(b"", 5);
+        // merge-free tokenization of nothing is fine...
+        let t = ByteTokenizer::train(b"", 0).unwrap();
         assert!(t.encode(b"").is_empty());
-        assert!(t.decode(&[]).is_empty());
+        assert!(t.decode(&[]).unwrap().is_empty());
+        // ...but asking for merges from a degenerate corpus is a config
+        // error, not a silent no-op (tiny and single-byte alike)
+        assert!(ByteTokenizer::train(b"", 5).is_err());
+        assert!(ByteTokenizer::train(b"x", 5).is_err());
+    }
+
+    #[test]
+    fn out_of_vocab_decode_is_an_error() {
+        let t = ByteTokenizer::train(b"abababab", 2).unwrap();
+        let bad = t.vocab_size() as u32; // one past the last merge id
+        let err = t.decode(&[BYTE_BASE, bad]).unwrap_err().to_string();
+        assert!(err.contains("out of vocabulary"), "{err}");
+        // in-vocab ids still decode after the hardening
+        assert_eq!(t.decode(&[FIRST_MERGE]).unwrap(), b"ab".to_vec());
     }
 }

@@ -193,6 +193,48 @@ impl LinearNumerics {
             }
         }
     }
+
+    /// Attention matmul `C[M,N] = A[M,K] @ B^T`, with `bt` given as
+    /// `[N,K]` (the transposed-operand layout every GEMM entry point
+    /// consumes). Unlike [`LinearNumerics::forward`] there is no weight
+    /// operand: Q/K/V/probability tensors and their gradients are
+    /// step-local activations, so every FP8 mode quantizes both sides
+    /// JIT from the data — the strategy-predicted level-1 scale (§3.2)
+    /// only ever governs weights, which makes the Coat and Moss arms
+    /// coincide here. `a_grad` / `b_grad` select the E5M2 gradient
+    /// format per operand (E4M3 otherwise), matching the linear path's
+    /// fwd/bwd format split.
+    pub fn attn_matmul(
+        &self,
+        a: &[f32],
+        m: usize,
+        bt: &[f32],
+        n: usize,
+        k: usize,
+        a_grad: bool,
+        b_grad: bool,
+        cfg: GemmConfig,
+    ) -> Vec<f32> {
+        assert_eq!(a.len(), m * k, "attn A is {} elems, want [{m}, {k}]", a.len());
+        assert_eq!(bt.len(), n * k, "attn B^T is {} elems, want [{n}, {k}]", bt.len());
+        match self.mode {
+            QuantMode::Bf16 => {
+                let ar = bf16_vec(a);
+                let br = bf16_vec(bt);
+                f32_gemm_with(&ar, m, &br, n, k, cfg)
+            }
+            _ => {
+                // Per-tensor degenerates to one group per contraction
+                // row, exactly like the weight path's grouping rule.
+                let micro = if self.mode == QuantMode::PerTensor { k } else { self.micro };
+                let fa = if a_grad { &E5M2 } else { &E4M3 };
+                let fb = if b_grad { &E5M2 } else { &E4M3 };
+                let qa = PackedFp8Tensor::quantize(a, m, k, micro, fa);
+                let qb = PackedFp8Tensor::quantize(bt, n, k, micro, fb);
+                packed_gemm_with(&qa, &qb, cfg)
+            }
+        }
+    }
 }
 
 /// The per-tensor backward: `linear_backward_prepacked_with` with each
@@ -410,5 +452,108 @@ mod tests {
         let w = sample(32 * 32, 41, 0.05);
         let pw = LinearNumerics::new(QuantMode::Bf16, 32).pack_weight(&w, 32, 32, None);
         pw.fwd_fp8();
+    }
+
+    #[test]
+    fn attn_matmul_bf16_matches_the_f32_grid_oracle() {
+        let (m, n, k) = (16, 16, 32);
+        let a = Rng::new(51).activation_like(m, k, 1.0);
+        let bt = Rng::new(52).activation_like(n, k, 1.0);
+        let num = LinearNumerics::new(QuantMode::Bf16, 32);
+        let c = num.attn_matmul(&a, m, &bt, n, k, false, false, GemmConfig::default());
+        let (ar, br) = (bf16_vec(&a), bf16_vec(&bt));
+        for i in 0..m {
+            for j in 0..n {
+                let want = lane4_dot(&ar[i * k..(i + 1) * k], &br[j * k..(j + 1) * k]);
+                assert_eq!(c[i * n + j].to_bits(), want.to_bits(), "c[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn attn_matmul_fp8_is_the_packed_gemm_over_jit_quantizations() {
+        // Moss bitwise-equals packed_gemm_with over micro-32 JIT
+        // quantizations of both operands; per-tensor over the degenerate
+        // micro = k grouping; coat coincides with moss (no weight, so
+        // the strategy scale never enters).
+        let (m, n, k) = (32, 32, 64);
+        let a = Rng::new(61).activation_like(m, k, 1.5);
+        let bt = Rng::new(62).activation_like(n, k, 0.8);
+        let cfg = GemmConfig::default();
+        let moss = LinearNumerics::new(QuantMode::Moss, 32)
+            .attn_matmul(&a, m, &bt, n, k, false, false, cfg);
+        let qa = PackedFp8Tensor::quantize(&a, m, k, 32, &E4M3);
+        let qb = PackedFp8Tensor::quantize(&bt, n, k, 32, &E4M3);
+        let want = packed_gemm_with(&qa, &qb, cfg);
+        for (x, y) in moss.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let coat = LinearNumerics::new(QuantMode::Coat, 32)
+            .attn_matmul(&a, m, &bt, n, k, false, false, cfg);
+        for (x, y) in coat.iter().zip(&moss) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let pt = LinearNumerics::new(QuantMode::PerTensor, 32)
+            .attn_matmul(&a, m, &bt, n, k, false, false, cfg);
+        let qa = PackedFp8Tensor::quantize(&a, m, k, k, &E4M3);
+        let qb = PackedFp8Tensor::quantize(&bt, n, k, k, &E4M3);
+        let want = packed_gemm_with(&qa, &qb, cfg);
+        for (x, y) in pt.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // coarser grouping is a real numerical difference
+        assert!(pt.iter().zip(&moss).any(|(x, y)| x.to_bits() != y.to_bits()));
+    }
+
+    #[test]
+    fn attn_matmul_grad_flags_select_e5m2() {
+        // A gradient-side operand quantizes E5M2: large dynamic range,
+        // fewer mantissa bits — the output must differ from the
+        // all-E4M3 call and match the explicit E5M2 quantization.
+        let (m, n, k) = (32, 32, 32);
+        let a = Rng::new(71).activation_like(m, k, 2.0);
+        let bt = Rng::new(72).activation_like(n, k, 2.0);
+        let cfg = GemmConfig::default();
+        let num = LinearNumerics::new(QuantMode::Moss, 32);
+        let act = num.attn_matmul(&a, m, &bt, n, k, false, false, cfg);
+        let grad = num.attn_matmul(&a, m, &bt, n, k, true, false, cfg);
+        let qa = PackedFp8Tensor::quantize(&a, m, k, 32, &E5M2);
+        let qb = PackedFp8Tensor::quantize(&bt, n, k, 32, &E4M3);
+        let want = packed_gemm_with(&qa, &qb, cfg);
+        for (x, y) in grad.iter().zip(&want) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(grad.iter().zip(&act).any(|(x, y)| x.to_bits() != y.to_bits()));
+    }
+
+    #[test]
+    fn attn_matmul_tracks_the_exact_product() {
+        // All four modes stay within quantization tolerance of the f64
+        // ground truth on activation-scaled data.
+        let (m, n, k) = (32, 32, 64);
+        let a = Rng::new(81).activation_like(m, k, 1.0);
+        let bt = Rng::new(82).activation_like(n, k, 1.0);
+        let mut exact = vec![0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..k {
+                    acc += a[i * k + t] as f64 * bt[j * k + t] as f64;
+                }
+                exact[i * n + j] = acc;
+            }
+        }
+        let scale = exact.iter().fold(0f64, |s, v| s.max(v.abs())).max(1e-9);
+        for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+            let num = LinearNumerics::new(mode, 32);
+            let c = num.attn_matmul(&a, m, &bt, n, k, false, false, GemmConfig::default());
+            for (i, (got, want)) in c.iter().zip(&exact).enumerate() {
+                assert!(
+                    (*got as f64 - want).abs() <= 0.08 * scale,
+                    "{}: elem {i}: {got} vs {want}",
+                    mode.name()
+                );
+            }
+        }
     }
 }

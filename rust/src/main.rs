@@ -33,7 +33,8 @@ fn main() {
 const COMMANDS: &[(&str, &str)] = &[
     (
         "train",
-        "pretrain on the synthetic corpus (--backend host|aot, --workers N, \
+        "pretrain on the synthetic corpus (--backend host|aot, \
+         --model mlp|transformer, --heads N, --workers N, \
          --wire f32|fp8|packed, --overlap, --zero, --bucket-mb MB, \
          --mode bf16|pertensor|coat|moss, --steps, --scaling)",
     ),
@@ -167,8 +168,10 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
     let steps = cfg.steps;
     let mut trainer = HostTrainer::new(cfg)?;
     eprintln!(
-        "host backend: mode {} ({}), vocab {} dim {} ffn {} layers {} ({} params), \
-         {} steps x {} microbatches",
+        "host backend: model {} ({} heads), mode {} ({}), vocab {} dim {} ffn {} layers {} \
+         ({} params), {} steps x {} microbatches",
+        spec.model.name(),
+        spec.heads,
         trainer.cfg.mode.name(),
         if trainer.numerics.is_fp8() { "fp8" } else { "bf16 reference" },
         spec.vocab,
@@ -223,8 +226,9 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
         (true, true) => "overlapped buckets + zero-1",
     };
     eprintln!(
-        "dist host backend: mode {}, {} workers ({} shard, wire {}, {schedule}), vocab {} dim {} \
-         ffn {} layers {} ({} params), {} steps x {} microbatches",
+        "dist host backend: model {}, mode {}, {} workers ({} shard, wire {}, {schedule}), \
+         vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} microbatches",
+        spec.model.name(),
         cfg.mode.name(),
         cfg.dist.workers,
         cfg.dist.shard.name(),

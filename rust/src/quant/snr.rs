@@ -148,6 +148,53 @@ mod tests {
         assert!(snr_db(&xs, &xs) > 200.0);
     }
 
+    /// The probe §3.1 motivates: SNR measured on *real* transformer
+    /// attention activations — the fused QKV projection output and the
+    /// attention context of a live host-backend forward pass — not just
+    /// synthetic channel-structured tensors. Group sizes divide the
+    /// actual widths (qkv is [rows, 3*dim]); the paper's granularity
+    /// ordering must survive contact with the real distribution.
+    #[test]
+    fn ordering_holds_on_real_attention_activations() {
+        use crate::backend::host::{forward, HostModel, SharedWeights};
+        use crate::config::{HostSpec, ModelKind, QuantMode};
+        use crate::formats::fp8::E4M3;
+        use crate::kernels::{GemmConfig, LinearNumerics, PackedWeightCache};
+
+        let spec = HostSpec { model: ModelKind::Transformer, ..HostSpec::default() };
+        spec.validate().unwrap();
+        let model = HostModel::init(spec, 5);
+        let mut cache = PackedWeightCache::new(spec.n_linears());
+        cache.enabled = true;
+        let num = LinearNumerics::new(QuantMode::Bf16, spec.micro);
+        for i in 0..model.slots.len() {
+            model.ensure_packed(&mut cache, &num, i, &[]);
+        }
+        let mut ops = SharedWeights { cache: &cache, num };
+        let inputs: Vec<i32> =
+            (0..(spec.batch * spec.seq) as i32).map(|i| (i * 7 + 3) % spec.vocab as i32).collect();
+        let trace = forward(&model, &mut ops, &inputs, GemmConfig::default());
+        assert_eq!(trace.attn.len(), spec.layers, "one attention trace per layer");
+
+        for (which, x, cols) in [
+            ("qkv", &trace.attn[0].qkv, 3 * spec.dim),
+            ("ctx", &trace.attn[1].ctx, spec.dim),
+        ] {
+            let rows = x.len() / cols;
+            assert_eq!(rows, spec.batch * spec.seq);
+            assert!(x.iter().any(|&v| v != 0.0), "{which} is all zero — dead probe");
+            let group = 64.min(cols);
+            let s = scheme_snrs(x, rows, cols, group, spec.micro, Metric::Model, &E4M3);
+            assert!(
+                s.per_tensor <= s.moss + 1e-9,
+                "{which}: two-level micro-{} should beat per-tensor: {s:?}",
+                spec.micro
+            );
+            assert!(s.per_tensor <= s.per_group + 1e-9, "{which}: {s:?}");
+            assert!(s.moss > 10.0, "{which}: moss SNR collapsed: {s:?}");
+        }
+    }
+
     #[test]
     fn model_snr_matches_hand_computation() {
         // x = [1,1], eff = [s,s]: SNR = 10 log10(12/s^2)

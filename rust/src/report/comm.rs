@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 use crate::backend::DistTrainer;
 use crate::cli::Args;
 use crate::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, ModelKind, ShardMode, TrainConfig, WireKind,
 };
 use crate::distsim::memory::{activation_memory_gb, MemoryScheme, ModelShape};
 use crate::distsim::netmodel::{grad_bytes_per_step, NetModel};
@@ -70,6 +70,8 @@ fn measured_cfg(workers: usize, steps: u64, dist: DistSpec) -> TrainConfig {
             micro: 32,
             microbatches: workers,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         dist,
         steps,

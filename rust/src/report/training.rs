@@ -147,8 +147,10 @@ pub fn run_ablate_cli(args: &Args) -> Result<()> {
     let cfg = host_base_cfg(args, 80)?;
     let spec = cfg.host;
     eprintln!(
-        "mode ablation: vocab {} dim {} ffn {} layers {} seq {} batch {} x{} microbatches, \
-         {} steps, seed {}",
+        "mode ablation: model {} ({} heads), vocab {} dim {} ffn {} layers {} seq {} batch {} \
+         x{} microbatches, {} steps, seed {}",
+        spec.model.name(),
+        spec.heads,
         spec.vocab,
         spec.dim,
         spec.ffn,

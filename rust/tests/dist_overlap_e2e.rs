@@ -20,7 +20,8 @@
 
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, QuantMode, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, ModelKind, QuantMode, ShardMode, TrainConfig,
+    WireKind,
 };
 
 fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
@@ -36,6 +37,8 @@ fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
             micro: 32,
             microbatches,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         steps,
         lr: LrSchedule { peak: 5e-3, warmup_steps: 5, total_steps: steps, final_ratio: 0.1 },
@@ -161,6 +164,59 @@ fn one_worker_pipelined_matches_host_trainer_in_every_mode() {
             for (a, b) in wh.iter().zip(wd) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}", mode.name());
             }
+        }
+        // a world-1 ring ships nothing, gradient or parameter
+        assert_eq!(dist.comm.bytes_on_wire, 0);
+        assert_eq!(dist.comm.param_bytes, 0);
+    }
+}
+
+/// Acceptance (PR 6): `--model transformer` at `workers = 1` with the
+/// full pipeline on stays bit-identical to the plain `HostTrainer` in
+/// every numerics mode — the 4-slots-per-layer emission order, the
+/// per-head packed attention GEMMs, and the bucket layout all absorb
+/// the new architecture without forking the arithmetic.
+#[test]
+fn one_worker_transformer_matches_host_trainer_in_every_mode() {
+    let steps = 3u64;
+    for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+        let transformerize = |cfg: &mut TrainConfig| {
+            cfg.host.model = ModelKind::Transformer;
+            cfg.host.dim = 64; // head width 32 = micro, the default shape
+            cfg.host.ffn = 128;
+            cfg.host.seq = 32;
+            cfg.host.heads = 2;
+            cfg.mode = mode;
+        };
+        let mut hcfg = base_cfg(steps, 2);
+        transformerize(&mut hcfg);
+        let mut dcfg = dist_cfg(steps, 2, 1, WireKind::F32, true, true);
+        transformerize(&mut dcfg);
+        let mut host = HostTrainer::new(hcfg).unwrap();
+        let mut dist = DistTrainer::new(dcfg).unwrap();
+        for step in 1..=steps {
+            let oh = host.step().unwrap();
+            let od = dist.step().unwrap();
+            assert_eq!(
+                oh.loss.to_bits(),
+                od.loss.to_bits(),
+                "transformer {} loss diverged at step {step}",
+                mode.name()
+            );
+            assert_eq!(
+                oh.grad_norm.to_bits(),
+                od.grad_norm.to_bits(),
+                "transformer {} grad norm diverged at step {step}",
+                mode.name()
+            );
+        }
+        for (wh, wd) in host.model.weights.iter().zip(&dist.model.weights) {
+            for (a, b) in wh.iter().zip(wd) {
+                assert_eq!(a.to_bits(), b.to_bits(), "transformer {}", mode.name());
+            }
+        }
+        for (a, b) in host.model.embed.iter().zip(&dist.model.embed) {
+            assert_eq!(a.to_bits(), b.to_bits(), "transformer {}", mode.name());
         }
         // a world-1 ring ships nothing, gradient or parameter
         assert_eq!(dist.comm.bytes_on_wire, 0);

@@ -16,7 +16,8 @@
 
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::config::{
-    BackendKind, DistSpec, HostSpec, LrSchedule, QuantMode, ShardMode, TrainConfig, WireKind,
+    BackendKind, DistSpec, HostSpec, LrSchedule, ModelKind, QuantMode, ShardMode, TrainConfig,
+    WireKind,
 };
 
 fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
@@ -32,6 +33,8 @@ fn base_cfg(steps: u64, microbatches: usize) -> TrainConfig {
             micro: 32,
             microbatches,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         steps,
         lr: LrSchedule { peak: 5e-3, warmup_steps: 5, total_steps: steps, final_ratio: 0.1 },

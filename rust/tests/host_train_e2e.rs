@@ -7,7 +7,7 @@
 //! must work on an artifact-less checkout — that is its whole point.
 
 use moss::backend::HostTrainer;
-use moss::config::{BackendKind, HostSpec, LrSchedule, ScalingKind, TrainConfig};
+use moss::config::{BackendKind, HostSpec, LrSchedule, ModelKind, ScalingKind, TrainConfig};
 use moss::optim::update_bound;
 
 /// A tiny-but-real host config: every contraction micro-divisible,
@@ -26,6 +26,8 @@ fn host_cfg(steps: u64) -> TrainConfig {
             micro: 32,
             microbatches: 1,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         steps,
         lr: LrSchedule { peak: 5e-3, warmup_steps: 5, total_steps: steps, final_ratio: 0.1 },

@@ -12,7 +12,7 @@
 //! the paper's central accuracy comparison.
 
 use moss::backend::HostTrainer;
-use moss::config::{BackendKind, HostSpec, LrSchedule, QuantMode, TrainConfig};
+use moss::config::{BackendKind, HostSpec, LrSchedule, ModelKind, QuantMode, TrainConfig};
 
 const MODES: [QuantMode; 4] =
     [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss];
@@ -32,6 +32,8 @@ fn mode_cfg(mode: QuantMode, steps: u64) -> TrainConfig {
             micro: 32,
             microbatches: 1,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         mode,
         steps,
@@ -138,6 +140,71 @@ fn all_four_modes_converge_and_order_like_the_paper() {
          the two-level recipe should not be the looser one"
     );
     assert!(track_moss < 0.15, "moss drifted {track_moss:.4} mean |gap| from bf16");
+}
+
+/// The transformer analog of the MLP config above: same shape family,
+/// but seq 32 (micro-divisible, the transformer's parse-time
+/// requirement) and 2 heads of width 32.
+fn transformer_cfg(mode: QuantMode, steps: u64) -> TrainConfig {
+    let mut cfg = mode_cfg(mode, steps);
+    cfg.host.model = ModelKind::Transformer;
+    cfg.host.seq = 32;
+    cfg.host.heads = 2;
+    cfg
+}
+
+fn run_transformer_mode(mode: QuantMode, steps: u64) -> Vec<f64> {
+    let mut t = HostTrainer::new(transformer_cfg(mode, steps)).unwrap();
+    t.run(steps).unwrap();
+    t.history.losses.iter().map(|&(_, l)| l).collect()
+}
+
+/// The satellite the tentpole exists for: the four-mode comparison
+/// measured on the *transformer* — attention inputs through the
+/// two-level microscaled kernels, the path §3.1 motivates. Same
+/// structure as the MLP harness: every mode learns, no FP8 mode blows
+/// up away from bf16.
+#[test]
+fn transformer_converges_in_all_four_modes() {
+    let steps = 60u64;
+    let curves: Vec<(QuantMode, Vec<f64>)> =
+        MODES.iter().map(|&m| (m, run_transformer_mode(m, steps))).collect();
+    println!("{}", format_trajectories(&curves));
+
+    for (mode, losses) in &curves {
+        assert_eq!(losses.len(), steps as usize, "{}", mode.name());
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "transformer {} produced a non-finite loss",
+            mode.name()
+        );
+        let (first, tail) = (losses[0], tail_mean(losses, 5));
+        assert!(
+            tail < first,
+            "transformer {} did not learn: first {first:.4} -> tail {tail:.4}",
+            mode.name()
+        );
+        assert!((first - 64f64.ln()).abs() < 0.5, "{} first loss {first:.4}", mode.name());
+    }
+
+    let bf16_final = tail_mean(&curves[0].1, 5);
+    for (mode, losses) in &curves[1..] {
+        let fp8_final = tail_mean(losses, 5);
+        assert!(
+            (fp8_final - bf16_final).abs() < 0.30,
+            "transformer {} final {fp8_final:.4} diverged from bf16 {bf16_final:.4}",
+            mode.name()
+        );
+    }
+
+    // the architectures must actually differ: a transformer bf16 run is
+    // not the MLP bf16 run relabeled
+    let mlp = run_mode(QuantMode::Bf16, 6);
+    let tf = run_transformer_mode(QuantMode::Bf16, 6);
+    assert!(
+        mlp.iter().zip(&tf).any(|(x, y)| x.to_bits() != y.to_bits()),
+        "mlp and transformer trajectories are bit-identical — the model flag is ignored"
+    );
 }
 
 #[test]

@@ -29,7 +29,7 @@ use std::path::Path;
 use anyhow::Result;
 use moss::backend::host::GRAD_CLIP;
 use moss::backend::{HostModel, HostTrainer};
-use moss::config::{BackendKind, HostSpec, LrSchedule, QuantMode, TrainConfig};
+use moss::config::{BackendKind, HostSpec, LrSchedule, ModelKind, QuantMode, TrainConfig};
 use moss::data::{BatchSource, CorpusSpec, SyntheticCorpus};
 use moss::kernels::{
     linear_backward_prepacked_with, linear_forward_prepacked_with, pack_weight_bwd,
@@ -53,6 +53,8 @@ fn moss_cfg(steps: u64) -> TrainConfig {
             micro: 32,
             microbatches: 1,
             cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
         },
         mode: QuantMode::Moss,
         steps,
