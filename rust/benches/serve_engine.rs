@@ -1,0 +1,95 @@
+//! Bench: FP8 serving engine throughput/latency, emitted as
+//! machine-readable `BENCH_serve.json` (the serving counterpart of
+//! `BENCH_host.json`). One open-loop continuous-batching run over the
+//! synthetic Poisson workload records tokens/sec, p50/p99 latency and
+//! batch occupancy; the closed-loop pair (`measure_decode_tps`) records
+//! packed-FP8 decode vs the dequantize-to-f32 baseline. The in-bench
+//! gate is a hard assert: packed decode must sustain at least the
+//! dequantize baseline's tokens/sec (the pack-once payoff — the dequant
+//! path re-materializes the full f32 weight for every [1, K] row GEMM,
+//! while the packed path streams ~1 B/elem payloads).
+
+use moss::backend::serve::{
+    measure_decode_tps, synthetic_requests, throughput_gate, write_bench_json, Engine,
+};
+use moss::backend::{DecodePath, Model};
+use moss::config::{HostSpec, ModelKind, QuantMode, ServeSpec};
+
+fn main() {
+    // The transformer at the default host shape — the model `repro
+    // serve --synthetic` builds, so bench and CLI measure one config.
+    let spec = HostSpec { model: ModelKind::Transformer, ..HostSpec::default() };
+    let serve = ServeSpec { requests: 48, rate: 256.0, ..ServeSpec::default() };
+    let model = Model::init(spec, QuantMode::Moss, 0);
+    let engine = Engine::new(model, serve).expect("serve engine");
+    println!(
+        "serve bench: {} ({} layers, dim {}, {} heads), mode moss, packed weights {:.1} KB",
+        spec.model.name(),
+        spec.layers,
+        spec.dim,
+        spec.heads,
+        engine.packed_bytes() as f64 / 1e3
+    );
+
+    // --- open-loop continuous batching over the Poisson trace --------
+    let reqs = synthetic_requests(engine.spec(), spec.vocab);
+    let report = engine.run(&reqs, DecodePath::Packed).expect("serve run");
+    assert!(
+        report.rejected.is_empty() && report.completions.len() == reqs.len(),
+        "default workload must drain: {} completed, {} rejected of {}",
+        report.completions.len(),
+        report.rejected.len(),
+        reqs.len()
+    );
+    println!(
+        "open loop: {} requests in {:.2}s -> {:.1} tok/s, p50 {:.1} ms, p99 {:.1} ms, \
+         occupancy {:.0}% ({:.1} mean active / {})",
+        report.completions.len(),
+        report.wall_secs,
+        report.tokens_per_sec,
+        report.p50_ms,
+        report.p99_ms,
+        report.occupancy * 100.0,
+        report.mean_active,
+        engine.spec().max_batch
+    );
+
+    // --- closed-loop decode: packed vs dequantize-then-f32 -----------
+    // Best-of-3 on each path to shake scheduler noise out of the gate.
+    let (batch, plen, steps) = (engine.spec().max_batch, 8, 32);
+    let best = |path: DecodePath| -> f64 {
+        (0..3)
+            .map(|_| measure_decode_tps(&engine, path, batch, plen, steps).expect("decode tps"))
+            .fold(0.0f64, f64::max)
+    };
+    let tps_packed = best(DecodePath::Packed);
+    let tps_dequant = best(DecodePath::DequantF32);
+    println!(
+        "closed loop (batch {batch}): packed {tps_packed:.1} tok/s vs f32-dequantize \
+         {tps_dequant:.1} tok/s ({:.2}x)",
+        tps_packed / tps_dequant.max(1e-9)
+    );
+
+    // --- per-mode decode throughput (printed record) ------------------
+    for mode in [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss] {
+        let e = Engine::new(Model::init(spec, mode, 0), serve).expect("mode engine");
+        let tps = measure_decode_tps(&e, DecodePath::Packed, batch, plen, steps)
+            .expect("mode decode tps");
+        println!("decode mode {:<9} {tps:.1} tok/s (batch {batch})", mode.name());
+    }
+
+    // Bench gate: packed-FP8 decode >= f32-dequantize decode. bf16 is
+    // exempt inside throughput_gate (no packed payloads to win with).
+    throughput_gate(&engine, tps_packed, tps_dequant).expect("serve throughput gate");
+    println!("serve gate OK: packed {tps_packed:.1} >= dequant {tps_dequant:.1} tok/s");
+
+    write_bench_json(
+        std::path::Path::new("BENCH_serve.json"),
+        &engine,
+        &report,
+        tps_packed,
+        tps_dequant,
+    )
+    .expect("writing BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

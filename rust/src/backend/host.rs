@@ -107,6 +107,7 @@ pub struct LinearSlot {
 }
 
 /// Host-resident model parameters.
+#[derive(Clone)]
 pub struct HostModel {
     pub spec: HostSpec,
     /// Token embedding, row-major [vocab, dim]. Not quantized (lookup,
@@ -121,28 +122,27 @@ pub struct HostModel {
     pub slots: Vec<LinearSlot>,
 }
 
+/// The canonical linear-slot table of `spec` — the single definition of
+/// slot order and shapes shared by seeded init and checkpoint load.
+pub fn linear_slots(spec: &HostSpec) -> Vec<LinearSlot> {
+    let mut slots = Vec::with_capacity(spec.n_linears());
+    for l in 0..spec.layers {
+        if spec.model == ModelKind::Transformer {
+            slots.push(LinearSlot { name: format!("l{l}.w_qkv"), k: spec.dim, n: 3 * spec.dim });
+            slots.push(LinearSlot { name: format!("l{l}.w_attn_out"), k: spec.dim, n: spec.dim });
+        }
+        slots.push(LinearSlot { name: format!("l{l}.w_up"), k: spec.dim, n: spec.ffn });
+        slots.push(LinearSlot { name: format!("l{l}.w_down"), k: spec.ffn, n: spec.dim });
+    }
+    slots.push(LinearSlot { name: "w_out".into(), k: spec.dim, n: spec.vocab });
+    slots
+}
+
 impl HostModel {
     /// Seeded init: embeddings at 0.1, linears at `1/sqrt(k)` fan-in.
     pub fn init(spec: HostSpec, seed: u64) -> HostModel {
         let root = Rng::new(seed ^ 0x4057_AB1E);
-        let mut slots = Vec::with_capacity(spec.n_linears());
-        for l in 0..spec.layers {
-            if spec.model == ModelKind::Transformer {
-                slots.push(LinearSlot {
-                    name: format!("l{l}.w_qkv"),
-                    k: spec.dim,
-                    n: 3 * spec.dim,
-                });
-                slots.push(LinearSlot {
-                    name: format!("l{l}.w_attn_out"),
-                    k: spec.dim,
-                    n: spec.dim,
-                });
-            }
-            slots.push(LinearSlot { name: format!("l{l}.w_up"), k: spec.dim, n: spec.ffn });
-            slots.push(LinearSlot { name: format!("l{l}.w_down"), k: spec.ffn, n: spec.dim });
-        }
-        slots.push(LinearSlot { name: "w_out".into(), k: spec.dim, n: spec.vocab });
+        let slots = linear_slots(&spec);
         let mut embed = Vec::with_capacity(spec.vocab * spec.dim);
         let mut erng = root.fork(0xE0BED);
         for _ in 0..spec.vocab * spec.dim {
@@ -158,6 +158,31 @@ impl HostModel {
             })
             .collect();
         HostModel { spec, embed, weights, slots }
+    }
+
+    /// Reassemble a model from externally-stored parameters (checkpoint
+    /// load). Shapes are validated against `spec`'s canonical slot
+    /// table, so a blob that disagrees with its own header cannot
+    /// produce a model that panics later.
+    pub fn from_parts(spec: HostSpec, embed: Vec<f32>, weights: Vec<Vec<f32>>) -> Result<HostModel> {
+        let slots = linear_slots(&spec);
+        if embed.len() != spec.vocab * spec.dim {
+            bail!(
+                "embedding has {} elems, spec wants [{}, {}]",
+                embed.len(),
+                spec.vocab,
+                spec.dim
+            );
+        }
+        if weights.len() != slots.len() {
+            bail!("{} weight tensors, spec wants {}", weights.len(), slots.len());
+        }
+        for (w, s) in weights.iter().zip(&slots) {
+            if w.len() != s.k * s.n {
+                bail!("{} has {} elems, spec wants [{}, {}]", s.name, w.len(), s.k, s.n);
+            }
+        }
+        Ok(HostModel { spec, embed, weights, slots })
     }
 
     /// `max|W|` per quantized linear — the host absmax source the
@@ -405,7 +430,7 @@ pub(crate) fn forward<W: WeightOperands>(
 }
 
 /// Token lookup: `x0[r] = embed[inputs[r]]`, [rows, dim].
-fn embed_lookup(model: &HostModel, inputs: &[i32]) -> Vec<f32> {
+pub(crate) fn embed_lookup(model: &HostModel, inputs: &[i32]) -> Vec<f32> {
     let dim = model.spec.dim;
     let mut x0 = vec![0f32; inputs.len() * dim];
     for (r, &t) in inputs.iter().enumerate() {
@@ -485,17 +510,26 @@ pub(crate) fn causal_softmax(scores: &[f32], seq: usize) -> Vec<f32> {
     let mut p = vec![0f32; seq * seq];
     for r in 0..seq {
         let row = &scores[r * seq..r * seq + r + 1];
-        let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
-        let mut sum = 0f64;
-        for &v in row {
-            sum += ((v - max) as f64).exp();
-        }
-        let out = &mut p[r * seq..r * seq + r + 1];
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o = (((v - max) as f64).exp() / sum) as f32;
-        }
+        let (lo, hi) = (r * seq, r * seq + r + 1);
+        softmax_row_into(row, &mut p[lo..hi]);
     }
     p
+}
+
+/// One row of the stable softmax: f32 row max subtracted, exponentials
+/// and the normalizer accumulated in f64. The single definition shared
+/// by training-time [`causal_softmax`] and the serve-path incremental
+/// decode (`backend::model`), so the two attention paths cannot drift
+/// numerically — the KV-cache bitwise-parity tests depend on this.
+pub(crate) fn softmax_row_into(row: &[f32], out: &mut [f32]) {
+    let max = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+    let mut sum = 0f64;
+    for &v in row {
+        sum += ((v - max) as f64).exp();
+    }
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o = (((v - max) as f64).exp() / sum) as f32;
+    }
 }
 
 /// Exact backward of [`causal_softmax`]: per row,
@@ -983,31 +1017,7 @@ impl HostTrainer {
     /// so the next train step re-packs under the strategy's scales. For
     /// the transformer, `inputs.len()` must be a multiple of `seq`.
     pub fn forward_logits(&mut self, inputs: &[i32]) -> Result<Vec<f32>> {
-        let spec = self.cfg.host;
-        if inputs.is_empty() {
-            bail!("forward_logits: empty input");
-        }
-        if spec.model == ModelKind::Transformer && inputs.len() % spec.seq != 0 {
-            bail!(
-                "forward_logits: transformer input length {} must be a multiple of seq {}",
-                inputs.len(),
-                spec.seq
-            );
-        }
-        if let Some(&t) = inputs.iter().find(|&&t| t < 0 || t as usize >= spec.vocab) {
-            bail!("forward_logits: token {t} out of range for vocab {}", spec.vocab);
-        }
-        let scales =
-            if self.numerics.uses_level1_scale() { self.exact_scales() } else { Vec::new() };
-        let mut ops = EnsuredWeights {
-            model: &self.model,
-            cache: &mut self.cache,
-            scales: &scales,
-            num: self.numerics,
-        };
-        let trace = forward(&self.model, &mut ops, inputs, GemmConfig::default());
-        self.cache.invalidate();
-        Ok(trace.logits)
+        super::model::forward_logits_with(&self.model, self.numerics, &mut self.cache, inputs)
     }
 
     /// Scales the strategy produced for the most recent step (the ones

@@ -12,9 +12,18 @@
 //! over `distsim::ring_allreduce`'s byte-level wire (packed u8 FP8
 //! payloads by default) — the simulated-cluster substrate for the
 //! paper's §4.4 communication claims.
+//!
+//! [`model`] is the immutable eval/serve surface the training state
+//! wraps (the train/infer API split), and [`serve`] is the FP8
+//! inference engine on top of it: pack-once weights, per-sequence KV
+//! caches, and a continuous-batching scheduler (`repro serve`).
 
 pub mod dist;
 pub mod host;
+pub mod model;
+pub mod serve;
 
 pub use dist::{is_dist, BucketAgg, DistTrainer};
 pub use host::{HostModel, HostTrainer};
+pub use model::{DecodePath, DecodeState, Model};
+pub use serve::{Engine, Request, ServeReport};

@@ -1,0 +1,541 @@
+//! Immutable model surface — the train/infer API split.
+//!
+//! [`HostTrainer`](super::host::HostTrainer) owns mutable training
+//! state (optimizer moments, scaler history, step-scoped weight cache);
+//! evaluation and serving need none of that. [`Model`] is the immutable
+//! view both consume: parameters + [`HostSpec`] + [`LinearNumerics`],
+//! with `forward_logits(&self, ..)` — no `&mut`, no step coupling. The
+//! trainer's `forward_logits` is a thin wrapper over the same
+//! implementation ([`forward_logits_with`]), pinned bit-identical by
+//! test.
+//!
+//! On top of the immutable surface sits the serve path:
+//!
+//! * [`Model::pack`] quantizes every weight slot **once** into a
+//!   [`PackedWeightCache`] that is never invalidated — the server holds
+//!   weights packed FP8 (~1 B/elem) for its whole lifetime, no
+//!   per-step repack.
+//! * [`DecodeState`] is a per-sequence KV cache (unquantized f32 K/V
+//!   rows per layer); [`Model::decode_step`] absorbs one token,
+//!   appends its K/V, and runs per-head `QK^T` / `P·V` as packed FP8
+//!   activation GEMMs against the cached rows.
+//! * [`Model::forward_ctx`] is the full-context reference: the same
+//!   per-row numerics evaluated layer-major over a whole prefix with
+//!   K/V rebuilt from scratch. Incremental decode must match it
+//!   **bitwise** in all four modes — that equality is the KV-cache
+//!   coherence contract `tests/serve_decode_e2e.rs` locks down.
+//!
+//! ## Why decode quantizes activations row-locally
+//!
+//! The packed quantizer derives a tensor-wide level-1 scale (the max
+//! over every micro-group scale), so a row quantized inside a `[T, K]`
+//! activation tensor generally gets different FP8 payload bits than the
+//! same row quantized alone — batching couples rows through the shared
+//! scale. A KV cache must produce the *same bits* for position `t`
+//! whether the context arrived all at once or one token at a time, so
+//! every serve-path activation GEMM quantizes its single row as its own
+//! `[1, K]` tensor. The batched training forward
+//! ([`Model::forward_logits`]) keeps its tensor-wide scales — for bf16,
+//! whose rounding is elementwise, the two paths agree exactly and the
+//! bridge is pinned by test; for the FP8 modes they are intentionally
+//! distinct numerics with the same weights.
+//!
+//! ## Why zero-padding the KV length is exact
+//!
+//! Decode-time context lengths grow one token at a time, but the
+//! microscaled GEMM contracts in groups of `micro`. The cached K/V
+//! operands are padded with zero rows up to the next multiple of
+//! `micro`: an all-zero group quantizes to the `SCALE_EPS` floor with
+//! all-zero payload and contributes exactly `0.0` to the accumulator,
+//! and zeros never raise a real group's absmax, so padded results are
+//! bit-identical to an (unimplementable) unpadded contraction. This is
+//! what lets serve admission skip the training-only `seq % micro`
+//! alignment rule.
+
+use anyhow::{bail, Result};
+
+use crate::backend::host::{embed_lookup, forward, softmax_row_into, EnsuredWeights, HostModel};
+use crate::config::{HostSpec, ModelKind, QuantMode};
+use crate::formats::fp8::E4M3;
+use crate::kernels::{
+    dequant_then_naive_gemm, GemmConfig, LinearNumerics, PackedFp8Tensor, PackedWeight,
+    PackedWeightCache,
+};
+use crate::scaling::absmax_to_scales;
+
+/// Shared implementation of the batched eval forward: guards, exact
+/// (JIT) level-1 weight scales, one [`forward`] pass, cache
+/// invalidation. [`HostTrainer::forward_logits`] calls it with the
+/// trainer's step-scoped cache (invalidate-after restores the train
+/// contract); [`Model::forward_logits`] calls it with a fresh local
+/// cache — pack-then-invalidate and fresh-pack are the same bits, which
+/// is what makes the wrapper bit-identical.
+///
+/// [`HostTrainer::forward_logits`]: super::host::HostTrainer::forward_logits
+pub(crate) fn forward_logits_with(
+    model: &HostModel,
+    num: LinearNumerics,
+    cache: &mut PackedWeightCache,
+    inputs: &[i32],
+) -> Result<Vec<f32>> {
+    let spec = model.spec;
+    if inputs.is_empty() {
+        bail!("forward_logits: empty input");
+    }
+    if spec.model == ModelKind::Transformer && inputs.len() % spec.seq != 0 {
+        bail!(
+            "forward_logits: transformer input length {} must be a multiple of seq {}",
+            inputs.len(),
+            spec.seq
+        );
+    }
+    if let Some(&t) = inputs.iter().find(|&&t| t < 0 || t as usize >= spec.vocab) {
+        bail!("forward_logits: token {t} out of range for vocab {}", spec.vocab);
+    }
+    let scales =
+        if num.uses_level1_scale() { absmax_to_scales(&model.weight_absmax()) } else { Vec::new() };
+    let mut ops = EnsuredWeights { model, cache, scales: &scales, num };
+    let trace = forward(model, &mut ops, inputs, GemmConfig::default());
+    cache.invalidate();
+    Ok(trace.logits)
+}
+
+/// Which execution path serve-time GEMMs take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePath {
+    /// Packed FP8 microscaled GEMMs straight over the u8 payloads — the
+    /// engine path.
+    Packed,
+    /// Fully dequantize both operands to f32 and run the textbook
+    /// serial GEMM per call — the pre-kernels baseline the serve bench
+    /// gates throughput against. Identical quantization decisions, so
+    /// it isolates the execution-path cost. For bf16 (nothing packed)
+    /// this is the same path as [`DecodePath::Packed`].
+    DequantF32,
+}
+
+/// Per-layer decode-time KV cache: unquantized f32 rows, `[len, dim]`
+/// row-major with all heads concatenated (head `h` at columns
+/// `h*hd..(h+1)*hd`). Kept in f32 — quantization happens per GEMM with
+/// the row-local discipline, so cached bits never depend on when a row
+/// was appended.
+struct KvLayer {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// One sequence's incremental decode state: per-layer KV cache plus the
+/// number of tokens absorbed so far.
+pub struct DecodeState {
+    kv: Vec<KvLayer>,
+    pos: usize,
+}
+
+impl DecodeState {
+    /// Tokens absorbed so far (== rows in every layer's KV cache).
+    pub fn len(&self) -> usize {
+        self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+}
+
+/// Immutable model: parameters + numerics policy, the shared surface of
+/// evaluation (`forward_logits`) and serving (`pack` + `decode_step`).
+pub struct Model {
+    params: HostModel,
+    numerics: LinearNumerics,
+}
+
+impl Model {
+    /// Wrap trained parameters under `mode` (micro size comes from the
+    /// spec, same as the trainer's construction).
+    pub fn new(params: HostModel, mode: QuantMode) -> Model {
+        let numerics = LinearNumerics::new(mode, params.spec.micro);
+        Model { params, numerics }
+    }
+
+    /// Fresh seeded parameters — the `--synthetic` serve path and the
+    /// test harnesses.
+    pub fn init(spec: HostSpec, mode: QuantMode, seed: u64) -> Model {
+        Model::new(HostModel::init(spec, seed), mode)
+    }
+
+    pub fn spec(&self) -> &HostSpec {
+        &self.params.spec
+    }
+
+    pub fn numerics(&self) -> LinearNumerics {
+        self.numerics
+    }
+
+    pub fn params(&self) -> &HostModel {
+        &self.params
+    }
+
+    /// Batched eval logits (`[inputs.len(), vocab]`) — bit-identical to
+    /// `HostTrainer::forward_logits` on the same parameters (both call
+    /// [`forward_logits_with`]; pinned by test).
+    pub fn forward_logits(&self, inputs: &[i32]) -> Result<Vec<f32>> {
+        let mut cache = PackedWeightCache::new(self.params.slots.len());
+        forward_logits_with(&self.params, self.numerics, &mut cache, inputs)
+    }
+
+    /// Quantize every weight slot once, under exact (JIT) level-1
+    /// scales, into a cache the server never invalidates. Shareable
+    /// across scheduler threads (`&PackedWeightCache` is `Sync`).
+    pub fn pack(&self) -> PackedWeightCache {
+        let mut cache = PackedWeightCache::new(self.params.slots.len());
+        let scales = if self.numerics.uses_level1_scale() {
+            absmax_to_scales(&self.params.weight_absmax())
+        } else {
+            Vec::new()
+        };
+        for i in 0..self.params.slots.len() {
+            self.params.ensure_packed(&mut cache, &self.numerics, i, &scales);
+        }
+        cache
+    }
+
+    /// Serve-admission shape validation — the decode-path analog of
+    /// `HostSpec::validate`. Unlike training, `seq`/`batch` alignment
+    /// is *not* required (KV lengths grow one token at a time and are
+    /// zero-padded per GEMM); what must hold is that every contraction
+    /// dimension of the row GEMMs is micro-aligned: `dim`, `ffn`, and
+    /// for the transformer the head dim. Checked once at engine
+    /// construction so a bad checkpoint fails at admission, not
+    /// mid-decode.
+    pub fn validate_serve(&self) -> Result<()> {
+        let spec = &self.params.spec;
+        if spec.model == ModelKind::Transformer && spec.dim % spec.heads != 0 {
+            bail!("dim {} must divide into {} heads", spec.dim, spec.heads);
+        }
+        if !matches!(self.numerics.mode(), QuantMode::Moss | QuantMode::Coat) {
+            return Ok(());
+        }
+        let micro = self.numerics.micro();
+        if spec.dim % micro != 0 {
+            bail!("dim {} not divisible by micro-group size {micro}", spec.dim);
+        }
+        if spec.ffn % micro != 0 {
+            bail!("ffn {} not divisible by micro-group size {micro}", spec.ffn);
+        }
+        if spec.model == ModelKind::Transformer && (spec.dim / spec.heads) % micro != 0 {
+            bail!(
+                "head dim {} (the QK^T contraction) not divisible by micro-group size {micro}",
+                spec.dim / spec.heads
+            );
+        }
+        Ok(())
+    }
+
+    /// Begin an incremental decode: empty per-layer KV caches.
+    pub fn begin_decode(&self) -> DecodeState {
+        let layers = match self.params.spec.model {
+            ModelKind::Transformer => self.params.spec.layers,
+            ModelKind::Mlp => 0,
+        };
+        DecodeState {
+            kv: (0..layers).map(|_| KvLayer { k: Vec::new(), v: Vec::new() }).collect(),
+            pos: 0,
+        }
+    }
+
+    /// Absorb one token at position `st.len()`: append its K/V rows to
+    /// every layer's cache and return the next-token logits (`[vocab]`).
+    /// All GEMMs quantize row-locally (see module docs), so the result
+    /// is bitwise-independent of batch composition and admission order
+    /// — the property the continuous-batching determinism test pins.
+    pub fn decode_step(
+        &self,
+        packed: &PackedWeightCache,
+        st: &mut DecodeState,
+        token: i32,
+        path: DecodePath,
+        gemm: GemmConfig,
+    ) -> Result<Vec<f32>> {
+        let spec = self.params.spec;
+        if token < 0 || token as usize >= spec.vocab {
+            bail!("decode_step: token {token} out of range for vocab {}", spec.vocab);
+        }
+        let dim = spec.dim;
+        let mut x = embed_lookup(&self.params, &[token]);
+        match spec.model {
+            ModelKind::Mlp => {
+                for l in 0..spec.layers {
+                    let (iu, id) = (2 * l, 2 * l + 1);
+                    let u = self.row_linear(path, &x, packed.weight(iu), gemm);
+                    let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+                    let h = self.row_linear(path, &a, packed.weight(id), gemm);
+                    for (xi, hi) in x.iter_mut().zip(&h) {
+                        *xi += hi;
+                    }
+                }
+            }
+            ModelKind::Transformer => {
+                for l in 0..spec.layers {
+                    let (iq, io, iu, id) = (4 * l, 4 * l + 1, 4 * l + 2, 4 * l + 3);
+                    let qkv = self.row_linear(path, &x, packed.weight(iq), gemm);
+                    let kvl = &mut st.kv[l];
+                    kvl.k.extend_from_slice(&qkv[dim..2 * dim]);
+                    kvl.v.extend_from_slice(&qkv[2 * dim..3 * dim]);
+                    let len = st.pos + 1;
+                    let mut ctx = vec![0f32; dim];
+                    self.attn_row(path, &kvl.k, &kvl.v, len, &qkv[..dim], &mut ctx, gemm);
+                    let att = self.row_linear(path, &ctx, packed.weight(io), gemm);
+                    let y: Vec<f32> = x.iter().zip(&att).map(|(xi, ai)| xi + ai).collect();
+                    let u = self.row_linear(path, &y, packed.weight(iu), gemm);
+                    let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+                    let h = self.row_linear(path, &a, packed.weight(id), gemm);
+                    x = y.iter().zip(&h).map(|(yi, hi)| yi + hi).collect();
+                }
+            }
+        }
+        st.pos += 1;
+        let iout = per_layer_slots(spec.model) * spec.layers;
+        Ok(self.row_linear(path, &x, packed.weight(iout), gemm))
+    }
+
+    /// Full-context reference forward over a whole prefix, layer-major,
+    /// with the same row-local numerics as [`Self::decode_step`] and
+    /// K/V rebuilt from scratch each layer. Returns `[tokens.len(),
+    /// vocab]` logits. Incremental decode with a persistent KV cache
+    /// must reproduce row `t` bitwise — the cache-coherence contract.
+    pub fn forward_ctx(
+        &self,
+        packed: &PackedWeightCache,
+        tokens: &[i32],
+        path: DecodePath,
+        gemm: GemmConfig,
+    ) -> Result<Vec<f32>> {
+        let spec = self.params.spec;
+        if tokens.is_empty() {
+            bail!("forward_ctx: empty input");
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= spec.vocab) {
+            bail!("forward_ctx: token {t} out of range for vocab {}", spec.vocab);
+        }
+        let (n, dim) = (tokens.len(), spec.dim);
+        // Row-major [n, dim] hidden state, advanced layer by layer.
+        let mut xs: Vec<Vec<f32>> =
+            tokens.iter().map(|&t| embed_lookup(&self.params, &[t])).collect();
+        match spec.model {
+            ModelKind::Mlp => {
+                for l in 0..spec.layers {
+                    let (iu, id) = (2 * l, 2 * l + 1);
+                    for x in xs.iter_mut() {
+                        let u = self.row_linear(path, x, packed.weight(iu), gemm);
+                        let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+                        let h = self.row_linear(path, &a, packed.weight(id), gemm);
+                        for (xi, hi) in x.iter_mut().zip(&h) {
+                            *xi += hi;
+                        }
+                    }
+                }
+            }
+            ModelKind::Transformer => {
+                for l in 0..spec.layers {
+                    let (iq, io, iu, id) = (4 * l, 4 * l + 1, 4 * l + 2, 4 * l + 3);
+                    let qkvs: Vec<Vec<f32>> = xs
+                        .iter()
+                        .map(|x| self.row_linear(path, x, packed.weight(iq), gemm))
+                        .collect();
+                    let mut kvl = KvLayer {
+                        k: Vec::with_capacity(n * dim),
+                        v: Vec::with_capacity(n * dim),
+                    };
+                    for qkv in &qkvs {
+                        kvl.k.extend_from_slice(&qkv[dim..2 * dim]);
+                        kvl.v.extend_from_slice(&qkv[2 * dim..3 * dim]);
+                    }
+                    for (r, x) in xs.iter_mut().enumerate() {
+                        let mut ctx = vec![0f32; dim];
+                        self.attn_row(path, &kvl.k, &kvl.v, r + 1, &qkvs[r][..dim], &mut ctx, gemm);
+                        let att = self.row_linear(path, &ctx, packed.weight(io), gemm);
+                        let y: Vec<f32> = x.iter().zip(&att).map(|(xi, ai)| xi + ai).collect();
+                        let u = self.row_linear(path, &y, packed.weight(iu), gemm);
+                        let a: Vec<f32> = u.iter().map(|&v| v.max(0.0)).collect();
+                        let h = self.row_linear(path, &a, packed.weight(id), gemm);
+                        *x = y.iter().zip(&h).map(|(yi, hi)| yi + hi).collect();
+                    }
+                }
+            }
+        }
+        let iout = per_layer_slots(spec.model) * spec.layers;
+        let mut logits = Vec::with_capacity(n * spec.vocab);
+        for x in &xs {
+            logits.extend(self.row_linear(path, x, packed.weight(iout), gemm));
+        }
+        Ok(logits)
+    }
+
+    /// One `[1, k] @ [k, n]` linear under the numerics policy. The
+    /// activation row quantizes as its own tensor (row-local scale).
+    fn row_linear(
+        &self,
+        path: DecodePath,
+        x: &[f32],
+        w: &PackedWeight,
+        gemm: GemmConfig,
+    ) -> Vec<f32> {
+        match (path, w) {
+            (DecodePath::DequantF32, PackedWeight::Fp8 { .. }) => {
+                let wf = w.fwd_fp8();
+                let qx = PackedFp8Tensor::quantize(x, 1, wf.cols, wf.micro, &E4M3);
+                dequant_then_naive_gemm(&qx, wf)
+            }
+            _ => self.numerics.forward(x, 1, w, gemm),
+        }
+    }
+
+    /// One `[1, k] @ [n, k]^T` activation-activation matmul (both
+    /// operands quantized JIT, E4M3 — the no-grad serve case of
+    /// `LinearNumerics::attn_matmul`).
+    fn attn_mm(
+        &self,
+        path: DecodePath,
+        a: &[f32],
+        bt: &[f32],
+        n: usize,
+        k: usize,
+        gemm: GemmConfig,
+    ) -> Vec<f32> {
+        if path == DecodePath::DequantF32 && self.numerics.is_fp8() {
+            let micro =
+                if self.numerics.mode() == QuantMode::PerTensor { k } else { self.numerics.micro() };
+            let qa = PackedFp8Tensor::quantize(a, 1, k, micro, &E4M3);
+            let qb = PackedFp8Tensor::quantize(bt, n, k, micro, &E4M3);
+            return dequant_then_naive_gemm(&qa, &qb);
+        }
+        self.numerics.attn_matmul(a, 1, bt, n, k, false, false, gemm)
+    }
+
+    /// One position's multi-head causal attention against `len` cached
+    /// K/V rows (`[len, dim]`, heads concatenated): per head, `QK^T`
+    /// over the head dim, `1/sqrt(hd)` applied after the GEMM, the
+    /// shared stable softmax row, then `P·V` over the (zero-padded)
+    /// context length. Writes the concatenated context into `ctx`.
+    #[allow(clippy::too_many_arguments)]
+    fn attn_row(
+        &self,
+        path: DecodePath,
+        kcache: &[f32],
+        vcache: &[f32],
+        len: usize,
+        q_row: &[f32],
+        ctx: &mut [f32],
+        gemm: GemmConfig,
+    ) {
+        let spec = self.params.spec;
+        let (dim, heads) = (spec.dim, spec.heads);
+        let hd = dim / heads;
+        // Moss/Coat contract the context length in micro groups, so pad
+        // with zero rows (exact; see module docs). Bf16 and per-tensor
+        // (whole-row groups) need no padding.
+        let unit = match self.numerics.mode() {
+            QuantMode::Moss | QuantMode::Coat => self.numerics.micro(),
+            QuantMode::Bf16 | QuantMode::PerTensor => 1,
+        };
+        let pad = len.next_multiple_of(unit);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        for h in 0..heads {
+            let q = &q_row[h * hd..(h + 1) * hd];
+            // K_h [pad, hd]: K's natural row layout is already the
+            // transposed GEMM operand (contraction over hd).
+            let mut kh = vec![0f32; pad * hd];
+            for t in 0..len {
+                kh[t * hd..(t + 1) * hd]
+                    .copy_from_slice(&kcache[t * dim + h * hd..t * dim + (h + 1) * hd]);
+            }
+            let scores = self.attn_mm(path, q, &kh, pad, hd, gemm);
+            let scaled: Vec<f32> = scores[..len].iter().map(|&s| s * inv_sqrt).collect();
+            let mut p = vec![0f32; pad];
+            softmax_row_into(&scaled, &mut p[..len]);
+            // V_h^T [hd, pad]: contraction over the padded context.
+            let mut vt = vec![0f32; hd * pad];
+            for t in 0..len {
+                for j in 0..hd {
+                    vt[j * pad + t] = vcache[t * dim + h * hd + j];
+                }
+            }
+            let c = self.attn_mm(path, &p, &vt, hd, pad, gemm);
+            ctx[h * hd..(h + 1) * hd].copy_from_slice(&c);
+        }
+    }
+}
+
+/// Quantized-linear slots per layer for each architecture (the slot
+/// indexing convention of `backend::host::forward`).
+fn per_layer_slots(model: ModelKind) -> usize {
+    match model {
+        ModelKind::Mlp => 2,
+        ModelKind::Transformer => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HostSpec;
+
+    fn tiny_spec(model: ModelKind) -> HostSpec {
+        HostSpec {
+            vocab: 64,
+            dim: 64,
+            ffn: 64,
+            layers: 2,
+            seq: 32,
+            batch: 1,
+            micro: 32,
+            microbatches: 1,
+            cache_weights: true,
+            model,
+            heads: 2,
+        }
+    }
+
+    #[test]
+    fn decode_steps_match_forward_ctx_rows() {
+        // The in-module smoke version of the cross-mode e2e test: one
+        // mode, short prefix, bitwise row equality.
+        let model = Model::init(tiny_spec(ModelKind::Transformer), QuantMode::Moss, 7);
+        let packed = model.pack();
+        let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+        let tokens = [3i32, 11, 5, 42, 17];
+        let full = model.forward_ctx(&packed, &tokens, DecodePath::Packed, gemm).unwrap();
+        let mut st = model.begin_decode();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let step =
+                model.decode_step(&packed, &mut st, tok, DecodePath::Packed, gemm).unwrap();
+            let row = &full[t * 64..(t + 1) * 64];
+            for (a, b) in step.iter().zip(row) {
+                assert_eq!(a.to_bits(), b.to_bits(), "position {t} diverged");
+            }
+        }
+        assert_eq!(st.len(), tokens.len());
+    }
+
+    #[test]
+    fn validate_serve_flags_misaligned_contractions() {
+        let mut spec = tiny_spec(ModelKind::Transformer);
+        spec.heads = 4; // head dim 16 < micro 32
+        let m = Model::init(spec, QuantMode::Moss, 1);
+        assert!(m.validate_serve().is_err());
+        // ... but bf16 has no micro-alignment constraint at all.
+        let m = Model::init(spec, QuantMode::Bf16, 1);
+        assert!(m.validate_serve().is_ok());
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_tokens() {
+        let model = Model::init(tiny_spec(ModelKind::Mlp), QuantMode::Moss, 3);
+        let packed = model.pack();
+        let mut st = model.begin_decode();
+        let gemm = GemmConfig::default();
+        assert!(model.decode_step(&packed, &mut st, -1, DecodePath::Packed, gemm).is_err());
+        assert!(model.decode_step(&packed, &mut st, 64, DecodePath::Packed, gemm).is_err());
+        assert!(model.decode_step(&packed, &mut st, 63, DecodePath::Packed, gemm).is_ok());
+    }
+}

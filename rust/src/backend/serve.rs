@@ -1,0 +1,518 @@
+//! FP8 serving engine on packed weights (`repro serve`).
+//!
+//! The [`Engine`] loads an immutable [`Model`] and quantizes every
+//! weight slot **once** into a [`PackedWeightCache`] it never
+//! invalidates — the server holds FP8 payloads (~1 B/elem per operand
+//! layout) for its whole lifetime, the decode-time memory-bandwidth
+//! regime MOSS's packing targets. On top of it:
+//!
+//! * **Incremental decode** — each admitted sequence owns a
+//!   [`DecodeState`] KV cache; prefill pushes the prompt through
+//!   [`Model::decode_step`] one row at a time (same code path as
+//!   steady-state decode, so prefilled caches are bitwise what a
+//!   full-context forward would produce), then one-token steps run
+//!   per-head `QK^T`/`P·V` as packed FP8 activation GEMMs against the
+//!   cached K/V.
+//! * **Continuous batching** — the scheduler admits newly-arrived
+//!   requests into the running batch *each decode step* (no waiting
+//!   for the batch to drain), splits the active sequences across
+//!   worker threads via `std::thread::scope`, and retires finished
+//!   sequences immediately. Because every sequence's tokens depend
+//!   only on the model and its own prompt (row-local quantization —
+//!   see `backend::model`), outputs are bitwise-deterministic
+//!   regardless of thread count, admission order, or batch width;
+//!   `tests/serve_decode_e2e.rs` pins this.
+//! * **Open-loop traffic** — [`synthetic_requests`] draws Poisson
+//!   arrivals (exponential inter-arrival at `rate` req/s) with mixed
+//!   prompt/output lengths from a seeded [`Rng`]; arrivals do not wait
+//!   for completions, so the latency percentiles include real queueing.
+//!
+//! [`measure_decode_tps`] is the closed-loop companion: a saturated
+//! fixed batch decoding serially, measured once over the packed path
+//! and once over the dequantize-to-f32 baseline ([`DecodePath`]) — the
+//! pair the `BENCH_serve.json` gate compares (packed must not be
+//! slower, mirroring the training-side `BENCH_host.json` gates).
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::model::{DecodePath, DecodeState, Model};
+use crate::config::ServeSpec;
+use crate::kernels::{GemmConfig, PackedWeightCache};
+use crate::metrics::ServeStats;
+use crate::util::json::{num, obj, s as jstr};
+use crate::util::rng::Rng;
+
+/// One inference request of the open-loop workload.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    /// Seconds after workload start this request arrives.
+    pub arrival_secs: f64,
+    pub prompt: Vec<i32>,
+    /// Tokens to generate before the sequence retires.
+    pub max_new: usize,
+}
+
+/// One finished request: the generated tokens plus its timeline.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub tokens: Vec<i32>,
+    pub arrival_secs: f64,
+    pub finish_secs: f64,
+}
+
+/// What one scheduler run measured.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Finished requests, sorted by request id.
+    pub completions: Vec<Completion>,
+    /// Requests refused at admission: `(id, reason)`.
+    pub rejected: Vec<(usize, String)>,
+    pub wall_secs: f64,
+    /// Generated (decode) tokens across all sequences; prompt rows are
+    /// prefill work, not output.
+    pub decode_tokens: u64,
+    /// Open-loop generated tokens/sec over the whole run (includes
+    /// arrival idle time — the serving number, not the kernel number).
+    pub tokens_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_latency_ms: f64,
+    /// Mean active sequences per decode step / fraction of `max_batch`.
+    pub mean_active: f64,
+    pub occupancy: f64,
+    pub steps: u64,
+}
+
+/// Synthetic open-loop traffic: Poisson arrivals at `spec.rate` req/s,
+/// prompt/output lengths uniform over the spec ranges, prompt tokens
+/// uniform over the vocab — fully determined by `spec.seed`, so two
+/// runs over the same spec see the identical trace (the determinism
+/// tests replay it across thread counts).
+pub fn synthetic_requests(spec: &ServeSpec, vocab: usize) -> Vec<Request> {
+    let mut rng = Rng::new(spec.seed ^ 0x5E17E);
+    let mut t = 0.0f64;
+    (0..spec.requests)
+        .map(|id| {
+            // Exponential inter-arrival; 1 - u keeps the log argument
+            // in (0, 1].
+            t += -(1.0 - rng.f64()).ln() / spec.rate;
+            let plen =
+                spec.prompt_min + rng.below((spec.prompt_max - spec.prompt_min + 1) as u64) as usize;
+            let max_new =
+                spec.new_min + rng.below((spec.new_max - spec.new_min + 1) as u64) as usize;
+            let prompt = (0..plen).map(|_| rng.below(vocab as u64) as i32).collect();
+            Request { id, arrival_secs: t, prompt, max_new }
+        })
+        .collect()
+}
+
+/// Greedy sampling: first-max-wins argmax (the `finetune_math` decode
+/// convention — ties resolve to the lowest token id).
+fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// One in-flight sequence.
+struct SeqState {
+    req: Request,
+    st: DecodeState,
+    generated: Vec<i32>,
+    prefilled: bool,
+}
+
+/// The serving engine: immutable model + pack-once weight cache +
+/// scheduler configuration. `&Engine` is shared across scheduler
+/// threads (the packed cache has no interior mutability).
+pub struct Engine {
+    model: Model,
+    packed: PackedWeightCache,
+    spec: ServeSpec,
+}
+
+impl Engine {
+    /// Validate the workload spec and the model's serve-time shape
+    /// constraints, then pack every weight slot once.
+    pub fn new(model: Model, spec: ServeSpec) -> Result<Engine> {
+        spec.validate()?;
+        model.validate_serve().context("model cannot serve under its numerics mode")?;
+        let packed = model.pack();
+        Ok(Engine { model, packed, spec })
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    pub fn spec(&self) -> &ServeSpec {
+        &self.spec
+    }
+
+    /// Steady-state weight-memory footprint (both packed operand
+    /// layouts of every slot).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.packed_bytes()
+    }
+
+    /// Admission-time request validation — the serve-side analog of
+    /// `HostSpec::validate`'s training alignment rules. Everything that
+    /// could make a decode step fail is rejected *here*: once admitted,
+    /// a sequence cannot error mid-decode (KV GEMM shapes are padded
+    /// per step, positions grow one token at a time by construction).
+    pub fn admit_check(&self, req: &Request) -> Result<()> {
+        if req.prompt.is_empty() {
+            bail!("request {}: empty prompt", req.id);
+        }
+        if req.max_new == 0 {
+            bail!("request {}: max_new must be >= 1", req.id);
+        }
+        let vocab = self.model.spec().vocab;
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= vocab) {
+            bail!("request {}: prompt token {t} out of range for vocab {vocab}", req.id);
+        }
+        if req.prompt.len() + req.max_new > self.spec.max_ctx {
+            bail!(
+                "request {}: prompt {} + max_new {} exceeds max_ctx {}",
+                req.id,
+                req.prompt.len(),
+                req.max_new,
+                self.spec.max_ctx
+            );
+        }
+        Ok(())
+    }
+
+    /// Advance one sequence by one unit of work: full prefill + first
+    /// token for a fresh admit, one decode step otherwise.
+    fn advance(&self, seq: &mut SeqState, path: DecodePath, gemm: GemmConfig) -> Result<()> {
+        if !seq.prefilled {
+            let mut logits = Vec::new();
+            for &t in &seq.req.prompt {
+                logits = self.model.decode_step(&self.packed, &mut seq.st, t, path, gemm)?;
+            }
+            seq.generated.push(argmax(&logits));
+            seq.prefilled = true;
+        } else {
+            let last = *seq.generated.last().expect("prefilled sequence has a token");
+            let logits = self.model.decode_step(&self.packed, &mut seq.st, last, path, gemm)?;
+            seq.generated.push(argmax(&logits));
+        }
+        Ok(())
+    }
+
+    /// Drain an open-loop workload with continuous batching. Requests
+    /// are admitted the first decode step at or after their arrival
+    /// time (capacity permitting), new sequences join the running
+    /// batch, finished ones retire immediately and free their slot.
+    pub fn run(&self, requests: &[Request], path: DecodePath) -> Result<ServeReport> {
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| requests[a].arrival_secs.total_cmp(&requests[b].arrival_secs));
+        // Per-sequence GEMMs are [1, K] rows — intra-GEMM threading has
+        // nothing to split; all parallelism comes from the scheduler.
+        let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+        let start = Instant::now();
+        let mut next = 0usize;
+        let mut active: Vec<SeqState> = Vec::new();
+        let mut stats = ServeStats::default();
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut rejected: Vec<(usize, String)> = Vec::new();
+        while next < order.len() || !active.is_empty() {
+            let now = start.elapsed().as_secs_f64();
+            while next < order.len()
+                && requests[order[next]].arrival_secs <= now
+                && active.len() < self.spec.max_batch
+            {
+                let req = &requests[order[next]];
+                match self.admit_check(req) {
+                    Ok(()) => active.push(SeqState {
+                        req: req.clone(),
+                        st: self.model.begin_decode(),
+                        generated: Vec::with_capacity(req.max_new),
+                        prefilled: false,
+                    }),
+                    Err(e) => rejected.push((req.id, e.to_string())),
+                }
+                next += 1;
+            }
+            if active.is_empty() {
+                if next < order.len() {
+                    let wait = requests[order[next]].arrival_secs - start.elapsed().as_secs_f64();
+                    if wait > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(wait.min(0.02)));
+                    }
+                }
+                continue;
+            }
+            // One decode step across the batch, banded over threads.
+            let nthreads = self.spec.threads.min(active.len());
+            let band = active.len().div_ceil(nthreads);
+            let step_result: Result<()> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for chunk in active.chunks_mut(band) {
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        for seq in chunk.iter_mut() {
+                            self.advance(seq, path, gemm)?;
+                        }
+                        Ok(())
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("serve scheduler worker panicked")?;
+                }
+                Ok(())
+            });
+            step_result?;
+            let after = start.elapsed().as_secs_f64();
+            stats.record_step(active.len(), active.len() as u64);
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].generated.len() >= active[i].req.max_new {
+                    let seq = active.swap_remove(i);
+                    stats.record_completion((after - seq.req.arrival_secs) * 1e3);
+                    completions.push(Completion {
+                        id: seq.req.id,
+                        tokens: seq.generated,
+                        arrival_secs: seq.req.arrival_secs,
+                        finish_secs: after,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        completions.sort_by_key(|c| c.id);
+        let wall_secs = start.elapsed().as_secs_f64();
+        Ok(ServeReport {
+            tokens_per_sec: if wall_secs > 0.0 { stats.decode_tokens as f64 / wall_secs } else { 0.0 },
+            wall_secs,
+            decode_tokens: stats.decode_tokens,
+            p50_ms: stats.p50_ms(),
+            p99_ms: stats.p99_ms(),
+            mean_latency_ms: stats.mean_latency_ms(),
+            mean_active: stats.mean_active(),
+            occupancy: stats.occupancy(self.spec.max_batch),
+            steps: stats.steps,
+            completions,
+            rejected,
+        })
+    }
+}
+
+/// Closed-loop decode throughput of one execution path: `batch`
+/// sequences prefilled to `prompt_len`, then `steps` serial decode
+/// iterations over the saturated batch (no arrivals, no idle). Both
+/// paths measure through identical code, so the ratio isolates the
+/// packed-vs-dequantize execution cost — the `BENCH_serve.json` gate.
+pub fn measure_decode_tps(
+    engine: &Engine,
+    path: DecodePath,
+    batch: usize,
+    prompt_len: usize,
+    steps: usize,
+) -> Result<f64> {
+    let vocab = engine.model().spec().vocab;
+    let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+    let mut rng = Rng::new(0xDEC0DE);
+    let mut seqs: Vec<(DecodeState, i32)> = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let mut st = engine.model().begin_decode();
+        let mut logits = Vec::new();
+        for _ in 0..prompt_len {
+            let t = rng.below(vocab as u64) as i32;
+            logits = engine.model().decode_step(&engine.packed, &mut st, t, path, gemm)?;
+        }
+        seqs.push((st, argmax(&logits)));
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        for (st, tok) in seqs.iter_mut() {
+            let logits = engine.model().decode_step(&engine.packed, st, *tok, path, gemm)?;
+            *tok = argmax(&logits);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(if secs > 0.0 { (batch * steps) as f64 / secs } else { 0.0 })
+}
+
+/// The in-bench serve gate: packed-FP8 decode must sustain at least the
+/// f32-dequantize baseline's tokens/sec. bf16 has no packed payloads —
+/// both paths are the same code — so the gate applies to FP8 modes.
+pub fn throughput_gate(engine: &Engine, tps_packed: f64, tps_dequant: f64) -> Result<()> {
+    if engine.model().numerics().is_fp8() && tps_packed < tps_dequant {
+        bail!(
+            "packed-FP8 decode {tps_packed:.1} tok/s fell below the f32-dequantize \
+             baseline {tps_dequant:.1} tok/s"
+        );
+    }
+    Ok(())
+}
+
+/// Serialize one serve run + the closed-loop gate pair into the
+/// machine-readable perf record (`BENCH_serve.json`), mirroring
+/// `BENCH_host.json`'s role for training.
+pub fn write_bench_json(
+    path: &Path,
+    engine: &Engine,
+    report: &ServeReport,
+    tps_packed: f64,
+    tps_dequant: f64,
+) -> Result<()> {
+    let spec = engine.model().spec();
+    let linear_elems: usize = engine.model().params().weights.iter().map(Vec::len).sum();
+    let speedup = if tps_dequant > 0.0 { tps_packed / tps_dequant } else { 0.0 };
+    let j = obj(vec![
+        ("bench", jstr("serve_engine")),
+        ("mode", jstr(engine.model().numerics().mode().name())),
+        ("model", jstr(spec.model.name())),
+        (
+            "shape",
+            obj(vec![
+                ("vocab", num(spec.vocab as f64)),
+                ("dim", num(spec.dim as f64)),
+                ("ffn", num(spec.ffn as f64)),
+                ("layers", num(spec.layers as f64)),
+                ("heads", num(spec.heads as f64)),
+            ]),
+        ),
+        ("requests", num((report.completions.len() + report.rejected.len()) as f64)),
+        ("completed", num(report.completions.len() as f64)),
+        ("rejected", num(report.rejected.len() as f64)),
+        ("wall_secs", num(report.wall_secs)),
+        ("decode_tokens", num(report.decode_tokens as f64)),
+        ("tokens_per_sec", num(report.tokens_per_sec)),
+        ("p50_ms", num(report.p50_ms)),
+        ("p99_ms", num(report.p99_ms)),
+        ("mean_latency_ms", num(report.mean_latency_ms)),
+        ("mean_active", num(report.mean_active)),
+        ("occupancy", num(report.occupancy)),
+        ("max_batch", num(engine.spec().max_batch as f64)),
+        ("threads", num(engine.spec().threads as f64)),
+        ("decode_tps_packed", num(tps_packed)),
+        ("decode_tps_dequant", num(tps_dequant)),
+        ("packed_decode_speedup", num(speedup)),
+        ("packed_weight_bytes", num(engine.packed_bytes() as f64)),
+        // Per element per operand layout (the cache holds fwd + bwd):
+        // ~1.03 B for FP8 payloads + micro-exponents, 4.0 for bf16.
+        (
+            "packed_bytes_per_elem",
+            num(if linear_elems > 0 {
+                engine.packed_bytes() as f64 / (2.0 * linear_elems as f64)
+            } else {
+                0.0
+            }),
+        ),
+    ]);
+    std::fs::write(path, j.to_string() + "\n")
+        .with_context(|| format!("writing serve bench record {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HostSpec, ModelKind, QuantMode};
+
+    fn tiny_model() -> Model {
+        let spec = HostSpec {
+            vocab: 64,
+            dim: 64,
+            ffn: 64,
+            layers: 1,
+            seq: 32,
+            batch: 1,
+            micro: 32,
+            microbatches: 1,
+            cache_weights: true,
+            model: ModelKind::Transformer,
+            heads: 2,
+        };
+        Model::init(spec, QuantMode::Moss, 11)
+    }
+
+    fn tiny_serve() -> ServeSpec {
+        ServeSpec {
+            requests: 6,
+            rate: 1e5, // arrive effectively at once — no wall-clock in tests
+            prompt_min: 2,
+            prompt_max: 5,
+            new_min: 2,
+            new_max: 4,
+            max_batch: 3,
+            threads: 2,
+            max_ctx: 16,
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn traffic_is_deterministic_and_monotone() {
+        let spec = tiny_serve();
+        let a = synthetic_requests(&spec, 64);
+        let b = synthetic_requests(&spec, 64);
+        assert_eq!(a.len(), spec.requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert_eq!(x.arrival_secs.to_bits(), y.arrival_secs.to_bits());
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_secs <= w[1].arrival_secs);
+        }
+        for r in &a {
+            assert!((spec.prompt_min..=spec.prompt_max).contains(&r.prompt.len()));
+            assert!((spec.new_min..=spec.new_max).contains(&r.max_new));
+        }
+    }
+
+    #[test]
+    fn engine_drains_the_workload() {
+        let engine = Engine::new(tiny_model(), tiny_serve()).unwrap();
+        let reqs = synthetic_requests(engine.spec(), engine.model().spec().vocab);
+        let report = engine.run(&reqs, DecodePath::Packed).unwrap();
+        assert_eq!(report.completions.len(), reqs.len());
+        assert!(report.rejected.is_empty());
+        for (c, r) in report.completions.iter().zip(&reqs) {
+            assert_eq!(c.id, r.id);
+            assert_eq!(c.tokens.len(), r.max_new);
+        }
+        assert!(report.decode_tokens >= reqs.iter().map(|r| r.max_new as u64).sum::<u64>());
+        assert!(report.p99_ms >= report.p50_ms);
+        assert!(report.occupancy > 0.0 && report.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn admission_rejects_what_decode_would_choke_on() {
+        let engine = Engine::new(tiny_model(), tiny_serve()).unwrap();
+        let ok = Request { id: 0, arrival_secs: 0.0, prompt: vec![1, 2, 3], max_new: 4 };
+        assert!(engine.admit_check(&ok).is_ok());
+        let empty = Request { prompt: vec![], ..ok.clone() };
+        assert!(engine.admit_check(&empty).is_err());
+        let oov = Request { prompt: vec![1, 64], ..ok.clone() };
+        assert!(engine.admit_check(&oov).is_err());
+        let oversized = Request { prompt: vec![1; 14], max_new: 3, ..ok.clone() };
+        assert!(engine.admit_check(&oversized).is_err());
+        let no_output = Request { max_new: 0, ..ok };
+        assert!(engine.admit_check(&no_output).is_err());
+        // ... and an oversized request never reaches decode: it lands in
+        // `rejected` while the rest of the trace still drains.
+        let reqs = vec![
+            Request { id: 0, arrival_secs: 0.0, prompt: vec![1; 20], max_new: 2 },
+            Request { id: 1, arrival_secs: 0.0, prompt: vec![5, 6], max_new: 2 },
+        ];
+        let report = engine.run(&reqs, DecodePath::Packed).unwrap();
+        assert_eq!(report.rejected.len(), 1);
+        assert_eq!(report.rejected[0].0, 0);
+        assert_eq!(report.completions.len(), 1);
+        assert_eq!(report.completions[0].id, 1);
+    }
+}

@@ -408,6 +408,107 @@ impl DistSpec {
     }
 }
 
+/// The serving workload + scheduler shape (`repro serve`): an open-loop
+/// synthetic traffic model (Poisson arrivals, mixed prompt/output
+/// lengths) and the continuous-batching engine's capacity knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSpec {
+    /// Total synthetic requests to generate and drain.
+    pub requests: usize,
+    /// Mean Poisson arrival rate, requests/second (open loop: arrivals
+    /// do not wait for completions).
+    pub rate: f64,
+    /// Prompt lengths drawn uniformly from `[prompt_min, prompt_max]`.
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// Output (generated-token) budgets drawn uniformly from
+    /// `[new_min, new_max]`.
+    pub new_min: usize,
+    pub new_max: usize,
+    /// Continuous-batching width: max sequences decoding concurrently.
+    pub max_batch: usize,
+    /// Scheduler worker threads splitting the active batch each step.
+    pub threads: usize,
+    /// Per-sequence context capacity; admission rejects requests whose
+    /// `prompt + max_new` cannot fit.
+    pub max_ctx: usize,
+    /// Seed of the traffic generator (arrivals, lengths, prompt tokens).
+    pub seed: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec {
+            requests: 64,
+            rate: 64.0,
+            prompt_min: 4,
+            prompt_max: 24,
+            new_min: 4,
+            new_max: 16,
+            max_batch: 8,
+            threads: 2,
+            max_ctx: 128,
+            seed: 0,
+        }
+    }
+}
+
+impl ServeSpec {
+    pub fn apply_args(mut self, a: &Args) -> Result<Self> {
+        self.requests = a.get_usize("requests", self.requests)?;
+        self.rate = a.get_f64("rate", self.rate)?;
+        self.prompt_min = a.get_usize("prompt-min", self.prompt_min)?;
+        self.prompt_max = a.get_usize("prompt-max", self.prompt_max)?;
+        self.new_min = a.get_usize("new-min", self.new_min)?;
+        self.new_max = a.get_usize("new-max", self.new_max)?;
+        self.max_batch = a.get_usize("max-batch", self.max_batch)?;
+        self.threads = a.get_usize("threads", self.threads)?;
+        self.max_ctx = a.get_usize("max-ctx", self.max_ctx)?;
+        self.seed = a.get_u64("seed", self.seed)?;
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            bail!("serve spec needs requests >= 1");
+        }
+        if !(self.rate.is_finite() && self.rate > 0.0) {
+            bail!("serve spec needs a finite arrival rate > 0 (got {})", self.rate);
+        }
+        if self.prompt_min == 0 || self.prompt_min > self.prompt_max {
+            bail!(
+                "serve spec needs 1 <= prompt_min <= prompt_max (got {}..{})",
+                self.prompt_min,
+                self.prompt_max
+            );
+        }
+        if self.new_min == 0 || self.new_min > self.new_max {
+            bail!(
+                "serve spec needs 1 <= new_min <= new_max (got {}..{})",
+                self.new_min,
+                self.new_max
+            );
+        }
+        if self.max_batch == 0 {
+            bail!("serve spec needs max_batch >= 1");
+        }
+        if self.threads == 0 || self.threads > 256 {
+            bail!("serve spec needs 1 <= threads <= 256 (got {})", self.threads);
+        }
+        if self.max_ctx < self.prompt_max + self.new_max {
+            bail!(
+                "max_ctx {} cannot fit prompt_max {} + new_max {} — every \
+                 longest-case request would be rejected at admission",
+                self.max_ctx,
+                self.prompt_max,
+                self.new_max
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Weight-scaling strategy selection (paper §3.2 / Appendix E).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalingKind {

@@ -1,12 +1,29 @@
 //! Checkpointing: parameters + moments as a JSON header and raw little-
 //! endian f32 payloads, resumable across runs.
+//!
+//! Two formats live here:
+//!
+//! * The **v1 AOT format** ([`save`]/[`load`], magic `moss-ckpt-v1`) —
+//!   tied to a compiled artifact: tensor shapes come from the `Runtime`
+//!   manifest, so loading requires the caller to re-supply the whole
+//!   artifact config.
+//! * The **v2 host format** ([`Checkpoint`], magic
+//!   `moss-host-ckpt-v2`) — versioned and self-describing: the header
+//!   carries the full [`HostSpec`] + [`QuantMode`], so
+//!   `repro serve --ckpt` reconstructs the model with zero
+//!   re-specified shape/mode flags. Mismatched or legacy blobs fail
+//!   with a typed [`CkptError`], never a panic.
 
+use std::fmt;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 use xla::Literal;
 
+use crate::backend::host::{linear_slots, HostModel};
+use crate::backend::model::Model;
+use crate::config::{HostSpec, ModelKind, QuantMode};
 use crate::runtime::literal::{lit_f32, to_f32};
 use crate::runtime::Runtime;
 use crate::util::json::{num, obj, s as jstr, Json};
@@ -14,6 +31,9 @@ use crate::util::json::{num, obj, s as jstr, Json};
 use super::state::TrainState;
 
 const MAGIC: &str = "moss-ckpt-v1";
+
+/// Magic string of the self-describing host checkpoint format.
+pub const HOST_MAGIC: &str = "moss-host-ckpt-v2";
 
 /// Save a training state to `path`.
 pub fn save(path: &Path, rt: &Runtime, state: &TrainState) -> Result<()> {
@@ -108,4 +128,232 @@ pub fn load(path: &Path, rt: &Runtime) -> Result<TrainState> {
         Ok(v)
     };
     Ok(TrainState { params: take("params")?, m: take("m")?, v: take("v")?, step })
+}
+
+/// Typed failure modes of the v2 host-checkpoint loader. Converts into
+/// `anyhow::Error` via `?` (it implements `std::error::Error`), but
+/// callers that care — the serve CLI, the round-trip tests — can match
+/// on the variant instead of grepping a panic message.
+#[derive(Debug)]
+pub enum CkptError {
+    /// Filesystem failure opening/reading/writing the blob.
+    Io { path: PathBuf, err: std::io::Error },
+    /// The file exists but is not a host checkpoint at all (bad magic,
+    /// unparseable header, truncated before the header ends).
+    NotACheckpoint { path: PathBuf },
+    /// A v1 AOT-format checkpoint (`moss-ckpt-v1`): valid, but tied to
+    /// a compiled artifact manifest — load it with [`load`] instead.
+    LegacyAot { path: PathBuf },
+    /// A future/unknown host-format version.
+    UnsupportedVersion { found: String },
+    /// Structurally a host checkpoint, but the header contents do not
+    /// parse (bad spec/mode fields, missing tensors, payload overrun).
+    Malformed { what: String },
+    /// Header parsed, but a tensor's element count disagrees with the
+    /// shape its own spec implies.
+    ShapeMismatch { what: String },
+}
+
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::Io { path, err } => write!(f, "checkpoint io at {path:?}: {err}"),
+            CkptError::NotACheckpoint { path } => {
+                write!(f, "{path:?} is not a host checkpoint")
+            }
+            CkptError::LegacyAot { path } => write!(
+                f,
+                "{path:?} is a v1 AOT-format checkpoint; it needs the artifact \
+                 manifest (coordinator::checkpoint::load), not the host loader"
+            ),
+            CkptError::UnsupportedVersion { found } => {
+                write!(f, "unsupported host checkpoint version {found:?} (want {HOST_MAGIC:?})")
+            }
+            CkptError::Malformed { what } => write!(f, "malformed host checkpoint: {what}"),
+            CkptError::ShapeMismatch { what } => {
+                write!(f, "host checkpoint shape mismatch: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CkptError {}
+
+/// The trained parameters a v2 checkpoint carries (no optimizer
+/// moments — this is the inference artifact, not a resume point).
+pub struct ModelParams {
+    /// Token embedding, row-major `[vocab, dim]`.
+    pub embed: Vec<f32>,
+    /// Quantized-linear weights in canonical slot order, `[k, n]` each.
+    pub weights: Vec<Vec<f32>>,
+}
+
+/// Versioned, self-describing host checkpoint: everything needed to
+/// reconstruct a [`Model`] with zero re-specified flags.
+pub struct Checkpoint {
+    pub spec: HostSpec,
+    pub mode: QuantMode,
+    pub step: u64,
+    pub params: ModelParams,
+}
+
+fn spec_to_json(spec: &HostSpec) -> Json {
+    obj(vec![
+        ("vocab", num(spec.vocab as f64)),
+        ("dim", num(spec.dim as f64)),
+        ("ffn", num(spec.ffn as f64)),
+        ("layers", num(spec.layers as f64)),
+        ("seq", num(spec.seq as f64)),
+        ("batch", num(spec.batch as f64)),
+        ("micro", num(spec.micro as f64)),
+        ("microbatches", num(spec.microbatches as f64)),
+        ("cache_weights", Json::Bool(spec.cache_weights)),
+        ("model", jstr(spec.model.name())),
+        ("heads", num(spec.heads as f64)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Result<HostSpec> {
+    Ok(HostSpec {
+        vocab: j.expect("vocab")?.as_usize()?,
+        dim: j.expect("dim")?.as_usize()?,
+        ffn: j.expect("ffn")?.as_usize()?,
+        layers: j.expect("layers")?.as_usize()?,
+        seq: j.expect("seq")?.as_usize()?,
+        batch: j.expect("batch")?.as_usize()?,
+        micro: j.expect("micro")?.as_usize()?,
+        microbatches: j.expect("microbatches")?.as_usize()?,
+        cache_weights: j.expect("cache_weights")?.as_bool()?,
+        model: ModelKind::parse(j.expect("model")?.as_str()?)?,
+        heads: j.expect("heads")?.as_usize()?,
+    })
+}
+
+impl Checkpoint {
+    /// Snapshot a model's parameters for serving.
+    pub fn from_model(model: &HostModel, mode: QuantMode, step: u64) -> Checkpoint {
+        Checkpoint {
+            spec: model.spec,
+            mode,
+            step,
+            params: ModelParams { embed: model.embed.clone(), weights: model.weights.clone() },
+        }
+    }
+
+    /// Reconstruct the immutable serve/eval model. Shapes were already
+    /// validated against the spec at [`Checkpoint::load`] time, so this
+    /// only re-derives the slot table and wraps the numerics mode.
+    pub fn into_model(self) -> Result<Model> {
+        let params = HostModel::from_parts(self.spec, self.params.embed, self.params.weights)?;
+        Ok(Model::new(params, self.mode))
+    }
+
+    /// Write the blob: u64-LE header length, JSON header (magic, spec,
+    /// mode, step, tensor table), then raw little-endian f32 payloads.
+    pub fn save(&self, path: &Path) -> Result<(), CkptError> {
+        let io = |err| CkptError::Io { path: path.to_path_buf(), err };
+        let slots = linear_slots(&self.spec);
+        let mut payload: Vec<u8> = Vec::new();
+        let mut tensors = Vec::new();
+        let mut push = |name: &str, data: &[f32], payload: &mut Vec<u8>| {
+            let off = payload.len();
+            payload.extend(data.iter().flat_map(|v| v.to_le_bytes()));
+            tensors.push(obj(vec![
+                ("name", jstr(name)),
+                ("offset", num(off as f64)),
+                ("elems", num(data.len() as f64)),
+            ]));
+        };
+        push("embed", &self.params.embed, &mut payload);
+        for (slot, w) in slots.iter().zip(&self.params.weights) {
+            push(&slot.name, w, &mut payload);
+        }
+        let header = obj(vec![
+            ("magic", jstr(HOST_MAGIC)),
+            ("spec", spec_to_json(&self.spec)),
+            ("mode", jstr(self.mode.name())),
+            ("step", num(self.step as f64)),
+            ("tensors", Json::Arr(tensors)),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path).map_err(io)?;
+        f.write_all(&(header.len() as u64).to_le_bytes()).map_err(io)?;
+        f.write_all(header.as_bytes()).map_err(io)?;
+        f.write_all(&payload).map_err(io)?;
+        Ok(())
+    }
+
+    /// Read and fully validate a blob written by [`Checkpoint::save`].
+    pub fn load(path: &Path) -> Result<Checkpoint, CkptError> {
+        let not_ckpt = || CkptError::NotACheckpoint { path: path.to_path_buf() };
+        let bytes = std::fs::read(path)
+            .map_err(|err| CkptError::Io { path: path.to_path_buf(), err })?;
+        if bytes.len() < 8 {
+            return Err(not_ckpt());
+        }
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        let Some(hbytes) = bytes.get(8..8 + hlen) else {
+            return Err(not_ckpt());
+        };
+        let header = std::str::from_utf8(hbytes)
+            .ok()
+            .and_then(|s| Json::parse(s).ok())
+            .ok_or_else(not_ckpt)?;
+        let magic = header
+            .expect("magic")
+            .and_then(|m| m.as_str().map(str::to_string))
+            .map_err(|_| not_ckpt())?;
+        if magic == MAGIC {
+            return Err(CkptError::LegacyAot { path: path.to_path_buf() });
+        }
+        if magic != HOST_MAGIC {
+            if magic.starts_with("moss-host-ckpt-") {
+                return Err(CkptError::UnsupportedVersion { found: magic });
+            }
+            return Err(not_ckpt());
+        }
+        let malformed = |e: anyhow::Error| CkptError::Malformed { what: e.to_string() };
+        let spec = header
+            .expect("spec")
+            .and_then(spec_from_json)
+            .map_err(malformed)?;
+        let mode = header
+            .expect("mode")
+            .and_then(|m| QuantMode::parse(m.as_str()?))
+            .map_err(malformed)?;
+        let step = header.expect("step").and_then(|s| s.as_usize()).map_err(malformed)? as u64;
+        let payload = &bytes[8 + hlen..];
+        let mut table = std::collections::HashMap::new();
+        for t in header.expect("tensors").and_then(|t| Ok(t.as_arr()?.to_vec())).map_err(malformed)?
+        {
+            let name = t.expect("name").and_then(|n| Ok(n.as_str()?.to_string())).map_err(malformed)?;
+            let off = t.expect("offset").and_then(|o| o.as_usize()).map_err(malformed)?;
+            let elems = t.expect("elems").and_then(|e| e.as_usize()).map_err(malformed)?;
+            table.insert(name, (off, elems));
+        }
+        let read = |name: &str, want: usize| -> Result<Vec<f32>, CkptError> {
+            let &(off, elems) = table.get(name).ok_or_else(|| CkptError::Malformed {
+                what: format!("tensor {name:?} missing from header table"),
+            })?;
+            if elems != want {
+                return Err(CkptError::ShapeMismatch {
+                    what: format!("{name}: {elems} elems, spec implies {want}"),
+                });
+            }
+            let bytes = payload.get(off..off + elems * 4).ok_or_else(|| CkptError::Malformed {
+                what: format!("tensor {name:?} extends past end of payload"),
+            })?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let embed = read("embed", spec.vocab * spec.dim)?;
+        let slots = linear_slots(&spec);
+        let mut weights = Vec::with_capacity(slots.len());
+        for s in &slots {
+            weights.push(read(&s.name, s.k * s.n)?);
+        }
+        Ok(Checkpoint { spec, mode, step, params: ModelParams { embed, weights } })
+    }
 }

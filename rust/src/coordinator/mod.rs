@@ -7,5 +7,6 @@ pub mod probe;
 pub mod state;
 pub mod trainer;
 
+pub use checkpoint::{Checkpoint, CkptError};
 pub use state::TrainState;
 pub use trainer::{StepOutcome, Trainer};

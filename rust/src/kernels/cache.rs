@@ -256,6 +256,16 @@ impl PackedWeightCache {
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
+
+    /// Resident bytes of every current-generation packing — the serve
+    /// engine's weight-memory footprint (it packs once and never
+    /// invalidates, so this is the server's steady state).
+    pub fn packed_bytes(&self) -> usize {
+        (0..self.slots.len())
+            .filter(|&i| self.is_fresh(i))
+            .map(|i| self.slots[i].as_ref().map_or(0, |s| s.weight.payload_bytes()))
+            .sum()
+    }
 }
 
 #[cfg(test)]

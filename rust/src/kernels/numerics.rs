@@ -72,6 +72,20 @@ impl PackedWeight {
         }
     }
 
+    /// Resident bytes of this slot's operand payloads — what the server
+    /// actually holds per weight for its lifetime. FP8: 1 B/elem u8
+    /// payload + i8 micro-exponents + the f32 global scale, per layout;
+    /// bf16: the two f32 layouts (no packing, 4 B/elem).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            PackedWeight::Fp8 { fwd, bwd } => [fwd, bwd]
+                .iter()
+                .map(|t| t.data.len() + t.ss_exp.len() + std::mem::size_of::<f32>())
+                .sum(),
+            PackedWeight::Bf16 { wt, w, .. } => (wt.len() + w.len()) * std::mem::size_of::<f32>(),
+        }
+    }
+
     /// Backward FP8 operand; panics on a bf16 slot.
     pub fn bwd_fp8(&self) -> &PackedFp8Tensor {
         match self {
@@ -102,6 +116,11 @@ impl LinearNumerics {
 
     pub fn mode(&self) -> QuantMode {
         self.mode
+    }
+
+    /// Micro-group size of the microscaled modes.
+    pub fn micro(&self) -> usize {
+        self.micro
     }
 
     /// Whether this mode quantizes to FP8 payloads at all.

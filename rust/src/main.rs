@@ -43,6 +43,13 @@ const COMMANDS: &[(&str, &str)] = &[
         "train all four --mode numerics on the host backend over one shared \
          seed/corpus and print the final-loss table (zero artifacts)",
     ),
+    (
+        "serve",
+        "FP8 serving engine: pack-once weights, KV-cache decode, continuous \
+         batching over synthetic Poisson traffic (--ckpt PATH | --synthetic, \
+         --requests N, --rate R, --max-batch B, --threads T, --max-ctx N, \
+         --assert-throughput; emits BENCH_serve.json)",
+    ),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
     ("snr", "Table-7 SNR study across quantization schemes"),
@@ -61,6 +68,7 @@ fn run() -> Result<()> {
     }
     match args.subcommand.as_deref().unwrap() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "ablate" => moss::report::training::run_ablate_cli(&args),
         "finetune" => cmd_finetune(&args),
         "eval" => cmd_eval(&args),
@@ -201,7 +209,13 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
     if let Some(out) = &trainer.cfg.out_dir {
         std::fs::create_dir_all(out)?;
         std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
-        eprintln!("wrote {}/losses.csv", out.display());
+        let ckpt = moss::coordinator::Checkpoint::from_model(
+            &trainer.model,
+            trainer.cfg.mode,
+            trainer.steps_done,
+        );
+        ckpt.save(&out.join("ckpt.bin"))?;
+        eprintln!("wrote {}/losses.csv and ckpt.bin (serve with --ckpt)", out.display());
     }
     if args.has("assert-improved") {
         if !first.is_finite() || !tail.is_finite() {
@@ -211,6 +225,116 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
             bail!("loss did not decrease: first {first:.4} -> final {tail:.4}");
         }
         eprintln!("loss improved: {first:.4} -> {tail:.4}");
+    }
+    Ok(())
+}
+
+/// `repro serve`: the FP8 inference engine. Loads a self-describing
+/// host checkpoint (`--ckpt`, zero re-specified shape/mode flags) or a
+/// fresh seeded model (`--synthetic`, transformer by default), packs
+/// every weight once, and drains an open-loop Poisson workload through
+/// the continuous-batching scheduler. Always writes `BENCH_serve.json`;
+/// `--assert-throughput` turns the packed-vs-dequantize decode gate and
+/// full workload completion into the exit code (the `e2e-serve` CI
+/// contract).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use moss::backend::serve;
+    use moss::backend::{DecodePath, Model};
+    let serve_spec = moss::config::ServeSpec::default().apply_args(args)?;
+    let model = match args.get("ckpt") {
+        Some(p) => {
+            // The checkpoint is self-describing: shape/mode flags would
+            // either be redundant or silently ignored — reject them.
+            for flag in ["model", "dim", "ffn", "layers", "heads", "vocab", "mode", "micro"] {
+                if args.get(flag).is_some() {
+                    bail!("--{flag} conflicts with --ckpt (the checkpoint is self-describing)");
+                }
+            }
+            let ckpt = moss::coordinator::Checkpoint::load(std::path::Path::new(p))?;
+            eprintln!(
+                "checkpoint: model {} ({} layers, dim {}), mode {}, step {}",
+                ckpt.spec.model.name(),
+                ckpt.spec.layers,
+                ckpt.spec.dim,
+                ckpt.mode.name(),
+                ckpt.step
+            );
+            ckpt.into_model()?
+        }
+        None => {
+            if !args.has("synthetic") {
+                bail!("serve needs --ckpt <path> or --synthetic (fresh seeded weights)");
+            }
+            let mut cfg = TrainConfig::default();
+            cfg.host.model = moss::config::ModelKind::Transformer;
+            let cfg = cfg.apply_args(args)?;
+            Model::init(cfg.host, cfg.mode, cfg.seed)
+        }
+    };
+    let engine = serve::Engine::new(model, serve_spec)?;
+    let spec = *engine.model().spec();
+    eprintln!(
+        "serve: model {} ({} layers, dim {}, {} heads), mode {}, weights packed once \
+         ({:.1} KB resident); {} requests at {:.0} req/s, max_batch {}, {} threads, max_ctx {}",
+        spec.model.name(),
+        spec.layers,
+        spec.dim,
+        spec.heads,
+        engine.model().numerics().mode().name(),
+        engine.packed_bytes() as f64 / 1e3,
+        serve_spec.requests,
+        serve_spec.rate,
+        serve_spec.max_batch,
+        serve_spec.threads,
+        serve_spec.max_ctx,
+    );
+    let reqs = serve::synthetic_requests(&serve_spec, spec.vocab);
+    let report = engine.run(&reqs, DecodePath::Packed)?;
+    println!(
+        "serve done: {}/{} requests completed ({} rejected at admission), \
+         {:.1} tok/s open-loop over {:.2}s, p50 {:.1} ms, p99 {:.1} ms, \
+         occupancy {:.0}% ({:.1} mean active / {})",
+        report.completions.len(),
+        reqs.len(),
+        report.rejected.len(),
+        report.tokens_per_sec,
+        report.wall_secs,
+        report.p50_ms,
+        report.p99_ms,
+        report.occupancy * 100.0,
+        report.mean_active,
+        serve_spec.max_batch,
+    );
+    let (batch, plen, steps) = (serve_spec.max_batch, 8, 32);
+    let tps_packed = serve::measure_decode_tps(&engine, DecodePath::Packed, batch, plen, steps)?;
+    let tps_dequant =
+        serve::measure_decode_tps(&engine, DecodePath::DequantF32, batch, plen, steps)?;
+    println!(
+        "decode closed-loop (batch {batch}): packed {:.1} tok/s vs f32-dequantize \
+         {:.1} tok/s ({:.2}x)",
+        tps_packed,
+        tps_dequant,
+        if tps_dequant > 0.0 { tps_packed / tps_dequant } else { 0.0 },
+    );
+    let bench_path = args.get_or("bench-out", "BENCH_serve.json");
+    serve::write_bench_json(
+        std::path::Path::new(bench_path),
+        &engine,
+        &report,
+        tps_packed,
+        tps_dequant,
+    )?;
+    eprintln!("wrote {bench_path}");
+    if args.has("assert-throughput") {
+        if report.completions.len() != reqs.len() - report.rejected.len() {
+            bail!(
+                "workload did not drain: {} of {} admitted requests completed",
+                report.completions.len(),
+                reqs.len() - report.rejected.len()
+            );
+        }
+        serve::throughput_gate(&engine, tps_packed, tps_dequant)?;
+        eprintln!("throughput gate passed: packed decode >= f32-dequantize baseline");
     }
     Ok(())
 }

@@ -235,9 +235,112 @@ impl OverlapStats {
     }
 }
 
+/// Nearest-rank percentile of `samples` (p in [0, 100]); 0 when empty.
+/// Sorts a copy — serve-sized sample counts, not a hot path.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Serving-side accounting: per-request end-to-end latencies, decode
+/// throughput, and batch occupancy, folded in by the scheduler loop.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// End-to-end request latencies (arrival -> last token), ms.
+    latencies_ms: Vec<f64>,
+    /// Generated (decode-step) tokens, prefill excluded.
+    pub decode_tokens: u64,
+    /// Scheduler decode iterations.
+    pub steps: u64,
+    /// Sum over steps of the number of sequences active that step.
+    active_sum: u64,
+}
+
+impl ServeStats {
+    /// Fold in one scheduler iteration: `active` sequences advanced,
+    /// emitting `tokens` new tokens.
+    pub fn record_step(&mut self, active: usize, tokens: u64) {
+        self.steps += 1;
+        self.active_sum += active as u64;
+        self.decode_tokens += tokens;
+    }
+
+    /// Fold in one finished request's end-to-end latency.
+    pub fn record_completion(&mut self, latency_ms: f64) {
+        self.latencies_ms.push(latency_ms);
+    }
+
+    pub fn completions(&self) -> usize {
+        self.latencies_ms.len()
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.latencies_ms, 99.0)
+    }
+
+    pub fn mean_latency_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        self.latencies_ms.iter().sum::<f64>() / self.latencies_ms.len() as f64
+    }
+
+    /// Mean active sequences per decode step. 0 before any step.
+    pub fn mean_active(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.active_sum as f64 / self.steps as f64
+    }
+
+    /// Mean occupancy as a fraction of the batch capacity.
+    pub fn occupancy(&self, max_batch: usize) -> f64 {
+        if max_batch == 0 {
+            return 0.0;
+        }
+        self.mean_active() / max_batch as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[7.0], 50.0), 7.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn serve_stats_fold() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.mean_active(), 0.0);
+        s.record_step(4, 4);
+        s.record_step(2, 2);
+        s.record_completion(10.0);
+        s.record_completion(30.0);
+        assert_eq!(s.decode_tokens, 6);
+        assert_eq!(s.mean_active(), 3.0);
+        assert_eq!(s.occupancy(4), 0.75);
+        assert_eq!(s.completions(), 2);
+        assert_eq!(s.p50_ms(), 10.0);
+        assert_eq!(s.p99_ms(), 30.0);
+        assert_eq!(s.mean_latency_ms(), 20.0);
+    }
 
     #[test]
     fn comm_stats_averages() {

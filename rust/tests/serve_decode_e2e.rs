@@ -1,0 +1,310 @@
+//! End-to-end tests of the train/infer API split and the FP8 serving
+//! engine (`backend::model` + `backend::serve` + the v2 host
+//! checkpoint). Nothing here touches artifacts.
+//!
+//! The contracts, strongest first:
+//!
+//! 1. **Wrapper bit-identity** — `HostTrainer::forward_logits` and
+//!    `Model::forward_logits` are the same bits on the same parameters
+//!    in every numerics mode (both route through
+//!    `forward_logits_with`; pack-then-invalidate == fresh-pack).
+//! 2. **KV-cache coherence** — incremental `decode_step` with a
+//!    persistent per-sequence cache reproduces `forward_ctx` (full
+//!    prefix, K/V rebuilt from scratch) **bitwise** in all four modes,
+//!    on prefix lengths that are *not* micro-aligned, for both
+//!    architectures — and independently of GEMM thread count.
+//! 3. **bf16 bridge** — bf16 rounding is elementwise and zero-padding
+//!    is exact under the fixed-reduction GEMM, so bf16 decode equals
+//!    the *batched training forward* bitwise when the prompt fills one
+//!    training sequence. (The FP8 modes intentionally differ there:
+//!    the tensor-wide level-1 activation scale couples batched rows —
+//!    see `backend::model` docs — which is exactly why `forward_ctx`
+//!    is the serve-path reference.)
+//! 4. **Continuous-batching determinism** — same seed + arrival trace
+//!    ⇒ identical per-request tokens regardless of scheduler thread
+//!    count or batch width (row-local quantization keeps sequences
+//!    independent of batch composition).
+//! 5. **Checkpoint round-trip** — v2 save/load is bitwise; `repro
+//!    serve --ckpt`-style reconstruction serves logits bit-identical
+//!    to the trainer that wrote it; wrong/legacy/corrupt blobs fail
+//!    with the matching typed `CkptError`, never a panic.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use moss::backend::serve::{synthetic_requests, Engine};
+use moss::backend::{DecodePath, HostTrainer, Model};
+use moss::config::{
+    BackendKind, HostSpec, LrSchedule, ModelKind, QuantMode, ServeSpec, TrainConfig,
+};
+use moss::coordinator::{Checkpoint, CkptError};
+use moss::kernels::GemmConfig;
+
+const MODES: [QuantMode; 4] =
+    [QuantMode::Bf16, QuantMode::PerTensor, QuantMode::Coat, QuantMode::Moss];
+
+fn tiny_spec(model: ModelKind) -> HostSpec {
+    HostSpec {
+        vocab: 64,
+        dim: 64,
+        ffn: 64,
+        layers: 2,
+        seq: 32,
+        batch: 1,
+        micro: 32,
+        microbatches: 1,
+        cache_weights: true,
+        model,
+        heads: 2,
+    }
+}
+
+fn train_cfg(spec: HostSpec, mode: QuantMode, steps: u64) -> TrainConfig {
+    TrainConfig {
+        backend: BackendKind::Host,
+        host: spec,
+        mode,
+        steps,
+        lr: LrSchedule { peak: 5e-3, warmup_steps: 1, total_steps: steps, final_ratio: 0.1 },
+        log_every: 0,
+        ..TrainConfig::default()
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("moss_serve_e2e_{}_{tag}.bin", std::process::id()))
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+    }
+}
+
+// -- 1. the trainer's forward_logits is a thin wrapper over Model ------
+
+#[test]
+fn trainer_and_model_forward_logits_bit_identical_all_modes() {
+    let spec = tiny_spec(ModelKind::Transformer);
+    let inputs: Vec<i32> = (0..spec.seq as i32).map(|i| (i * 7) % spec.vocab as i32).collect();
+    for mode in MODES {
+        let mut trainer = HostTrainer::new(train_cfg(spec, mode, 3)).unwrap();
+        trainer.run(3).unwrap();
+        let from_trainer = trainer.forward_logits(&inputs).unwrap();
+        let model = Model::new(trainer.model.clone(), mode);
+        let from_model = model.forward_logits(&inputs).unwrap();
+        assert_bits_eq(&from_trainer, &from_model, &format!("eval wrapper, mode {}", mode.name()));
+    }
+}
+
+// -- 2. KV-cache decode == full-context forward, bitwise, all modes ----
+
+#[test]
+fn kv_decode_matches_forward_ctx_bitwise_all_modes() {
+    // 13 tokens: not a multiple of micro (32) or seq — the padding and
+    // admission-relaxation cases are on the hot path, not the aligned
+    // corner.
+    for arch in [ModelKind::Transformer, ModelKind::Mlp] {
+        let spec = tiny_spec(arch);
+        let tokens: Vec<i32> = (0..13).map(|i| (i * 11 + 3) % spec.vocab as i32).collect();
+        for mode in MODES {
+            let model = Model::init(spec, mode, 21);
+            let packed = model.pack();
+            let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+            let full = model.forward_ctx(&packed, &tokens, DecodePath::Packed, gemm).unwrap();
+            let mut st = model.begin_decode();
+            for (t, &tok) in tokens.iter().enumerate() {
+                let step =
+                    model.decode_step(&packed, &mut st, tok, DecodePath::Packed, gemm).unwrap();
+                assert_bits_eq(
+                    &step,
+                    &full[t * spec.vocab..(t + 1) * spec.vocab],
+                    &format!("{} {} decode pos {t}", arch.name(), mode.name()),
+                );
+            }
+            // ... and the per-output reduction order is fixed, so GEMM
+            // thread count cannot change decode bits either.
+            let mut st2 = model.begin_decode();
+            let threaded = GemmConfig { threads: 4, ..GemmConfig::default() };
+            let mut last = Vec::new();
+            for &tok in &tokens {
+                last = model
+                    .decode_step(&packed, &mut st2, tok, DecodePath::Packed, threaded)
+                    .unwrap();
+            }
+            assert_bits_eq(
+                &last,
+                &full[(tokens.len() - 1) * spec.vocab..],
+                &format!("{} {} decode under 4 GEMM threads", arch.name(), mode.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_skips_the_training_seq_alignment_rule() {
+    // seq 17 is training-invalid (the PV contraction would misalign) but
+    // serving never contracts over seq as a batch dim: decode pads the
+    // KV length per step, so the same spec serves fine.
+    let spec = HostSpec { seq: 17, ..tiny_spec(ModelKind::Transformer) };
+    assert!(spec.validate().is_err(), "seq 17 must stay invalid for training");
+    let model = Model::init(spec, QuantMode::Moss, 4);
+    model.validate_serve().expect("serve-side validation must not require seq alignment");
+    let packed = model.pack();
+    let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+    let mut st = model.begin_decode();
+    for t in 0..5 {
+        model.decode_step(&packed, &mut st, t as i32, DecodePath::Packed, gemm).unwrap();
+    }
+    assert_eq!(st.len(), 5);
+}
+
+// -- 3. the bf16 bridge to the batched training forward ----------------
+
+#[test]
+fn bf16_decode_bridges_to_batched_forward() {
+    let spec = tiny_spec(ModelKind::Transformer);
+    let model = Model::init(spec, QuantMode::Bf16, 33);
+    let packed = model.pack();
+    let gemm = GemmConfig { threads: 1, ..GemmConfig::default() };
+    let tokens: Vec<i32> = (0..spec.seq as i32).map(|i| (i * 5 + 1) % spec.vocab as i32).collect();
+    let batched = model.forward_logits(&tokens).unwrap();
+    let mut st = model.begin_decode();
+    for (t, &tok) in tokens.iter().enumerate() {
+        let step = model.decode_step(&packed, &mut st, tok, DecodePath::Packed, gemm).unwrap();
+        assert_bits_eq(
+            &step,
+            &batched[t * spec.vocab..(t + 1) * spec.vocab],
+            &format!("bf16 bridge pos {t}"),
+        );
+    }
+}
+
+// -- 4. continuous batching is bitwise-deterministic -------------------
+
+#[test]
+fn continuous_batching_is_deterministic_across_schedules() {
+    let model = |seed| Model::init(tiny_spec(ModelKind::Transformer), QuantMode::Moss, seed);
+    let base = ServeSpec {
+        requests: 10,
+        rate: 1e5, // all arrive at once: admission order is load-driven
+        prompt_min: 2,
+        prompt_max: 6,
+        new_min: 2,
+        new_max: 5,
+        max_batch: 4,
+        threads: 1,
+        max_ctx: 16,
+        seed: 5,
+    };
+    let reqs = synthetic_requests(&base, 64);
+    let run = |spec: ServeSpec| -> BTreeMap<usize, Vec<i32>> {
+        let engine = Engine::new(model(13), spec).unwrap();
+        let report = engine.run(&reqs, DecodePath::Packed).unwrap();
+        assert!(report.rejected.is_empty());
+        report.completions.into_iter().map(|c| (c.id, c.tokens)).collect()
+    };
+    let reference = run(base);
+    assert_eq!(reference.len(), reqs.len());
+    for (threads, max_batch) in [(3, 4), (4, 4), (2, 2), (1, 8)] {
+        let got = run(ServeSpec { threads, max_batch, ..base });
+        assert_eq!(
+            got, reference,
+            "outputs changed under threads={threads}, max_batch={max_batch}"
+        );
+    }
+}
+
+// -- 5. the v2 self-describing checkpoint ------------------------------
+
+#[test]
+fn checkpoint_round_trips_and_serves_bit_identical_logits() {
+    let spec = tiny_spec(ModelKind::Transformer);
+    let mode = QuantMode::Moss;
+    let mut trainer = HostTrainer::new(train_cfg(spec, mode, 2)).unwrap();
+    trainer.run(2).unwrap();
+    let path = tmp_path("roundtrip");
+    Checkpoint::from_model(&trainer.model, mode, trainer.steps_done).save(&path).unwrap();
+
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.spec, spec);
+    assert_eq!(loaded.mode, mode);
+    assert_eq!(loaded.step, 2);
+    assert_bits_eq(&loaded.params.embed, &trainer.model.embed, "embed");
+    assert_eq!(loaded.params.weights.len(), trainer.model.weights.len());
+    for (i, (a, b)) in loaded.params.weights.iter().zip(&trainer.model.weights).enumerate() {
+        assert_bits_eq(a, b, &format!("weight slot {i}"));
+    }
+
+    // The `repro serve --ckpt` reconstruction: zero re-specified flags,
+    // same logits as the trainer that wrote the blob.
+    let model = loaded.into_model().unwrap();
+    let inputs: Vec<i32> = (0..spec.seq as i32).map(|i| (i * 3) % spec.vocab as i32).collect();
+    let from_ckpt = model.forward_logits(&inputs).unwrap();
+    let from_trainer = trainer.forward_logits(&inputs).unwrap();
+    assert_bits_eq(&from_ckpt, &from_trainer, "checkpoint-reconstructed logits");
+
+    // ... and the reconstructed model serves.
+    let serve = ServeSpec { requests: 3, rate: 1e5, ..ServeSpec::default() };
+    let engine = Engine::new(model, serve).unwrap();
+    let reqs = synthetic_requests(&serve, spec.vocab);
+    let report = engine.run(&reqs, DecodePath::Packed).unwrap();
+    assert_eq!(report.completions.len(), reqs.len());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn checkpoint_loader_fails_typed_never_panics() {
+    // Garbage bytes: not a checkpoint.
+    let garbage = tmp_path("garbage");
+    std::fs::write(&garbage, b"definitely not a checkpoint").unwrap();
+    assert!(matches!(
+        Checkpoint::load(&garbage).unwrap_err(),
+        CkptError::NotACheckpoint { .. }
+    ));
+    std::fs::remove_file(&garbage).ok();
+
+    // A v1 AOT blob: recognized and redirected, not mis-parsed.
+    let legacy = tmp_path("legacy");
+    let header = r#"{"magic":"moss-ckpt-v1","config":"tiny","step":0,"tensors":[]}"#;
+    let mut bytes = (header.len() as u64).to_le_bytes().to_vec();
+    bytes.extend_from_slice(header.as_bytes());
+    std::fs::write(&legacy, &bytes).unwrap();
+    assert!(matches!(Checkpoint::load(&legacy).unwrap_err(), CkptError::LegacyAot { .. }));
+    std::fs::remove_file(&legacy).ok();
+
+    // A future host-format version: typed as unsupported.
+    let future = tmp_path("future");
+    let header = r#"{"magic":"moss-host-ckpt-v3"}"#;
+    let mut bytes = (header.len() as u64).to_le_bytes().to_vec();
+    bytes.extend_from_slice(header.as_bytes());
+    std::fs::write(&future, &bytes).unwrap();
+    assert!(matches!(
+        Checkpoint::load(&future).unwrap_err(),
+        CkptError::UnsupportedVersion { .. }
+    ));
+    std::fs::remove_file(&future).ok();
+
+    // Truncated payload: header parses, a tensor extends past the end.
+    let spec = tiny_spec(ModelKind::Mlp);
+    let trainer = HostTrainer::new(train_cfg(spec, QuantMode::Moss, 1)).unwrap();
+    let good = tmp_path("truncated");
+    Checkpoint::from_model(&trainer.model, QuantMode::Moss, 0).save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+    std::fs::write(&good, &bytes[..8 + hlen + 16]).unwrap();
+    assert!(matches!(Checkpoint::load(&good).unwrap_err(), CkptError::Malformed { .. }));
+    std::fs::remove_file(&good).ok();
+
+    // A tensor whose element count disagrees with its own spec.
+    let doctored = tmp_path("shape");
+    let mut ckpt = Checkpoint::from_model(&trainer.model, QuantMode::Moss, 0);
+    ckpt.params.weights[0].truncate(8);
+    ckpt.save(&doctored).unwrap();
+    assert!(matches!(
+        Checkpoint::load(&doctored).unwrap_err(),
+        CkptError::ShapeMismatch { .. }
+    ));
+    std::fs::remove_file(&doctored).ok();
+}
