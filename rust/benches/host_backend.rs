@@ -338,4 +338,13 @@ fn main() {
     );
     std::fs::write("BENCH_host.json", &json).expect("writing BENCH_host.json");
     println!("wrote BENCH_host.json");
+
+    // --- perf trajectory (opt-in): fold this run into the committed
+    // append-only record that `repro events --trend` renders/gates -----
+    if let Some(path) = moss::bench_util::trajectory_append_path() {
+        let parsed = moss::util::json::Json::parse(&json).expect("BENCH_host.json parses");
+        moss::bench_util::append_trajectory(&path, "host", &parsed)
+            .expect("appending to the perf trajectory");
+        println!("appended host bench record to {}", path.display());
+    }
 }

@@ -92,4 +92,14 @@ fn main() {
     )
     .expect("writing BENCH_serve.json");
     println!("wrote BENCH_serve.json");
+
+    // --- perf trajectory (opt-in): fold this run into the committed
+    // append-only record that `repro events --trend` renders/gates -----
+    if let Some(path) = moss::bench_util::trajectory_append_path() {
+        let json = std::fs::read_to_string("BENCH_serve.json").expect("reading BENCH_serve.json");
+        let parsed = moss::util::json::Json::parse(&json).expect("BENCH_serve.json parses");
+        moss::bench_util::append_trajectory(&path, "serve", &parsed)
+            .expect("appending to the perf trajectory");
+        println!("appended serve bench record to {}", path.display());
+    }
 }

@@ -90,6 +90,7 @@ use crate::config::{BackendKind, QuantMode, ShardMode, TrainConfig, WireKind};
 use crate::coordinator::StepOutcome;
 use crate::data::BatchSource;
 use crate::distsim::{ring_allreduce_stats, AllreduceStats, ReduceScattered, RingSession, Wire};
+use crate::events::{Event, EventSink};
 use crate::kernels::{BucketLayout, GemmConfig, LinearNumerics, PackedWeightCache};
 use crate::metrics::{CommStats, OverlapStats, Throughput, TrainHistory};
 use crate::optim::{AdamW, AdamWParams};
@@ -98,8 +99,8 @@ use crate::util::rng::stream_seed;
 
 use super::host::{
     apply_update, average_and_clip, backward, check_data_vocab, clip_factor, data_base_seed,
-    emission_order, forward, make_batch_source, make_scaler, softmax_xent, split_tokens, GradSink,
-    GradSlot, Grads, HostModel, SharedWeights,
+    emission_order, emit_scale_updates, forward, make_batch_source, make_scaler, softmax_xent,
+    split_tokens, GradSink, GradSlot, Grads, HostModel, SharedWeights,
 };
 
 /// One worker's microbatch shard: `(inputs, targets)` token matrices
@@ -405,6 +406,7 @@ pub struct DistTrainer {
     /// One source under `Scatter`, one per worker under `Streams`.
     sources: Vec<Box<dyn BatchSource>>,
     last_scales: Vec<f32>,
+    sink: EventSink,
 }
 
 impl DistTrainer {
@@ -499,7 +501,15 @@ impl DistTrainer {
             scaler,
             sources,
             last_scales: Vec::new(),
+            sink: EventSink::disabled(),
         })
+    }
+
+    /// Attach a telemetry sink (`--events`). Observation-only, exactly
+    /// as on [`HostTrainer`]: the serial and pipelined step bodies are
+    /// bitwise-identical with or without an active sink.
+    pub fn set_sink(&mut self, sink: EventSink) {
+        self.sink = sink;
     }
 
     fn make_sources(cfg: &TrainConfig) -> Vec<Box<dyn BatchSource>> {
@@ -554,6 +564,7 @@ impl DistTrainer {
     /// definition for both step bodies: the serial-vs-pipelined bitwise
     /// parity contract forbids this code from forking.
     fn step_prologue(&mut self, step_1b: u64, lr: f32) -> Result<(Vec<Shard>, GemmConfig)> {
+        let absmax_calls_before = self.scaler.stats().absmax_calls;
         let scales = if self.numerics.uses_level1_scale() {
             let model = &self.model;
             let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
@@ -562,6 +573,10 @@ impl DistTrainer {
             Vec::new()
         };
         self.last_scales.clone_from(&scales);
+        if self.sink.active() {
+            let snap = self.scaler.stats().absmax_calls > absmax_calls_before;
+            emit_scale_updates(&self.sink, &self.model, step_1b, &scales, snap);
+        }
         for i in 0..self.model.slots.len() {
             self.model.ensure_packed(&mut self.cache, &self.numerics, i, &scales);
         }
@@ -585,6 +600,14 @@ impl DistTrainer {
         let loss = loss_sum / spec.microbatches as f64;
         self.throughput.step((spec.batch * spec.seq * spec.microbatches) as u64);
         self.history.record_loss(step_1b, loss, gnorm);
+        if self.sink.active() {
+            self.sink.emit(&Event::TrainStep {
+                step: step_1b,
+                loss,
+                gnorm,
+                tokens_per_sec: self.throughput.tokens_per_sec(),
+            });
+        }
         if self.cfg.traj_every > 0 && step_1b % self.cfg.traj_every == 0 {
             if let Some(&s0) = self.last_scales.first() {
                 let jit = self.exact_scales();
@@ -746,6 +769,17 @@ impl DistTrainer {
             agg.bytes += st.bytes_on_wire;
             agg.comm_secs += tm.end - tm.start;
             agg.ready_secs += tm.ready;
+            if self.sink.active() {
+                self.sink.emit(&Event::CommBucket {
+                    step: step_1b,
+                    bucket: b,
+                    bytes: st.bytes_on_wire,
+                    ready_ms: tm.ready * 1e3,
+                    ring_ms: (tm.end - tm.start) * 1e3,
+                    hidden_ms: h * 1e3,
+                    exposed_ms: ((tm.end - tm.start) - h) * 1e3,
+                });
+            }
         }
         self.overlap.record(hidden, exposed, bwd_secs);
         let n_elems = self.layout.total_elems() as u64;

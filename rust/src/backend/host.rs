@@ -48,6 +48,7 @@ use crate::config::{BackendKind, DataKind, HostSpec, ModelKind, ScalingKind, Tra
 use crate::coordinator::StepOutcome;
 use crate::data::synth::CorpusSpec;
 use crate::data::{BatchSource, SyntheticCorpus, TaskMixSource};
+use crate::events::{Event, EventSink};
 use crate::kernels::linear::transpose;
 use crate::kernels::{GemmConfig, LinearNumerics, PackedWeight, PackedWeightCache};
 use crate::metrics::{Throughput, TrainHistory};
@@ -888,6 +889,7 @@ pub struct HostTrainer {
     scaler: Box<dyn ScalingStrategy>,
     data: Box<dyn BatchSource>,
     last_scales: Vec<f32>,
+    sink: EventSink,
 }
 
 impl HostTrainer {
@@ -924,7 +926,16 @@ impl HostTrainer {
             scaler,
             data,
             last_scales: Vec::new(),
+            sink: EventSink::disabled(),
         })
+    }
+
+    /// Attach a telemetry sink (`--events`). The default is the no-op
+    /// sink; emission is observation-only either way, so the step's
+    /// numerics are bitwise-identical with or without one (pinned by
+    /// `tests/events_stream.rs`).
+    pub fn set_sink(&mut self, sink: EventSink) {
+        self.sink = sink;
     }
 
     /// Execute one optimizer step (all microbatches + AdamW update).
@@ -938,6 +949,7 @@ impl HostTrainer {
         // consult the strategy; bf16/coat quantize without it, so the
         // absmax machinery is skipped entirely (and its call accounting
         // stays honest).
+        let absmax_calls_before = self.scaler.stats().absmax_calls;
         let scales = if self.numerics.uses_level1_scale() {
             let model = &self.model;
             let mut src = || -> Result<Vec<f32>> { Ok(model.weight_absmax()) };
@@ -946,6 +958,10 @@ impl HostTrainer {
             Vec::new()
         };
         self.last_scales.clone_from(&scales);
+        if self.sink.active() {
+            let snap = self.scaler.stats().absmax_calls > absmax_calls_before;
+            emit_scale_updates(&self.sink, &self.model, step_1b, &scales, snap);
+        }
 
         // --- microbatch loop: weights pack once, reuse thereafter ----
         let (b, s) = (spec.batch, spec.seq);
@@ -978,6 +994,14 @@ impl HostTrainer {
         let loss = loss_sum / spec.microbatches as f64;
         self.throughput.step((b * s * spec.microbatches) as u64);
         self.history.record_loss(step_1b, loss, gnorm);
+        if self.sink.active() {
+            self.sink.emit(&Event::TrainStep {
+                step: step_1b,
+                loss,
+                gnorm,
+                tokens_per_sec: self.throughput.tokens_per_sec(),
+            });
+        }
 
         // --- instrumentation (same Fig-4 sampling as the AOT path;
         //     meaningless without a predicted level-1 scale) ----------
@@ -1039,6 +1063,42 @@ impl HostTrainer {
 
     pub fn scaler_name(&self) -> &'static str {
         self.scaler.name()
+    }
+}
+
+/// Emit one [`Event::ScaleUpdate`] per quantized linear: the strategy's
+/// predicted amax (`scale * 448`) against a fresh true max-reduction,
+/// plus the fraction of weights the prediction would saturate. Shared
+/// by the host and dist trainers. Observation-only — every read here is
+/// pure, so emission cannot perturb the step's numerics.
+pub(crate) fn emit_scale_updates(
+    sink: &EventSink,
+    model: &HostModel,
+    step: u64,
+    scales: &[f32],
+    snap: bool,
+) {
+    if scales.is_empty() {
+        return;
+    }
+    let observed = model.weight_absmax();
+    for (layer, (&scale, &obs)) in scales.iter().zip(&observed).enumerate() {
+        let predicted = f64::from(scale) * f64::from(crate::E4M3_MAX);
+        let w = &model.weights[layer];
+        let over = w.iter().filter(|x| f64::from(x.abs()) > predicted).count();
+        let saturation_pct = if w.is_empty() {
+            0.0
+        } else {
+            100.0 * over as f64 / w.len() as f64
+        };
+        sink.emit(&Event::ScaleUpdate {
+            step,
+            layer,
+            predicted_amax: predicted,
+            observed_amax: f64::from(obs),
+            saturation_pct,
+            snap,
+        });
     }
 }
 

@@ -40,6 +40,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::backend::model::{DecodePath, DecodeState, Model};
 use crate::config::ServeSpec;
+use crate::events::{Event, EventSink};
 use crate::kernels::{GemmConfig, PackedWeightCache};
 use crate::metrics::ServeStats;
 use crate::util::json::{num, obj, s as jstr};
@@ -138,6 +139,7 @@ pub struct Engine {
     model: Model,
     packed: PackedWeightCache,
     spec: ServeSpec,
+    sink: EventSink,
 }
 
 impl Engine {
@@ -147,7 +149,14 @@ impl Engine {
         spec.validate()?;
         model.validate_serve().context("model cannot serve under its numerics mode")?;
         let packed = model.pack();
-        Ok(Engine { model, packed, spec })
+        Ok(Engine { model, packed, spec, sink: EventSink::disabled() })
+    }
+
+    /// Attach a telemetry sink (`--events`): the scheduler loop emits
+    /// one `serve_tick` per decode step. Observation-only — decode
+    /// outputs are identical with or without an active sink.
+    pub fn set_sink(&mut self, sink: EventSink) {
+        self.sink = sink;
     }
 
     pub fn model(&self) -> &Model {
@@ -274,6 +283,17 @@ impl Engine {
             step_result?;
             let after = start.elapsed().as_secs_f64();
             stats.record_step(active.len(), active.len() as u64);
+            if self.sink.active() {
+                // Emitted from the scheduler thread only, after the
+                // banded workers joined — no emission races.
+                self.sink.emit(&Event::ServeTick {
+                    step: stats.steps,
+                    active: active.len(),
+                    tok_s: if after > 0.0 { stats.decode_tokens as f64 / after } else { 0.0 },
+                    p50_ms: stats.p50_ms(),
+                    p99_ms: stats.p99_ms(),
+                });
+            }
             let mut i = 0;
             while i < active.len() {
                 if active[i].generated.len() >= active[i].req.max_new {

@@ -97,6 +97,64 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// `cargo bench --bench X -- --append PATH`: where to fold this bench
+/// run into the committed perf trajectory (`bench/trajectory.jsonl`).
+/// Benches are `harness = false` main() binaries, so the flag arrives
+/// via `std::env::args()` — both `--append PATH` and `--append=PATH`
+/// spellings work. `None` (no flag) keeps benches side-effect-free.
+pub fn trajectory_append_path() -> Option<std::path::PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--append" {
+            return args.next().map(std::path::PathBuf::from);
+        }
+        if let Some(p) = a.strip_prefix("--append=") {
+            return Some(std::path::PathBuf::from(p));
+        }
+    }
+    None
+}
+
+/// Append one JSONL record to the perf trajectory: the flattened
+/// metrics of a BENCH_*.json document stamped with `source` (which
+/// bench produced it), the wall-clock time, and the git revision. The
+/// file is append-only — `repro events --trend` renders it and gates
+/// on the latest pair of runs per source.
+pub fn append_trajectory(
+    path: &std::path::Path,
+    source: &str,
+    fields: &crate::util::json::Json,
+) -> anyhow::Result<()> {
+    use crate::util::json::{num, s, Json};
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0.0, |d| d.as_secs_f64());
+    let mut kv = vec![
+        ("v".to_string(), num(1.0)),
+        ("source".to_string(), s(source)),
+        ("unix_secs".to_string(), num(unix_secs)),
+        ("git".to_string(), s(&crate::events::git_rev())),
+    ];
+    if let Json::Obj(pairs) = fields {
+        for (k, v) in pairs {
+            // the stamp keys above win over any collision in the bench doc
+            if !matches!(k.as_str(), "v" | "source" | "unix_secs" | "git") {
+                kv.push((k.clone(), v.clone()));
+            }
+        }
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    use std::io::Write;
+    let mut file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let line = Json::Obj(kv).to_string();
+    writeln!(file, "{line}")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

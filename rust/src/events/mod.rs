@@ -1,0 +1,399 @@
+//! Typed JSONL run telemetry: one versioned event stream per run.
+//!
+//! Every training / distributed / serving step can emit a line-oriented
+//! record (`Event`) through a buffered non-blocking [`EventSink`]
+//! (`sink`), and anything offline can fold the stream back with the
+//! tolerant [`reader`] (`repro events`, `report::trend`). The stream is
+//! the durable counterpart of the ad-hoc `println!` progress lines: CI
+//! trend tracking, mode-vs-mode loss tables and scale-drift digests all
+//! consume it instead of scraping stdout.
+//!
+//! Design rules:
+//!
+//! * **Observation-only.** Emission never touches the data stream, the
+//!   RNG, or any accumulation order — a run with `--events` is bitwise
+//!   identical to one without (pinned by `tests/events_stream.rs`).
+//! * **Versioned.** Every line carries `{"v":1,"kind":"..."}`. Readers
+//!   skip unknown kinds (preserving the raw line) and reject unknown
+//!   versions per-line without aborting the stream.
+//! * **Hand-rolled JSON.** Serialization goes through `util::json`
+//!   (serde is unavailable offline); non-finite floats are written as
+//!   `null` and read back as NaN so a diverged loss cannot corrupt the
+//!   stream.
+
+pub mod reader;
+pub mod sink;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{num, s as jstr, Json};
+
+pub use reader::{EventReader, ReadOutcome};
+pub use sink::EventSink;
+
+/// Version stamped on (and required of) every stream line.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Every `kind` this reader understands, in emission order.
+pub const KNOWN_KINDS: [&str; 7] = [
+    "run_start",
+    "train_step",
+    "scale_update",
+    "comm_bucket",
+    "serve_tick",
+    "eval_point",
+    "run_end",
+];
+
+/// One telemetry record. Times are milliseconds, rates are per-second,
+/// `step` is 1-based (matching `StepOutcome::step`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// Stream header: which command/mode produced the run, its shape
+    /// spec, and repo provenance.
+    RunStart {
+        cmd: String,
+        mode: String,
+        spec: Json,
+        git: String,
+        schema_version: u64,
+    },
+    /// One optimizer step of a host or dist run.
+    TrainStep {
+        step: u64,
+        loss: f64,
+        gnorm: f64,
+        tokens_per_sec: f64,
+    },
+    /// AutoScaler predicted-vs-observed amax for one quantized linear.
+    /// `snap` flags steps where the strategy re-anchored on a true
+    /// max-reduction (`ScalingStats::absmax_calls` advanced).
+    ScaleUpdate {
+        step: u64,
+        layer: usize,
+        predicted_amax: f64,
+        observed_amax: f64,
+        saturation_pct: f64,
+        snap: bool,
+    },
+    /// One gradient bucket of a pipelined (`--overlap`) dist step.
+    CommBucket {
+        step: u64,
+        bucket: usize,
+        bytes: u64,
+        ready_ms: f64,
+        ring_ms: f64,
+        hidden_ms: f64,
+        exposed_ms: f64,
+    },
+    /// One decode step of the serving engine's scheduler loop.
+    ServeTick {
+        step: u64,
+        active: usize,
+        tok_s: f64,
+        p50_ms: f64,
+        p99_ms: f64,
+    },
+    /// A held-out evaluation point (reserved for the AOT eval loop).
+    EvalPoint { step: u64, split: String, value: f64 },
+    /// Stream trailer: whatever summary the producing command printed.
+    RunEnd { summary: Json },
+}
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RunStart { .. } => "run_start",
+            Event::TrainStep { .. } => "train_step",
+            Event::ScaleUpdate { .. } => "scale_update",
+            Event::CommBucket { .. } => "comm_bucket",
+            Event::ServeTick { .. } => "serve_tick",
+            Event::EvalPoint { .. } => "eval_point",
+            Event::RunEnd { .. } => "run_end",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("v".to_string(), num(SCHEMA_VERSION as f64)),
+            ("kind".to_string(), jstr(self.kind())),
+        ];
+        let mut push = |k: &str, v: Json| kv.push((k.to_string(), v));
+        match self {
+            Event::RunStart { cmd, mode, spec, git, schema_version } => {
+                push("cmd", jstr(cmd));
+                push("mode", jstr(mode));
+                push("spec", spec.clone());
+                push("git", jstr(git));
+                push("schema_version", num(*schema_version as f64));
+            }
+            Event::TrainStep { step, loss, gnorm, tokens_per_sec } => {
+                push("step", num(*step as f64));
+                push("loss", fnum(*loss));
+                push("gnorm", fnum(*gnorm));
+                push("tokens_per_sec", fnum(*tokens_per_sec));
+            }
+            Event::ScaleUpdate {
+                step,
+                layer,
+                predicted_amax,
+                observed_amax,
+                saturation_pct,
+                snap,
+            } => {
+                push("step", num(*step as f64));
+                push("layer", num(*layer as f64));
+                push("predicted_amax", fnum(*predicted_amax));
+                push("observed_amax", fnum(*observed_amax));
+                push("saturation_pct", fnum(*saturation_pct));
+                push("snap", Json::Bool(*snap));
+            }
+            Event::CommBucket { step, bucket, bytes, ready_ms, ring_ms, hidden_ms, exposed_ms } => {
+                push("step", num(*step as f64));
+                push("bucket", num(*bucket as f64));
+                push("bytes", num(*bytes as f64));
+                push("ready_ms", fnum(*ready_ms));
+                push("ring_ms", fnum(*ring_ms));
+                push("hidden_ms", fnum(*hidden_ms));
+                push("exposed_ms", fnum(*exposed_ms));
+            }
+            Event::ServeTick { step, active, tok_s, p50_ms, p99_ms } => {
+                push("step", num(*step as f64));
+                push("active", num(*active as f64));
+                push("tok_s", fnum(*tok_s));
+                push("p50_ms", fnum(*p50_ms));
+                push("p99_ms", fnum(*p99_ms));
+            }
+            Event::EvalPoint { step, split, value } => {
+                push("step", num(*step as f64));
+                push("split", jstr(split));
+                push("value", fnum(*value));
+            }
+            Event::RunEnd { summary } => push("summary", summary.clone()),
+        }
+        Json::Obj(kv)
+    }
+
+    /// The stream line for this event (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode one parsed stream object. The caller (the reader) has
+    /// already classified unknown kinds / versions; any error here means
+    /// a malformed line of a *known* kind.
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let kind = field_str(j, "kind")?;
+        Ok(match kind.as_str() {
+            "run_start" => Event::RunStart {
+                cmd: field_str(j, "cmd")?,
+                mode: field_str(j, "mode")?,
+                spec: j.get("spec").cloned().unwrap_or(Json::Null),
+                git: field_str(j, "git")?,
+                schema_version: field_u64(j, "schema_version")?,
+            },
+            "train_step" => Event::TrainStep {
+                step: field_u64(j, "step")?,
+                loss: field_f64(j, "loss")?,
+                gnorm: field_f64(j, "gnorm")?,
+                tokens_per_sec: field_f64(j, "tokens_per_sec")?,
+            },
+            "scale_update" => Event::ScaleUpdate {
+                step: field_u64(j, "step")?,
+                layer: field_u64(j, "layer")? as usize,
+                predicted_amax: field_f64(j, "predicted_amax")?,
+                observed_amax: field_f64(j, "observed_amax")?,
+                saturation_pct: field_f64(j, "saturation_pct")?,
+                snap: field_bool(j, "snap")?,
+            },
+            "comm_bucket" => Event::CommBucket {
+                step: field_u64(j, "step")?,
+                bucket: field_u64(j, "bucket")? as usize,
+                bytes: field_u64(j, "bytes")?,
+                ready_ms: field_f64(j, "ready_ms")?,
+                ring_ms: field_f64(j, "ring_ms")?,
+                hidden_ms: field_f64(j, "hidden_ms")?,
+                exposed_ms: field_f64(j, "exposed_ms")?,
+            },
+            "serve_tick" => Event::ServeTick {
+                step: field_u64(j, "step")?,
+                active: field_u64(j, "active")? as usize,
+                tok_s: field_f64(j, "tok_s")?,
+                p50_ms: field_f64(j, "p50_ms")?,
+                p99_ms: field_f64(j, "p99_ms")?,
+            },
+            "eval_point" => Event::EvalPoint {
+                step: field_u64(j, "step")?,
+                split: field_str(j, "split")?,
+                value: field_f64(j, "value")?,
+            },
+            "run_end" => Event::RunEnd {
+                summary: j.get("summary").cloned().unwrap_or(Json::Null),
+            },
+            other => bail!("unknown event kind {other:?}"),
+        })
+    }
+}
+
+/// A [`Event::RunStart`] for the current process: stamps the schema
+/// version and a best-effort git revision.
+pub fn run_start(cmd: &str, mode: &str, spec: Json) -> Event {
+    Event::RunStart {
+        cmd: cmd.to_string(),
+        mode: mode.to_string(),
+        spec,
+        git: git_rev(),
+        schema_version: SCHEMA_VERSION,
+    }
+}
+
+/// A number that survives JSON: non-finite values become `null`
+/// (`f64::NAN`/`inf` would print as invalid JSON tokens).
+pub fn fnum(x: f64) -> Json {
+    if x.is_finite() {
+        num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Best-effort short git revision, read straight from `.git` (no
+/// subprocess: the repro binary runs from `rust/`, the repo root, or a
+/// CI checkout). Returns `"unknown"` when no readable HEAD is found
+/// (e.g. a tarball checkout or packed refs).
+pub fn git_rev() -> String {
+    for dir in [".git", "../.git", "../../.git"] {
+        let Ok(head) = std::fs::read_to_string(Path::new(dir).join("HEAD")) else {
+            continue;
+        };
+        let head = head.trim();
+        let rev = match head.strip_prefix("ref: ") {
+            Some(r) => match std::fs::read_to_string(Path::new(dir).join(r.trim())) {
+                Ok(h) => h.trim().to_string(),
+                Err(_) => String::new(),
+            },
+            None => head.to_string(),
+        };
+        if !rev.is_empty() {
+            return rev.chars().take(12).collect();
+        }
+    }
+    "unknown".to_string()
+}
+
+fn field_f64(j: &Json, key: &str) -> Result<f64> {
+    match j.get(key) {
+        Some(Json::Null) => Ok(f64::NAN),
+        Some(v) => v.as_f64(),
+        None => bail!("missing field {key:?}"),
+    }
+}
+
+fn field_u64(j: &Json, key: &str) -> Result<u64> {
+    let f = field_f64(j, key)?;
+    if !f.is_finite() || f < 0.0 || f.fract() != 0.0 {
+        bail!("field {key:?} expects a non-negative integer, got {f}");
+    }
+    Ok(f as u64)
+}
+
+fn field_bool(j: &Json, key: &str) -> Result<bool> {
+    match j.get(key) {
+        Some(v) => v.as_bool(),
+        None => bail!("missing field {key:?}"),
+    }
+}
+
+fn field_str(j: &Json, key: &str) -> Result<String> {
+    match j.get(key) {
+        Some(v) => Ok(v.as_str()?.to_string()),
+        None => bail!("missing field {key:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn all_variants() -> Vec<Event> {
+        vec![
+            run_start("train", "moss", obj(vec![("dim", num(32.0))])),
+            Event::TrainStep { step: 3, loss: 2.5, gnorm: 0.75, tokens_per_sec: 1e4 },
+            Event::ScaleUpdate {
+                step: 3,
+                layer: 1,
+                predicted_amax: 0.5,
+                observed_amax: 0.4,
+                saturation_pct: 0.25,
+                snap: true,
+            },
+            Event::CommBucket {
+                step: 3,
+                bucket: 2,
+                bytes: 4096,
+                ready_ms: 0.5,
+                ring_ms: 1.25,
+                hidden_ms: 1.0,
+                exposed_ms: 0.25,
+            },
+            Event::ServeTick { step: 7, active: 3, tok_s: 900.0, p50_ms: 4.0, p99_ms: 9.0 },
+            Event::EvalPoint { step: 10, split: "val".to_string(), value: 3.125 },
+            Event::RunEnd { summary: obj(vec![("final_loss", num(2.0))]) },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips() {
+        for ev in all_variants() {
+            let line = ev.to_line();
+            let back = Event::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(ev, back, "round trip of {line}");
+        }
+    }
+
+    #[test]
+    fn lines_are_versioned_and_kinded() {
+        for ev in all_variants() {
+            let j = Json::parse(&ev.to_line()).unwrap();
+            assert_eq!(j.get("v").unwrap().as_f64().unwrap() as u64, SCHEMA_VERSION);
+            let kind = j.get("kind").unwrap().as_str().unwrap().to_string();
+            assert!(KNOWN_KINDS.contains(&kind.as_str()), "{kind} not in KNOWN_KINDS");
+        }
+    }
+
+    #[test]
+    fn non_finite_floats_write_null_and_read_nan() {
+        let ev = Event::TrainStep {
+            step: 1,
+            loss: f64::NAN,
+            gnorm: f64::INFINITY,
+            tokens_per_sec: 2.0,
+        };
+        let line = ev.to_line();
+        assert!(line.contains("\"loss\":null"), "{line}");
+        assert!(line.contains("\"gnorm\":null"), "{line}");
+        let back = Event::from_json(&Json::parse(&line).unwrap()).unwrap();
+        match back {
+            Event::TrainStep { loss, gnorm, tokens_per_sec, .. } => {
+                assert!(loss.is_nan() && gnorm.is_nan());
+                assert_eq!(tokens_per_sec, 2.0);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_fields_are_errors_not_panics() {
+        let j = Json::parse(r#"{"v":1,"kind":"train_step","step":1}"#).unwrap();
+        assert!(Event::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn git_rev_never_panics() {
+        let r = git_rev();
+        assert!(!r.is_empty());
+    }
+}

@@ -1,0 +1,215 @@
+//! Tolerant line-oriented reader for telemetry streams.
+//!
+//! The stream is append-only and may be truncated mid-line (a killed
+//! run), carry kinds from a newer writer, or have picked up garbage —
+//! none of that may abort an offline summary. The iterator therefore
+//! never returns an error: every physical line folds to a
+//! [`ReadOutcome`] and the caller decides what a malformed count means
+//! (`repro events --check` fails CI on it; plain summaries just report
+//! it). Successes do not retain the raw line; unknown kinds do, so a
+//! newer reader can re-parse what this one skipped.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Event, KNOWN_KINDS, SCHEMA_VERSION};
+use crate::util::json::Json;
+
+/// One physical stream line, classified.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReadOutcome {
+    /// A known-kind, current-version event.
+    Event(Event),
+    /// Valid JSON with a `kind` this reader does not know. The raw
+    /// line is preserved for forward compatibility.
+    UnknownKind { lineno: usize, kind: String, raw: String },
+    /// Anything else: truncated JSON, wrong schema version, a known
+    /// kind with missing/mistyped fields.
+    MalformedLine { lineno: usize, error: String },
+}
+
+/// Iterator over classified stream lines. Blank lines are skipped
+/// (but still counted in `lineno`); trailing `\r` is tolerated.
+pub struct EventReader<R> {
+    input: R,
+    lineno: usize,
+}
+
+impl<R: BufRead> EventReader<R> {
+    pub fn new(input: R) -> EventReader<R> {
+        EventReader { input, lineno: 0 }
+    }
+}
+
+impl EventReader<BufReader<File>> {
+    pub fn open(path: &Path) -> Result<EventReader<BufReader<File>>> {
+        let file = File::open(path)
+            .with_context(|| format!("opening event stream {}", path.display()))?;
+        Ok(EventReader::new(BufReader::new(file)))
+    }
+}
+
+impl<R: BufRead> Iterator for EventReader<R> {
+    type Item = ReadOutcome;
+
+    fn next(&mut self) -> Option<ReadOutcome> {
+        loop {
+            let mut line = String::new();
+            match self.input.read_line(&mut line) {
+                Ok(0) => return None,
+                Ok(_) => {}
+                Err(e) => {
+                    self.lineno += 1;
+                    return Some(ReadOutcome::MalformedLine {
+                        lineno: self.lineno,
+                        error: format!("read error: {e}"),
+                    });
+                }
+            }
+            self.lineno += 1;
+            let trimmed = line.trim_end_matches(['\n', '\r']);
+            if trimmed.trim().is_empty() {
+                continue;
+            }
+            return Some(classify(self.lineno, trimmed));
+        }
+    }
+}
+
+fn classify(lineno: usize, line: &str) -> ReadOutcome {
+    let malformed = |error: String| ReadOutcome::MalformedLine { lineno, error };
+    let j = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return malformed(format!("invalid JSON: {e}")),
+    };
+    let v = match j.get("v").map(|v| v.as_f64()) {
+        Some(Ok(v)) => v,
+        Some(Err(e)) => return malformed(format!("bad version field: {e}")),
+        None => return malformed("missing version field \"v\"".to_string()),
+    };
+    if v != SCHEMA_VERSION as f64 {
+        return malformed(format!(
+            "unsupported schema_version {v} (this reader speaks {SCHEMA_VERSION})"
+        ));
+    }
+    let kind = match j.get("kind").map(|k| k.as_str().map(str::to_string)) {
+        Some(Ok(k)) => k,
+        Some(Err(e)) => return malformed(format!("bad kind field: {e}")),
+        None => return malformed("missing field \"kind\"".to_string()),
+    };
+    if !KNOWN_KINDS.contains(&kind.as_str()) {
+        return ReadOutcome::UnknownKind { lineno, kind, raw: line.to_string() };
+    }
+    match Event::from_json(&j) {
+        Ok(ev) => ReadOutcome::Event(ev),
+        Err(e) => malformed(format!("{kind}: {e}")),
+    }
+}
+
+/// Read a whole stream into classified outcomes.
+pub fn read_all(path: &Path) -> Result<Vec<ReadOutcome>> {
+    Ok(EventReader::open(path)?.collect())
+}
+
+/// Tolerant generic-JSONL read (the perf-trajectory file, which is not
+/// an event stream): returns parsed objects plus `(lineno, error)` for
+/// every line that failed to parse.
+pub fn read_jsonl_objects(path: &Path) -> Result<(Vec<Json>, Vec<(usize, String)>)> {
+    let file = File::open(path)
+        .with_context(|| format!("opening JSONL file {}", path.display()))?;
+    let mut records = Vec::new();
+    let mut bad = Vec::new();
+    for (i, line) in BufReader::new(file).lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match Json::parse(trimmed) {
+            Ok(j) => records.push(j),
+            Err(e) => bad.push((i + 1, e.to_string())),
+        }
+    }
+    Ok((records, bad))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcomes(src: &str) -> Vec<ReadOutcome> {
+        EventReader::new(src.as_bytes()).collect()
+    }
+
+    #[test]
+    fn yields_events_and_skips_blank_lines() {
+        let src = "\n{\"v\":1,\"kind\":\"train_step\",\"step\":1,\"loss\":2.0,\"gnorm\":1.0,\
+                   \"tokens_per_sec\":10}\n\n";
+        let out = outcomes(src);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            ReadOutcome::Event(Event::TrainStep { step, loss, .. }) => {
+                assert_eq!((*step, *loss), (1, 2.0));
+            }
+            other => panic!("expected event, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tolerates_crlf() {
+        let src = "{\"v\":1,\"kind\":\"eval_point\",\"step\":2,\"split\":\"val\",\"value\":3.5}\r\n";
+        let out = outcomes(src);
+        assert!(matches!(out[0], ReadOutcome::Event(Event::EvalPoint { step: 2, .. })));
+    }
+
+    #[test]
+    fn unknown_kind_preserves_raw_line() {
+        let raw = r#"{"v":1,"kind":"gpu_temp","step":1,"celsius":71}"#;
+        let out = outcomes(&format!("{raw}\n"));
+        match &out[0] {
+            ReadOutcome::UnknownKind { lineno, kind, raw: kept } => {
+                assert_eq!(*lineno, 1);
+                assert_eq!(kind, "gpu_temp");
+                assert_eq!(kept, raw);
+            }
+            other => panic!("expected unknown kind, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_malformed_not_fatal() {
+        let src = "{\"v\":2,\"kind\":\"train_step\",\"step\":1,\"loss\":2.0,\"gnorm\":1.0,\
+                   \"tokens_per_sec\":10}\n\
+                   {\"v\":1,\"kind\":\"run_end\",\"summary\":{}}\n";
+        let out = outcomes(src);
+        assert_eq!(out.len(), 2);
+        assert!(matches!(&out[0],
+            ReadOutcome::MalformedLine { lineno: 1, error } if error.contains("schema_version")));
+        assert!(matches!(&out[1], ReadOutcome::Event(Event::RunEnd { .. })));
+    }
+
+    #[test]
+    fn truncated_and_garbage_lines_skip_and_continue() {
+        let src = "{\"v\":1,\"kind\":\"train_step\",\"step\":1,\"lo\n\
+                   not json at all\n\
+                   {\"v\":1,\"kind\":\"train_step\"}\n\
+                   {\"v\":1,\"kind\":\"run_end\",\"summary\":null}\n";
+        let out = outcomes(src);
+        assert_eq!(out.len(), 4);
+        // 1: truncated JSON, 2: garbage, 3: known kind missing fields.
+        for o in &out[..3] {
+            assert!(matches!(o, ReadOutcome::MalformedLine { .. }), "{o:?}");
+        }
+        assert!(matches!(&out[3], ReadOutcome::Event(Event::RunEnd { .. })));
+    }
+
+    #[test]
+    fn linenos_count_physical_lines() {
+        let src = "\n\nbroken\n";
+        let out = outcomes(src);
+        assert!(matches!(&out[0], ReadOutcome::MalformedLine { lineno: 3, .. }));
+    }
+}

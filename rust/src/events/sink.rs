@@ -1,0 +1,193 @@
+//! Buffered, non-blocking JSONL event writer.
+//!
+//! The hot path (a train/decode step) must never wait on disk, so
+//! [`EventSink::emit`] only formats the line and pushes it down an
+//! unbounded channel; a dedicated writer thread owns the `BufWriter`
+//! and drains the channel in the background. The default sink is
+//! disabled and emission through it is a no-op — backends hold a sink
+//! unconditionally and the serial step stays bitwise-identical.
+//!
+//! Sinks are `Clone` (all clones share one writer thread) and
+//! `Send + Sync` (the serving engine's scheduler is borrowed across a
+//! `thread::scope`). [`EventSink::close`] drops the sender side, joins
+//! the writer and surfaces its I/O result; if a run aborts without
+//! closing, the last clone's `Drop` flushes best-effort.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::Event;
+
+/// Handle to a background JSONL writer (or a no-op when disabled).
+#[derive(Clone, Default)]
+pub struct EventSink {
+    inner: Option<Arc<Inner>>,
+}
+
+struct Inner {
+    tx: Mutex<Option<Sender<String>>>,
+    writer: Mutex<Option<JoinHandle<std::io::Result<u64>>>>,
+}
+
+impl EventSink {
+    /// The no-op sink: `active()` is false, `emit` does nothing.
+    pub fn disabled() -> EventSink {
+        EventSink { inner: None }
+    }
+
+    /// Build a sink from a parsed command line: `--events PATH` opens a
+    /// stream there, otherwise the sink is disabled.
+    pub fn from_args(args: &crate::cli::Args) -> Result<EventSink> {
+        match args.get("events") {
+            Some(p) => EventSink::to_path(Path::new(p)),
+            None => Ok(EventSink::disabled()),
+        }
+    }
+
+    /// Create/truncate `path` and spawn the writer thread.
+    pub fn to_path(path: &Path) -> Result<EventSink> {
+        let file = File::create(path)
+            .with_context(|| format!("creating event stream {}", path.display()))?;
+        let (tx, rx) = channel::<String>();
+        let handle = std::thread::Builder::new()
+            .name("event-sink".to_string())
+            .spawn(move || -> std::io::Result<u64> {
+                let mut w = BufWriter::new(file);
+                let mut lines = 0u64;
+                for line in rx {
+                    w.write_all(line.as_bytes())?;
+                    w.write_all(b"\n")?;
+                    lines += 1;
+                }
+                w.flush()?;
+                Ok(lines)
+            })
+            .context("spawning event-sink writer thread")?;
+        Ok(EventSink {
+            inner: Some(Arc::new(Inner {
+                tx: Mutex::new(Some(tx)),
+                writer: Mutex::new(Some(handle)),
+            })),
+        })
+    }
+
+    /// Whether emissions reach a stream. Callers use this to skip
+    /// building expensive event payloads (e.g. saturation scans).
+    pub fn active(&self) -> bool {
+        match &self.inner {
+            Some(inner) => lock(&inner.tx).is_some(),
+            None => false,
+        }
+    }
+
+    /// Queue one event. Never blocks on I/O; a no-op when the sink is
+    /// disabled or already closed.
+    pub fn emit(&self, ev: &Event) {
+        let Some(inner) = &self.inner else { return };
+        let line = ev.to_line();
+        if let Some(tx) = lock(&inner.tx).as_ref() {
+            // Send can only fail if the writer died; the close() join
+            // will surface its I/O error, so drop the line here.
+            let _ = tx.send(line);
+        }
+    }
+
+    /// Flush and close the stream: drops the sender (ending the writer
+    /// loop), joins the writer thread and returns the number of lines
+    /// written. Idempotent across clones — later calls return 0.
+    pub fn close(&self) -> Result<u64> {
+        let Some(inner) = &self.inner else { return Ok(0) };
+        lock(&inner.tx).take();
+        let Some(handle) = lock(&inner.writer).take() else { return Ok(0) };
+        handle
+            .join()
+            .map_err(|_| anyhow!("event-sink writer thread panicked"))?
+            .context("writing event stream")
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // Last clone going away without close(): flush best-effort.
+        lock(&self.tx).take();
+        if let Some(handle) = lock(&self.writer).take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Lock that shrugs off poisoning (a panicking emitter must not turn
+/// every later emit into a second panic).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{run_start, ReadOutcome};
+    use crate::util::json::{num, obj};
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("moss_sink_{}_{name}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let sink = EventSink::disabled();
+        assert!(!sink.active());
+        sink.emit(&Event::TrainStep { step: 1, loss: 1.0, gnorm: 1.0, tokens_per_sec: 1.0 });
+        assert_eq!(sink.close().unwrap(), 0);
+    }
+
+    #[test]
+    fn writes_one_line_per_event_and_counts_them() {
+        let path = temp("count");
+        let sink = EventSink::to_path(&path).unwrap();
+        assert!(sink.active());
+        sink.emit(&run_start("train", "moss", obj(vec![("dim", num(8.0))])));
+        for step in 1..=3u64 {
+            sink.emit(&Event::TrainStep {
+                step,
+                loss: 4.0 - step as f64,
+                gnorm: 1.0,
+                tokens_per_sec: 100.0,
+            });
+        }
+        assert_eq!(sink.close().unwrap(), 4);
+        assert!(!sink.active(), "closed sink reports inactive");
+
+        let outcomes = crate::events::reader::read_all(&path).unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|o| matches!(o, ReadOutcome::Event(_))));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn clones_share_one_stream_and_close_is_idempotent() {
+        let path = temp("clone");
+        let sink = EventSink::to_path(&path).unwrap();
+        let clone = sink.clone();
+        sink.emit(&Event::EvalPoint { step: 1, split: "val".to_string(), value: 2.0 });
+        clone.emit(&Event::EvalPoint { step: 2, split: "val".to_string(), value: 1.5 });
+        assert_eq!(sink.close().unwrap(), 2);
+        // Emission and close after close are no-ops, not errors.
+        clone.emit(&Event::EvalPoint { step: 3, split: "val".to_string(), value: 1.0 });
+        assert_eq!(clone.close().unwrap(), 0);
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(txt.lines().count(), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sink_is_send_and_sync() {
+        fn check<T: Send + Sync + Clone>() {}
+        check::<EventSink>();
+    }
+}

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod data;
 pub mod distsim;
 pub mod eval;
+pub mod events;
 pub mod formats;
 pub mod gemm_sim;
 pub mod kernels;

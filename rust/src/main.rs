@@ -13,6 +13,13 @@
 //!   scale-sim   Fig-4 scale-trajectory demo
 //!   report      regenerate every table/figure into results/
 //!   hlo-stats   artifact inventory + op statistics (L2 perf checks)
+//!   events      summarize a --events JSONL telemetry stream offline;
+//!               --trend renders the committed perf trajectory
+//!
+//! `train`, `serve`, `ablate` and `comm-table` accept `--events PATH`:
+//! every step emits a typed JSONL event (see `moss::events`) without
+//! perturbing the run — the stream is observation-only and the step
+//! stays bitwise-identical.
 
 use std::sync::Arc;
 
@@ -21,7 +28,9 @@ use moss::backend::{DistTrainer, HostTrainer};
 use moss::cli::{usage, Args};
 use moss::config::{BackendKind, TrainConfig};
 use moss::coordinator::Trainer;
+use moss::events::{fnum, run_start, Event, EventSink};
 use moss::runtime::Runtime;
+use moss::util::json::{num, obj, s as jstr, Json};
 
 fn main() {
     if let Err(e) = run() {
@@ -36,7 +45,8 @@ const COMMANDS: &[(&str, &str)] = &[
         "pretrain on the synthetic corpus (--backend host|aot, \
          --model mlp|transformer, --heads N, --workers N, \
          --wire f32|fp8|packed, --overlap, --zero, --bucket-mb MB, \
-         --mode bf16|pertensor|coat|moss, --steps, --scaling)",
+         --mode bf16|pertensor|coat|moss, --steps, --scaling, \
+         --events PATH)",
     ),
     (
         "ablate",
@@ -48,7 +58,13 @@ const COMMANDS: &[(&str, &str)] = &[
         "FP8 serving engine: pack-once weights, KV-cache decode, continuous \
          batching over synthetic Poisson traffic (--ckpt PATH | --synthetic, \
          --requests N, --rate R, --max-batch B, --threads T, --max-ctx N, \
-         --assert-throughput; emits BENCH_serve.json)",
+         --assert-throughput, --events PATH; emits BENCH_serve.json)",
+    ),
+    (
+        "events",
+        "summarize a JSONL telemetry stream (repro events PATH [--check]); \
+         --trend renders bench/trajectory.jsonl as a perf-regression table \
+         (--max-drop-pct N, default 20)",
     ),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
@@ -78,6 +94,7 @@ fn run() -> Result<()> {
         "scale-sim" => moss::report::scaling::run_cli(&args),
         "report" => moss::report::run_all(&args),
         "hlo-stats" => moss::report::hlo_stats::run_cli(&args),
+        "events" => moss::report::trend::run_cli(&args),
         other => bail!("unknown command {other:?}\n{}", usage("repro", COMMANDS)),
     }
 }
@@ -93,6 +110,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         if args.get(flag).is_some() || args.has(flag) {
             bail!("--{flag} requires --backend host (the AOT path has no simulated workers)");
         }
+    }
+    if args.get("events").is_some() {
+        bail!("--events requires --backend host (the telemetry hooks live on the host backends)");
     }
     let rt = Arc::new(Runtime::load(&cfg.artifact_dir())?);
     eprintln!(
@@ -175,6 +195,11 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
     }
     let steps = cfg.steps;
     let mut trainer = HostTrainer::new(cfg)?;
+    let sink = EventSink::from_args(args)?;
+    if sink.active() {
+        sink.emit(&run_start("train", trainer.cfg.mode.name(), host_spec_json(&trainer.cfg)));
+        trainer.set_sink(sink.clone());
+    }
     eprintln!(
         "host backend: model {} ({} heads), mode {} ({}), vocab {} dim {} ffn {} layers {} \
          ({} params), {} steps x {} microbatches",
@@ -206,6 +231,19 @@ fn cmd_train_host(args: &Args, cfg: TrainConfig) -> Result<()> {
         cache.packs,
         cache.hits,
     );
+    if sink.active() {
+        sink.emit(&Event::RunEnd {
+            summary: obj(vec![
+                ("steps", num(trainer.steps_done as f64)),
+                ("first_loss", fnum(first)),
+                ("final_loss", fnum(tail)),
+                ("tokens_per_sec", fnum(trainer.throughput.tokens_per_sec())),
+                ("absmax_calls", num(trainer.scaling_stats().absmax_calls as f64)),
+            ]),
+        });
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
+    }
     if let Some(out) = &trainer.cfg.out_dir {
         std::fs::create_dir_all(out)?;
         std::fs::write(out.join("losses.csv"), trainer.history.losses_csv())?;
@@ -271,8 +309,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Model::init(cfg.host, cfg.mode, cfg.seed)
         }
     };
-    let engine = serve::Engine::new(model, serve_spec)?;
+    let mut engine = serve::Engine::new(model, serve_spec)?;
     let spec = *engine.model().spec();
+    let sink = EventSink::from_args(args)?;
+    if sink.active() {
+        sink.emit(&run_start(
+            "serve",
+            engine.model().numerics().mode().name(),
+            obj(vec![
+                ("backend", jstr("serve")),
+                ("model", jstr(spec.model.name())),
+                ("layers", num(spec.layers as f64)),
+                ("dim", num(spec.dim as f64)),
+                ("heads", num(spec.heads as f64)),
+                ("requests", num(serve_spec.requests as f64)),
+                ("rate", num(serve_spec.rate)),
+                ("max_batch", num(serve_spec.max_batch as f64)),
+                ("threads", num(serve_spec.threads as f64)),
+                ("max_ctx", num(serve_spec.max_ctx as f64)),
+            ]),
+        ));
+        engine.set_sink(sink.clone());
+    }
     eprintln!(
         "serve: model {} ({} layers, dim {}, {} heads), mode {}, weights packed once \
          ({:.1} KB resident); {} requests at {:.0} req/s, max_batch {}, {} threads, max_ctx {}",
@@ -325,6 +383,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         tps_dequant,
     )?;
     eprintln!("wrote {bench_path}");
+    if sink.active() {
+        sink.emit(&Event::RunEnd {
+            summary: obj(vec![
+                ("completed", num(report.completions.len() as f64)),
+                ("rejected", num(report.rejected.len() as f64)),
+                ("tokens_per_sec", fnum(report.tokens_per_sec)),
+                ("p50_ms", fnum(report.p50_ms)),
+                ("p99_ms", fnum(report.p99_ms)),
+                ("occupancy", fnum(report.occupancy)),
+                ("decode_tps_packed", fnum(tps_packed)),
+                ("decode_tps_dequant", fnum(tps_dequant)),
+            ]),
+        });
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
+    }
     if args.has("assert-throughput") {
         if report.completions.len() != reqs.len() - report.rejected.len() {
             bail!(
@@ -367,6 +441,11 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     );
     let steps = cfg.steps;
     let mut trainer = DistTrainer::new(cfg)?;
+    let sink = EventSink::from_args(args)?;
+    if sink.active() {
+        sink.emit(&run_start("train", trainer.cfg.mode.name(), host_spec_json(&trainer.cfg)));
+        trainer.set_sink(sink.clone());
+    }
     trainer.run(steps)?;
     let first = trainer.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
     let tail = trainer.history.tail_loss(10);
@@ -408,6 +487,21 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
             comm.param_bytes_per_step(),
             comm.param_gather_ms_per_step(),
         );
+    }
+    if sink.active() {
+        sink.emit(&Event::RunEnd {
+            summary: obj(vec![
+                ("steps", num(trainer.steps_done as f64)),
+                ("first_loss", fnum(first)),
+                ("final_loss", fnum(tail)),
+                ("tokens_per_sec", fnum(trainer.throughput.tokens_per_sec())),
+                ("absmax_calls", num(trainer.scaling_stats().absmax_calls as f64)),
+                ("wire_bytes_per_elem", fnum(comm.bytes_per_elem())),
+                ("overlap_ratio", fnum(trainer.overlap.overlap_ratio())),
+            ]),
+        });
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
     }
     if let Some(out) = &trainer.cfg.out_dir {
         std::fs::create_dir_all(out)?;
@@ -454,6 +548,28 @@ fn cmd_finetune(args: &Args) -> Result<()> {
         println!("  {:<12} accuracy: {:.1}%", kind.benchmark_name(), acc * 100.0);
     }
     Ok(())
+}
+
+/// Shape/seed payload for a host-backend `run_start` event. Everything
+/// here is recoverable offline from the stream alone — the reader never
+/// needs the original command line.
+fn host_spec_json(cfg: &TrainConfig) -> Json {
+    let spec = cfg.host;
+    obj(vec![
+        ("backend", jstr("host")),
+        ("model", jstr(spec.model.name())),
+        ("vocab", num(spec.vocab as f64)),
+        ("dim", num(spec.dim as f64)),
+        ("ffn", num(spec.ffn as f64)),
+        ("layers", num(spec.layers as f64)),
+        ("heads", num(spec.heads as f64)),
+        ("seq", num(spec.seq as f64)),
+        ("batch", num(spec.batch as f64)),
+        ("microbatches", num(spec.microbatches as f64)),
+        ("steps", num(cfg.steps as f64)),
+        ("seed", num(cfg.seed as f64)),
+        ("workers", num(cfg.dist.workers as f64)),
+    ])
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -191,11 +191,21 @@ pub struct OverlapStats {
     pub exposed_secs: f64,
     /// Backward-compute window seconds (last worker finish per step).
     pub backward_secs: f64,
+    /// Steps rejected because a timing was NaN/inf (a poisoned sample
+    /// would otherwise contaminate every later ratio). Nonzero means a
+    /// timing bug upstream — surfaced, not silently absorbed.
+    pub dropped_nonfinite: u64,
 }
 
 impl OverlapStats {
-    /// Fold in one step's measured schedule.
+    /// Fold in one step's measured schedule. Non-finite samples are
+    /// dropped (and counted in `dropped_nonfinite`) so one bad timing
+    /// cannot poison the cumulative ratios.
     pub fn record(&mut self, hidden: f64, exposed: f64, backward: f64) {
+        if !(hidden.is_finite() && exposed.is_finite() && backward.is_finite()) {
+            self.dropped_nonfinite += 1;
+            return;
+        }
         self.steps += 1;
         self.hidden_secs += hidden;
         self.exposed_secs += exposed;
@@ -203,10 +213,11 @@ impl OverlapStats {
     }
 
     /// Hidden fraction of total gradient-communication time (the
-    /// Table-5 "Overlap Ratio" analog). 0 before any pipelined step.
+    /// Table-5 "Overlap Ratio" analog). 0 before any pipelined step,
+    /// and 0 (never NaN) if the accumulators are degenerate.
     pub fn overlap_ratio(&self) -> f64 {
         let total = self.hidden_secs + self.exposed_secs;
-        if total <= 0.0 {
+        if !total.is_finite() || total <= 0.0 {
             return 0.0;
         }
         self.hidden_secs / total
@@ -235,14 +246,18 @@ impl OverlapStats {
     }
 }
 
-/// Nearest-rank percentile of `samples` (p in [0, 100]); 0 when empty.
-/// Sorts a copy — serve-sized sample counts, not a hot path.
+/// Nearest-rank percentile of `samples`; `p` is clamped to [0, 100].
+/// Non-finite samples are ignored (a NaN would sort to an arbitrary
+/// rank under `total_cmp` and then propagate into every latency
+/// report); 0 when no finite samples remain. Sorts a copy —
+/// serve-sized sample counts, not a hot path.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
+    let mut sorted: Vec<f64> = samples.iter().copied().filter(|x| x.is_finite()).collect();
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
+    let p = p.clamp(0.0, 100.0);
     let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
     sorted[rank.clamp(1, sorted.len()) - 1]
 }
@@ -368,6 +383,32 @@ mod tests {
         assert!((o.hidden_ms_per_step() - 2.0).abs() < 1e-9);
         assert!((o.exposed_ms_per_step() - 2.0).abs() < 1e-9);
         assert!((o.backward_secs_per_step() - 0.010).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ignores_nonfinite_samples() {
+        // All-NaN degenerates to 0, not an arbitrary-rank NaN.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        // Mixed: NaN/inf are dropped before ranking.
+        let xs = [f64::NAN, 3.0, f64::INFINITY, 1.0, 2.0, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+    }
+
+    #[test]
+    fn overlap_stats_drop_nonfinite_steps() {
+        let mut o = OverlapStats::default();
+        o.record(0.003, 0.001, 0.010);
+        o.record(f64::NAN, 0.001, 0.010);
+        o.record(0.001, f64::INFINITY, 0.010);
+        o.record(0.001, 0.001, f64::NAN);
+        assert_eq!(o.steps, 1);
+        assert_eq!(o.dropped_nonfinite, 3);
+        assert!((o.overlap_ratio() - 0.75).abs() < 1e-12);
+        assert!(o.overlap_ratio().is_finite());
     }
 
     #[test]

@@ -17,6 +17,8 @@ use crate::config::{
 use crate::distsim::memory::{activation_memory_gb, MemoryScheme, ModelShape};
 use crate::distsim::netmodel::{grad_bytes_per_step, NetModel};
 use crate::distsim::overlap::{schedule_overlap, table5_overlap};
+use crate::events::{fnum, run_start, Event, EventSink};
+use crate::util::json::{num, obj, s as jstr, Json};
 use crate::util::table::{f, Table};
 
 const LLAMA7B_PARAMS: f64 = 6.74e9;
@@ -85,7 +87,7 @@ fn measured_cfg(workers: usize, steps: u64, dist: DistSpec) -> TrainConfig {
 /// wire and report the bytes that actually crossed the ring. The
 /// `B/elem` column is the executable check on the Table-5 compression
 /// model (4.0 for f32, ~1.0 + 1/32 for the MOSS packed wire).
-pub fn measured_wire_table(workers: usize, steps: u64) -> Result<Table> {
+pub fn measured_wire_table(workers: usize, steps: u64, sink: &EventSink) -> Result<Table> {
     let mut t = Table::new(
         &format!(
             "Table 5b — measured allreduce wire traffic ({workers}-worker host backend, \
@@ -97,8 +99,25 @@ pub fn measured_wire_table(workers: usize, steps: u64) -> Result<Table> {
     for wire in [WireKind::F32, WireKind::Fp8, WireKind::PackedFp8Group] {
         let dist = DistSpec { workers, wire, shard: ShardMode::Scatter, ..DistSpec::default() };
         let mut trainer = DistTrainer::new(measured_cfg(workers, steps, dist))?;
+        if sink.active() {
+            sink.emit(&run_start(
+                "comm-table",
+                trainer.cfg.mode.name(),
+                comm_spec_json(workers, steps, wire.name(), false),
+            ));
+            trainer.set_sink(sink.clone());
+        }
         trainer.run(steps)?;
         let comm = trainer.comm;
+        if sink.active() {
+            sink.emit(&Event::RunEnd {
+                summary: obj(vec![
+                    ("steps", num(trainer.steps_done as f64)),
+                    ("wire_bytes_per_elem", fnum(comm.bytes_per_elem())),
+                    ("wire_bytes_per_step", fnum(comm.bytes_per_step())),
+                ]),
+            });
+        }
         if wire == WireKind::F32 {
             f32_bytes_per_step = comm.bytes_per_step();
         }
@@ -126,7 +145,7 @@ pub fn measured_wire_table(workers: usize, steps: u64) -> Result<Table> {
 /// replayed on those same measured per-bucket inputs. The analytic
 /// model and the live loop now describe the *same* execution schedule,
 /// so the two overlap ratios are directly comparable.
-pub fn measured_overlap_table(workers: usize, steps: u64) -> Result<Table> {
+pub fn measured_overlap_table(workers: usize, steps: u64, sink: &EventSink) -> Result<Table> {
     if workers < 2 {
         bail!("need >= 2 workers to overlap communication (got {workers})");
     }
@@ -139,7 +158,24 @@ pub fn measured_overlap_table(workers: usize, steps: u64) -> Result<Table> {
         bucket_bytes: 0,
     };
     let mut trainer = DistTrainer::new(measured_cfg(workers, steps, dist))?;
+    if sink.active() {
+        sink.emit(&run_start(
+            "comm-table",
+            trainer.cfg.mode.name(),
+            comm_spec_json(workers, steps, WireKind::PackedFp8Group.name(), true),
+        ));
+        trainer.set_sink(sink.clone());
+    }
     trainer.run(steps)?;
+    if sink.active() {
+        sink.emit(&Event::RunEnd {
+            summary: obj(vec![
+                ("steps", num(trainer.steps_done as f64)),
+                ("overlap_ratio", fnum(trainer.overlap.overlap_ratio())),
+                ("buckets", num(trainer.buckets.len() as f64)),
+            ]),
+        });
+    }
     let mut t = Table::new(
         &format!(
             "Table 5c — measured bucket overlap ({workers}-worker host backend, packed wire, \
@@ -181,6 +217,18 @@ pub fn measured_overlap_table(workers: usize, steps: u64) -> Result<Table> {
     Ok(t)
 }
 
+/// Spec payload of the comm-table `run_start` events: what made this
+/// measured run distinct (wire, world size, overlap on/off).
+fn comm_spec_json(workers: usize, steps: u64, wire: &str, overlap: bool) -> Json {
+    obj(vec![
+        ("backend", jstr("host")),
+        ("workers", num(workers as f64)),
+        ("steps", num(steps as f64)),
+        ("wire", jstr(wire)),
+        ("overlap", Json::Bool(overlap)),
+    ])
+}
+
 pub fn run_cli(args: &Args) -> Result<()> {
     super::emit(args, "table5_memory_comm", &table5())?;
     let workers = args.get_usize("dist-workers", 4)?;
@@ -190,11 +238,17 @@ pub fn run_cli(args: &Args) -> Result<()> {
         // the measured table would be all zeros — refuse to pretend
         bail!("--dist-workers must be >= 2 to measure wire traffic (got {workers})");
     }
-    super::emit(args, "table5_measured_wire", &measured_wire_table(workers, steps)?)?;
+    let sink = EventSink::from_args(args)?;
+    super::emit(args, "table5_measured_wire", &measured_wire_table(workers, steps, &sink)?)?;
     let overlap_steps = args.get_u64("overlap-steps", steps.max(8))?;
     super::emit(
         args,
         "table5_measured_overlap",
-        &measured_overlap_table(workers, overlap_steps)?,
-    )
+        &measured_overlap_table(workers, overlap_steps, &sink)?,
+    )?;
+    if sink.active() {
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
+    }
+    Ok(())
 }

@@ -8,6 +8,7 @@ pub mod hlo_stats;
 pub mod scaling;
 pub mod snr;
 pub mod training;
+pub mod trend;
 
 use anyhow::Result;
 

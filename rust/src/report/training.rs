@@ -15,8 +15,10 @@ use crate::cli::Args;
 use crate::config::{BackendKind, DataKind, LrSchedule, QuantMode, ScalingKind, TrainConfig};
 use crate::coordinator::Trainer;
 use crate::data::TaskKind;
+use crate::events::{fnum, run_start, Event, EventSink};
 use crate::quant::snr::Metric;
 use crate::runtime::Runtime;
+use crate::util::json::{num, obj, s as jstr, Json};
 use crate::util::plot::multi_line_plot;
 use crate::util::table::{f, Table};
 
@@ -72,13 +74,52 @@ fn host_base_cfg(args: &Args, steps_default: u64) -> Result<TrainConfig> {
 }
 
 /// Train one numerics mode to completion on the host backend (shared
-/// seed/corpus across modes: only `cfg.mode` changes).
-pub(crate) fn train_host_mode(cfg: &TrainConfig, mode: QuantMode) -> Result<HostTrainer> {
+/// seed/corpus across modes: only `cfg.mode` changes). When `sink` is
+/// active, the run is bracketed by run_start/run_end events so a
+/// single `--events` stream carries all modes of an ablation.
+pub(crate) fn train_host_mode(
+    cmd: &str,
+    cfg: &TrainConfig,
+    mode: QuantMode,
+    sink: &EventSink,
+) -> Result<HostTrainer> {
     let mut c = cfg.clone();
     c.mode = mode;
     let mut tr = HostTrainer::new(c)?;
+    if sink.active() {
+        sink.emit(&run_start(cmd, mode.name(), host_spec_json(cfg)));
+        tr.set_sink(sink.clone());
+    }
     tr.run(cfg.steps)?;
+    if sink.active() {
+        sink.emit(&Event::RunEnd {
+            summary: obj(vec![
+                ("steps", num(tr.steps_done as f64)),
+                ("final_loss", fnum(tr.history.tail_loss(10))),
+                ("tokens_per_sec", fnum(tr.throughput.tokens_per_sec())),
+            ]),
+        });
+    }
     Ok(tr)
+}
+
+/// Shape/seed payload for report-driven `run_start` events.
+fn host_spec_json(cfg: &TrainConfig) -> Json {
+    let spec = cfg.host;
+    obj(vec![
+        ("backend", jstr("host")),
+        ("model", jstr(spec.model.name())),
+        ("vocab", num(spec.vocab as f64)),
+        ("dim", num(spec.dim as f64)),
+        ("ffn", num(spec.ffn as f64)),
+        ("layers", num(spec.layers as f64)),
+        ("heads", num(spec.heads as f64)),
+        ("seq", num(spec.seq as f64)),
+        ("batch", num(spec.batch as f64)),
+        ("microbatches", num(spec.microbatches as f64)),
+        ("steps", num(cfg.steps as f64)),
+        ("seed", num(cfg.seed as f64)),
+    ])
 }
 
 /// Fig 5 + Table 2 (host analog): pretraining loss curves and measured
@@ -86,6 +127,7 @@ pub(crate) fn train_host_mode(cfg: &TrainConfig, mode: QuantMode) -> Result<Host
 /// zero AOT artifacts anywhere on the path.
 pub fn run_pretrain_report(args: &Args) -> Result<()> {
     let cfg = host_base_cfg(args, 120)?;
+    let sink = EventSink::from_args(args)?;
     let mut curves: Vec<(&str, Vec<f64>)> = Vec::new();
     let mut t2 = Table::new(
         "Table 2 (measured, host backend) — pretraining on synthetic corpus",
@@ -94,7 +136,7 @@ pub fn run_pretrain_report(args: &Args) -> Result<()> {
     let mut bf16_tps = 0f64;
     let mut bf16_loss = f64::NAN;
     for mode in ABLATION_MODES {
-        let tr = train_host_mode(&cfg, mode)?;
+        let tr = train_host_mode("report", &cfg, mode, &sink)?;
         let tps = tr.throughput.tokens_per_sec();
         let final_loss = tr.history.tail_loss(10);
         if mode == QuantMode::Bf16 {
@@ -116,6 +158,10 @@ pub fn run_pretrain_report(args: &Args) -> Result<()> {
     super::emit_text(args, "fig5_pretrain_loss", &plot)?;
     std::fs::write(super::results_dir(args).join("fig5_pretrain_loss.csv"), curves_csv(&curves))?;
     super::emit(args, "table2_measured", &t2)?;
+    if sink.active() {
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
+    }
     Ok(())
 }
 
@@ -145,6 +191,7 @@ fn curves_csv(curves: &[(&str, Vec<f64>)]) -> String {
 /// zero AOT artifacts.
 pub fn run_ablate_cli(args: &Args) -> Result<()> {
     let cfg = host_base_cfg(args, 80)?;
+    let sink = EventSink::from_args(args)?;
     let spec = cfg.host;
     eprintln!(
         "mode ablation: model {} ({} heads), vocab {} dim {} ffn {} layers {} seq {} batch {} \
@@ -169,7 +216,7 @@ pub fn run_ablate_cli(args: &Args) -> Result<()> {
     let mut bf16_final = f64::NAN;
     let mut fp8_finals: Vec<(QuantMode, f64)> = Vec::new();
     for mode in ABLATION_MODES {
-        let tr = train_host_mode(&cfg, mode)?;
+        let tr = train_host_mode("ablate", &cfg, mode, &sink)?;
         let first = tr.history.losses.first().map_or(f64::NAN, |&(_, l)| l);
         let final_loss = tr.history.tail_loss(5);
         if mode == QuantMode::Bf16 {
@@ -206,6 +253,10 @@ pub fn run_ablate_cli(args: &Args) -> Result<()> {
         let path = std::path::Path::new(out).join("ablate_losses.csv");
         std::fs::write(&path, curves_csv(&curves))?;
         eprintln!("wrote {}", path.display());
+    }
+    if sink.active() {
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
     }
     Ok(())
 }

@@ -1,0 +1,535 @@
+//! `repro events` — offline consumers of the telemetry stream and the
+//! committed perf trajectory.
+//!
+//! Two modes:
+//!
+//! * `repro events PATH [--check]` folds one event stream
+//!   (`events::reader`) into per-run summaries: event counts, first/
+//!   final loss per run, a mode-vs-mode loss table when the stream
+//!   holds several runs (e.g. `repro ablate --events`), scale-drift and
+//!   comm/serve digests. `--check` turns the summary into a CI gate:
+//!   nonzero malformed lines or zero `train_step` events fail.
+//! * `repro events --trend [PATH]` renders `bench/trajectory.jsonl`
+//!   (appended by `cargo bench -- --append`) as a per-source regression
+//!   table and fails when the newest record's throughput drops more
+//!   than `--max-drop-pct` (default 20) below the previous record of
+//!   the same source.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+use crate::events::reader::{read_all, read_jsonl_objects};
+use crate::events::{Event, ReadOutcome};
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+pub fn run_cli(args: &Args) -> Result<()> {
+    if args.has("trend") || args.get("trend").is_some() {
+        return run_trend(args);
+    }
+    let Some(path) = stream_path(args) else {
+        bail!(
+            "usage: repro events PATH [--check] | repro events --trend [PATH] \
+             [--max-drop-pct N]"
+        );
+    };
+    let outcomes = read_all(Path::new(&path))?;
+    let summary = summarize(&outcomes);
+    print_summary(&path, &summary);
+    if args.has("check") || args.get("check").is_some() {
+        if !summary.malformed.is_empty() {
+            bail!(
+                "events --check: {} malformed line(s), first at line {}: {}",
+                summary.malformed.len(),
+                summary.malformed[0].0,
+                summary.malformed[0].1
+            );
+        }
+        if summary.train_steps == 0 && summary.serve_ticks == 0 {
+            bail!("events --check: stream has no train_step or serve_tick events");
+        }
+        println!("events check OK: {} events, 0 malformed", summary.events);
+    }
+    Ok(())
+}
+
+/// The stream path: first positional, tolerating the CLI quirk where
+/// `--check PATH` / `--trend PATH` parse as flag values.
+fn stream_path(args: &Args) -> Option<String> {
+    args.positional
+        .first()
+        .cloned()
+        .or_else(|| args.get("check").map(str::to_string))
+        .or_else(|| args.get("trend").map(str::to_string))
+}
+
+// ---------------------------------------------------------------------
+// Stream summaries
+// ---------------------------------------------------------------------
+
+/// Digest of one run (RunStart .. next RunStart) inside a stream.
+#[derive(Debug, Default, Clone)]
+pub struct RunDigest {
+    pub cmd: String,
+    pub mode: String,
+    pub train_steps: u64,
+    pub first_loss: Option<f64>,
+    pub final_loss: Option<f64>,
+    pub last_tps: f64,
+    pub scale_updates: u64,
+    pub snaps: u64,
+    rel_err_sum: f64,
+    rel_err_n: u64,
+    pub max_saturation_pct: f64,
+    pub comm_events: u64,
+    pub comm_bytes: u64,
+    pub hidden_ms: f64,
+    pub exposed_ms: f64,
+    pub serve_ticks: u64,
+    pub max_active: usize,
+    pub last_tok_s: f64,
+    pub last_p99_ms: f64,
+    pub evals: u64,
+    pub ended: bool,
+}
+
+impl RunDigest {
+    /// Mean relative scale-prediction error |pred - obs| / obs over the
+    /// run's ScaleUpdate events (the §3.2 drift signal).
+    pub fn mean_scale_rel_err(&self) -> f64 {
+        if self.rel_err_n == 0 {
+            return 0.0;
+        }
+        self.rel_err_sum / self.rel_err_n as f64
+    }
+
+    /// Hidden fraction of comm time, recomputed from the CommBucket
+    /// events alone (cross-check against `OverlapStats`).
+    pub fn overlap_ratio(&self) -> f64 {
+        let total = self.hidden_ms + self.exposed_ms;
+        if !total.is_finite() || total <= 0.0 {
+            return 0.0;
+        }
+        self.hidden_ms / total
+    }
+}
+
+/// Whole-stream digest: per-run breakdown plus reader health.
+#[derive(Debug, Default, Clone)]
+pub struct StreamSummary {
+    pub runs: Vec<RunDigest>,
+    pub events: u64,
+    pub train_steps: u64,
+    pub serve_ticks: u64,
+    pub unknown: Vec<(usize, String)>,
+    pub malformed: Vec<(usize, String)>,
+}
+
+pub fn summarize(outcomes: &[ReadOutcome]) -> StreamSummary {
+    let mut s = StreamSummary::default();
+    for o in outcomes {
+        match o {
+            ReadOutcome::UnknownKind { lineno, kind, .. } => {
+                s.unknown.push((*lineno, kind.clone()));
+            }
+            ReadOutcome::MalformedLine { lineno, error } => {
+                s.malformed.push((*lineno, error.clone()));
+            }
+            ReadOutcome::Event(ev) => {
+                s.events += 1;
+                if matches!(ev, Event::RunStart { .. }) || s.runs.is_empty() {
+                    // Events before any RunStart fold into an implicit
+                    // headerless run (a truncated stream still counts).
+                    s.runs.push(RunDigest::default());
+                }
+                let run = s.runs.last_mut().expect("just ensured a run exists");
+                match ev {
+                    Event::RunStart { cmd, mode, .. } => {
+                        run.cmd.clone_from(cmd);
+                        run.mode.clone_from(mode);
+                    }
+                    Event::TrainStep { loss, tokens_per_sec, .. } => {
+                        s.train_steps += 1;
+                        run.train_steps += 1;
+                        if run.first_loss.is_none() {
+                            run.first_loss = Some(*loss);
+                        }
+                        run.final_loss = Some(*loss);
+                        run.last_tps = *tokens_per_sec;
+                    }
+                    Event::ScaleUpdate {
+                        predicted_amax,
+                        observed_amax,
+                        saturation_pct,
+                        snap,
+                        ..
+                    } => {
+                        run.scale_updates += 1;
+                        if *snap {
+                            run.snaps += 1;
+                        }
+                        if *observed_amax > 0.0 && predicted_amax.is_finite() {
+                            run.rel_err_sum +=
+                                (predicted_amax - observed_amax).abs() / observed_amax;
+                            run.rel_err_n += 1;
+                        }
+                        if saturation_pct.is_finite() {
+                            run.max_saturation_pct = run.max_saturation_pct.max(*saturation_pct);
+                        }
+                    }
+                    Event::CommBucket { bytes, hidden_ms, exposed_ms, .. } => {
+                        run.comm_events += 1;
+                        run.comm_bytes += bytes;
+                        if hidden_ms.is_finite() {
+                            run.hidden_ms += hidden_ms;
+                        }
+                        if exposed_ms.is_finite() {
+                            run.exposed_ms += exposed_ms;
+                        }
+                    }
+                    Event::ServeTick { active, tok_s, p99_ms, .. } => {
+                        s.serve_ticks += 1;
+                        run.serve_ticks += 1;
+                        run.max_active = run.max_active.max(*active);
+                        run.last_tok_s = *tok_s;
+                        run.last_p99_ms = *p99_ms;
+                    }
+                    Event::EvalPoint { .. } => run.evals += 1,
+                    Event::RunEnd { .. } => run.ended = true,
+                }
+            }
+        }
+    }
+    s
+}
+
+fn print_summary(path: &str, s: &StreamSummary) {
+    println!(
+        "stream {path}: {} event(s) across {} run(s), {} unknown-kind, {} malformed",
+        s.events,
+        s.runs.len(),
+        s.unknown.len(),
+        s.malformed.len()
+    );
+    for (lineno, kind) in s.unknown.iter().take(5) {
+        println!("  unknown kind {kind:?} at line {lineno} (skipped, raw preserved)");
+    }
+    for (lineno, err) in s.malformed.iter().take(5) {
+        println!("  malformed line {lineno}: {err}");
+    }
+
+    if !s.runs.is_empty() {
+        let mut t = Table::new(
+            "runs",
+            &["run", "cmd", "mode", "steps", "first loss", "final loss", "tok/s"],
+        );
+        for (i, r) in s.runs.iter().enumerate() {
+            t.row(vec![
+                format!("{}{}", i, if r.ended { "" } else { " (truncated)" }),
+                r.cmd.clone(),
+                r.mode.clone(),
+                r.train_steps.to_string(),
+                r.first_loss.map_or("-".to_string(), |l| f(l, 4)),
+                r.final_loss.map_or("-".to_string(), |l| f(l, 4)),
+                f(r.last_tps, 0),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    // Mode-vs-mode loss table: meaningful when the stream holds several
+    // trained runs (repro ablate --events writes one run per mode).
+    let trained: Vec<&RunDigest> = s.runs.iter().filter(|r| r.final_loss.is_some()).collect();
+    if trained.len() > 1 {
+        let base = trained.iter().find(|r| r.mode == "bf16").copied();
+        let mut t = Table::new("mode vs mode (final loss)", &["mode", "final loss", "vs bf16"]);
+        for r in &trained {
+            let loss = r.final_loss.unwrap_or(f64::NAN);
+            let gap = match base.and_then(|b| b.final_loss) {
+                Some(b) if r.mode != "bf16" => format!("{:+.4}", loss - b),
+                _ => "-".to_string(),
+            };
+            t.row(vec![r.mode.clone(), f(loss, 4), gap]);
+        }
+        print!("{}", t.render());
+    }
+
+    for (i, r) in s.runs.iter().enumerate() {
+        if r.scale_updates > 0 {
+            println!(
+                "run {i} scale drift: {} updates, {} snaps, mean |pred-obs|/obs {:.4}, \
+                 max saturation {:.3}%",
+                r.scale_updates,
+                r.snaps,
+                r.mean_scale_rel_err(),
+                r.max_saturation_pct
+            );
+        }
+        if r.comm_events > 0 {
+            println!(
+                "run {i} comm: {} bucket events, {:.1} KB on wire, overlap ratio {:.2} \
+                 (hidden {:.1} ms / exposed {:.1} ms)",
+                r.comm_events,
+                r.comm_bytes as f64 / 1e3,
+                r.overlap_ratio(),
+                r.hidden_ms,
+                r.exposed_ms
+            );
+        }
+        if r.serve_ticks > 0 {
+            println!(
+                "run {i} serve: {} ticks, max active {}, last {:.1} tok/s, last p99 {:.1} ms",
+                r.serve_ticks, r.max_active, r.last_tok_s, r.last_p99_ms
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Perf trajectory (--trend)
+// ---------------------------------------------------------------------
+
+/// The regression gate per trajectory source: which field is "the"
+/// throughput of that bench.
+const GATES: &[(&str, &str)] = &[
+    ("host", "host_step_tokens_per_sec"),
+    ("serve", "decode_tps_packed"),
+];
+
+/// Columns shown per source in the trend table.
+const TREND_COLS: &[(&str, &[&str])] = &[
+    (
+        "host",
+        &[
+            "host_step_tokens_per_sec",
+            "packed_gemm_speedup_512_p50",
+            "moss_vs_bf16_host_speedup",
+            "wire_packed_bytes_per_elem",
+            "overlap_ratio_measured",
+        ],
+    ),
+    ("serve", &["decode_tps_packed", "decode_tps_dequant", "tokens_per_sec", "p99_ms"]),
+];
+
+fn run_trend(args: &Args) -> Result<()> {
+    let path = stream_path(args).unwrap_or_else(|| "bench/trajectory.jsonl".to_string());
+    let max_drop = args.get_f64("max-drop-pct", 20.0)?;
+    let p = Path::new(&path);
+    if !p.exists() {
+        println!(
+            "trajectory {path}: missing — no baseline yet (seed it with \
+             `cargo bench --bench host_backend -- --append {path}`)"
+        );
+        return Ok(());
+    }
+    let (records, bad) = read_jsonl_objects(p)?;
+    for (lineno, err) in bad.iter().take(5) {
+        println!("  malformed trajectory line {lineno}: {err}");
+    }
+    if records.is_empty() {
+        println!("trajectory {path}: empty — no baseline yet");
+        return Ok(());
+    }
+    println!("trajectory {path}: {} record(s), {} malformed", records.len(), bad.len());
+
+    for (source, cols) in TREND_COLS {
+        let rows: Vec<&Json> = records.iter().filter(|r| source_of(r) == *source).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let mut header = vec!["git", "when"];
+        header.extend_from_slice(cols);
+        let mut t = Table::new(&format!("trend: {source}"), &header);
+        for r in &rows {
+            let mut cells = vec![
+                str_field(r, "git").unwrap_or_else(|| "?".to_string()),
+                str_field(r, "unix_secs")
+                    .or_else(|| metric(r, "unix_secs").map(|v| format!("{v:.0}")))
+                    .unwrap_or_else(|| "?".to_string()),
+            ];
+            for c in *cols {
+                cells.push(metric(r, c).map_or("-".to_string(), |v| f(v, 3)));
+            }
+            t.row(cells);
+        }
+        print!("{}", t.render());
+    }
+
+    let regs = regressions(&records, max_drop);
+    for r in &regs {
+        eprintln!("REGRESSION: {r}");
+    }
+    if !regs.is_empty() {
+        bail!("{} perf regression(s) beyond {max_drop:.0}% (see above)", regs.len());
+    }
+    println!("trend OK: no source dropped more than {max_drop:.0}% vs its previous record");
+    Ok(())
+}
+
+/// Compare the last two records of each gated source; a drop beyond
+/// `max_drop_pct` on the source's throughput metric is a regression.
+/// With fewer than two records there is no baseline — never fails.
+pub fn regressions(records: &[Json], max_drop_pct: f64) -> Vec<String> {
+    let mut out = Vec::new();
+    for (source, key) in GATES {
+        let vals: Vec<f64> = records
+            .iter()
+            .filter(|r| source_of(r) == *source)
+            .filter_map(|r| metric(r, key))
+            .filter(|v| v.is_finite() && *v > 0.0)
+            .collect();
+        if vals.len() < 2 {
+            continue;
+        }
+        let (prev, last) = (vals[vals.len() - 2], vals[vals.len() - 1]);
+        let drop_pct = (1.0 - last / prev) * 100.0;
+        if drop_pct > max_drop_pct {
+            out.push(format!(
+                "{source}.{key}: {last:.1} is {drop_pct:.1}% below previous {prev:.1} \
+                 (limit {max_drop_pct:.0}%)"
+            ));
+        }
+    }
+    out
+}
+
+fn source_of(r: &Json) -> &str {
+    r.get("source").and_then(|s| s.as_str().ok()).unwrap_or("")
+}
+
+fn metric(r: &Json, key: &str) -> Option<f64> {
+    r.get(key).and_then(|v| v.as_f64().ok())
+}
+
+fn str_field(r: &Json, key: &str) -> Option<String> {
+    r.get(key).and_then(|v| v.as_str().ok()).map(str::to_string)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{run_start, EventReader};
+    use crate::util::json::{num, obj, s as jstr};
+
+    fn stream(lines: &[String]) -> Vec<ReadOutcome> {
+        let joined = lines.join("\n");
+        EventReader::new(joined.as_bytes()).collect()
+    }
+
+    #[test]
+    fn summarize_splits_runs_and_digests_losses() {
+        let mut lines = Vec::new();
+        for (mode, base) in [("bf16", 4.0), ("moss", 4.1)] {
+            lines.push(run_start("ablate", mode, obj(vec![("dim", num(32.0))])).to_line());
+            for step in 1..=3u64 {
+                lines.push(
+                    Event::TrainStep {
+                        step,
+                        loss: base - step as f64 * 0.5,
+                        gnorm: 1.0,
+                        tokens_per_sec: 1000.0,
+                    }
+                    .to_line(),
+                );
+            }
+            lines.push(Event::RunEnd { summary: Json::Null }.to_line());
+        }
+        let s = summarize(&stream(&lines));
+        assert_eq!(s.runs.len(), 2);
+        assert_eq!(s.train_steps, 6);
+        assert!(s.malformed.is_empty() && s.unknown.is_empty());
+        assert_eq!(s.runs[0].mode, "bf16");
+        assert_eq!(s.runs[0].first_loss, Some(3.5));
+        assert_eq!(s.runs[0].final_loss, Some(2.5));
+        assert!((s.runs[1].final_loss.unwrap() - 2.6).abs() < 1e-12);
+        assert!(s.runs.iter().all(|r| r.ended));
+    }
+
+    #[test]
+    fn summarize_tolerates_headerless_and_corrupt_streams() {
+        let lines = vec![
+            Event::TrainStep { step: 1, loss: 2.0, gnorm: 1.0, tokens_per_sec: 10.0 }.to_line(),
+            "garbage!".to_string(),
+            r#"{"v":1,"kind":"gpu_temp","celsius":70}"#.to_string(),
+        ];
+        let s = summarize(&stream(&lines));
+        assert_eq!(s.runs.len(), 1, "implicit headerless run");
+        assert_eq!(s.runs[0].train_steps, 1);
+        assert!(!s.runs[0].ended);
+        assert_eq!(s.malformed.len(), 1);
+        assert_eq!(s.unknown.len(), 1);
+    }
+
+    #[test]
+    fn summarize_scale_and_comm_digests() {
+        let lines = vec![
+            run_start("train", "moss", Json::Null).to_line(),
+            Event::ScaleUpdate {
+                step: 1,
+                layer: 0,
+                predicted_amax: 1.1,
+                observed_amax: 1.0,
+                saturation_pct: 0.5,
+                snap: true,
+            }
+            .to_line(),
+            Event::CommBucket {
+                step: 1,
+                bucket: 0,
+                bytes: 1000,
+                ready_ms: 1.0,
+                ring_ms: 4.0,
+                hidden_ms: 3.0,
+                exposed_ms: 1.0,
+            }
+            .to_line(),
+        ];
+        let s = summarize(&stream(&lines));
+        let r = &s.runs[0];
+        assert_eq!((r.scale_updates, r.snaps), (1, 1));
+        assert!((r.mean_scale_rel_err() - 0.1).abs() < 1e-9);
+        assert_eq!(r.comm_bytes, 1000);
+        assert!((r.overlap_ratio() - 0.75).abs() < 1e-12);
+    }
+
+    fn traj(source: &str, key: &str, v: f64) -> Json {
+        obj(vec![("source", jstr(source)), (key, num(v))])
+    }
+
+    #[test]
+    fn regression_gate_fires_only_past_threshold() {
+        let key = "host_step_tokens_per_sec";
+        // No baseline: one record never regresses.
+        assert!(regressions(&[traj("host", key, 100.0)], 20.0).is_empty());
+        // 10% drop under a 20% limit: fine.
+        let recs = vec![traj("host", key, 100.0), traj("host", key, 90.0)];
+        assert!(regressions(&recs, 20.0).is_empty());
+        // 30% drop: fires.
+        let recs = vec![traj("host", key, 100.0), traj("host", key, 70.0)];
+        let regs = regressions(&recs, 20.0);
+        assert_eq!(regs.len(), 1);
+        assert!(regs[0].contains("host_step_tokens_per_sec"), "{}", regs[0]);
+        // Sources gate independently; an improving serve doesn't mask it.
+        let recs = vec![
+            traj("host", key, 100.0),
+            traj("serve", "decode_tps_packed", 50.0),
+            traj("host", key, 70.0),
+            traj("serve", "decode_tps_packed", 60.0),
+        ];
+        assert_eq!(regressions(&recs, 20.0).len(), 1);
+    }
+
+    #[test]
+    fn regression_gate_compares_latest_pair() {
+        let key = "decode_tps_packed";
+        // Old regression already absorbed; only the newest pair counts.
+        let recs = vec![
+            traj("serve", key, 100.0),
+            traj("serve", key, 40.0),
+            traj("serve", key, 41.0),
+        ];
+        assert!(regressions(&recs, 20.0).is_empty());
+    }
+}

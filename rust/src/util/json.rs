@@ -100,7 +100,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // NaN/inf have no JSON token ("NaN" would make the
+                    // whole document unparseable); write null, which
+                    // tolerant readers surface as NaN.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -287,13 +292,32 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            if self.i + 4 > self.b.len() {
-                                bail!("truncated \\u escape");
+                            let cp = self.hex4()?;
+                            if (0xD800..0xDC00).contains(&cp) {
+                                // High surrogate: JSON encodes astral
+                                // chars as a \uXXXX\uXXXX UTF-16 pair.
+                                // Combine with the low half; a lone or
+                                // mismatched surrogate degrades to
+                                // U+FFFD (tolerant, like bad \u values).
+                                if self.b[self.i..].starts_with(b"\\u") {
+                                    self.i += 2;
+                                    let lo = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    } else {
+                                        s.push('\u{fffd}');
+                                        s.push(char::from_u32(lo).unwrap_or('\u{fffd}'));
+                                    }
+                                } else {
+                                    s.push('\u{fffd}');
+                                }
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                // Lone low surrogate.
+                                s.push('\u{fffd}');
+                            } else {
+                                s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             }
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                         }
                         c => bail!("invalid escape \\{}", c as char),
                     }
@@ -312,6 +336,17 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Four hex digits of a \uXXXX escape (cursor already past the 'u').
+    fn hex4(&mut self) -> Result<u32> {
+        if self.i + 4 > self.b.len() {
+            bail!("truncated \\u escape");
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let cp = u32::from_str_radix(hex, 16)?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn number(&mut self) -> Result<Json> {
@@ -399,5 +434,63 @@ mod tests {
     fn unicode_strings() {
         let v = Json::parse(r#""héllo é""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "héllo é");
+    }
+
+    fn round_trip(s: &str) {
+        let j = Json::Str(s.to_string());
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.as_str().unwrap(), s, "round trip of {s:?}");
+    }
+
+    #[test]
+    fn string_escaping_round_trips() {
+        round_trip("plain");
+        round_trip(r#"quote " and backslash \"#);
+        round_trip("newline\n tab\t cr\r");
+        round_trip("control \u{1} \u{7} \u{1f} bytes");
+        round_trip("nul \u{0} byte");
+        round_trip("slash / stays literal");
+        round_trip("non-ascii: é ü 日本語 Ω");
+        round_trip("astral: 😀 𝕊 🦀");
+        round_trip("mixed \"x\\y\"\n😀\tend");
+    }
+
+    #[test]
+    fn parses_utf16_surrogate_pair_escapes() {
+        // Writers that \u-escape astral chars (e.g. Python json.dumps
+        // with ensure_ascii) emit UTF-16 pairs; they must decode to one
+        // char, not two replacement chars. (Raw strings keep the \u
+        // literal, so the *parser's* escape path is what runs here.)
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        let v = Json::parse(r#""x\ud835\udd4ax""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "x𝕊x");
+    }
+
+    #[test]
+    fn lone_surrogates_degrade_to_replacement_char() {
+        // Lone high, lone low, and high + non-surrogate escape: all
+        // tolerantly replaced, never a panic or an invalid char.
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str().unwrap(), "\u{fffd}");
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str().unwrap(), "\u{fffd}x");
+        assert_eq!(Json::parse(r#""\ud83dA""#).unwrap().as_str().unwrap(), "\u{fffd}A");
+        assert!(Json::parse(r#""\ud83d\ud8"#).is_err(), "truncated pair is an error");
+    }
+
+    #[test]
+    fn control_chars_are_escaped_on_write() {
+        let out = Json::Str("a\u{1}b".to_string()).to_string();
+        assert_eq!(out, "\"a\\u0001b\"");
+    }
+
+    #[test]
+    fn nonfinite_numbers_write_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let doc = obj(vec![("loss", num(f64::NAN)), ("ok", num(1.5))]).to_string();
+        assert_eq!(doc, r#"{"loss":null,"ok":1.5}"#);
+        // The document stays parseable — the whole point.
+        assert!(Json::parse(&doc).is_ok());
     }
 }

@@ -1,0 +1,277 @@
+//! End-to-end locks on the telemetry stream (`moss::events`):
+//!
+//! 1. [`golden_fixture_pins_the_event_stream_schema`] — a 10-step moss
+//!    run's full JSONL stream is pinned against
+//!    `tests/fixtures/events_v1.jsonl` after scrubbing the few
+//!    wall-clock-dependent fields (tokens/sec, git rev), so any change
+//!    to the event schema, field names, emission order, or the
+//!    training numerics behind the emitted values shows up as a
+//!    fixture diff. Self-bootstraps like `mode_parity_golden`:
+//!    regenerate deliberately with `MOSS_WRITE_GOLDEN=1 cargo test
+//!    --test events_stream`.
+//! 2. [`reader_survives_corrupted_streams`] — truncated lines, raw
+//!    garbage, unknown kinds, and wrong schema versions must classify
+//!    (`UnknownKind` / `MalformedLine`) without aborting iteration;
+//!    every well-formed line around them still parses.
+//! 3. [`events_do_not_perturb_training`] — the bitwise pin behind the
+//!    whole design: a serial moss run with an active `--events` sink
+//!    produces bit-identical per-step losses/grad-norms and final
+//!    parameters to the same run without one. Emission is
+//!    observation-only by contract; this test is the contract's teeth.
+
+use std::io::Cursor;
+use std::path::{Path, PathBuf};
+
+use moss::backend::HostTrainer;
+use moss::config::{BackendKind, HostSpec, LrSchedule, ModelKind, QuantMode, TrainConfig};
+use moss::events::reader::read_all;
+use moss::events::{run_start, Event, EventReader, EventSink, ReadOutcome};
+use moss::util::json::{num, obj, s as jstr, Json};
+
+/// The tiny deterministic moss config every golden test in this suite
+/// trains (same shape as `mode_parity_golden`).
+fn moss_cfg(steps: u64) -> TrainConfig {
+    TrainConfig {
+        backend: BackendKind::Host,
+        host: HostSpec {
+            vocab: 64,
+            dim: 32,
+            ffn: 64,
+            layers: 2,
+            seq: 16,
+            batch: 2,
+            micro: 32,
+            microbatches: 1,
+            cache_weights: true,
+            model: ModelKind::Mlp,
+            heads: 2,
+        },
+        mode: QuantMode::Moss,
+        steps,
+        lr: LrSchedule { peak: 5e-3, warmup_steps: 5, total_steps: steps, final_ratio: 0.1 },
+        log_every: 0,
+        artifacts_root: "artifacts-that-do-not-exist".into(),
+        ..TrainConfig::default()
+    }
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("moss_events_{}_{name}.jsonl", std::process::id()))
+}
+
+/// Replace the wall-clock/environment-dependent fields anywhere in the
+/// event tree so the remaining stream is bit-deterministic: throughput
+/// numbers depend on machine speed, the git rev on the checkout.
+fn scrub(j: &mut Json) {
+    if let Json::Obj(pairs) = j {
+        for (k, v) in pairs.iter_mut() {
+            match k.as_str() {
+                "tokens_per_sec" | "tok_s" => *v = Json::Num(0.0),
+                "git" => *v = Json::Str(String::new()),
+                _ => scrub(v),
+            }
+        }
+    }
+}
+
+fn normalize_line(line: &str) -> String {
+    let mut j = Json::parse(line).expect("emitted line parses as JSON");
+    scrub(&mut j);
+    j.to_string()
+}
+
+/// Run the 10-step moss recipe with a live sink — the same
+/// run_start/steps/run_end bracket `repro train --events` writes — and
+/// return the normalized stream.
+fn golden_stream() -> String {
+    let steps = 10u64;
+    let path = temp_path("golden");
+    let sink = EventSink::to_path(&path).unwrap();
+    let cfg = moss_cfg(steps);
+    let spec = cfg.host;
+    sink.emit(&run_start(
+        "train",
+        "moss",
+        obj(vec![
+            ("backend", jstr("host")),
+            ("model", jstr(spec.model.name())),
+            ("vocab", num(spec.vocab as f64)),
+            ("dim", num(spec.dim as f64)),
+            ("layers", num(spec.layers as f64)),
+            ("steps", num(steps as f64)),
+        ]),
+    ));
+    let mut t = HostTrainer::new(cfg).unwrap();
+    t.set_sink(sink.clone());
+    t.run(steps).unwrap();
+    sink.emit(&Event::RunEnd {
+        summary: obj(vec![
+            ("steps", num(t.steps_done as f64)),
+            ("final_loss", num(t.history.tail_loss(5))),
+        ]),
+    });
+    sink.close().unwrap();
+    let raw = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let mut out = String::new();
+    for line in raw.lines() {
+        out.push_str(&normalize_line(line));
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn golden_fixture_pins_the_event_stream_schema() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/events_v1.jsonl");
+    let stream = golden_stream();
+    // Structure sanity before any fixture comparison: 1 run_start, 10
+    // train_steps, 5 scale_updates per step (2 MLP layers x up/down +
+    // the output head), 1 run_end.
+    let kinds: Vec<String> = stream
+        .lines()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            match j.get("kind") {
+                Some(Json::Str(k)) => k.clone(),
+                other => panic!("line without string kind: {other:?}"),
+            }
+        })
+        .collect();
+    assert_eq!(kinds.first().map(String::as_str), Some("run_start"));
+    assert_eq!(kinds.last().map(String::as_str), Some("run_end"));
+    assert_eq!(kinds.iter().filter(|k| *k == "train_step").count(), 10);
+    assert_eq!(kinds.iter().filter(|k| *k == "scale_update").count(), 50);
+    assert_eq!(kinds.len(), 62);
+
+    if std::env::var_os("MOSS_WRITE_GOLDEN").is_some() {
+        std::fs::write(&path, &stream).unwrap();
+        eprintln!("rewrote {}", path.display());
+        return;
+    }
+    if !path.exists() {
+        // First run on a machine with a toolchain: prove the normalized
+        // stream is self-reproducible, then bootstrap the fixture.
+        let again = golden_stream();
+        assert_eq!(stream, again, "normalized 10-step event stream is not deterministic");
+        std::fs::write(&path, &stream).unwrap();
+        eprintln!("bootstrapped {}; commit it to pin the schema", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        stream.lines().count(),
+        want.lines().count(),
+        "event stream length drifted from the fixture — regenerate with \
+         MOSS_WRITE_GOLDEN=1 if intended"
+    );
+    for (lineno, (got, expect)) in stream.lines().zip(want.lines()).enumerate() {
+        assert_eq!(
+            got,
+            expect,
+            "event stream line {} drifted from the golden fixture; if this change is \
+             intentional, regenerate with MOSS_WRITE_GOLDEN=1 cargo test --test events_stream",
+            lineno + 1
+        );
+    }
+}
+
+#[test]
+fn reader_survives_corrupted_streams() {
+    let good = Event::TrainStep { step: 1, loss: 4.25, gnorm: 0.5, tokens_per_sec: 100.0 };
+    let mut text = String::new();
+    text.push_str(&good.to_line());
+    text.push('\n');
+    text.push_str("{\"v\":1,\"kind\":\"train_st"); // truncated mid-line
+    text.push('\n');
+    text.push_str("not json at all\n");
+    text.push_str("{\"v\":1,\"kind\":\"gpu_temp\",\"celsius\":81}\n"); // unknown kind
+    text.push_str("{\"v\":99,\"kind\":\"train_step\",\"step\":2}\n"); // future schema
+    text.push_str("{\"v\":1,\"kind\":\"train_step\"}\n"); // missing fields
+    text.push('\n'); // blank line: skipped entirely
+    let good2 = Event::TrainStep { step: 2, loss: 4.0, gnorm: 0.25, tokens_per_sec: 90.0 };
+    text.push_str(&good2.to_line());
+    text.push('\n');
+
+    let outcomes: Vec<ReadOutcome> = EventReader::new(Cursor::new(text)).collect();
+    assert_eq!(outcomes.len(), 7, "blank line must not produce an outcome");
+    assert!(matches!(&outcomes[0], ReadOutcome::Event(Event::TrainStep { step: 1, .. })));
+    assert!(matches!(&outcomes[1], ReadOutcome::MalformedLine { lineno: 2, .. }));
+    assert!(matches!(&outcomes[2], ReadOutcome::MalformedLine { lineno: 3, .. }));
+    match &outcomes[3] {
+        ReadOutcome::UnknownKind { lineno, kind, raw } => {
+            assert_eq!(*lineno, 4);
+            assert_eq!(kind, "gpu_temp");
+            assert!(raw.contains("celsius"), "unknown kinds must preserve the raw line");
+        }
+        other => panic!("expected UnknownKind, got {other:?}"),
+    }
+    match &outcomes[4] {
+        ReadOutcome::MalformedLine { lineno, error } => {
+            assert_eq!(*lineno, 5);
+            assert!(error.contains("schema_version"), "version mismatch must say so: {error}");
+        }
+        other => panic!("expected MalformedLine, got {other:?}"),
+    }
+    assert!(matches!(&outcomes[5], ReadOutcome::MalformedLine { lineno: 6, .. }));
+    // The reader kept going: the last well-formed line still parses.
+    assert!(matches!(&outcomes[6], ReadOutcome::Event(Event::TrainStep { step: 2, .. })));
+}
+
+#[test]
+fn events_do_not_perturb_training() {
+    let steps = 12u64;
+    // Reference run: no sink anywhere near it.
+    let mut plain = HostTrainer::new(moss_cfg(steps)).unwrap();
+    let mut plain_stream = Vec::new();
+    for _ in 0..steps {
+        let out = plain.step().unwrap();
+        plain_stream.push((out.loss, out.grad_norm));
+    }
+    // Observed run: live sink writing every event to disk.
+    let path = temp_path("parity");
+    let sink = EventSink::to_path(&path).unwrap();
+    let mut observed = HostTrainer::new(moss_cfg(steps)).unwrap();
+    observed.set_sink(sink.clone());
+    for (step, &(loss, gnorm)) in plain_stream.iter().enumerate() {
+        let out = observed.step().unwrap();
+        assert_eq!(
+            out.loss.to_bits(),
+            loss.to_bits(),
+            "loss diverged under --events at step {}",
+            step + 1
+        );
+        assert_eq!(
+            out.grad_norm.to_bits(),
+            gnorm.to_bits(),
+            "grad norm diverged under --events at step {}",
+            step + 1
+        );
+    }
+    for (i, (wa, wb)) in observed.model.weights.iter().zip(&plain.model.weights).enumerate() {
+        for (j, (a, b)) in wa.iter().zip(wb).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "weight {i} elem {j} diverged under --events");
+        }
+    }
+    for (j, (a, b)) in observed.model.embed.iter().zip(&plain.model.embed).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "embed elem {j} diverged under --events");
+    }
+    sink.close().unwrap();
+    // And the stream the observed run produced is complete.
+    let outcomes = read_all(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let train_steps = outcomes
+        .iter()
+        .filter(|o| matches!(o, ReadOutcome::Event(Event::TrainStep { .. })))
+        .count();
+    let scale_updates = outcomes
+        .iter()
+        .filter(|o| matches!(o, ReadOutcome::Event(Event::ScaleUpdate { .. })))
+        .count();
+    assert_eq!(train_steps, steps as usize);
+    assert_eq!(scale_updates, 5 * steps as usize, "5 linears x {steps} steps");
+    assert!(
+        !outcomes.iter().any(|o| matches!(o, ReadOutcome::MalformedLine { .. })),
+        "a live run must never write a malformed line"
+    );
+}
