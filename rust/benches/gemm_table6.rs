@@ -7,6 +7,7 @@ use moss::formats::fp8::E4M3;
 use moss::gemm_sim::machine::MachineModel;
 use moss::gemm_sim::schedule::{kernel_cost, table6_shapes, Scheme};
 use moss::gemm_sim::tables::{fig1, table6};
+use moss::kernels::simd;
 use moss::kernels::{dequant_then_naive_gemm, packed_gemm, PackedFp8Tensor};
 use moss::util::rng::Rng;
 use moss::util::table::{f, Table};
@@ -45,14 +46,24 @@ fn main() {
     let mut rng = Rng::new(2);
     let mut t = Table::new(
         "packed-u8 engine (measured, this host) — MOSS schedule vs dequantize-then-f32",
-        &["M", "N", "K", "packed ms", "dequant+f32 ms", "speedup"],
+        &["M", "N", "K", "packed ms", "scalar ms", "dequant+f32 ms", "simd gain", "speedup"],
     );
     let bq = Bencher::quick();
+    // In-process SIMD A/B on the same operands: force the scalar 4-lane
+    // path, then release the probe (bits are identical either way, so
+    // the columns differ only in time). `simd gain` is the measured
+    // vector-vs-scalar improvement; on scalar-only hosts it reads 1.0x.
+    let isa = simd::active_isa();
     for (m, n, k) in [(256usize, 256usize, 256usize), (512, 512, 512), (512, 768, 1024)] {
         let a = rng.activation_like(m, k, 1.5);
         let bt = rng.activation_like(n, k, 1.0);
         let ap = PackedFp8Tensor::quantize(&a, m, k, 32, &E4M3);
         let bp = PackedFp8Tensor::quantize(&bt, n, k, 32, &E4M3);
+        simd::force_scalar(true);
+        let scalar = bq.run(&format!("scalar_gemm_{m}x{n}x{k}"), || {
+            black_box(packed_gemm(black_box(&ap), black_box(&bp)));
+        });
+        simd::force_scalar(false);
         let packed = bq.run(&format!("packed_gemm_{m}x{n}x{k}"), || {
             black_box(packed_gemm(black_box(&ap), black_box(&bp)));
         });
@@ -64,11 +75,14 @@ fn main() {
             n.to_string(),
             k.to_string(),
             f(packed.mean_ms(), 2),
+            f(scalar.mean_ms(), 2),
             f(base.mean_ms(), 2),
+            format!("{:.2}x", scalar.summary.mean / packed.summary.mean),
             format!("{:.2}x", base.summary.mean / packed.summary.mean),
         ]);
     }
     print!("{}", t.render());
+    println!("simd dispatch: {isa} (scalar column = forced 4-lane scalar path)");
 
     // executable Pallas MX-GEMM artifact timing (CPU interpret-mode —
     // correctness substrate, not a TPU perf proxy; see DESIGN.md)

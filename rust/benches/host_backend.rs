@@ -259,6 +259,7 @@ fn main() {
     let json = format!(
         concat!(
             "{{\n",
+            "  \"simd_isa\": \"{}\",\n",
             "  \"packed_gemm_speedup_512_p50\": {:.3},\n",
             "  \"packed_gemm_p50_ms\": {:.3},\n",
             "  \"dequant_f32_gemm_p50_ms\": {:.3},\n",
@@ -295,6 +296,7 @@ fn main() {
             "\"layers\": {}, \"batch\": {}, \"seq\": {}}}\n",
             "}}\n"
         ),
+        moss::kernels::simd::active_isa(),
         speedup,
         packed.summary.p50 * 1e3,
         baseline.summary.p50 * 1e3,

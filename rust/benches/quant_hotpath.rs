@@ -91,7 +91,12 @@ fn main() {
         black_box(packed_gemm(black_box(&ap), black_box(&bp)));
     });
     let flops = 2.0 * (dim * dim * dim) as f64;
-    println!("{}  ({:.2} GFLOP/s)", packed.report_line(), flops / packed.summary.mean / 1e9);
+    println!(
+        "{}  ({:.2} GFLOP/s, simd {})",
+        packed.report_line(),
+        flops / packed.summary.mean / 1e9,
+        moss::kernels::simd::active_isa()
+    );
     // Single-thread run isolates the *schedule* win (LUT + group exponent
     // adds + blocking) from the threading win; reported, not gated.
     let one = GemmConfig { threads: 1, ..GemmConfig::default() };

@@ -23,12 +23,14 @@ fn main() {
     let model = Model::init(spec, QuantMode::Moss, 0);
     let engine = Engine::new(model, serve).expect("serve engine");
     println!(
-        "serve bench: {} ({} layers, dim {}, {} heads), mode moss, packed weights {:.1} KB",
+        "serve bench: {} ({} layers, dim {}, {} heads), mode moss, packed weights {:.1} KB, \
+         simd {}",
         spec.model.name(),
         spec.layers,
         spec.dim,
         spec.heads,
-        engine.packed_bytes() as f64 / 1e3
+        engine.packed_bytes() as f64 / 1e3,
+        moss::kernels::simd::active_isa()
     );
 
     // --- open-loop continuous batching over the Poisson trace --------

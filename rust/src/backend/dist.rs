@@ -100,7 +100,7 @@ use crate::util::rng::stream_seed;
 use super::host::{
     apply_update, average_and_clip, backward, check_data_vocab, clip_factor, data_base_seed,
     emission_order, emit_scale_updates, forward, make_batch_source, make_scaler, softmax_xent,
-    split_tokens, GradSink, GradSlot, Grads, HostModel, SharedWeights,
+    split_tokens, warmup_gemm_tuner, GradSink, GradSlot, Grads, HostModel, SharedWeights,
 };
 
 /// One worker's microbatch shard: `(inputs, targets)` token matrices
@@ -438,6 +438,7 @@ impl DistTrainer {
         let scaler = make_scaler(cfg.scaling);
         let sources = Self::make_sources(&cfg);
         let model = HostModel::init(spec, cfg.seed);
+        warmup_gemm_tuner(&spec);
         let emis = Arc::new(EmissionMap::new(&model));
         let layout = Arc::new(BucketLayout::new(&emis.lens, cfg.dist.bucket_bytes));
         let wire = cfg.dist.wire.to_wire(spec.micro);

@@ -123,6 +123,22 @@ pub struct HostModel {
     pub slots: Vec<LinearSlot>,
 }
 
+/// Warm the GEMM autotuner for every training-time linear shape of
+/// `spec`: the forward `[M,k] @ [k,n]` and the backward dX `[M,n] @
+/// [n,k]` per slot, with `M = batch * seq`. Called from the trainer
+/// constructors so the (persisted) search runs once at startup instead
+/// of stalling the first step; attention GEMMs vary with KV length and
+/// intentionally stay on the tuner's miss heuristic.
+pub(crate) fn warmup_gemm_tuner(spec: &HostSpec) {
+    let m = spec.batch * spec.seq;
+    let mut shapes = Vec::new();
+    for slot in linear_slots(spec) {
+        shapes.push((m, slot.n, slot.k));
+        shapes.push((m, slot.k, slot.n));
+    }
+    crate::kernels::tune::warmup(&shapes);
+}
+
 /// The canonical linear-slot table of `spec` — the single definition of
 /// slot order and shapes shared by seeded init and checkpoint load.
 pub fn linear_slots(spec: &HostSpec) -> Vec<LinearSlot> {
@@ -912,6 +928,7 @@ impl HostTrainer {
         let mut cache = PackedWeightCache::new(spec.n_linears());
         cache.enabled = spec.cache_weights;
         let numerics = LinearNumerics::new(cfg.mode, spec.micro);
+        warmup_gemm_tuner(&spec);
         Ok(HostTrainer {
             cfg,
             model,

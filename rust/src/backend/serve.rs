@@ -149,6 +149,14 @@ impl Engine {
         spec.validate()?;
         model.validate_serve().context("model cannot serve under its numerics mode")?;
         let packed = model.pack();
+        // Decode is row-local (m = 1 per sequence step); warm the tuner
+        // for each linear's decode shape so the first token pays no
+        // search (the search itself is shape-capped and persisted).
+        let shapes: Vec<(usize, usize, usize)> = crate::backend::host::linear_slots(model.spec())
+            .iter()
+            .map(|slot| (1, slot.n, slot.k))
+            .collect();
+        crate::kernels::tune::warmup(&shapes);
         Ok(Engine { model, packed, spec, sink: EventSink::disabled() })
     }
 

@@ -41,6 +41,7 @@
 use crate::quant::TwoLevelQuant;
 
 use super::packed::PackedFp8Tensor;
+use super::simd;
 
 /// Exponent sums `ssA + ssB` span [-254, 254]; the table is indexed by
 /// `e + EXP2_BIAS`.
@@ -88,6 +89,11 @@ fn check_operands(a: &PackedFp8Tensor, bt: &PackedFp8Tensor) {
 /// Falls back to a serial dot when the group size is not a multiple of 4.
 /// Both the packed engine and the grid oracle route through this exact
 /// sequence — it *defines* the engine's reduction order.
+///
+/// When the runtime probe selects a vector ISA (`kernels::simd`), the
+/// 4-lane body executes as one f32x4 accumulator with separate mul/add
+/// — lane-for-lane the same f32 operation sequence, so dispatch never
+/// changes output bits (`tests/simd_scalar_property.rs`).
 #[inline]
 fn group_dot_grid(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -96,6 +102,9 @@ fn group_dot_grid(a: &[f32], b: &[f32]) -> f32 {
         for (x, y) in a.iter().zip(b) {
             p += x * y;
         }
+        return p;
+    }
+    if let Some(p) = simd::dot_grid(a, b) {
         return p;
     }
     let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);
@@ -110,7 +119,8 @@ fn group_dot_grid(a: &[f32], b: &[f32]) -> f32 {
     (p0 + p1) + (p2 + p3)
 }
 
-/// Same reduction sequence over packed payload bytes via the decode LUTs.
+/// Same reduction sequence over packed payload bytes via the decode
+/// LUTs (and the same SIMD dispatch rule as [`group_dot_grid`]).
 #[inline]
 fn group_dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -119,6 +129,9 @@ fn group_dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) 
         for (x, y) in a.iter().zip(b) {
             p += lut_a[*x as usize] * lut_b[*y as usize];
         }
+        return p;
+    }
+    if let Some(p) = simd::dot_packed(a, b, lut_a, lut_b) {
         return p;
     }
     let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);

@@ -18,6 +18,11 @@
 //! plain `*_packed` functions remain the pack-every-call form and are
 //! defined *in terms of* the prepacked ones so the two paths cannot
 //! drift numerically.
+//!
+//! The `_with` entry points take the caller's `GemmConfig` verbatim —
+//! SIMD dispatch happens inside the group dot (`kernels::simd`) and
+//! schedule tuning inside `LinearNumerics` (`kernels::tune`), both
+//! bitwise-unobservable here, so these functions stay pure routing.
 
 use crate::formats::fp8::{E4M3, E5M2};
 

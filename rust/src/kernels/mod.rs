@@ -31,6 +31,16 @@
 //!   over it, so the paper's baselines run through one train step
 //!   (MOSS = the bit-exact two-level path below; bf16 = rounded
 //!   operands through the plain-f32 GEMM).
+//! * [`simd`] — runtime-dispatched vector group-dot kernels (SSE2 on
+//!   x86_64, NEON on aarch64; scalar fallback elsewhere or under
+//!   `MOSS_SIMD=off`). The fixed 4-lane reduction tree is exactly one
+//!   f32x4 accumulator wide, so vector and scalar paths are
+//!   bitwise-identical by construction.
+//! * [`tune`] — startup GEMM autotuner: searches tile/thread schedules
+//!   per `(M, N, K)` shape (bits are schedule-invariant, so tuning can
+//!   never change results), persists winners to a JSON cache keyed by
+//!   shape + detected ISA, and resolves configs inside the
+//!   `LinearNumerics` entry points.
 //!
 //! Numerics contract (locked down by `tests/packed_gemm_differential.rs`):
 //! the packed path is **bit-identical** to the f32-grid oracle — LUT
@@ -45,16 +55,18 @@ pub mod gemm;
 pub mod linear;
 pub mod numerics;
 pub mod packed;
+pub mod simd;
+pub mod tune;
 
 pub use cache::{BucketLayout, CacheStats, PackedWeightCache};
 pub use gemm::{
     dequant_then_naive_gemm, f32_gemm_with, packed_gemm, packed_gemm_with, reference_gemm_grid,
     GemmConfig,
 };
-pub use numerics::{LinearNumerics, PackedWeight};
 pub use linear::{
     linear_backward_packed, linear_backward_prepacked, linear_backward_prepacked_with,
     linear_forward_packed, linear_forward_prepacked, linear_forward_prepacked_with,
     pack_weight_bwd, pack_weight_fwd,
 };
+pub use numerics::{LinearNumerics, PackedWeight};
 pub use packed::PackedFp8Tensor;

@@ -163,15 +163,25 @@ impl LinearNumerics {
     }
 
     /// Forward `Y[M,N] = X[M,K] @ W[K,N]` under this mode's numerics.
+    ///
+    /// `cfg` is the caller's *base* schedule; the GEMM autotuner
+    /// (`kernels::tune`) resolves the actual tile/thread split per
+    /// shape, clamping threads to the base (schedule only — output
+    /// bits are config-invariant). Likewise in [`Self::backward`] and
+    /// [`Self::attn_matmul`], so every consumer inherits tuning here.
     pub fn forward(&self, x: &[f32], m: usize, w: &PackedWeight, cfg: GemmConfig) -> Vec<f32> {
         match w {
             // The activation inherits the weight operand's grouping
             // (`wfwd.micro`), so the degenerate per-tensor layout flows
             // through the same entry point as the microscaled modes.
-            PackedWeight::Fp8 { fwd, .. } => linear_forward_prepacked_with(x, m, fwd, cfg),
+            PackedWeight::Fp8 { fwd, .. } => {
+                let cfg = super::tune::tuned(m, fwd.rows, fwd.cols, cfg);
+                linear_forward_prepacked_with(x, m, fwd, cfg)
+            }
             PackedWeight::Bf16 { wt, k, n, .. } => {
                 let xr = bf16_vec(x);
                 assert_eq!(xr.len(), m * k, "activation is {} elems, want [{m}, {k}]", xr.len());
+                let cfg = super::tune::tuned(m, *n, *k, cfg);
                 f32_gemm_with(&xr, m, wt, *n, *k, cfg)
             }
         }
@@ -189,6 +199,10 @@ impl LinearNumerics {
     ) -> (Vec<f32>, Vec<f32>) {
         match w {
             PackedWeight::Fp8 { bwd, .. } => {
+                // Tune on the dX GEMM's shape [M, K] over N (the dW
+                // GEMM shares the resolved schedule — one key per
+                // backward keeps the cache compact).
+                let cfg = super::tune::tuned(m, bwd.rows, bwd.cols, cfg);
                 if self.mode == QuantMode::PerTensor {
                     pertensor_backward(x, bwd, dy, m, cfg)
                 } else {
@@ -203,11 +217,11 @@ impl LinearNumerics {
                 assert_eq!(dyr.len(), m * n, "dy is {} elems, want [{m}, {n}]", dyr.len());
                 // dX[M,K] = dY @ W^T: W's natural [K,N] layout is the
                 // transposed-operand form the GEMM consumes.
-                let dx = f32_gemm_with(&dyr, m, w, k, n, cfg);
+                let dx = f32_gemm_with(&dyr, m, w, k, n, super::tune::tuned(m, k, n, cfg));
                 // dW[K,N] = X^T @ dY, contraction over rows M.
                 let xt = transpose(&xr, m, k);
                 let dyt = transpose(&dyr, m, n);
-                let dw = f32_gemm_with(&xt, k, &dyt, n, m, cfg);
+                let dw = f32_gemm_with(&xt, k, &dyt, n, m, super::tune::tuned(k, n, m, cfg));
                 (dx, dw)
             }
         }
@@ -236,6 +250,9 @@ impl LinearNumerics {
     ) -> Vec<f32> {
         assert_eq!(a.len(), m * k, "attn A is {} elems, want [{m}, {k}]", a.len());
         assert_eq!(bt.len(), n * k, "attn B^T is {} elems, want [{n}, {k}]", bt.len());
+        // Attention shapes vary with the KV length, so this usually
+        // resolves through the tuner's miss heuristic (never a search).
+        let cfg = super::tune::tuned(m, n, k, cfg);
         match self.mode {
             QuantMode::Bf16 => {
                 let ar = bf16_vec(a);

@@ -1,0 +1,326 @@
+//! Runtime-dispatched SIMD group-dot kernels.
+//!
+//! The engine's reduction order is *fixed* (see `kernels::gemm`): a
+//! 4-lane interleaved dot per micro-group combined as
+//! `(p0 + p1) + (p2 + p3)`, groups accumulated in K order. That tree is
+//! exactly one 128-bit f32x4 accumulator wide, so the vector kernels
+//! here are **bit-identical** to the scalar path by construction:
+//!
+//! * lane `i` of the vector accumulator performs the same
+//!   mul-then-add f32 sequence as scalar `p_i` (separate `mul` + `add`
+//!   instructions — never FMA, which would skip the intermediate
+//!   rounding the scalar path performs);
+//! * the horizontal reduce is the same `(l0 + l1) + (l2 + l3)` tree.
+//!
+//! Deliberately **not** used: 256-bit AVX2 (8 lanes would change the
+//! reduction tree and break bit-identity with the f32-grid oracle) and
+//! any FMA form. The packed-u8 kernels gather LUT values scalarly
+//! (neither SSE2 nor NEON has a byte-indexed gather) and vectorize the
+//! arithmetic.
+//!
+//! Dispatch is resolved once at first use from a runtime feature probe
+//! (`sse2` on x86_64, `neon` on aarch64 — both baseline features, but
+//! probed rather than assumed) and the `MOSS_SIMD` environment variable
+//! (`off` / `0` / `scalar` / `false` forces the scalar path — the CI
+//! matrix leg's knob). [`force_scalar`] is the in-process override for
+//! A/B tests: environment variables are read once, but the property
+//! suite must flip paths *within* one process to compare them bitwise.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Dispatch states. `UNRESOLVED` re-derives from env + probe on the
+/// next use, so `force_scalar(false)` restores default behavior.
+const UNRESOLVED: u8 = 0;
+const VECTOR: u8 = 1;
+const SCALAR: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// The vector ISA this build *can* dispatch to (compile-time).
+#[cfg(target_arch = "x86_64")]
+const VECTOR_ISA: &str = "sse2";
+#[cfg(target_arch = "aarch64")]
+const VECTOR_ISA: &str = "neon";
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+const VECTOR_ISA: &str = "scalar";
+
+/// `MOSS_SIMD=off|0|scalar|false` forces the scalar fallback.
+fn env_forces_scalar() -> bool {
+    match std::env::var("MOSS_SIMD") {
+        Ok(v) => matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "scalar" | "false"),
+        Err(_) => false,
+    }
+}
+
+/// Runtime CPU feature probe for [`VECTOR_ISA`].
+fn probe() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("sse2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+#[inline]
+fn state() -> u8 {
+    match STATE.load(Ordering::Relaxed) {
+        UNRESOLVED => {
+            let s = if env_forces_scalar() || !probe() { SCALAR } else { VECTOR };
+            STATE.store(s, Ordering::Relaxed);
+            s
+        }
+        s => s,
+    }
+}
+
+/// Whether the vector kernels are active (probe passed, not forced off).
+pub fn simd_active() -> bool {
+    state() == VECTOR
+}
+
+/// The ISA the group dot currently dispatches to: `"sse2"`, `"neon"`,
+/// or `"scalar"`.
+pub fn active_isa() -> &'static str {
+    if simd_active() {
+        VECTOR_ISA
+    } else {
+        "scalar"
+    }
+}
+
+/// In-process dispatch override for A/B tests: `true` pins the scalar
+/// path, `false` re-derives from the environment + CPU probe. Affects
+/// schedule selection only — both paths are bitwise-identical, which is
+/// exactly what `tests/simd_scalar_property.rs` exercises by flipping
+/// this switch.
+pub fn force_scalar(on: bool) {
+    STATE.store(if on { SCALAR } else { UNRESOLVED }, Ordering::Relaxed);
+}
+
+/// SIMD 4-lane grid dot, or `None` when the scalar path is selected.
+/// Caller guarantees `a.len() == b.len()` and `a.len() % 4 == 0`.
+#[inline]
+pub fn dot_grid(a: &[f32], b: &[f32]) -> Option<f32> {
+    if state() != VECTOR {
+        return None;
+    }
+    debug_assert!(a.len() == b.len() && a.len() % 4 == 0);
+    // Safety: `state()` only returns VECTOR after `probe()` confirmed
+    // the target feature the `imp` kernels are compiled for.
+    Some(unsafe { imp::dot_grid(a, b) })
+}
+
+/// SIMD 4-lane packed-payload dot through the decode LUTs, or `None`
+/// when the scalar path is selected. Caller guarantees
+/// `a.len() == b.len()` and `a.len() % 4 == 0`.
+#[inline]
+pub fn dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) -> Option<f32> {
+    if state() != VECTOR {
+        return None;
+    }
+    debug_assert!(a.len() == b.len() && a.len() % 4 == 0);
+    // Safety: as in `dot_grid` — the probe gates dispatch.
+    Some(unsafe { imp::dot_packed(a, b, lut_a, lut_b) })
+}
+
+#[cfg(target_arch = "x86_64")]
+mod imp {
+    use std::arch::x86_64::*;
+
+    /// Horizontal reduce matching the scalar tree `(p0+p1)+(p2+p3)`.
+    #[inline]
+    #[target_feature(enable = "sse2")]
+    unsafe fn hsum(v: __m128) -> f32 {
+        let mut l = [0f32; 4];
+        _mm_storeu_ps(l.as_mut_ptr(), v);
+        (l[0] + l[1]) + (l[2] + l[3])
+    }
+
+    /// # Safety
+    /// Requires SSE2; `a.len() == b.len()`, `a.len() % 4 == 0`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_grid(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = _mm_setzero_ps();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut t = 0;
+        while t < a.len() {
+            // separate mul + add (not FMA): lane i reproduces scalar
+            // `p_i += a[t+i] * b[t+i]` rounding-for-rounding
+            let prod = _mm_mul_ps(_mm_loadu_ps(pa.add(t)), _mm_loadu_ps(pb.add(t)));
+            acc = _mm_add_ps(acc, prod);
+            t += 4;
+        }
+        hsum(acc)
+    }
+
+    /// # Safety
+    /// Requires SSE2; `a.len() == b.len()`, `a.len() % 4 == 0`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) -> f32 {
+        let mut acc = _mm_setzero_ps();
+        let mut t = 0;
+        while t < a.len() {
+            // scalar LUT gathers (SSE2 has no byte gather); arithmetic
+            // is vector. `_mm_set_ps` takes lanes high-to-low.
+            let va = _mm_set_ps(
+                lut_a[a[t + 3] as usize],
+                lut_a[a[t + 2] as usize],
+                lut_a[a[t + 1] as usize],
+                lut_a[a[t] as usize],
+            );
+            let vb = _mm_set_ps(
+                lut_b[b[t + 3] as usize],
+                lut_b[b[t + 2] as usize],
+                lut_b[b[t + 1] as usize],
+                lut_b[b[t] as usize],
+            );
+            acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+            t += 4;
+        }
+        hsum(acc)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod imp {
+    use std::arch::aarch64::*;
+
+    /// Horizontal reduce matching the scalar tree `(p0+p1)+(p2+p3)`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: float32x4_t) -> f32 {
+        (vgetq_lane_f32(v, 0) + vgetq_lane_f32(v, 1))
+            + (vgetq_lane_f32(v, 2) + vgetq_lane_f32(v, 3))
+    }
+
+    /// # Safety
+    /// Requires NEON; `a.len() == b.len()`, `a.len() % 4 == 0`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_grid(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = vdupq_n_f32(0.0);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut t = 0;
+        while t < a.len() {
+            // vmulq + vaddq, never vfmaq: FMA would skip the product
+            // rounding the scalar path performs
+            let prod = vmulq_f32(vld1q_f32(pa.add(t)), vld1q_f32(pb.add(t)));
+            acc = vaddq_f32(acc, prod);
+            t += 4;
+        }
+        hsum(acc)
+    }
+
+    /// # Safety
+    /// Requires NEON; `a.len() == b.len()`, `a.len() % 4 == 0`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_packed(a: &[u8], b: &[u8], lut_a: &[f32; 256], lut_b: &[f32; 256]) -> f32 {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut t = 0;
+        while t < a.len() {
+            let ga = [
+                lut_a[a[t] as usize],
+                lut_a[a[t + 1] as usize],
+                lut_a[a[t + 2] as usize],
+                lut_a[a[t + 3] as usize],
+            ];
+            let gb = [
+                lut_b[b[t] as usize],
+                lut_b[b[t + 1] as usize],
+                lut_b[b[t + 2] as usize],
+                lut_b[b[t + 3] as usize],
+            ];
+            acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(ga.as_ptr()), vld1q_f32(gb.as_ptr())));
+            t += 4;
+        }
+        hsum(acc)
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod imp {
+    /// # Safety
+    /// Never called: `state()` resolves to SCALAR on targets without a
+    /// vector implementation, so the dispatchers return `None` first.
+    pub unsafe fn dot_grid(_a: &[f32], _b: &[f32]) -> f32 {
+        unreachable!("no vector ISA on this target")
+    }
+
+    /// # Safety
+    /// Never called (see `dot_grid`).
+    pub unsafe fn dot_packed(_a: &[u8], _b: &[u8], _la: &[f32; 256], _lb: &[f32; 256]) -> f32 {
+        unreachable!("no vector ISA on this target")
+    }
+}
+
+/// Serializes unit tests that flip the global dispatch switch or read
+/// [`active_isa`] non-atomically (`#[test]` fns run concurrently in one
+/// binary). Tests that merely *compute* through the kernels don't need
+/// it — both paths are bitwise-identical.
+#[cfg(test)]
+pub(crate) static TEST_DISPATCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use crate::formats::fp8::E4M3;
+    use crate::util::rng::Rng;
+
+    use super::*;
+
+    /// The engine's scalar 4-lane reduction, transcribed independently.
+    fn lane4(a: &[f32], b: &[f32]) -> f32 {
+        let (mut p0, mut p1, mut p2, mut p3) = (0f32, 0f32, 0f32, 0f32);
+        let mut t = 0;
+        while t < a.len() {
+            p0 += a[t] * b[t];
+            p1 += a[t + 1] * b[t + 1];
+            p2 += a[t + 2] * b[t + 2];
+            p3 += a[t + 3] * b[t + 3];
+            t += 4;
+        }
+        (p0 + p1) + (p2 + p3)
+    }
+
+    /// One test drives every global-state transition: `#[test]` fns in
+    /// this binary run concurrently, and the dispatch switch is global.
+    /// (Other modules' tests are unaffected by flips mid-run — both
+    /// paths are bitwise-identical, which is the point.)
+    #[test]
+    fn dispatch_switch_and_bit_identity() {
+        let _g = TEST_DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // forced scalar: dispatchers decline, ISA reads "scalar"
+        force_scalar(true);
+        assert_eq!(active_isa(), "scalar");
+        assert!(!simd_active());
+        assert!(dot_grid(&[1.0; 4], &[1.0; 4]).is_none());
+        let lut = E4M3.decode_lut();
+        assert!(dot_packed(&[0u8; 4], &[0u8; 4], &lut, &lut).is_none());
+
+        // released: env + probe decide; on x86_64/aarch64 without
+        // MOSS_SIMD=off this selects the vector ISA
+        force_scalar(false);
+        assert!(["sse2", "neon", "scalar"].contains(&active_isa()));
+        if simd_active() {
+            let mut rng = Rng::new(7);
+            for len in [4usize, 32, 64, 256] {
+                let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let v = dot_grid(&a, &b).expect("vector path active");
+                assert_eq!(v.to_bits(), lane4(&a, &b).to_bits(), "grid len {len}");
+
+                let pa: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                let pb: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+                let v = dot_packed(&pa, &pb, &lut, &lut).expect("vector path active");
+                let ga: Vec<f32> = pa.iter().map(|&x| lut[x as usize]).collect();
+                let gb: Vec<f32> = pb.iter().map(|&x| lut[x as usize]).collect();
+                assert_eq!(v.to_bits(), lane4(&ga, &gb).to_bits(), "packed len {len}");
+            }
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Startup GEMM autotuner: per-shape tile/thread search with a
+//! persisted winner cache.
+//!
+//! The packed GEMM's output bits are invariant under its two schedule
+//! knobs ([`GemmConfig`]: column-block size `nb`, row-band `threads` —
+//! proven by `tests/packed_gemm_differential.rs`), which makes them
+//! safe to *search*: this module times a handful of candidates per
+//! `(M, N, K)` shape on synthetic packed operands (the block-sweep of
+//! `examples/gemm_explorer.rs`, automated) and remembers the winner.
+//!
+//! * **Resolution** ([`tuned`]) happens inside
+//!   `LinearNumerics::{forward, backward, attn_matmul}`, so every
+//!   consumer — `linear_{forward,backward}_prepacked_with`, the serve
+//!   decoder's row-local `[1, K]` GEMMs, the dist workers — inherits
+//!   tuned schedules without threading new state. The winner's thread
+//!   count is clamped to the caller's base config, so the dist
+//!   trainer's oversubscription cap and the serve scheduler's
+//!   `threads: 1` contract survive tuning. A cache miss costs one map
+//!   lookup and falls back to a static heuristic — `tuned` never
+//!   searches on the hot path.
+//! * **Search** ([`warmup`]) runs at trainer/engine construction for
+//!   the fixed shapes that dominate the run; shapes that vary per call
+//!   (attention's growing KV length) hit the heuristic instead.
+//! * **Persistence**: winners land in a JSON cache keyed by shape and
+//!   the detected ISA (`{"v":1,"isa":"sse2","entries":[{m,n,k,nb,
+//!   threads,gflops}]}`), default `$TMPDIR/moss_tune_<isa>.json`,
+//!   override `MOSS_TUNE_CACHE`. Loading is tolerant by contract: a
+//!   missing, corrupt, version-skewed, or ISA-mismatched file yields an
+//!   empty cache and default tiles, never an error
+//!   (`tests/tune_cache.rs`). Saves write tmp-then-rename so a crashed
+//!   run can't leave a torn file.
+//!
+//! `MOSS_TUNE=off|0|false` (or [`set_enabled`] at runtime) disables
+//! resolution entirely; tuning changes the schedule, never the math, so
+//! the switch is unobservable in output bits.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::formats::fp8::E4M3;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::MICRO_GROUP;
+
+use super::gemm::{packed_gemm_with, GemmConfig};
+use super::packed::PackedFp8Tensor;
+use super::simd;
+
+/// Cache document version; bump on layout changes.
+const CACHE_VERSION: f64 = 1.0;
+
+/// Largest shape [`warmup`] will search: beyond ~2^28 MACs the search
+/// itself would dwarf trainer/engine construction; bigger shapes
+/// resolve through the miss heuristic instead.
+const MAX_TUNE_MACS: usize = 1 << 28;
+
+/// One persisted tuning decision for a `(m, n, k)` GEMM shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedEntry {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Winning column-block size.
+    pub nb: usize,
+    /// Winning thread count (clamped to the caller's base at resolve
+    /// time, so a cache tuned on a big machine degrades gracefully).
+    pub threads: usize,
+    /// Measured rate of the winner — reporting only, never resolution.
+    pub gflops: f64,
+}
+
+struct TunerState {
+    enabled: bool,
+    loaded: bool,
+    entries: HashMap<(usize, usize, usize), TunedEntry>,
+}
+
+fn global() -> &'static Mutex<TunerState> {
+    static G: OnceLock<Mutex<TunerState>> = OnceLock::new();
+    G.get_or_init(|| {
+        let enabled = match std::env::var("MOSS_TUNE") {
+            Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"),
+            Err(_) => true,
+        };
+        Mutex::new(TunerState { enabled, loaded: false, entries: HashMap::new() })
+    })
+}
+
+fn lock() -> std::sync::MutexGuard<'static, TunerState> {
+    global().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Enable/disable resolution at runtime (tests A/B tuned vs untuned in
+/// one process; `MOSS_TUNE=off` sets the initial state).
+pub fn set_enabled(on: bool) {
+    lock().enabled = on;
+}
+
+pub fn enabled() -> bool {
+    lock().enabled
+}
+
+/// Where winners persist: `MOSS_TUNE_CACHE`, else a per-ISA file under
+/// the system temp dir (keying the *path* by ISA as well as the
+/// document means an sse2 cache never even shadows a neon one).
+pub fn cache_path() -> PathBuf {
+    if let Ok(p) = std::env::var("MOSS_TUNE_CACHE") {
+        if !p.is_empty() {
+            return PathBuf::from(p);
+        }
+    }
+    std::env::temp_dir().join(format!("moss_tune_{}.json", simd::active_isa()))
+}
+
+/// Resolve the schedule for one `(m, n, k)` GEMM: the persisted winner
+/// when one exists (threads clamped into `[1, base.threads]`), a static
+/// heuristic otherwise, `base` unchanged when tuning is disabled.
+pub fn tuned(m: usize, n: usize, k: usize, base: GemmConfig) -> GemmConfig {
+    let mut st = lock();
+    if !st.enabled {
+        return base;
+    }
+    if !st.loaded {
+        st.loaded = true;
+        let path = cache_path();
+        for e in load_cache(&path) {
+            st.entries.insert((e.m, e.n, e.k), e);
+        }
+    }
+    match st.entries.get(&(m, n, k)) {
+        Some(e) => GemmConfig {
+            nb: e.nb.max(1),
+            threads: e.threads.clamp(1, base.threads.max(1)),
+        },
+        // Miss heuristic: tiny row counts (the serve decoder's [1, K]
+        // rows) can't amortize a thread spawn; everything else keeps
+        // the caller's schedule.
+        None => {
+            if m <= 4 {
+                GemmConfig { threads: 1, ..base }
+            } else {
+                base
+            }
+        }
+    }
+}
+
+/// Snapshot of the in-memory entries (reporting/CLI).
+pub fn entries() -> Vec<TunedEntry> {
+    let mut v: Vec<TunedEntry> = lock().entries.values().copied().collect();
+    v.sort_by_key(|e| (e.m, e.n, e.k));
+    v
+}
+
+/// Search any of `shapes` not already cached, then persist the union.
+/// Called once at trainer/engine construction; a populated cache makes
+/// this free. Save errors are swallowed — a read-only temp dir must
+/// not take down training.
+pub fn warmup(shapes: &[(usize, usize, usize)]) {
+    let missing: Vec<(usize, usize, usize)> = {
+        let mut st = lock();
+        if !st.enabled {
+            return;
+        }
+        if !st.loaded {
+            st.loaded = true;
+            let path = cache_path();
+            for e in load_cache(&path) {
+                st.entries.insert((e.m, e.n, e.k), e);
+            }
+        }
+        shapes
+            .iter()
+            .copied()
+            .filter(|&(m, n, k)| {
+                let macs = m * n * k;
+                macs > 0 && macs <= MAX_TUNE_MACS && !st.entries.contains_key(&(m, n, k))
+            })
+            .collect()
+    };
+    if missing.is_empty() {
+        return;
+    }
+    // Search outside the lock: candidates run real (multi-threaded)
+    // GEMMs, and `tuned` lookups from other threads must not stall.
+    let base = GemmConfig::default();
+    let found: Vec<TunedEntry> =
+        missing.iter().map(|&(m, n, k)| tune_shape(m, n, k, base)).collect();
+    let snapshot = {
+        let mut st = lock();
+        for e in found {
+            st.entries.insert((e.m, e.n, e.k), e);
+        }
+        let mut v: Vec<TunedEntry> = st.entries.values().copied().collect();
+        v.sort_by_key(|e| (e.m, e.n, e.k));
+        v
+    };
+    let _ = save_cache(&cache_path(), &snapshot);
+}
+
+/// Time the candidate schedules for one shape on synthetic packed
+/// operands and return the winner. Pure (no global state); `base`
+/// bounds the thread candidates.
+pub fn tune_shape(m: usize, n: usize, k: usize, base: GemmConfig) -> TunedEntry {
+    let fallback = TunedEntry { m, n, k, nb: base.nb, threads: base.threads, gflops: 0.0 };
+    if m == 0 || n == 0 || k == 0 {
+        return fallback;
+    }
+    // Operands mirror the training distribution closely enough to rank
+    // schedules (ranking depends on shape, not payload values).
+    let micro = if k % MICRO_GROUP == 0 { MICRO_GROUP } else { k };
+    let mut rng = Rng::new(0xC0FFEE ^ ((m as u64) << 42) ^ ((n as u64) << 21) ^ (k as u64));
+    let a = rng.activation_like(m, k, 1.0);
+    let b = rng.activation_like(n, k, 1.0);
+    let ap = PackedFp8Tensor::quantize(&a, m, k, micro, &E4M3);
+    let bp = PackedFp8Tensor::quantize(&b, n, k, micro, &E4M3);
+
+    let mut nbs: Vec<usize> = [16, 32, 64, 128].into_iter().filter(|&nb| nb / 2 < n).collect();
+    if !nbs.contains(&base.nb.max(1)) {
+        nbs.push(base.nb.max(1));
+    }
+    let cores = base.threads.max(1);
+    let mut ths: Vec<usize> = vec![1, (cores / 2).max(1), cores];
+    ths.sort_unstable();
+    ths.dedup();
+    ths.retain(|&t| t <= m.max(1));
+    if ths.is_empty() {
+        ths.push(1);
+    }
+
+    let mut best: Option<(f64, GemmConfig)> = None;
+    for &nb in &nbs {
+        for &threads in &ths {
+            let cfg = GemmConfig { nb, threads };
+            std::hint::black_box(packed_gemm_with(&ap, &bp, cfg)); // warm
+            let mut dt = f64::INFINITY;
+            for _ in 0..2 {
+                let t0 = Instant::now();
+                std::hint::black_box(packed_gemm_with(&ap, &bp, cfg));
+                dt = dt.min(t0.elapsed().as_secs_f64());
+            }
+            if best.map_or(true, |(t, _)| dt < t) {
+                best = Some((dt, cfg));
+            }
+        }
+    }
+    match best {
+        Some((secs, cfg)) => TunedEntry {
+            m,
+            n,
+            k,
+            nb: cfg.nb,
+            threads: cfg.threads,
+            gflops: 2.0 * (m * n * k) as f64 / secs.max(1e-12) / 1e9,
+        },
+        None => fallback,
+    }
+}
+
+/// Load a winner cache. Tolerant by contract: a missing, unreadable,
+/// corrupt, version-skewed, or ISA-mismatched file yields an empty list
+/// — the caller falls back to default tiles, never errors.
+pub fn load_cache(path: &Path) -> Vec<TunedEntry> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    parse_cache(&text).unwrap_or_default()
+}
+
+fn parse_cache(text: &str) -> Option<Vec<TunedEntry>> {
+    let doc = Json::parse(text).ok()?;
+    if doc.get("v")?.as_f64().ok()? != CACHE_VERSION {
+        return None;
+    }
+    if doc.get("isa")?.as_str().ok()? != simd::active_isa() {
+        return None;
+    }
+    let mut out = Vec::new();
+    for e in doc.get("entries")?.as_arr().ok()? {
+        out.push(TunedEntry {
+            m: e.get("m")?.as_usize().ok()?,
+            n: e.get("n")?.as_usize().ok()?,
+            k: e.get("k")?.as_usize().ok()?,
+            nb: e.get("nb")?.as_usize().ok()?,
+            threads: e.get("threads")?.as_usize().ok()?,
+            gflops: e.get("gflops")?.as_f64().ok()?,
+        });
+    }
+    Some(out)
+}
+
+/// Persist a winner cache (tmp-then-rename, so readers never see a torn
+/// document), stamped with the active ISA.
+pub fn save_cache(path: &Path, entries: &[TunedEntry]) -> std::io::Result<()> {
+    let rows: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("m", num(e.m as f64)),
+                ("n", num(e.n as f64)),
+                ("k", num(e.k as f64)),
+                ("nb", num(e.nb as f64)),
+                ("threads", num(e.threads as f64)),
+                ("gflops", num(e.gflops)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("v", num(CACHE_VERSION)),
+        ("isa", s(simd::active_isa())),
+        ("entries", Json::Arr(rows)),
+    ]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, doc.to_string())?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_shape_returns_a_legal_schedule() {
+        let base = GemmConfig { nb: 64, threads: 4 };
+        let e = tune_shape(16, 24, 32, base);
+        assert_eq!((e.m, e.n, e.k), (16, 24, 32));
+        assert!(e.nb >= 1);
+        assert!((1..=4).contains(&e.threads));
+        assert!(e.gflops > 0.0);
+        // degenerate shapes don't search (and don't panic)
+        let z = tune_shape(0, 24, 32, base);
+        assert_eq!((z.nb, z.threads), (base.nb, base.threads));
+    }
+
+    #[test]
+    fn tune_shape_handles_non_micro_k() {
+        // k not a multiple of 32 degrades to one group per row — the
+        // per-tensor layout — instead of asserting in quantize
+        let e = tune_shape(8, 8, 20, GemmConfig { nb: 16, threads: 2 });
+        assert!(e.nb >= 1 && e.threads >= 1);
+    }
+
+    #[test]
+    fn parse_rejects_skew_and_garbage() {
+        // active_isa() must not flip mid-test (the simd dispatch test
+        // toggles it); serialize with the flipping tests
+        let _g = super::simd::TEST_DISPATCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(parse_cache("not json").is_none());
+        assert!(parse_cache("{}").is_none());
+        let isa = simd::active_isa();
+        let wrong_v = format!("{{\"v\":99,\"isa\":\"{isa}\",\"entries\":[]}}");
+        assert!(parse_cache(&wrong_v).is_none());
+        let wrong_isa = "{\"v\":1,\"isa\":\"vax-780\",\"entries\":[]}";
+        assert!(parse_cache(wrong_isa).is_none());
+        let ok = format!("{{\"v\":1,\"isa\":\"{isa}\",\"entries\":[]}}");
+        assert_eq!(parse_cache(&ok), Some(Vec::new()));
+    }
+}

@@ -15,6 +15,8 @@
 //!   hlo-stats   artifact inventory + op statistics (L2 perf checks)
 //!   events      summarize a --events JSONL telemetry stream offline;
 //!               --trend renders the committed perf trajectory
+//!   kernels     GEMM dispatch + autotuner-cache report; --require-simd
+//!               is the CI guard against a silent scalar fallback
 //!
 //! `train`, `serve`, `ablate` and `comm-table` accept `--events PATH`:
 //! every step emits a typed JSONL event (see `moss::events`) without
@@ -66,6 +68,12 @@ const COMMANDS: &[(&str, &str)] = &[
          --trend renders bench/trajectory.jsonl as a perf-regression table \
          (--max-drop-pct N, default 20)",
     ),
+    (
+        "kernels",
+        "report the GEMM kernel dispatch (detected ISA, SIMD on/off) and the \
+         autotuner cache (--require-simd fails if the runtime probe fell back \
+         to scalar — the CI guard against a silently-degraded build)",
+    ),
     ("finetune", "fine-tune on math tasks and report accuracy"),
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
     ("snr", "Table-7 SNR study across quantization schemes"),
@@ -85,6 +93,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
+        "kernels" => cmd_kernels(&args),
         "ablate" => moss::report::training::run_ablate_cli(&args),
         "finetune" => cmd_finetune(&args),
         "eval" => cmd_eval(&args),
@@ -530,6 +539,52 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
             );
         }
         eprintln!("loss improved: {first:.4} -> {tail:.4}");
+    }
+    Ok(())
+}
+
+/// `repro kernels`: report what the GEMM hot path actually dispatched
+/// to on this machine — the detected ISA, whether the vector path is
+/// live, and the autotuner's cache. `--require-simd` turns "the probe
+/// found a vector ISA" into the exit code; CI runs it on x86_64 so a
+/// build that silently degrades to scalar fails loudly instead of just
+/// benching slow. `--tune M,N,K` runs one on-the-spot search.
+fn cmd_kernels(args: &Args) -> Result<()> {
+    use moss::kernels::{simd, tune};
+    let isa = simd::active_isa();
+    println!("arch:        {}", std::env::consts::ARCH);
+    println!("isa:         {isa}");
+    println!("simd:        {}", if simd::simd_active() { "on" } else { "off (scalar)" });
+    println!("tuner:       {}", if tune::enabled() { "on" } else { "off (MOSS_TUNE)" });
+    println!("tuner cache: {}", tune::cache_path().display());
+    if let Some(spec) = args.get("tune") {
+        let dims: Vec<usize> =
+            spec.split(',').map(|t| t.trim().parse::<usize>()).collect::<Result<_, _>>()?;
+        let &[m, n, k] = &dims[..] else { bail!("--tune wants M,N,K (got {spec:?})") };
+        let e = tune::tune_shape(m, n, k, moss::kernels::GemmConfig::default());
+        println!(
+            "tuned ({m}, {n}, {k}): nb {} threads {} ({:.2} gflop/s)",
+            e.nb, e.threads, e.gflops
+        );
+    }
+    let entries = tune::load_cache(&tune::cache_path());
+    if entries.is_empty() {
+        println!("cached:      0 shapes (searches run at trainer/engine construction)");
+    } else {
+        println!("cached:      {} shapes", entries.len());
+        for e in entries {
+            println!(
+                "  ({:>5}, {:>5}, {:>5}) -> nb {:>3} threads {:>2}  {:>8.2} gflop/s",
+                e.m, e.n, e.k, e.nb, e.threads, e.gflops
+            );
+        }
+    }
+    if args.has("require-simd") && !simd::simd_active() {
+        bail!(
+            "--require-simd: GEMM dispatch fell back to scalar on {} \
+             (isa {isa}); unset MOSS_SIMD or investigate the feature probe",
+            std::env::consts::ARCH
+        );
     }
     Ok(())
 }

@@ -188,6 +188,37 @@ fn packed_gemm_tracks_f64_ground_truth_and_baseline() {
 }
 
 #[test]
+fn dispatch_forced_on_and_off_matches_oracle_bitwise() {
+    // The SIMD dispatch (kernels::simd) must be unobservable in output
+    // bits: forced-scalar and probe-selected paths both reproduce the
+    // grid oracle exactly. Flipping the global switch mid-binary is
+    // harmless to the concurrently-running tests above — bit-identity
+    // across paths is precisely the property this file pins down.
+    use moss::kernels::simd;
+    let (m, n, k) = (48, 33, 160);
+    let mut rng = Rng::new(2024);
+    let a = rng.activation_like(m, k, 1.5);
+    let b = rng.activation_like(n, k, 1.0);
+    for fmt in FORMATS {
+        let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &fmt);
+        let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &fmt);
+        let ag = TwoLevelQuant::quantize(&a, m, k, MICRO_GROUP, &fmt);
+        let bg = TwoLevelQuant::quantize(&b, n, k, MICRO_GROUP, &fmt);
+        let oracle = reference_gemm_grid(&ag, &bg);
+
+        simd::force_scalar(true);
+        let scalar = packed_gemm(&ap, &bp);
+        simd::force_scalar(false); // re-derive: vector iff the probe allows
+        let isa = simd::active_isa();
+        let dispatched = packed_gemm(&ap, &bp);
+        for (i, ((s, v), o)) in scalar.iter().zip(&dispatched).zip(&oracle).enumerate() {
+            assert_eq!(s.to_bits(), o.to_bits(), "{} scalar vs oracle elem {i}", fmt.name);
+            assert_eq!(v.to_bits(), o.to_bits(), "{} {isa} vs oracle elem {i}", fmt.name);
+        }
+    }
+}
+
+#[test]
 fn zero_and_degenerate_shapes() {
     // All-zero operands: every payload byte is 0 (or 0x80), output is 0.
     let zeros = vec![0f32; 4 * 32];

@@ -1,0 +1,173 @@
+//! Property sweep: the SIMD group-dot dispatch is bitwise-unobservable.
+//!
+//! `kernels::simd` widens the engine's fixed 4-lane reduction to one
+//! f32x4 accumulator (SSE2/NEON, separate mul + add, same horizontal
+//! reduce tree), so the vector and scalar paths must agree on every
+//! output **bit** — not approximately, exactly. This suite A/Bs the two
+//! paths *in one process* via `simd::force_scalar` across randomized
+//! seeded shapes, all four `QuantMode` numerics, forward and backward
+//! operands, and the edge cases the dispatcher special-cases
+//! (micro-group boundaries, `k % 4 != 0` serial fallback, all-zero
+//! groups). Every assertion carries the seed so a failure replays.
+//!
+//! On hosts where the probe selects scalar anyway (non-x86/aarch64, or
+//! the CI leg that sets `MOSS_SIMD=off`) the A/B degenerates to
+//! scalar-vs-scalar and passes vacuously — by design: the suite must
+//! run everywhere, and `repro kernels --require-simd` (not this file)
+//! is the guard against an unexpectedly-scalar x86_64 build.
+
+use std::sync::Mutex;
+
+use moss::config::QuantMode;
+use moss::formats::fp8::{E4M3, E5M2};
+use moss::kernels::simd;
+use moss::kernels::{packed_gemm_with, GemmConfig, LinearNumerics, PackedFp8Tensor};
+use moss::util::rng::Rng;
+use moss::MICRO_GROUP;
+
+/// `#[test]` fns in this binary run concurrently and every test here
+/// flips the process-global dispatch switch; serialize them. (Poisoned
+/// locks are fine — the state a panicking test leaves behind is valid.)
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+const MODES: [QuantMode; 4] =
+    [QuantMode::Moss, QuantMode::Coat, QuantMode::PerTensor, QuantMode::Bf16];
+
+/// Run `f` once on the forced-scalar path and once on the probe-selected
+/// path, restoring probe dispatch afterwards.
+fn ab<R>(f: impl Fn() -> R) -> (R, R) {
+    simd::force_scalar(true);
+    let scalar = f();
+    simd::force_scalar(false);
+    let dispatched = f();
+    (scalar, dispatched)
+}
+
+fn assert_bits_eq(scalar: &[f32], dispatched: &[f32], what: &str, seed: u64) {
+    assert_eq!(scalar.len(), dispatched.len(), "{what}: length (seed {seed})");
+    for (i, (s, v)) in scalar.iter().zip(dispatched).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            v.to_bits(),
+            "{what} elem {i}: scalar {s} vs {} {v} (replay with seed {seed})",
+            simd::active_isa(),
+        );
+    }
+}
+
+#[test]
+fn randomized_gemm_sweep_is_bitwise_identical_across_dispatch() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    for seed in 0..12u64 {
+        let mut shape_rng = Rng::new(0x51AD ^ seed);
+        // Random shapes, K a random multiple of the micro-group so every
+        // mode (including Moss/Coat's micro-32 constraint) accepts them.
+        let m = 1 + shape_rng.below(48) as usize;
+        let n = 1 + shape_rng.below(48) as usize;
+        let k = MICRO_GROUP * (1 + shape_rng.below(8) as usize);
+        for fmt in [E4M3, E5M2] {
+            let mut rng = Rng::new(seed * 1000 + 1);
+            let a = rng.activation_like(m, k, 1.5);
+            let b = rng.activation_like(n, k, 1.0);
+            let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &fmt);
+            let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &fmt);
+            let cfg = GemmConfig::default();
+            let (s, v) = ab(|| packed_gemm_with(&ap, &bp, cfg));
+            assert_bits_eq(&s, &v, &format!("{} {m}x{n}x{k}", fmt.name), seed);
+        }
+    }
+}
+
+#[test]
+fn all_four_modes_forward_backward_are_dispatch_invariant() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    for seed in 0..6u64 {
+        let mut shape_rng = Rng::new(0xAB ^ seed);
+        let m = 1 + shape_rng.below(24) as usize;
+        let k = MICRO_GROUP * (1 + shape_rng.below(3) as usize);
+        let n = MICRO_GROUP * (1 + shape_rng.below(3) as usize);
+        let x = Rng::new(seed * 7 + 1).activation_like(m, k, 1.0);
+        let w = Rng::new(seed * 7 + 2).activation_like(k, n, 0.1);
+        let dy = Rng::new(seed * 7 + 3).activation_like(m, n, 1.0);
+        for mode in MODES {
+            let num = LinearNumerics::new(mode, MICRO_GROUP);
+            // pack_weight quantizes (no GEMM), but run it under both
+            // dispatches anyway: packing must not depend on the switch.
+            let (pw_s, pw_v) = ab(|| num.pack_weight(&w, k, n, Some(0.5)));
+            let cfg = GemmConfig::default();
+            let (ys, yv) = (
+                {
+                    simd::force_scalar(true);
+                    num.forward(&x, m, &pw_s, cfg)
+                },
+                {
+                    simd::force_scalar(false);
+                    num.forward(&x, m, &pw_v, cfg)
+                },
+            );
+            assert_bits_eq(&ys, &yv, &format!("{} fwd {m}x{k}x{n}", mode.name()), seed);
+            simd::force_scalar(true);
+            let (dxs, dws) = num.backward(&x, &pw_s, &dy, m, cfg);
+            simd::force_scalar(false);
+            let (dxv, dwv) = num.backward(&x, &pw_v, &dy, m, cfg);
+            assert_bits_eq(&dxs, &dxv, &format!("{} dX {m}x{k}x{n}", mode.name()), seed);
+            assert_bits_eq(&dws, &dwv, &format!("{} dW {m}x{k}x{n}", mode.name()), seed);
+        }
+    }
+}
+
+#[test]
+fn attn_matmul_including_grad_formats_is_dispatch_invariant() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    for seed in 20..26u64 {
+        let mut shape_rng = Rng::new(seed);
+        let m = 1 + shape_rng.below(16) as usize;
+        let n = 1 + shape_rng.below(16) as usize;
+        let k = MICRO_GROUP * (1 + shape_rng.below(2) as usize);
+        let a = Rng::new(seed + 100).activation_like(m, k, 1.0);
+        let bt = Rng::new(seed + 200).activation_like(n, k, 1.0);
+        for mode in MODES {
+            let num = LinearNumerics::new(mode, MICRO_GROUP);
+            for (ag, bg) in [(false, false), (true, false), (false, true), (true, true)] {
+                let (s, v) =
+                    ab(|| num.attn_matmul(&a, m, &bt, n, k, ag, bg, GemmConfig::default()));
+                let what = format!("{} attn {m}x{n}x{k} grads ({ag},{bg})", mode.name());
+                assert_bits_eq(&s, &v, &what, seed);
+            }
+        }
+    }
+}
+
+#[test]
+fn micro_boundary_and_serial_fallback_edges() {
+    let _g = DISPATCH.lock().unwrap_or_else(|e| e.into_inner());
+    let seed = 424242u64;
+    // Exactly one micro-group and exactly two: the group loop's
+    // boundaries, where an off-by-one-lane bug would first show.
+    for k in [MICRO_GROUP, 2 * MICRO_GROUP] {
+        let (m, n) = (3, 5);
+        let a = Rng::new(seed).activation_like(m, k, 2.0);
+        let b = Rng::new(seed + 1).activation_like(n, k, 2.0);
+        let ap = PackedFp8Tensor::quantize(&a, m, k, MICRO_GROUP, &E4M3);
+        let bp = PackedFp8Tensor::quantize(&b, n, k, MICRO_GROUP, &E5M2);
+        let (s, v) = ab(|| packed_gemm_with(&ap, &bp, GemmConfig { nb: 2, threads: 2 }));
+        assert_bits_eq(&s, &v, &format!("micro boundary k={k}"), seed);
+    }
+    // k % 4 != 0 routes through the pre-SIMD serial dot on both paths
+    // (per-tensor and bf16 accept any k; micro-32 modes cannot).
+    let (m, n, k) = (6, 7, 18);
+    let a = Rng::new(seed + 2).activation_like(m, k, 1.0);
+    let bt = Rng::new(seed + 3).activation_like(n, k, 1.0);
+    for mode in [QuantMode::PerTensor, QuantMode::Bf16] {
+        let num = LinearNumerics::new(mode, MICRO_GROUP);
+        let (s, v) = ab(|| num.attn_matmul(&a, m, &bt, n, k, false, false, GemmConfig::default()));
+        assert_bits_eq(&s, &v, &format!("{} serial k={k}", mode.name()), seed);
+    }
+    // All-zero operands: every group is empty; outputs are exactly zero
+    // under both dispatches.
+    let zeros = vec![0f32; 4 * MICRO_GROUP];
+    let zp = PackedFp8Tensor::quantize(&zeros, 4, MICRO_GROUP, MICRO_GROUP, &E4M3);
+    let (s, v) = ab(|| packed_gemm_with(&zp, &zp, GemmConfig::default()));
+    assert!(s.iter().all(|&x| x == 0.0) && v.iter().all(|&x| x == 0.0), "zeros (seed {seed})");
+    assert_bits_eq(&s, &v, "all-zero groups", seed);
+}

@@ -1,0 +1,164 @@
+//! The autotuner cache's tolerance and invariance contracts
+//! (`kernels::tune`):
+//!
+//! * a missing, corrupt, version-skewed, or ISA-mismatched cache file
+//!   yields default tiles **without an error** — a stale temp file must
+//!   never take down training;
+//! * save → load round-trips every entry;
+//! * tuned and untuned runs are bitwise identical — the tuner picks
+//!   schedules, and schedules provably don't touch output bits.
+//!
+//! The global-tuner tests live in ONE `#[test]` fn: the tuner state
+//! (and its `MOSS_TUNE_CACHE` env override, read at first access) is
+//! process-global, and `#[test]` fns in a binary run concurrently.
+//! Pure `load_cache`/`save_cache`/`tune_shape` calls take explicit
+//! paths and no global state, so they stay separate tests.
+
+use std::path::PathBuf;
+
+use moss::config::QuantMode;
+use moss::formats::fp8::E4M3;
+use moss::kernels::tune::{self, TunedEntry};
+use moss::kernels::{packed_gemm_with, GemmConfig, LinearNumerics, PackedFp8Tensor};
+use moss::util::rng::Rng;
+use moss::MICRO_GROUP;
+
+/// Per-test scratch file under the system temp dir; pid-suffixed so
+/// concurrent test binaries never collide.
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("moss_tune_test_{tag}_{}.json", std::process::id()))
+}
+
+fn sample_entries() -> Vec<TunedEntry> {
+    vec![
+        TunedEntry { m: 128, n: 64, k: 256, nb: 32, threads: 4, gflops: 1.25 },
+        TunedEntry { m: 1, n: 64, k: 64, nb: 64, threads: 1, gflops: 0.5 },
+    ]
+}
+
+#[test]
+fn missing_and_corrupt_caches_yield_empty_without_error() {
+    // Missing file: no panic, no error, no entries.
+    assert!(tune::load_cache(&scratch("definitely_absent")).is_empty());
+    // Corrupt payloads: truncated JSON, wrong root type, binary junk.
+    for (tag, text) in [
+        ("truncated", "{\"v\":1,\"isa\":\"sse2\",\"entr"),
+        ("wrong_root", "[1,2,3]"),
+        ("junk", "\u{1}\u{2}\u{3}not json at all"),
+        ("entries_not_arr", "{\"v\":1,\"isa\":\"sse2\",\"entries\":42}"),
+    ] {
+        let p = scratch(tag);
+        std::fs::write(&p, text).unwrap();
+        assert!(tune::load_cache(&p).is_empty(), "cache {tag:?} must parse to empty");
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn version_skew_and_isa_mismatch_are_rejected() {
+    // An entry under the wrong version or a different machine's ISA
+    // must not leak schedules across incompatible layouts.
+    let entry = "{\"m\":8,\"n\":8,\"k\":32,\"nb\":16,\"threads\":2,\"gflops\":1.0}";
+    let p = scratch("skew");
+    std::fs::write(&p, format!("{{\"v\":99,\"isa\":\"sse2\",\"entries\":[{entry}]}}")).unwrap();
+    assert!(tune::load_cache(&p).is_empty(), "version skew must reject");
+    std::fs::write(&p, format!("{{\"v\":1,\"isa\":\"vax-780\",\"entries\":[{entry}]}}")).unwrap();
+    assert!(tune::load_cache(&p).is_empty(), "ISA mismatch must reject");
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn save_load_round_trips_every_entry() {
+    let p = scratch("roundtrip");
+    let entries = sample_entries();
+    tune::save_cache(&p, &entries).unwrap();
+    let loaded = tune::load_cache(&p);
+    assert_eq!(loaded.len(), entries.len());
+    for (a, b) in loaded.iter().zip(&entries) {
+        assert_eq!((a.m, a.n, a.k, a.nb, a.threads), (b.m, b.n, b.k, b.nb, b.threads));
+        assert!((a.gflops - b.gflops).abs() < 1e-9);
+    }
+    // No torn tmp file left behind.
+    assert!(!p.with_extension("tmp").exists());
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn tune_shape_winner_is_a_searched_candidate() {
+    let base = GemmConfig::default();
+    let e = tune::tune_shape(24, 48, 64, base);
+    assert_eq!((e.m, e.n, e.k), (24, 48, 64));
+    assert!(e.nb >= 1);
+    assert!((1..=base.threads.max(1)).contains(&e.threads));
+    assert!(e.gflops > 0.0, "winner must carry a measured rate");
+}
+
+/// All global-tuner-state assertions in one test (see module docs).
+#[test]
+fn global_tuner_warmup_resolution_and_bit_invariance() {
+    // Pin the cache path BEFORE the first global access: `tuned` /
+    // `warmup` read `MOSS_TUNE_CACHE` lazily, exactly once per process.
+    let p = scratch("global");
+    std::env::set_var("MOSS_TUNE_CACHE", &p);
+    assert_eq!(tune::cache_path(), p);
+
+    // Warmup searches the shape and persists the winner.
+    let (m, n, k) = (8usize, 16usize, MICRO_GROUP);
+    tune::warmup(&[(m, n, k)]);
+    assert!(p.exists(), "warmup must persist its winners");
+    assert!(tune::entries().iter().any(|e| (e.m, e.n, e.k) == (m, n, k)));
+    let persisted = tune::load_cache(&p);
+    assert!(persisted.iter().any(|e| (e.m, e.n, e.k) == (m, n, k)));
+
+    // Resolution clamps the winner's threads to the caller's base: a
+    // cache tuned on a big machine cannot oversubscribe a serve
+    // scheduler that contracted threads: 1.
+    let one = tune::tuned(m, n, k, GemmConfig { nb: 8, threads: 1 });
+    assert_eq!(one.threads, 1, "winner threads must clamp to base");
+    assert!(one.nb >= 1);
+
+    // Miss heuristic: tiny-M shapes pin threads to 1; larger misses
+    // keep the caller's schedule untouched.
+    let decode = tune::tuned(1, 9999, 8888, GemmConfig { nb: 64, threads: 8 });
+    assert_eq!((decode.nb, decode.threads), (64, 1));
+    let big = tune::tuned(777, 9999, 8888, GemmConfig { nb: 64, threads: 8 });
+    assert_eq!((big.nb, big.threads), (64, 8));
+
+    // Tuned vs untuned is bitwise identical through a real mode path —
+    // the tuner's whole safety argument in one assertion.
+    let x = Rng::new(3).activation_like(m, k, 1.0);
+    let w = Rng::new(4).activation_like(k, n, 0.1);
+    let num = LinearNumerics::new(QuantMode::Moss, MICRO_GROUP);
+    let pw = num.pack_weight(&w, k, n, None);
+    let y_tuned = num.forward(&x, m, &pw, GemmConfig::default());
+    tune::set_enabled(false);
+    assert!(!tune::enabled());
+    let y_plain = num.forward(&x, m, &pw, GemmConfig::default());
+    tune::set_enabled(true);
+    for (i, (a, b)) in y_tuned.iter().zip(&y_plain).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "tuned vs untuned elem {i}");
+    }
+
+    // Disabled tuner resolves to the base unchanged.
+    tune::set_enabled(false);
+    let base = GemmConfig { nb: 3, threads: 5 };
+    let r = tune::tuned(m, n, k, base);
+    assert_eq!((r.nb, r.threads), (3, 5));
+    tune::set_enabled(true);
+
+    // And direct GEMM calls under both resolved configs agree bitwise.
+    let ap = PackedFp8Tensor::quantize(&x, m, k, MICRO_GROUP, &E4M3);
+    let mut wt = vec![0f32; n * k];
+    for (idx, &val) in w.iter().enumerate() {
+        let (row, col) = (idx / n, idx % n);
+        wt[col * k + row] = val;
+    }
+    let bp = PackedFp8Tensor::quantize(&wt, n, k, MICRO_GROUP, &E4M3);
+    let c_base = packed_gemm_with(&ap, &bp, GemmConfig { nb: 1, threads: 1 });
+    let c_tuned = packed_gemm_with(&ap, &bp, tune::tuned(m, n, k, GemmConfig::default()));
+    for (i, (a, b)) in c_base.iter().zip(&c_tuned).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "schedule invariance elem {i}");
+    }
+
+    std::fs::remove_file(&p).ok();
+}
