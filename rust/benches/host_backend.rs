@@ -6,10 +6,14 @@
 //! `quant_hotpath`; the hard asserts here are deterministic accounting,
 //! not wall-clock: the packed gradient wire must move <= 1.1 B/elem
 //! (vs 4 B/elem f32 — the Table-5 compression claim, checked on real
-//! frames every run), and ZeRO-1 per-rank optimizer state must be
-//! <= (1/workers + 5%) of the replicated baseline. The bucketed
-//! pipeline's measured overlap ratio and hidden/exposed comm ms are
-//! recorded per PR alongside the throughput numbers.
+//! frames every run), ZeRO-1 per-rank optimizer state must be
+//! <= (1/workers + 5%) of the replicated baseline, ZeRO-2 retained
+//! gradient bytes per rank likewise, the hierarchical 2-node ring must
+//! ship exactly the flat ring's payload elems (the 2(w-1)n telescoping
+//! invariant), and `--accum 2` must ship exactly the accum=1 per-step
+//! wire bytes. The bucketed pipeline's measured overlap ratio and
+//! hidden/exposed comm ms are recorded per PR alongside the throughput
+//! numbers.
 
 use std::time::Instant;
 
@@ -24,20 +28,14 @@ use moss::kernels::{dequant_then_naive_gemm, packed_gemm, PackedFp8Tensor};
 use moss::metrics::CommStats;
 use moss::util::rng::Rng;
 
-/// Train `steps` data-parallel steps under `wire` (optionally with the
-/// bucketed overlap pipeline + ZeRO-1) and return the trainer plus
-/// wall-clock.
-fn dist_trainer_run(
-    workers: usize,
-    steps: u64,
-    wire: WireKind,
-    overlap: bool,
-    zero: bool,
-) -> (DistTrainer, f64) {
+/// Train `steps` data-parallel steps under `dist` (wire, pipeline
+/// flags, topology, ZeRO level, accumulation) and return the trainer
+/// plus wall-clock.
+fn dist_trainer_run(steps: u64, dist: DistSpec) -> (DistTrainer, f64) {
     let cfg = TrainConfig {
         backend: BackendKind::Host,
-        host: HostSpec { microbatches: workers, ..HostSpec::default() },
-        dist: DistSpec { workers, wire, shard: ShardMode::Scatter, overlap, zero, bucket_bytes: 0 },
+        host: HostSpec { microbatches: dist.workers, ..HostSpec::default() },
+        dist,
         steps,
         lr: LrSchedule { peak: 5e-3, warmup_steps: 2, total_steps: steps, final_ratio: 0.1 },
         log_every: 0,
@@ -50,9 +48,23 @@ fn dist_trainer_run(
     (trainer, wall)
 }
 
+/// The pipelined (overlap + ZeRO-1) spec the bench measures, before
+/// any topology / ZeRO-2 / accumulation extras.
+fn pipe_spec(workers: usize, wire: WireKind) -> DistSpec {
+    DistSpec {
+        workers,
+        wire,
+        shard: ShardMode::Scatter,
+        overlap: true,
+        zero: true,
+        ..DistSpec::default()
+    }
+}
+
 /// Serial-schedule run: comm accounting plus wall-clock.
 fn dist_run(workers: usize, steps: u64, wire: WireKind) -> (CommStats, f64) {
-    let (trainer, wall) = dist_trainer_run(workers, steps, wire, false, false);
+    let dist = DistSpec { overlap: false, zero: false, ..pipe_spec(workers, wire) };
+    let (trainer, wall) = dist_trainer_run(steps, dist);
     (trainer.comm, wall)
 }
 
@@ -226,7 +238,7 @@ fn main() {
 
     // --- bucketed pipeline: overlap + ZeRO-1 (packed wire) -----------
     let (pipe, wall_pipe) =
-        dist_trainer_run(workers, dist_steps, WireKind::PackedFp8Group, true, true);
+        dist_trainer_run(dist_steps, pipe_spec(workers, WireKind::PackedFp8Group));
     let overlap_ratio = pipe.overlap.overlap_ratio();
     let hidden_ms = pipe.overlap.hidden_ms_per_step();
     let exposed_ms = pipe.overlap.exposed_ms_per_step();
@@ -254,6 +266,63 @@ fn main() {
          {replicated_bytes} B replicated)",
         even_share * 1.05
     );
+
+    // --- multi-node scale-out: hierarchy, ZeRO-2, accumulation -------
+    // Hierarchical vs flat wire bytes: the two-level ring telescopes to
+    // the flat ring's 2(w-1)n payload elems at every node count, so the
+    // ratio must sit at ~1.0 (packed frame metadata differs slightly —
+    // more, smaller chunks mean more frames and partial groups).
+    let (hier, wall_hier) = dist_trainer_run(
+        dist_steps,
+        DistSpec { nodes: 2, ..pipe_spec(workers, WireKind::PackedFp8Group) },
+    );
+    let hier_vs_flat = hier.comm.bytes_per_step() / pipe.comm.bytes_per_step().max(1e-9);
+    println!(
+        "dist x{workers} hier x2 nodes: {:.0} bytes/step vs flat {:.0} -> ratio {hier_vs_flat:.4} \
+         ({dist_steps} steps in {wall_hier:.2}s)",
+        hier.comm.bytes_per_step(),
+        pipe.comm.bytes_per_step(),
+    );
+    assert_eq!(
+        hier.comm.elems_shipped, pipe.comm.elems_shipped,
+        "hierarchical ring must ship exactly the flat ring's payload elems"
+    );
+    assert!(
+        (hier_vs_flat - 1.0).abs() <= 0.1,
+        "hier-vs-flat bytes/step ratio {hier_vs_flat:.4} strayed from 1.0 by > 10%"
+    );
+
+    // ZeRO-2: measured retained gradient bytes of the worst rank.
+    let (z2, _) = dist_trainer_run(
+        dist_steps,
+        DistSpec { zero2: true, ..pipe_spec(workers, WireKind::PackedFp8Group) },
+    );
+    let zero2_grad_bytes = z2.grad_bytes_per_rank();
+    let replicated_grad = z2.replicated_grad_bytes();
+    let grad_even = replicated_grad as f64 / workers as f64;
+    assert!(
+        (zero2_grad_bytes as f64) <= grad_even * 1.05,
+        "zero-2 grad bytes/rank {zero2_grad_bytes} B exceeds 1/{workers} + 5% of replicated \
+         ({replicated_grad} B)"
+    );
+    println!(
+        "zero-2 gate OK: {zero2_grad_bytes} B/rank retained <= {:.0} B \
+         (1/{workers} + 5% of {replicated_grad} B replicated gradient)",
+        grad_even * 1.05
+    );
+
+    // Accumulation: per-step wire bytes must be independent of K (only
+    // the last microbatch's backward emits buckets).
+    let (acc, _) = dist_trainer_run(
+        dist_steps,
+        DistSpec { accum: 2, ..pipe_spec(workers, WireKind::PackedFp8Group) },
+    );
+    let accum_ratio = acc.comm.bytes_per_step() / pipe.comm.bytes_per_step().max(1e-9);
+    assert!(
+        (accum_ratio - 1.0).abs() < 1e-9,
+        "accum=2 shipped {accum_ratio:.6}x the accum=1 wire bytes (want exactly 1.0)"
+    );
+    println!("accum gate OK: accum=2 wire bytes ratio {accum_ratio:.4} (exactly once per step)");
 
     // --- machine-readable artifact ----------------------------------
     let json = format!(
@@ -287,6 +356,10 @@ fn main() {
             "  \"zero1_state_bytes_per_rank\": {},\n",
             "  \"replicated_state_bytes\": {},\n",
             "  \"param_gather_bytes_per_step\": {:.1},\n",
+            "  \"hier_vs_flat_bytes_per_step\": {:.6},\n",
+            "  \"zero2_grad_bytes_per_rank\": {},\n",
+            "  \"replicated_grad_bytes\": {},\n",
+            "  \"accum_wire_bytes_ratio\": {:.6},\n",
             "  \"transformer_tokens_per_sec\": {:.1},\n",
             "  \"transformer_heads\": {},\n",
             "  \"attn_gemm_speedup_qkt_p50\": {:.3},\n",
@@ -326,6 +399,10 @@ fn main() {
         zero1_bytes,
         replicated_bytes,
         param_gather_bytes,
+        hier_vs_flat,
+        zero2_grad_bytes,
+        replicated_grad,
+        accum_ratio,
         transformer_tok_per_sec,
         tf_spec.heads,
         attn_speedup,

@@ -326,10 +326,26 @@ pub struct DistSpec {
     /// is 1/N per rank) and updated parameters are all-gathered back
     /// over a lossless f32 wire.
     pub zero: bool,
+    /// ZeRO-2 gradient sharding (`--zero2`): after reduce-scatter each
+    /// rank keeps only its owned gradient shard and frees the
+    /// replicated full-bucket copies — gradient memory is ~1/N per
+    /// rank. Implies the ZeRO-1 sharded optimizer (the shard has to be
+    /// applied by its owner).
+    pub zero2: bool,
     /// Gradient-bucket coalescing threshold in bytes (`--bucket-mb`);
     /// 0 = one bucket per emitted gradient tensor. Only meaningful on
-    /// the bucketed pipeline (`overlap` or `zero`).
+    /// the bucketed pipeline (`overlap`, `zero`, or `zero2`).
     pub bucket_bytes: usize,
+    /// Topology nodes of the hierarchical allreduce (`--nodes N`):
+    /// ranks are grouped into N contiguous nodes; gradients reduce-
+    /// scatter intra-node, ring inter-node over one leader per chunk
+    /// position, and all-gather back intra-node. 1 = flat ring.
+    pub nodes: usize,
+    /// Gradient-accumulation passes per optimizer step (`--accum K`):
+    /// each worker runs K microbatch fwd/bwd passes, accumulating
+    /// gradients locally; only the last pass's buckets enter the comm
+    /// pipeline, so wire bytes per step are independent of K.
+    pub accum: usize,
 }
 
 impl Default for DistSpec {
@@ -340,7 +356,10 @@ impl Default for DistSpec {
             shard: ShardMode::Scatter,
             overlap: false,
             zero: false,
+            zero2: false,
             bucket_bytes: 0,
+            nodes: 1,
+            accum: 1,
         }
     }
 }
@@ -363,6 +382,27 @@ impl DistSpec {
         if a.has("zero") {
             self.zero = true;
         }
+        if a.has("zero2") {
+            self.zero2 = true;
+            // the owned shard is the only gradient a rank keeps, so the
+            // owner must also apply it: ZeRO-2 implies ZeRO-1
+            self.zero = true;
+        }
+        self.nodes = a.get_usize("nodes", self.nodes)?;
+        if self.nodes == 0 {
+            bail!("--nodes must be >= 1 (got 0)");
+        }
+        if self.workers % self.nodes != 0 {
+            bail!(
+                "--workers {} does not divide into --nodes {} equal nodes",
+                self.workers,
+                self.nodes
+            );
+        }
+        self.accum = a.get_usize("accum", self.accum)?;
+        if self.accum == 0 {
+            bail!("--accum must be >= 1 (got 0)");
+        }
         if let Some(mb) = a.get("bucket-mb") {
             let mb: f64 = mb
                 .parse()
@@ -374,7 +414,10 @@ impl DistSpec {
             if !self.pipelined() {
                 // also caught by validate(); failing at parse time stops
                 // the serial path from silently ignoring the flag
-                bail!("--bucket-mb requires --overlap or --zero (the serial step has no buckets)");
+                bail!(
+                    "--bucket-mb requires --overlap, --zero, or --zero2 (the serial step \
+                     has no buckets)"
+                );
             }
         }
         Ok(self)
@@ -383,7 +426,7 @@ impl DistSpec {
     /// The bucketed gradient pipeline is engaged (defaults keep the
     /// serial PR-3 step byte-for-byte unchanged).
     pub fn pipelined(&self) -> bool {
-        self.overlap || self.zero
+        self.overlap || self.zero || self.zero2
     }
 
     /// The global microbatch count must shard evenly across workers
@@ -399,10 +442,26 @@ impl DistSpec {
                 self.workers
             );
         }
+        if self.nodes == 0 || self.workers % self.nodes != 0 {
+            bail!(
+                "dist spec: workers {} does not divide into {} equal nodes",
+                self.workers,
+                self.nodes
+            );
+        }
+        if self.accum == 0 {
+            bail!("dist spec needs accum >= 1");
+        }
+        if self.zero2 && !self.zero {
+            bail!("dist spec: zero2 implies zero (the shard owner applies the update)");
+        }
         if self.bucket_bytes > 0 && !self.pipelined() {
             // never silently ignore a flag: bucket sizing only shapes
             // the bucketed pipeline
-            bail!("--bucket-mb requires --overlap or --zero (the serial step has no buckets)");
+            bail!(
+                "--bucket-mb requires --overlap, --zero, or --zero2 (the serial step has \
+                 no buckets)"
+            );
         }
         Ok(())
     }
@@ -837,7 +896,7 @@ mod tests {
         // --bucket-mb without the pipeline is rejected, not ignored
         let lone = DistSpec { bucket_bytes: 1000, ..DistSpec::default() };
         let err = lone.validate(4).unwrap_err().to_string();
-        assert!(err.contains("--overlap or --zero"), "{err}");
+        assert!(err.contains("--overlap, --zero, or --zero2"), "{err}");
         // bad bucket sizes are parse errors
         for bad in ["-1", "9999", "huge"] {
             let args = crate::cli::Args::parse(
@@ -846,9 +905,57 @@ mod tests {
             .unwrap();
             assert!(TrainConfig::default().apply_args(&args).is_err(), "--bucket-mb {bad}");
         }
-        // either flag alone engages the pipeline
+        // any of the three flags alone engages the pipeline
         assert!(DistSpec { overlap: true, ..DistSpec::default() }.pipelined());
         assert!(DistSpec { zero: true, ..DistSpec::default() }.pipelined());
+        assert!(DistSpec { zero2: true, zero: true, ..DistSpec::default() }.pipelined());
+    }
+
+    #[test]
+    fn hier_zero2_accum_flags_parse_and_guard() {
+        // the full multi-node shape parses and implies zero
+        let args = crate::cli::Args::parse(
+            [
+                "train", "--backend", "host", "--workers", "4", "--nodes", "2", "--zero2",
+                "--accum", "2", "--overlap",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.dist.nodes, 2);
+        assert_eq!(c.dist.accum, 2);
+        assert!(c.dist.zero2, "--zero2 must set zero2");
+        assert!(c.dist.zero, "--zero2 implies the ZeRO-1 sharded optimizer");
+        assert!(c.dist.pipelined());
+        assert!(c.dist.validate(c.host.microbatches).is_ok());
+        // defaults stay on the flat single-pass path
+        let d = DistSpec::default();
+        assert_eq!((d.nodes, d.accum), (1, 1));
+        assert!(!d.zero2);
+        // world % nodes != 0 is rejected at parse time, never ignored
+        let args = crate::cli::Args::parse(
+            ["train", "--backend", "host", "--workers", "4", "--nodes", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let err = TrainConfig::default().apply_args(&args).unwrap_err().to_string();
+        assert!(err.contains("equal nodes"), "{err}");
+        // zero-valued knobs are parse errors
+        for flag in ["--nodes", "--accum"] {
+            let args = crate::cli::Args::parse(
+                ["train", "--backend", "host", flag, "0"].iter().map(|s| s.to_string()),
+            )
+            .unwrap();
+            assert!(TrainConfig::default().apply_args(&args).is_err(), "{flag} 0");
+        }
+        // validate() re-checks shapes built without the CLI
+        assert!(DistSpec { workers: 6, nodes: 4, ..DistSpec::default() }.validate(6).is_err());
+        assert!(DistSpec { accum: 0, ..DistSpec::default() }.validate(4).is_err());
+        assert!(DistSpec { zero2: true, ..DistSpec::default() }.validate(4).is_err());
+        assert!(DistSpec { workers: 6, nodes: 3, ..DistSpec::default() }.validate(6).is_ok());
     }
 
     #[test]

@@ -388,6 +388,219 @@ type RingHalf = fn(
     Wire,
 ) -> (u64, u64, u64);
 
+/// Which ring half a hierarchical stage runs.
+#[derive(Debug, Clone, Copy)]
+enum Stage {
+    ReduceScatter,
+    AllGather,
+}
+
+/// Fold only the wire-traffic fields of `sub` into `stats` (the
+/// composed collective sets its own `elems_reduced` / `wall_secs`).
+fn fold_wire(stats: &mut AllreduceStats, sub: &AllreduceStats) {
+    stats.bytes_on_wire += sub.bytes_on_wire;
+    stats.frames += sub.frames;
+    stats.elems_shipped += sub.elems_shipped;
+}
+
+/// Two-level topology-aware ring collective: `world` ranks grouped into
+/// `nodes` contiguous nodes of `world / nodes` ranks each (`--nodes N`).
+/// The reduce-scatter runs an intra-node ring per node, then an
+/// inter-node ring per owned-chunk position — each inter-node ring has
+/// exactly **one participant per node** (that chunk's node leader), so
+/// only 1/local of the ranks ever cross the node boundary. The
+/// all-gather is the exact inverse (inter-node gather first, intra-node
+/// broadcast second). Every stage is composed from the existing
+/// [`RingSession`] halves, so all three wires work unchanged, and at
+/// `nodes = 1` (or `nodes = world`) both inter (resp. intra) stages are
+/// world-1 passthroughs — the collective degenerates to the flat ring
+/// **bit-identically** (pinned by test).
+#[derive(Debug, Clone, Copy)]
+pub struct HierSession {
+    pub world: usize,
+    pub nodes: usize,
+    pub wire: Wire,
+}
+
+impl HierSession {
+    /// `world` must divide into `nodes` equal nodes; the config layer
+    /// rejects bad shapes at parse time, this guards direct callers.
+    pub fn new(world: usize, nodes: usize, wire: Wire) -> HierSession {
+        assert!(world > 0, "ring needs at least one rank");
+        assert!(nodes > 0, "need at least one node");
+        assert!(world % nodes == 0, "world {world} does not divide into {nodes} equal nodes");
+        HierSession { world, nodes, wire }
+    }
+
+    /// Ranks per node.
+    pub fn local(&self) -> usize {
+        self.world / self.nodes
+    }
+
+    /// Node a global rank belongs to (contiguous grouping).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.local()
+    }
+
+    /// Rank index within its node.
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank % self.local()
+    }
+
+    fn intra(&self) -> RingSession {
+        RingSession::new(self.local(), self.wire)
+    }
+
+    fn inter(&self) -> RingSession {
+        RingSession::new(self.nodes, self.wire)
+    }
+
+    /// Element range rank `rank` owns after [`Self::reduce_scatter`]:
+    /// the inter-node sub-chunk (indexed by node) nested inside the
+    /// intra-node chunk (indexed by local rank) — a two-level nesting of
+    /// the flat ring's ownership that still partitions `[0, n)`
+    /// disjointly. At `nodes = 1` this is exactly
+    /// [`RingSession::owned_range`].
+    pub fn owned_range(&self, n: usize, rank: usize) -> (usize, usize) {
+        let (lo, hi) = self.intra().owned_range(n, self.local_rank(rank));
+        let (s, e) = self.inter().owned_range(hi - lo, self.node_of(rank));
+        (lo + s, lo + e)
+    }
+
+    /// Hierarchical reduce-scatter: intra-node ring reduce-scatter per
+    /// node (nodes run concurrently), then an inter-node ring
+    /// reduce-scatter per owned-chunk position. Each rank finishes
+    /// owning the globally reduced values of [`Self::owned_range`].
+    pub fn reduce_scatter(&self, inputs: Vec<Vec<f32>>) -> ReduceScattered {
+        assert_eq!(inputs.len(), self.world, "inputs must be rank-indexed");
+        let n = inputs.first().map_or(0, |v| v.len());
+        let t0 = Instant::now();
+        let mut stats = AllreduceStats::default();
+        let mut data = self.run_intra(inputs, &mut stats, Stage::ReduceScatter);
+        self.run_inter(&mut data, n, &mut stats, Stage::ReduceScatter);
+        stats.elems_reduced = n as u64;
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        ReduceScattered { data, stats }
+    }
+
+    /// Hierarchical all-gather (inverse of [`Self::reduce_scatter`]):
+    /// inter-node ring all-gather per owned-chunk position first (every
+    /// node's leader for that chunk adopts the globally reduced values
+    /// bit-identically — frames forward verbatim), then an intra-node
+    /// ring all-gather per node. Inputs only need valid data in each
+    /// rank's owned range.
+    pub fn all_gather(&self, data: Vec<Vec<f32>>) -> (Vec<Vec<f32>>, AllreduceStats) {
+        assert_eq!(data.len(), self.world, "inputs must be rank-indexed");
+        let n = data.first().map_or(0, |v| v.len());
+        let t0 = Instant::now();
+        let mut stats = AllreduceStats::default();
+        let mut data = data;
+        self.run_inter(&mut data, n, &mut stats, Stage::AllGather);
+        let out = self.run_intra(data, &mut stats, Stage::AllGather);
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        (out, stats)
+    }
+
+    /// The composed hierarchical collective: reduce-scatter, then
+    /// all-gather. At `nodes = 1` both inter stages are world-1
+    /// passthroughs, so this is exactly the flat composed ring —
+    /// bit-identical to [`ring_allreduce`] on every wire.
+    pub fn allreduce(&self, inputs: Vec<Vec<f32>>) -> (Vec<Vec<f32>>, AllreduceStats) {
+        let n = inputs.first().map_or(0, |v| v.len());
+        let t0 = Instant::now();
+        let rs = self.reduce_scatter(inputs);
+        let mut stats = rs.stats;
+        let (out, ag) = self.all_gather(rs.data);
+        fold_wire(&mut stats, &ag);
+        stats.elems_reduced = n as u64;
+        stats.wall_secs = t0.elapsed().as_secs_f64();
+        (out, stats)
+    }
+
+    /// Run one intra-node stage: split the rank-indexed vectors into
+    /// node groups, run each node's ring concurrently, reassemble in
+    /// rank order.
+    fn run_intra(
+        &self,
+        inputs: Vec<Vec<f32>>,
+        stats: &mut AllreduceStats,
+        stage: Stage,
+    ) -> Vec<Vec<f32>> {
+        let intra = self.intra();
+        let mut groups: Vec<Vec<Vec<f32>>> = Vec::with_capacity(self.nodes);
+        let mut it = inputs.into_iter();
+        for _ in 0..self.nodes {
+            groups.push(it.by_ref().take(self.local()).collect());
+        }
+        let results: Vec<(Vec<Vec<f32>>, AllreduceStats)> = thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|g| {
+                    s.spawn(move || match stage {
+                        Stage::ReduceScatter => {
+                            let rs = intra.reduce_scatter(g);
+                            (rs.data, rs.stats)
+                        }
+                        Stage::AllGather => intra.all_gather(g),
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("intra-node ring panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(self.world);
+        for (data, sub) in results {
+            fold_wire(stats, &sub);
+            out.extend(data);
+        }
+        out
+    }
+
+    /// Run one inter-node stage: for each intra-owned chunk position,
+    /// the `nodes` leaders holding that chunk form their own ring over
+    /// just the chunk's element range (the only traffic that crosses a
+    /// node boundary). Positions run concurrently; empty chunk ranges
+    /// ship nothing.
+    fn run_inter(&self, data: &mut [Vec<f32>], n: usize, stats: &mut AllreduceStats, stage: Stage) {
+        let local = self.local();
+        let intra = self.intra();
+        let inter = self.inter();
+        let mut jobs: Vec<(usize, usize, Vec<Vec<f32>>)> = Vec::new();
+        for j in 0..local {
+            let (lo, hi) = intra.owned_range(n, j);
+            if hi == lo {
+                continue;
+            }
+            let subs: Vec<Vec<f32>> =
+                (0..self.nodes).map(|g| data[g * local + j][lo..hi].to_vec()).collect();
+            jobs.push((j, lo, subs));
+        }
+        let results: Vec<(usize, usize, Vec<Vec<f32>>, AllreduceStats)> = thread::scope(|s| {
+            let handles: Vec<_> = jobs
+                .into_iter()
+                .map(|(j, lo, subs)| {
+                    s.spawn(move || match stage {
+                        Stage::ReduceScatter => {
+                            let rs = inter.reduce_scatter(subs);
+                            (j, lo, rs.data, rs.stats)
+                        }
+                        Stage::AllGather => {
+                            let (out, st) = inter.all_gather(subs);
+                            (j, lo, out, st)
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("inter-node ring panicked")).collect()
+        });
+        for (j, lo, subs, sub_stats) in results {
+            fold_wire(stats, &sub_stats);
+            for (g, sub) in subs.into_iter().enumerate() {
+                data[g * local + j][lo..lo + sub.len()].copy_from_slice(&sub);
+            }
+        }
+    }
+}
+
 fn chunk_bounds(n: usize, world: usize, c: usize) -> (usize, usize) {
     let base = n / world;
     let rem = n % world;
@@ -926,5 +1139,179 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    /// Acceptance: at `nodes = 1` the hierarchical path is bit-identical
+    /// to the flat ring on every wire (the inter stage is a world-1
+    /// passthrough, so the composition is exactly reduce-scatter +
+    /// all-gather — already pinned equal to the one-shot collective).
+    /// `nodes = world` degenerates the other way (intra passthrough,
+    /// inter ring over all ranks) and must also match bitwise.
+    #[test]
+    fn hier_degenerate_shapes_match_flat_ring_bitwise() {
+        for wire in [Wire::F32, Wire::Fp8, Wire::PackedFp8Group { group: 32 }] {
+            for world in [1usize, 2, 3, 4] {
+                for n in [5usize, 97, 301] {
+                    let (inputs, _) = make_inputs(world, n, (world * n + 1) as u64);
+                    let flat = ring_allreduce(inputs.clone(), wire);
+                    for nodes in [1usize, world] {
+                        let (hier, _) =
+                            HierSession::new(world, nodes, wire).allreduce(inputs.clone());
+                        for rank in 0..world {
+                            for (i, (a, b)) in hier[rank].iter().zip(&flat[rank]).enumerate() {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "{} world {world} nodes {nodes} rank {rank} elem {i}",
+                                    wire.name()
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The two-level ownership helpers partition `[0, n)` disjointly
+    /// for every (world, nodes) shape, including empty vectors and
+    /// lengths that divide into neither level evenly.
+    #[test]
+    fn hier_owned_ranges_partition_the_vector() {
+        for (world, nodes) in [(1, 1), (4, 2), (6, 2), (6, 3), (8, 4), (9, 3)] {
+            for n in [0usize, 5, 97, 256] {
+                let s = HierSession::new(world, nodes, Wire::F32);
+                let mut covered = vec![0u32; n];
+                for rank in 0..world {
+                    let (lo, hi) = s.owned_range(n, rank);
+                    for c in covered[lo..hi].iter_mut() {
+                        *c += 1;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "world {world} nodes {nodes} n {n}");
+            }
+        }
+    }
+
+    /// Every rank finishes bit-identical under every wire at genuinely
+    /// hierarchical shapes too — the inter-node all-gather forwards
+    /// frames verbatim, then the intra-node broadcast starts from
+    /// node-identical bits.
+    #[test]
+    fn hier_all_ranks_agree_bitwise_under_every_wire() {
+        for wire in [Wire::F32, Wire::Fp8, Wire::PackedFp8Group { group: 32 }] {
+            for (world, nodes) in [(4usize, 2usize), (6, 2), (6, 3)] {
+                let (inputs, want) = make_inputs(world, 301, 43);
+                let (out, stats) = HierSession::new(world, nodes, wire).allreduce(inputs);
+                for rank in 1..world {
+                    for (i, (a, b)) in out[rank].iter().zip(&out[0]).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} world {world} nodes {nodes} rank {rank} elem {i}",
+                            wire.name()
+                        );
+                    }
+                }
+                assert!(stats.bytes_on_wire > 0);
+                assert_eq!(stats.elems_reduced, 301);
+                if wire == Wire::F32 {
+                    let rel = rel_rms(&out[0], &want);
+                    assert!(rel < 1e-6, "world {world} nodes {nodes}: rel {rel}");
+                }
+            }
+        }
+    }
+
+    /// At world 4 / nodes 2 on the f32 wire the reduction is a pure
+    /// pairwise tree: intra-node sums `(a+b)` and `(c+d)` (2-rank rings
+    /// are commutativity-only), then one 2-rank inter ring adds them.
+    /// f32 addition is commutative bitwise, so every owned element must
+    /// equal `(a+b) + (c+d)` exactly.
+    #[test]
+    fn hier_world4_nodes2_f32_is_bitwise_pairwise_tree() {
+        let (inputs, _) = make_inputs(4, 777, 47);
+        let want: Vec<f32> = (0..777)
+            .map(|i| (inputs[0][i] + inputs[1][i]) + (inputs[2][i] + inputs[3][i]))
+            .collect();
+        let s = HierSession::new(4, 2, Wire::F32);
+        let rs = s.reduce_scatter(inputs.clone());
+        for rank in 0..4 {
+            let (lo, hi) = s.owned_range(777, rank);
+            for i in lo..hi {
+                assert_eq!(rs.data[rank][i].to_bits(), want[i].to_bits(), "rank {rank} elem {i}");
+            }
+        }
+        let (out, _) = s.allreduce(inputs);
+        for rank in 0..4 {
+            for (i, (a, b)) in out[rank].iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank} elem {i}");
+            }
+        }
+    }
+
+    /// Satellite bound: a 2-node packed-wire reduce-scatter quantizes
+    /// three chunks on the way to an owned shard — the intra-node peer
+    /// chunk on each node, and the other node's partial sum on the
+    /// inter ring. Each hop obeys the existing 2x per-group quantization
+    /// bound, so the owned shard's total error is bounded by the sum of
+    /// the three per-hop bounds (plus f32 accumulation ulps).
+    #[test]
+    fn hier_two_node_packed_shard_error_bounded() {
+        let group = 32usize;
+        let n = 256usize; // intra chunks of 128, inter sub-chunks of 64: group-aligned
+        let s = HierSession::new(4, 2, Wire::PackedFp8Group { group });
+        let mut rng = Rng::new(53);
+        let inputs: Vec<Vec<f32>> = (0..4).map(|_| rng.activation_like(1, n, 2.0)).collect();
+        let rs = s.reduce_scatter(inputs.clone());
+        let q = |chunk: &[f32]| decode(&encode(chunk, Wire::PackedFp8Group { group }));
+        // per-element 2x per-group bound; group scales depend only on
+        // the group's own 32 elements, so a group-aligned window sees
+        // the same scales as the full sent chunk
+        let hop_bound = |chunk: &[f32], j: usize| {
+            let pg = PerGroupQuant::quantize(chunk, 1, chunk.len(), group, &E4M3);
+            2.0 * (chunk[j].abs() / 16.0 + pg.scales[j / group] * 2f32.powi(-10))
+        };
+        let intra = RingSession::new(2, Wire::PackedFp8Group { group });
+        for rank in 0..4 {
+            let (lo, hi) = s.owned_range(n, rank);
+            let node = s.node_of(rank);
+            let j0 = s.local_rank(rank);
+            // the full intra-owned chunk [LO..HI] superset of [lo..hi]
+            let (big_lo, big_hi) = intra.owned_range(n, j0);
+            let peer = node * 2 + (1 - j0); // intra-node peer on this node
+            // the other node's leader for this chunk position, and the
+            // chunk its own intra peer sent it
+            let other_owner = 2 * (1 - node) + j0;
+            let other_peer = 2 * (1 - node) + (1 - j0);
+            // reconstruct the other node's partial sum over the full
+            // intra chunk: own + Q(peer's full chunk)
+            let q_other_peer = q(&inputs[other_peer][big_lo..big_hi]);
+            let partial_other: Vec<f32> = inputs[other_owner][big_lo..big_hi]
+                .iter()
+                .zip(&q_other_peer)
+                .map(|(a, b)| a + b)
+                .collect();
+            // the inter ring encodes only the [lo..hi] window of it
+            let sent_inter = &partial_other[lo - big_lo..hi - big_lo];
+            for (j, i) in (lo..hi).enumerate() {
+                let exact: f32 = inputs.iter().map(|v| v[i]).sum();
+                let err = (rs.data[rank][i] - exact).abs();
+                let big_j = i - big_lo;
+                let bound = hop_bound(&inputs[peer][big_lo..big_hi], big_j)
+                    + hop_bound(&inputs[other_peer][big_lo..big_hi], big_j)
+                    + hop_bound(sent_inter, j)
+                    + 4.0 * exact.abs().max(1.0) * f32::EPSILON;
+                assert!(err <= bound, "rank {rank} elem {i}: err {err} > bound {bound}");
+            }
+        }
+    }
+
+    /// Bad node shapes are rejected at construction (the CLI rejects
+    /// them earlier, at parse time).
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn hier_rejects_nondivisible_world() {
+        HierSession::new(5, 2, Wire::F32);
     }
 }

@@ -10,9 +10,9 @@ pub mod netmodel;
 pub mod overlap;
 
 pub use allreduce::{
-    ring_allreduce, ring_allreduce_stats, AllreduceStats, ReduceScattered, RingSession, Wire,
-    WireChunk, WireMeta,
+    ring_allreduce, ring_allreduce_stats, AllreduceStats, HierSession, ReduceScattered,
+    RingSession, Wire, WireChunk, WireMeta,
 };
 pub use memory::{activation_memory_gb, MemoryScheme, ModelShape};
-pub use netmodel::NetModel;
+pub use netmodel::{fit_netmodel, LinkModel, NetModel, NetModelFit, TopoNetModel};
 pub use overlap::{overlap_ratio, schedule_overlap, OverlapConfig};

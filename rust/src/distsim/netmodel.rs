@@ -34,6 +34,192 @@ impl NetModel {
     }
 }
 
+/// One link class's alpha-beta terms: `alpha` seconds of latency per
+/// ring phase, `beta` seconds per byte crossing the link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// Topology-aware alpha-beta model mirroring `HierSession`'s schedule:
+/// distinct intra-node and inter-node link terms over a `world`-rank
+/// cluster of `nodes` nodes. The cost of one hierarchical allreduce of
+/// an `n`-byte message is
+///
+/// ```text
+/// 2(l-1)(a_i + (n/l) b_i)          intra reduce-scatter + all-gather
+///   + 2(m-1)(a_e + (n/(l m)) b_e)  inter ring (l rings run concurrently)
+/// ```
+///
+/// with `l = world/nodes` ranks per node and `m = nodes`. At
+/// `nodes = 1` the inter term vanishes and this is the classic flat
+/// ring formula — the same line [`fit_netmodel`] fits from measured
+/// `comm_bucket` events.
+#[derive(Debug, Clone, Copy)]
+pub struct TopoNetModel {
+    pub intra: LinkModel,
+    pub inter: LinkModel,
+    pub world: usize,
+    pub nodes: usize,
+}
+
+impl TopoNetModel {
+    /// Ranks per node.
+    pub fn local(&self) -> usize {
+        self.world / self.nodes
+    }
+
+    /// Default H200-class cluster: intra terms matching
+    /// [`NetModel::h200_nvlink`] (same 24.8 ms at 3.84 GB on one
+    /// 8-rank node), inter terms modeling a 400 Gb/s-class fabric —
+    /// roughly 5x the per-byte cost and 2.5x the per-hop latency of
+    /// the NVLink attachment.
+    pub fn h200_cluster(world: usize, nodes: usize) -> Self {
+        // flat-equivalence at world 8: beta = w / (2(w-1) eff_bw)
+        let beta_i = 8.0 / (14.0 * 155e9);
+        let intra = LinkModel { alpha: 2e-6, beta: beta_i };
+        let inter = LinkModel { alpha: 5e-6, beta: 5.0 * beta_i };
+        TopoNetModel { intra, inter, world, nodes }
+    }
+
+    /// Hierarchical allreduce time for an `n`-byte gradient message
+    /// (per-rank message size, not total wire traffic).
+    pub fn allreduce_secs(&self, msg_bytes: f64) -> f64 {
+        let l = self.local() as f64;
+        let m = self.nodes as f64;
+        2.0 * (l - 1.0) * (self.intra.alpha + (msg_bytes / l) * self.intra.beta)
+            + 2.0 * (m - 1.0) * (self.inter.alpha + (msg_bytes / (l * m)) * self.inter.beta)
+    }
+
+    /// Wire bytes an in-process collective would report for an
+    /// `n`-byte message at this topology, every rank's frames summed:
+    /// `2(l-1)·n` per node ring across `m` nodes, plus `l` inter rings
+    /// of `2(m-1)·(n/l)` each — which telescopes to `2(w-1)·n`, the
+    /// *same total as the flat ring at every node count*. The
+    /// hierarchy's win is which links the bytes cross (only
+    /// `2(m-1)·n` of them leave a node), not how many move. Inverse of
+    /// [`NetModelFit::msg_bytes`] at `nodes = 1`.
+    pub fn wire_bytes(&self, msg_bytes: f64) -> f64 {
+        let l = self.local() as f64;
+        let m = self.nodes as f64;
+        2.0 * m * (l - 1.0) * msg_bytes + 2.0 * (m - 1.0) * msg_bytes
+    }
+
+    /// The subset of [`Self::wire_bytes`] that crosses a node boundary:
+    /// `2(nodes-1)·n`, independent of how many ranks share each node.
+    pub fn inter_wire_bytes(&self, msg_bytes: f64) -> f64 {
+        2.0 * (self.nodes as f64 - 1.0) * msg_bytes
+    }
+}
+
+/// Least-squares alpha-beta terms recovered from measured `comm_bucket`
+/// events of one flat (single-node) run at world size `world`.
+#[derive(Debug, Clone, Copy)]
+pub struct NetModelFit {
+    /// Per-phase latency, seconds (the fitted intercept `/ 2(w-1)`).
+    pub alpha: f64,
+    /// Per-link-byte time, seconds (the fitted slope `* w`).
+    pub beta: f64,
+    /// World size the samples were measured at.
+    pub world: usize,
+    /// Samples the fit consumed.
+    pub samples: usize,
+    /// Coefficient of determination of the fitted line (1.0 = exact).
+    pub r2: f64,
+}
+
+impl NetModelFit {
+    /// Per-rank message bytes of a bucket whose collective moved
+    /// `bytes_on_wire` total bytes at the measured world size: a flat
+    /// ring ships the message `2(w-1)` times.
+    pub fn msg_bytes(&self, bytes_on_wire: f64) -> f64 {
+        if self.world < 2 {
+            return bytes_on_wire;
+        }
+        bytes_on_wire / (2.0 * (self.world as f64 - 1.0))
+    }
+
+    /// Predicted flat-ring seconds for a collective that moved
+    /// `bytes_on_wire` total bytes at the measured world size (replays
+    /// the fitted line exactly).
+    pub fn ring_secs(&self, bytes_on_wire: f64) -> f64 {
+        self.topo(self.world, 1, 1.0, 1.0).allreduce_secs(self.msg_bytes(bytes_on_wire))
+    }
+
+    /// Topology model at a target cluster shape. Single-node
+    /// measurements cannot observe an inter-node link, so the inter
+    /// terms are the fitted intra terms scaled by `alpha_x` / `beta_x`
+    /// (documented assumption; `comm-table --predict` defaults to the
+    /// H200-cluster ratios 2.5 / 5.0).
+    pub fn topo(&self, world: usize, nodes: usize, alpha_x: f64, beta_x: f64) -> TopoNetModel {
+        TopoNetModel {
+            intra: LinkModel { alpha: self.alpha, beta: self.beta },
+            inter: LinkModel { alpha: self.alpha * alpha_x, beta: self.beta * beta_x },
+            world,
+            nodes,
+        }
+    }
+}
+
+/// Ordinary least squares of `ring_secs ≈ a + b · bytes_on_wire` over
+/// measured per-bucket samples `(bytes_on_wire, ring_secs)`, converted
+/// back to per-phase / per-link-byte terms (`alpha = a / 2(w-1)`,
+/// `beta = b·w`). Degenerate sample sets are handled instead of
+/// returning garbage: all-same-size buckets fit bandwidth only
+/// (`alpha = 0`), a negative intercept refits through the origin, and
+/// a negative slope collapses to latency only. Returns `None` when no
+/// finite sample exists or `world < 2`.
+pub fn fit_netmodel(samples: &[(f64, f64)], world: usize) -> Option<NetModelFit> {
+    if world < 2 {
+        return None;
+    }
+    let pts: Vec<(f64, f64)> = samples
+        .iter()
+        .copied()
+        .filter(|(x, y)| x.is_finite() && y.is_finite() && *x > 0.0 && *y >= 0.0)
+        .collect();
+    if pts.is_empty() {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|(x, _)| x).sum::<f64>() / n;
+    let my = pts.iter().map(|(_, y)| y).sum::<f64>() / n;
+    let sxx = pts.iter().map(|(x, _)| (x - mx) * (x - mx)).sum::<f64>();
+    let sxy = pts.iter().map(|(x, y)| (x - mx) * (y - my)).sum::<f64>();
+    let (mut a, mut b);
+    if sxx <= mx * mx * 1e-12 {
+        // every bucket the same size: slope is unidentifiable, model
+        // the whole mean time as bandwidth
+        a = 0.0;
+        b = my / mx;
+    } else {
+        b = sxy / sxx;
+        a = my - b * mx;
+        if a < 0.0 {
+            // noise pulled the intercept negative; refit through origin
+            a = 0.0;
+            b = pts.iter().map(|(x, y)| x * y).sum::<f64>()
+                / pts.iter().map(|(x, _)| x * x).sum::<f64>();
+        }
+        if b < 0.0 {
+            b = 0.0;
+            a = my;
+        }
+    }
+    let syy = pts.iter().map(|(_, y)| (y - my) * (y - my)).sum::<f64>();
+    let ss_res = pts.iter().map(|(x, y)| (y - (a + b * x)).powi(2)).sum::<f64>();
+    let r2 = if syy > 0.0 { 1.0 - ss_res / syy } else { 1.0 };
+    let w = world as f64;
+    Some(NetModelFit {
+        alpha: a / (2.0 * (w - 1.0)),
+        beta: b * w,
+        world,
+        samples: pts.len(),
+        r2,
+    })
+}
+
 /// BF16 wire-volume calibration factor (see module docs).
 const VOLUME_FACTOR: f64 = 0.285;
 
@@ -98,5 +284,87 @@ mod tests {
         let a = net.allreduce_secs(1e9);
         let b = net.allreduce_secs(2e9);
         assert!(b > a * 1.8 && b < a * 2.2);
+    }
+
+    /// The topology model at one 8-rank node reproduces the flat
+    /// NVLink model it was calibrated against.
+    #[test]
+    fn topo_single_node_matches_flat_h200() {
+        let flat = NetModel::h200_nvlink();
+        let topo = TopoNetModel::h200_cluster(8, 1);
+        for bytes in [1e6, 1e8, 3.84e9] {
+            let a = flat.allreduce_secs(bytes);
+            let b = topo.allreduce_secs(bytes);
+            assert!((a - b).abs() / a < 1e-9, "{bytes}: flat {a} topo {b}");
+        }
+    }
+
+    /// Crossing node boundaries costs more: for a fixed world, adding
+    /// nodes with a worse inter link never speeds the collective up,
+    /// and the wire-byte accounting matches the hierarchical schedule
+    /// (flat at nodes = 1 and nodes = world).
+    #[test]
+    fn topo_more_nodes_cost_more() {
+        let n = 1e8;
+        let t1 = TopoNetModel::h200_cluster(16, 1).allreduce_secs(n);
+        let t2 = TopoNetModel::h200_cluster(16, 2).allreduce_secs(n);
+        let t4 = TopoNetModel::h200_cluster(16, 4).allreduce_secs(n);
+        assert!(t2 > t1, "2 nodes {t2} <= flat {t1}");
+        assert!(t4 > t2, "4 nodes {t4} <= 2 nodes {t2}");
+        let flat_bytes = TopoNetModel::h200_cluster(16, 1).wire_bytes(n);
+        assert!((flat_bytes - 2.0 * 15.0 * n).abs() < 1.0);
+        let all_nodes = TopoNetModel::h200_cluster(16, 16).wire_bytes(n);
+        assert!((all_nodes - flat_bytes).abs() < 1.0);
+        // total wire bytes telescope to 2(w-1)n at *every* node count;
+        // the hierarchy only changes which links carry them
+        for nodes in [2usize, 4, 8] {
+            let topo = TopoNetModel::h200_cluster(16, nodes);
+            assert!((topo.wire_bytes(n) - flat_bytes).abs() < 1.0);
+            let inter = topo.inter_wire_bytes(n);
+            assert!((inter - 2.0 * (nodes as f64 - 1.0) * n).abs() < 1.0);
+            assert!(inter < flat_bytes);
+        }
+    }
+
+    /// The least-squares fit recovers exactly the line that generated
+    /// the samples: synthesize per-bucket timings from known
+    /// alpha/beta at world 4, fit, and get them back.
+    #[test]
+    fn fit_recovers_known_alpha_beta() {
+        let (alpha, beta, world) = (3e-6, 2.5e-10, 4usize);
+        let truth = TopoNetModel {
+            intra: LinkModel { alpha, beta },
+            inter: LinkModel { alpha, beta },
+            world,
+            nodes: 1,
+        };
+        let samples: Vec<(f64, f64)> = [4096.0, 65536.0, 262144.0, 1048576.0, 128.0]
+            .iter()
+            .map(|&msg| (truth.wire_bytes(msg), truth.allreduce_secs(msg)))
+            .collect();
+        let fit = fit_netmodel(&samples, world).expect("fit");
+        assert_eq!(fit.samples, 5);
+        assert!((fit.alpha - alpha).abs() / alpha < 1e-9, "alpha {}", fit.alpha);
+        assert!((fit.beta - beta).abs() / beta < 1e-9, "beta {}", fit.beta);
+        assert!(fit.r2 > 1.0 - 1e-9, "r2 {}", fit.r2);
+        // replaying the fitted line on a sample reproduces its timing
+        let (x, y) = samples[1];
+        assert!((fit.ring_secs(x) - y).abs() / y < 1e-9);
+        // and the fitted topo model degenerates to the same line
+        let topo = fit.topo(world, 1, 2.5, 5.0);
+        assert!((topo.allreduce_secs(65536.0) - truth.allreduce_secs(65536.0)).abs() < 1e-12);
+    }
+
+    /// Degenerate sample sets stay sane: same-size buckets fit
+    /// bandwidth only, empty/non-finite inputs return None.
+    #[test]
+    fn fit_handles_degenerate_samples() {
+        let fit = fit_netmodel(&[(1e6, 2e-3), (1e6, 2e-3), (1e6, 2e-3)], 4).expect("fit");
+        assert_eq!(fit.alpha, 0.0);
+        assert!(fit.beta > 0.0);
+        assert!((fit.ring_secs(1e6) - 2e-3).abs() / 2e-3 < 1e-9);
+        assert!(fit_netmodel(&[], 4).is_none());
+        assert!(fit_netmodel(&[(f64::NAN, 1.0), (0.0, 1.0)], 4).is_none());
+        assert!(fit_netmodel(&[(1e6, 2e-3)], 1).is_none());
     }
 }

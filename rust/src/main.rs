@@ -9,7 +9,11 @@
 //!   eval        perplexity of a checkpoint over the three eval splits
 //!   snr         Table-7 SNR study on random or probed activations
 //!   gemm-table  Table-6 / Fig-1 GEMM cost-model tables
-//!   comm-table  Table-5 memory & communication simulation
+//!   comm-table  Table-5 memory & communication simulation; --predict
+//!               replays the measured pipeline through a fitted netmodel
+//!               at cluster shapes we can't run
+//!   netmodel    least-squares fit the topology-aware alpha-beta network
+//!               model from a measured --events comm_bucket stream
 //!   scale-sim   Fig-4 scale-trajectory demo
 //!   report      regenerate every table/figure into results/
 //!   hlo-stats   artifact inventory + op statistics (L2 perf checks)
@@ -45,15 +49,23 @@ const COMMANDS: &[(&str, &str)] = &[
     (
         "train",
         "pretrain on the synthetic corpus (--backend host|aot, \
-         --model mlp|transformer, --heads N, --workers N, \
-         --wire f32|fp8|packed, --overlap, --zero, --bucket-mb MB, \
-         --mode bf16|pertensor|coat|moss, --steps, --scaling, \
-         --events PATH)",
+         --model mlp|transformer, --heads N, --workers N, --nodes N, \
+         --wire f32|fp8|packed, --overlap, --zero, --zero2, --accum K, \
+         --bucket-mb MB, --mode bf16|pertensor|coat|moss, --steps, \
+         --scaling, --events PATH)",
     ),
     (
         "ablate",
         "train all four --mode numerics on the host backend over one shared \
-         seed/corpus and print the final-loss table (zero artifacts)",
+         seed/corpus and print the final-loss table (zero artifacts); \
+         --sweep-interval [N,N,..] sweeps the MOSS re-anchor interval \
+         against the bf16 anchor instead",
+    ),
+    (
+        "netmodel",
+        "fit the topology-aware alpha-beta network model from a measured \
+         --events stream's comm_bucket records (repro netmodel --fit \
+         EVENTS.jsonl [--world W] [--out fit.json])",
     ),
     (
         "serve",
@@ -78,7 +90,11 @@ const COMMANDS: &[(&str, &str)] = &[
     ("eval", "perplexity of a checkpoint over wikitext/c4/pile splits"),
     ("snr", "Table-7 SNR study across quantization schemes"),
     ("gemm-table", "Table-6/Fig-1 H800 GEMM cost model"),
-    ("comm-table", "Table-5 memory & communication simulation"),
+    (
+        "comm-table",
+        "Table-5 memory & communication simulation; --predict replays the \
+         measured pipeline through a fitted netmodel at --world W --nodes N",
+    ),
     ("scale-sim", "Fig-4 automatic-vs-JIT scale trajectories"),
     ("report", "regenerate all paper tables/figures into results/"),
     ("hlo-stats", "artifact inventory and HLO op statistics"),
@@ -100,6 +116,7 @@ fn run() -> Result<()> {
         "snr" => moss::report::snr::run_cli(&args),
         "gemm-table" => moss::report::gemm::run_cli(&args),
         "comm-table" => moss::report::comm::run_cli(&args),
+        "netmodel" => moss::report::comm::run_netmodel_cli(&args),
         "scale-sim" => moss::report::scaling::run_cli(&args),
         "report" => moss::report::run_all(&args),
         "hlo-stats" => moss::report::hlo_stats::run_cli(&args),
@@ -115,7 +132,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     // the data-parallel machinery only exists on the host backend:
     // reject its flags rather than silently training single-worker
-    for flag in ["workers", "wire", "shard", "overlap", "zero", "bucket-mb"] {
+    for flag in
+        ["workers", "wire", "shard", "overlap", "zero", "zero2", "bucket-mb", "nodes", "accum"]
+    {
         if args.get(flag).is_some() || args.has(flag) {
             bail!("--{flag} requires --backend host (the AOT path has no simulated workers)");
         }
@@ -426,15 +445,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the distsim ring (packed u8 FP8 gradient payloads by default).
 fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
     let spec = cfg.host;
-    let schedule = match (cfg.dist.overlap, cfg.dist.zero) {
-        (false, false) => "serial",
-        (true, false) => "overlapped buckets",
-        (false, true) => "bucketed + zero-1",
-        (true, true) => "overlapped buckets + zero-1",
+    let schedule = match (cfg.dist.overlap, cfg.dist.zero2, cfg.dist.zero) {
+        (false, false, false) => "serial",
+        (true, false, false) => "overlapped buckets",
+        (false, false, true) => "bucketed + zero-1",
+        (true, false, true) => "overlapped buckets + zero-1",
+        (false, true, _) => "bucketed + zero-2",
+        (true, true, _) => "overlapped buckets + zero-2",
+    };
+    let topology = if cfg.dist.nodes > 1 {
+        format!("hierarchical x{} nodes", cfg.dist.nodes)
+    } else {
+        "flat ring".to_string()
     };
     eprintln!(
-        "dist host backend: model {}, mode {}, {} workers ({} shard, wire {}, {schedule}), \
-         vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} microbatches",
+        "dist host backend: model {}, mode {}, {} workers ({} shard, wire {}, {topology}, \
+         {schedule}), vocab {} dim {} ffn {} layers {} ({} params), {} steps x {} \
+         microbatches x {} accum",
         spec.model.name(),
         cfg.mode.name(),
         cfg.dist.workers,
@@ -446,7 +473,8 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
         spec.layers,
         spec.param_count(),
         cfg.steps,
-        spec.microbatches
+        spec.microbatches,
+        cfg.dist.accum
     );
     let steps = cfg.steps;
     let mut trainer = DistTrainer::new(cfg)?;
@@ -497,6 +525,14 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
             comm.param_gather_ms_per_step(),
         );
     }
+    if trainer.cfg.dist.zero2 {
+        println!(
+            "zero-2: gradients {:.1} KB/rank retained after reduce-scatter \
+             (replicated would be {:.1} KB)",
+            trainer.grad_bytes_per_rank() as f64 / 1e3,
+            trainer.replicated_grad_bytes() as f64 / 1e3,
+        );
+    }
     if sink.active() {
         sink.emit(&Event::RunEnd {
             summary: obj(vec![
@@ -537,6 +573,17 @@ fn cmd_train_dist(args: &Args, cfg: TrainConfig) -> Result<()> {
                  pipeline never ran concurrently with backward",
                 trainer.overlap.exposed_ms_per_step()
             );
+        }
+        if trainer.cfg.dist.zero2 {
+            let per = trainer.grad_bytes_per_rank() as f64;
+            let even = trainer.replicated_grad_bytes() as f64 / trainer.cfg.dist.workers as f64;
+            if per > even * 1.05 {
+                bail!(
+                    "zero-2 retained {per:.0} B/rank of gradients, above the 1/N + 5% \
+                     bound ({even:.0} B even share)"
+                );
+            }
+            eprintln!("zero-2 gradient shard bound held: {per:.0} B/rank <= {even:.0} B + 5%");
         }
         eprintln!("loss improved: {first:.4} -> {tail:.4}");
     }
@@ -624,6 +671,8 @@ fn host_spec_json(cfg: &TrainConfig) -> Json {
         ("steps", num(cfg.steps as f64)),
         ("seed", num(cfg.seed as f64)),
         ("workers", num(cfg.dist.workers as f64)),
+        ("nodes", num(cfg.dist.nodes as f64)),
+        ("accum", num(cfg.dist.accum as f64)),
     ])
 }
 

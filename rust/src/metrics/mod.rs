@@ -115,6 +115,11 @@ pub struct CommStats {
     pub param_bytes: u64,
     /// Wall-clock spent inside the parameter all-gather, seconds.
     pub param_gather_secs: f64,
+    /// Peak gradient bytes any rank retained after reduce-scatter, as
+    /// measured from the buffers' actual allocations (ZeRO-2 compacts
+    /// each rank to its owned shard — ~1/N of `grad_elems * 4`; the
+    /// replicated paths keep every bucket whole).
+    pub grad_shard_bytes: u64,
 }
 
 impl CommStats {
@@ -131,6 +136,12 @@ impl CommStats {
     pub fn record_param_gather(&mut self, bytes: u64, secs: f64) {
         self.param_bytes += bytes;
         self.param_gather_secs += secs;
+    }
+
+    /// Fold in one step's measured per-rank retained gradient bytes
+    /// (kept as the peak — the memory claim is a worst-rank bound).
+    pub fn record_grad_shard(&mut self, bytes: u64) {
+        self.grad_shard_bytes = self.grad_shard_bytes.max(bytes);
     }
 
     /// Average bytes per gradient element on the wire (4.0 for the f32
@@ -420,6 +431,17 @@ mod tests {
         assert_eq!(c.param_bytes, 4000);
         assert!((c.param_bytes_per_step() - 4000.0).abs() < 1e-9);
         assert!((c.param_gather_ms_per_step() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_shard_bytes_keep_the_peak() {
+        let mut c = CommStats::default();
+        assert_eq!(c.grad_shard_bytes, 0);
+        c.record_grad_shard(1000);
+        c.record_grad_shard(400);
+        assert_eq!(c.grad_shard_bytes, 1000, "peak, not last");
+        c.record_grad_shard(1200);
+        assert_eq!(c.grad_shard_bytes, 1200);
     }
 
     #[test]

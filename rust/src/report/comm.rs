@@ -7,6 +7,9 @@
 //! pipeline is printed next to what the `distsim::overlap` FIFO model
 //! predicts from the same measured per-bucket inputs.
 
+use std::io::BufRead;
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use crate::backend::DistTrainer;
@@ -15,9 +18,9 @@ use crate::config::{
     BackendKind, DistSpec, HostSpec, LrSchedule, ModelKind, ShardMode, TrainConfig, WireKind,
 };
 use crate::distsim::memory::{activation_memory_gb, MemoryScheme, ModelShape};
-use crate::distsim::netmodel::{grad_bytes_per_step, NetModel};
+use crate::distsim::netmodel::{fit_netmodel, grad_bytes_per_step, NetModel, NetModelFit};
 use crate::distsim::overlap::{schedule_overlap, table5_overlap};
-use crate::events::{fnum, run_start, Event, EventSink};
+use crate::events::{fnum, run_start, Event, EventReader, EventSink, ReadOutcome};
 use crate::util::json::{num, obj, s as jstr, Json};
 use crate::util::table::{f, Table};
 
@@ -155,7 +158,7 @@ pub fn measured_overlap_table(workers: usize, steps: u64, sink: &EventSink) -> R
         shard: ShardMode::Scatter,
         overlap: true,
         zero: true,
-        bucket_bytes: 0,
+        ..DistSpec::default()
     };
     let mut trainer = DistTrainer::new(measured_cfg(workers, steps, dist))?;
     if sink.active() {
@@ -229,7 +232,283 @@ fn comm_spec_json(workers: usize, steps: u64, wire: &str, overlap: bool) -> Json
     ])
 }
 
+/// Per-bucket running sums folded from the `comm_bucket` records of a
+/// measured `--events` stream.
+#[derive(Debug, Clone, Copy, Default)]
+struct BucketSums {
+    bytes: f64,
+    ready_ms: f64,
+    ring_ms: f64,
+    n: usize,
+}
+
+impl BucketSums {
+    fn mean_bytes(&self) -> f64 {
+        self.bytes / self.n.max(1) as f64
+    }
+    fn mean_ready_secs(&self) -> f64 {
+        self.ready_ms / 1e3 / self.n.max(1) as f64
+    }
+    fn mean_ring_secs(&self) -> f64 {
+        self.ring_ms / 1e3 / self.n.max(1) as f64
+    }
+}
+
+/// Everything the netmodel fit and the overlap replay need from one
+/// measured event stream: the world size the run was measured at (from
+/// `run_start`), raw per-record fit samples, per-bucket means, and the
+/// measured hidden/exposed totals.
+#[derive(Debug, Clone, Default)]
+struct CommStream {
+    world: Option<usize>,
+    /// Raw fit samples `(bytes_on_wire, ring_secs)`, one per record.
+    samples: Vec<(f64, f64)>,
+    buckets: Vec<BucketSums>,
+    hidden_ms: f64,
+    exposed_ms: f64,
+    malformed: usize,
+}
+
+impl CommStream {
+    /// Measured per-step overlap ratio: hidden / (hidden + exposed).
+    fn measured_ratio(&self) -> f64 {
+        let total = self.hidden_ms + self.exposed_ms;
+        if total > 0.0 {
+            self.hidden_ms / total
+        } else {
+            0.0
+        }
+    }
+}
+
+fn fold_comm_stream<R: BufRead>(reader: EventReader<R>) -> CommStream {
+    let mut st = CommStream::default();
+    for outcome in reader {
+        match outcome {
+            ReadOutcome::Event(Event::RunStart { spec, .. }) => {
+                if let Some(Ok(w)) = spec.get("workers").map(Json::as_f64) {
+                    st.world = Some(w as usize);
+                }
+            }
+            ReadOutcome::Event(Event::CommBucket {
+                bucket,
+                bytes,
+                ready_ms,
+                ring_ms,
+                hidden_ms,
+                exposed_ms,
+                ..
+            }) => {
+                if st.buckets.len() <= bucket {
+                    st.buckets.resize_with(bucket + 1, BucketSums::default);
+                }
+                let b = &mut st.buckets[bucket];
+                b.bytes += bytes as f64;
+                b.ready_ms += ready_ms;
+                b.ring_ms += ring_ms;
+                b.n += 1;
+                st.samples.push((bytes as f64, ring_ms / 1e3));
+                st.hidden_ms += hidden_ms;
+                st.exposed_ms += exposed_ms;
+            }
+            ReadOutcome::MalformedLine { .. } => st.malformed += 1,
+            _ => {}
+        }
+    }
+    st
+}
+
+fn read_comm_stream(path: &Path) -> Result<CommStream> {
+    let st = fold_comm_stream(EventReader::open(path)?);
+    if st.samples.is_empty() {
+        bail!(
+            "{} holds no comm_bucket events — the stream must come from a \
+             pipelined run (--overlap / --zero) with --events",
+            path.display()
+        );
+    }
+    Ok(st)
+}
+
+/// World size for the fit: an explicit `--world`-style override wins,
+/// else the stream's `run_start` spec.
+fn fit_world(args: &Args, key: &str, st: &CommStream, path: &Path) -> Result<usize> {
+    let world = match args.get(key) {
+        Some(_) => args.get_usize(key, 0)?,
+        None => match st.world {
+            Some(w) => w,
+            None => bail!(
+                "{} carries no run_start workers field; pass --{key} explicitly",
+                path.display()
+            ),
+        },
+    };
+    if world < 2 {
+        bail!("netmodel needs a world size >= 2 (got {world})");
+    }
+    Ok(world)
+}
+
+fn fit_stream(st: &CommStream, world: usize) -> Result<NetModelFit> {
+    match fit_netmodel(&st.samples, world) {
+        Some(fit) => Ok(fit),
+        None => bail!("no finite comm_bucket sample survived filtering; cannot fit"),
+    }
+}
+
+fn fit_json(fit: &NetModelFit) -> Json {
+    obj(vec![
+        ("alpha_secs", fnum(fit.alpha)),
+        ("beta_secs_per_byte", fnum(fit.beta)),
+        ("world", num(fit.world as f64)),
+        ("samples", num(fit.samples as f64)),
+        ("r2", fnum(fit.r2)),
+    ])
+}
+
+/// `repro netmodel --fit EVENTS.jsonl [--world W] [--out fit.json]`:
+/// least-squares the topology netmodel's alpha-beta terms from the
+/// measured `comm_bucket` records of one event stream.
+pub fn run_netmodel_cli(args: &Args) -> Result<()> {
+    let path = match args.get("fit") {
+        Some(p) => p.to_string(),
+        None => bail!("netmodel requires --fit EVENTS.jsonl (a measured --events stream)"),
+    };
+    let path = Path::new(&path);
+    let st = read_comm_stream(path)?;
+    let world = fit_world(args, "world", &st, path)?;
+    let fit = fit_stream(&st, world)?;
+    if st.malformed > 0 {
+        eprintln!("netmodel: skipped {} malformed stream line(s)", st.malformed);
+    }
+    println!(
+        "netmodel fit ({} samples over {} buckets, world {}):",
+        fit.samples,
+        st.buckets.len(),
+        fit.world
+    );
+    println!("  alpha = {:.3e} s/phase", fit.alpha);
+    println!("  beta  = {:.3e} s/byte ({:.2} GB/s per link)", fit.beta, 1e-9 / fit.beta.max(1e-300));
+    println!("  r2    = {:.4}", fit.r2);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, fit_json(&fit).to_string() + "\n")?;
+        eprintln!("netmodel: wrote {out}");
+    }
+    Ok(())
+}
+
+/// `comm-table --predict EVENTS.jsonl [--world W --nodes N] [--check]`:
+/// fit the alpha-beta netmodel from the stream's measured `comm_bucket`
+/// records, then replay the FIFO overlap schedule on the fitted
+/// per-bucket ring times — first at the measured shape (the self-check:
+/// the fit must reproduce the overlap ratio it was trained on; `--check
+/// --tol 0.15` turns that into a hard gate), then at a target `--world
+/// W --nodes N` cluster shape we can't run, whose unobservable
+/// inter-node link terms are the fitted intra terms scaled by
+/// `--alpha-x` / `--beta-x` (default: the H200-cluster ratios 2.5/5).
+fn run_predict(args: &Args, path: &Path) -> Result<()> {
+    let st = read_comm_stream(path)?;
+    let measured_world = fit_world(args, "measured-world", &st, path)?;
+    let fit = fit_stream(&st, measured_world)?;
+    let world = args.get_usize("world", measured_world)?;
+    let nodes = args.get_usize("nodes", 1)?;
+    if world < 2 || nodes == 0 || world % nodes != 0 {
+        bail!("--world {world} does not divide into --nodes {nodes} equal nodes");
+    }
+    let alpha_x = args.get_f64("alpha-x", 2.5)?;
+    let beta_x = args.get_f64("beta-x", 5.0)?;
+    let topo = fit.topo(world, nodes, alpha_x, beta_x);
+
+    let ready: Vec<f64> = st.buckets.iter().map(BucketSums::mean_ready_secs).collect();
+    let measured_comm: Vec<f64> = st.buckets.iter().map(BucketSums::mean_ring_secs).collect();
+    let fitted_comm: Vec<f64> =
+        st.buckets.iter().map(|b| fit.ring_secs(b.mean_bytes())).collect();
+    let target_comm: Vec<f64> = st
+        .buckets
+        .iter()
+        .map(|b| topo.allreduce_secs(fit.msg_bytes(b.mean_bytes())))
+        .collect();
+    // The stream does not record when backward ended, but the last
+    // bucket becomes ready at backward's tail — use the latest mean
+    // ready time as the compute horizon for every replay.
+    let compute_end = ready.iter().cloned().fold(0.0, f64::max);
+
+    let measured = st.measured_ratio();
+    let (fit_ratio, ..) = schedule_overlap(&ready, &fitted_comm, compute_end);
+    let (replay_ratio, ..) = schedule_overlap(&ready, &measured_comm, compute_end);
+    let (target_ratio, ..) = schedule_overlap(&ready, &target_comm, compute_end);
+
+    let mut t = Table::new(
+        &format!(
+            "Table 5d — netmodel overlap prediction (fit: world {}, r2 {:.3}; \
+             target: world {world}, {nodes} node(s))",
+            fit.world, fit.r2
+        ),
+        &["bucket", "bytes/step", "ready ms", "ring ms measured", "ring ms fit", "ring ms target"],
+    );
+    for (b, agg) in st.buckets.iter().enumerate() {
+        t.row(vec![
+            format!("{b}"),
+            f(agg.mean_bytes(), 0),
+            f(agg.mean_ready_secs() * 1e3, 3),
+            f(agg.mean_ring_secs() * 1e3, 3),
+            f(fitted_comm[b] * 1e3, 3),
+            f(target_comm[b] * 1e3, 3),
+        ]);
+    }
+    for (label, ratio) in [
+        ("overlap % measured", measured),
+        ("overlap % fifo replay (measured times)", replay_ratio),
+        ("overlap % fifo replay (fitted times)", fit_ratio),
+        ("overlap % predicted at target shape", target_ratio),
+    ] {
+        t.row(vec![
+            label.into(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            f(ratio * 100.0, 1),
+        ]);
+    }
+    super::emit(args, "table5_predicted_overlap", &t)?;
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, fit_json(&fit).to_string() + "\n")?;
+        eprintln!("netmodel: wrote {out}");
+    }
+    if args.has("check") {
+        let tol = args.get_f64("tol", 0.15)?;
+        if measured <= 0.0 {
+            bail!("--check needs a stream with nonzero hidden+exposed time");
+        }
+        let rel = (fit_ratio - measured).abs() / measured;
+        if rel > tol {
+            bail!(
+                "netmodel check FAILED: fitted replay predicts overlap {:.1}% vs \
+                 measured {:.1}% ({:.1}% off > {:.0}% tolerance)",
+                fit_ratio * 100.0,
+                measured * 100.0,
+                rel * 100.0,
+                tol * 100.0
+            );
+        }
+        eprintln!(
+            "netmodel check OK: fitted replay {:.1}% vs measured {:.1}% \
+             ({:.1}% off, tolerance {:.0}%)",
+            fit_ratio * 100.0,
+            measured * 100.0,
+            rel * 100.0,
+            tol * 100.0
+        );
+    }
+    Ok(())
+}
+
 pub fn run_cli(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("predict") {
+        let path = path.to_string();
+        return run_predict(args, Path::new(&path));
+    }
     super::emit(args, "table5_memory_comm", &table5())?;
     let workers = args.get_usize("dist-workers", 4)?;
     let steps = args.get_u64("dist-steps", 3)?;
@@ -251,4 +530,93 @@ pub fn run_cli(args: &Args) -> Result<()> {
         eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic measured stream: world-4 run_start plus `steps`
+    /// repetitions of two buckets whose ring time follows an exact
+    /// alpha-beta line `ring = a + b * bytes`.
+    fn synthetic_stream(a: f64, b: f64, steps: u64) -> String {
+        let mut lines = vec![run_start(
+            "comm-table",
+            "test",
+            obj(vec![("workers", num(4.0)), ("overlap", Json::Bool(true))]),
+        )
+        .to_json()
+        .to_string()];
+        for step in 1..=steps {
+            for (bucket, bytes) in [(0usize, 40_000u64), (1, 80_000)] {
+                let ring_ms = (a + b * bytes as f64) * 1e3;
+                lines.push(
+                    Event::CommBucket {
+                        step,
+                        bucket,
+                        bytes,
+                        ready_ms: 0.2 + bucket as f64 * 0.3,
+                        ring_ms,
+                        hidden_ms: ring_ms * 0.8,
+                        exposed_ms: ring_ms * 0.2,
+                    }
+                    .to_json()
+                    .to_string(),
+                );
+            }
+        }
+        lines.push("not json at all".into());
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn fold_fit_and_replay_recover_the_synthetic_line() {
+        let (a, b) = (4e-4, 2e-9);
+        let src = synthetic_stream(a, b, 5);
+        let st = fold_comm_stream(EventReader::new(src.as_bytes()));
+        assert_eq!(st.world, Some(4));
+        assert_eq!(st.buckets.len(), 2);
+        assert_eq!(st.samples.len(), 10);
+        assert_eq!(st.malformed, 1);
+        assert!((st.buckets[0].mean_bytes() - 40_000.0).abs() < 1e-9);
+        assert!((st.measured_ratio() - 0.8).abs() < 1e-9, "hidden/exposed fold");
+
+        let fit = fit_netmodel(&st.samples, 4).expect("fit");
+        assert!(fit.r2 > 0.999, "exact line must fit exactly (r2 {})", fit.r2);
+        for bytes in [40_000.0, 80_000.0, 160_000.0] {
+            let want = a + b * bytes;
+            let got = fit.ring_secs(bytes);
+            assert!(
+                (got - want).abs() / want < 1e-6,
+                "ring_secs({bytes}) = {got}, want {want}"
+            );
+        }
+        // nodes=1 topo replay is the flat fitted line, at any scale ratio
+        let topo = fit.topo(4, 1, 2.5, 5.0);
+        let flat = topo.allreduce_secs(fit.msg_bytes(80_000.0));
+        assert!((flat - fit.ring_secs(80_000.0)).abs() < 1e-12);
+        // two nodes over the same fitted terms cost strictly more: part
+        // of the message now crosses the scaled-up inter-node link
+        let hier = fit.topo(4, 2, 2.5, 5.0).allreduce_secs(fit.msg_bytes(80_000.0));
+        assert!(hier > flat, "hier {hier} vs flat {flat}");
+    }
+
+    #[test]
+    fn predict_replay_matches_measured_ratio_on_clean_data() {
+        let src = synthetic_stream(4e-4, 2e-9, 8);
+        let st = fold_comm_stream(EventReader::new(src.as_bytes()));
+        let fit = fit_netmodel(&st.samples, 4).expect("fit");
+        let ready: Vec<f64> = st.buckets.iter().map(BucketSums::mean_ready_secs).collect();
+        let fitted: Vec<f64> = st.buckets.iter().map(|b| fit.ring_secs(b.mean_bytes())).collect();
+        let measured: Vec<f64> = st.buckets.iter().map(BucketSums::mean_ring_secs).collect();
+        let end = ready.iter().cloned().fold(0.0, f64::max);
+        let (fit_ratio, ..) = schedule_overlap(&ready, &fitted, end);
+        let (replay_ratio, ..) = schedule_overlap(&ready, &measured, end);
+        // on an exactly-linear stream the fitted times ARE the measured
+        // times, so the two FIFO replays agree to float noise
+        assert!(
+            (fit_ratio - replay_ratio).abs() < 1e-9,
+            "fit {fit_ratio} vs replay {replay_ratio}"
+        );
+    }
 }

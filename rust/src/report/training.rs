@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::backend::HostTrainer;
 use crate::cli::Args;
@@ -185,11 +185,103 @@ fn curves_csv(curves: &[(&str, Vec<f64>)]) -> String {
     csv
 }
 
+/// The `--sweep-interval` list (`"1,2,4"`), defaulting to the
+/// powers-of-two ladder {1, 2, 4, 8, 16} when the switch is bare.
+fn sweep_intervals(args: &Args) -> Result<Vec<u64>> {
+    let raw = match args.get("sweep-interval") {
+        None => return Ok(vec![1, 2, 4, 8, 16]),
+        Some(v) => v,
+    };
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let n: u64 = part.trim().parse().map_err(|_| {
+            anyhow!("--sweep-interval expects a comma list of positive integers, got {raw:?}")
+        })?;
+        if n == 0 {
+            bail!("--sweep-interval entries must be >= 1 (interval 0 never anchors)");
+        }
+        out.push(n);
+    }
+    Ok(out)
+}
+
+/// `repro ablate --sweep-interval [N,N,..]`: hold the MOSS recipe fixed
+/// and sweep the automatic-scaling re-anchor interval against the bf16
+/// anchor on one shared seed/corpus. The interval is the knob the
+/// paper's automatic scaling turns: N=1 re-anchors every step
+/// (JIT-like absmax cost), larger N amortize the absmax pass but let
+/// the predicted scales drift further between anchors — this table
+/// makes the loss cost of that drift measurable per N.
+fn run_interval_sweep(args: &Args) -> Result<()> {
+    let cfg = host_base_cfg(args, 80)?;
+    let intervals = sweep_intervals(args)?;
+    let sink = EventSink::from_args(args)?;
+    eprintln!(
+        "interval sweep: moss re-anchor interval over {:?} vs bf16 anchor, {} steps, seed {}",
+        intervals, cfg.steps, cfg.seed
+    );
+    let mut t = Table::new(
+        "MOSS re-anchor interval sweep (host backend, shared seed/corpus)",
+        &["mode", "interval", "first loss", "final loss", "gap vs bf16", "absmax calls"],
+    );
+    let mut labels: Vec<String> = Vec::new();
+    let mut series: Vec<Vec<f64>> = Vec::new();
+    let anchor = train_host_mode("ablate", &cfg, QuantMode::Bf16, &sink)?;
+    let bf16_final = anchor.history.tail_loss(5);
+    t.row(vec![
+        "bf16".into(),
+        "-".into(),
+        f(anchor.history.losses.first().map_or(f64::NAN, |&(_, l)| l), 4),
+        f(bf16_final, 4),
+        "-".into(),
+        "-".into(),
+    ]);
+    labels.push("bf16".into());
+    series.push(anchor.history.loss_series());
+    for &interval in &intervals {
+        let mut c = cfg.clone();
+        c.scaling = ScalingKind::Auto { interval };
+        let tr = train_host_mode("ablate", &c, QuantMode::Moss, &sink)?;
+        let final_loss = tr.history.tail_loss(5);
+        t.row(vec![
+            "moss".into(),
+            format!("{interval}"),
+            f(tr.history.losses.first().map_or(f64::NAN, |&(_, l)| l), 4),
+            f(final_loss, 4),
+            format!("{:+.4}", final_loss - bf16_final),
+            tr.scaling_stats().absmax_calls.to_string(),
+        ]);
+        labels.push(format!("moss@{interval}"));
+        series.push(tr.history.loss_series());
+    }
+    print!("{}", t.render());
+    let curves: Vec<(&str, Vec<f64>)> = labels.iter().map(String::as_str).zip(series).collect();
+    if let Some(out) = args.get("out") {
+        std::fs::create_dir_all(out)?;
+        for (name, content) in
+            [("interval_sweep.csv", t.to_csv()), ("interval_sweep_losses.csv", curves_csv(&curves))]
+        {
+            let path = std::path::Path::new(out).join(name);
+            std::fs::write(&path, content)?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    if sink.active() {
+        let lines = sink.close()?;
+        eprintln!("events: wrote {lines} lines to {}", args.get_or("events", "?"));
+    }
+    Ok(())
+}
+
 /// `repro ablate`: train all four numerics modes on the host backend
 /// over one shared seed/corpus and print the final-loss table — the
 /// paper's central Fig. 5 / Table 2 comparison in one command, with
-/// zero AOT artifacts.
+/// zero AOT artifacts. `--sweep-interval [N,N,..]` switches to the
+/// re-anchor interval sweep instead of the mode ablation.
 pub fn run_ablate_cli(args: &Args) -> Result<()> {
+    if args.has("sweep-interval") || args.get("sweep-interval").is_some() {
+        return run_interval_sweep(args);
+    }
     let cfg = host_base_cfg(args, 80)?;
     let sink = EventSink::from_args(args)?;
     let spec = cfg.host;

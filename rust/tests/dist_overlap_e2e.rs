@@ -17,6 +17,16 @@
 //!    the f32 parameter all-gather is lossless.
 //! 4. `workers = 4` on the packed wire trains with decreasing loss
 //!    and a measured overlap ratio > 0 (real hidden communication).
+//! 5. ZeRO-2 (`--zero2`) compacts storage, never arithmetic: 2-rank
+//!    f32 with the full pipeline + zero2 stays bit-identical to the
+//!    serial step, and at 4 workers the measured retained gradient
+//!    bytes per rank stay within 1/N + 5% while loss decreases.
+//! 6. `--accum K` ships wire bytes only on the last microbatch pass:
+//!    per-step wire bytes equal the accum=1 run's while K× the tokens
+//!    flow.
+//! 7. `--nodes N` reroutes every collective through the hierarchical
+//!    session; world-per-node degenerate shapes stay bitwise, and
+//!    genuinely hierarchical shapes train end to end.
 
 use moss::backend::{DistTrainer, HostTrainer};
 use moss::config::{
@@ -57,8 +67,14 @@ fn dist_cfg(
     zero: bool,
 ) -> TrainConfig {
     let mut cfg = base_cfg(steps, microbatches);
-    cfg.dist =
-        DistSpec { workers, wire, shard: ShardMode::Scatter, overlap, zero, bucket_bytes: 0 };
+    cfg.dist = DistSpec {
+        workers,
+        wire,
+        shard: ShardMode::Scatter,
+        overlap,
+        zero,
+        ..DistSpec::default()
+    };
     cfg
 }
 
@@ -317,4 +333,153 @@ fn bucket_coalescing_preserves_the_trajectory() {
         );
     }
     assert_models_bitwise(&fine, &coarse, "coarse vs fine buckets");
+}
+
+/// ZeRO-2 frees the replicated bucket copies but never touches the
+/// arithmetic: 2 workers on the f32 wire with overlap + ZeRO-1 + ZeRO-2
+/// stay bit-identical to the serial step (the optimizer reads the same
+/// values through the compacted layout's base offsets), while the
+/// measured retained gradient bytes drop below the replicated
+/// footprint.
+#[test]
+fn zero2_two_workers_f32_bitwise_matches_serial() {
+    let steps = 16u64;
+    let mut serial = DistTrainer::new(dist_cfg(steps, 2, 2, WireKind::F32, false, false)).unwrap();
+    let mut z2_cfg = dist_cfg(steps, 2, 2, WireKind::F32, true, true);
+    z2_cfg.dist.zero2 = true;
+    let mut z2 = DistTrainer::new(z2_cfg).unwrap();
+    for step in 1..=steps {
+        let os = serial.step().unwrap();
+        let oz = z2.step().unwrap();
+        assert_eq!(os.loss.to_bits(), oz.loss.to_bits(), "zero2: loss diverged at step {step}");
+        assert_eq!(
+            os.grad_norm.to_bits(),
+            oz.grad_norm.to_bits(),
+            "zero2: grad norm diverged at step {step}"
+        );
+    }
+    assert_models_bitwise(&serial, &z2, "zero2 pipeline vs serial");
+    assert!(
+        z2.grad_bytes_per_rank() < serial.grad_bytes_per_rank(),
+        "zero2 must retain less gradient memory than the replicated step ({} vs {})",
+        z2.grad_bytes_per_rank(),
+        serial.grad_bytes_per_rank()
+    );
+}
+
+/// Acceptance: ZeRO-2 at 4 workers on the packed wire trains with
+/// decreasing loss while the worst rank's measured retained gradient
+/// bytes stay within 1/N + 5% of the full gradient.
+#[test]
+fn four_workers_zero2_bounds_grad_memory_and_trains() {
+    let steps = 20u64;
+    let mut cfg = dist_cfg(steps, 4, 4, WireKind::PackedFp8Group, true, true);
+    cfg.dist.zero2 = true;
+    cfg.host.layers = 3;
+    cfg.host.seq = 32;
+    let mut t = DistTrainer::new(cfg).unwrap();
+    t.run(steps).unwrap();
+    assert!(t.history.losses.iter().all(|(_, l)| l.is_finite()), "non-finite loss");
+    let first = t.history.losses.first().unwrap().1;
+    let tail = t.history.tail_loss(5);
+    assert!(tail < first, "loss did not decrease: {first:.4} -> {tail:.4}");
+    let per_rank = t.grad_bytes_per_rank() as f64;
+    let even = t.replicated_grad_bytes() as f64 / 4.0;
+    assert!(per_rank > 0.0);
+    assert!(
+        per_rank <= even * 1.05,
+        "grad bytes/rank {per_rank} B > 1/N + 5% (even share {even} B)"
+    );
+    // ZeRO-1 state sharding still holds underneath
+    let state = t.zero1_state_bytes_per_rank() as f64;
+    let state_even = t.replicated_state_bytes() as f64 / 4.0;
+    assert!(state <= state_even * 1.05);
+}
+
+/// Acceptance: `--accum K` ships wire bytes only on the last microbatch
+/// pass — per-step wire bytes (gradient frames and parameter gather
+/// alike) are identical to the accum=1 run at the same shape, while the
+/// step consumes K× the tokens.
+#[test]
+fn accum_ships_wire_bytes_only_on_the_last_microbatch() {
+    let steps = 3u64;
+    let mut per_step_bytes = Vec::new();
+    let mut param_bytes = Vec::new();
+    let mut tokens = Vec::new();
+    for accum in [1usize, 2] {
+        let mut cfg = dist_cfg(steps, 2, 2, WireKind::PackedFp8Group, true, true);
+        cfg.dist.accum = accum;
+        let mut t = DistTrainer::new(cfg).unwrap();
+        t.run(steps).unwrap();
+        per_step_bytes.push(t.comm.bytes_on_wire);
+        param_bytes.push(t.comm.param_bytes);
+        tokens.push(t.throughput.tokens);
+        assert!(t.history.losses.iter().all(|(_, l)| l.is_finite()));
+    }
+    assert_eq!(
+        per_step_bytes[0], per_step_bytes[1],
+        "accum=2 must ship exactly the accum=1 gradient wire bytes"
+    );
+    assert_eq!(param_bytes[0], param_bytes[1], "param gather is once per step, K-independent");
+    assert_eq!(tokens[1], tokens[0] * 2, "accum=2 consumes twice the tokens per step");
+}
+
+/// `--nodes 2` at 2 workers is the degenerate one-rank-per-node shape:
+/// the intra stage is a passthrough and the inter ring over the two
+/// leaders IS the flat 2-rank ring, so the full pipeline stays
+/// bit-identical to the serial step.
+#[test]
+fn two_workers_two_nodes_f32_bitwise_matches_serial() {
+    let steps = 10u64;
+    let mut serial = DistTrainer::new(dist_cfg(steps, 2, 2, WireKind::F32, false, false)).unwrap();
+    let mut hier_cfg = dist_cfg(steps, 2, 2, WireKind::F32, true, true);
+    hier_cfg.dist.nodes = 2;
+    let mut hier = DistTrainer::new(hier_cfg).unwrap();
+    for step in 1..=steps {
+        let os = serial.step().unwrap();
+        let oh = hier.step().unwrap();
+        assert_eq!(os.loss.to_bits(), oh.loss.to_bits(), "nodes=2: loss diverged at step {step}");
+        assert_eq!(
+            os.grad_norm.to_bits(),
+            oh.grad_norm.to_bits(),
+            "nodes=2: grad norm diverged at step {step}"
+        );
+    }
+    assert_models_bitwise(&serial, &hier, "2-rank hier pipeline vs serial");
+}
+
+/// A genuinely hierarchical shape — 4 workers in 2 nodes on the packed
+/// wire with the full pipeline + ZeRO-2 + accumulation — trains end to
+/// end with decreasing loss, measured hidden communication, and the
+/// same per-step wire-byte count as the flat ring (the `2(w-1)n`
+/// telescoping invariant holds at every node count).
+#[test]
+fn four_workers_two_nodes_full_stack_trains() {
+    let steps = 16u64;
+    let mk = |nodes: usize| {
+        let mut cfg = dist_cfg(steps, 4, 4, WireKind::PackedFp8Group, true, true);
+        cfg.dist.zero2 = true;
+        cfg.dist.nodes = nodes;
+        cfg.dist.accum = 2;
+        cfg.host.layers = 3;
+        cfg.host.seq = 32;
+        let mut t = DistTrainer::new(cfg).unwrap();
+        t.run(steps).unwrap();
+        t
+    };
+    let hier = mk(2);
+    assert!(hier.history.losses.iter().all(|(_, l)| l.is_finite()), "non-finite loss");
+    let first = hier.history.losses.first().unwrap().1;
+    let tail = hier.history.tail_loss(5);
+    assert!(tail < first, "hier run did not train: {first:.4} -> {tail:.4}");
+    assert!(hier.overlap.hidden_secs > 0.0, "no hidden communication measured");
+    let per_rank = hier.grad_bytes_per_rank() as f64;
+    let even = hier.replicated_grad_bytes() as f64 / 4.0;
+    assert!(per_rank <= even * 1.05, "hier zero2 bound: {per_rank} > {even} * 1.05");
+    // same total gradient frames' payload elems as the flat topology
+    let flat = mk(1);
+    assert_eq!(
+        hier.comm.elems_shipped, flat.comm.elems_shipped,
+        "hierarchical ring must ship the same elems as the flat ring"
+    );
 }
